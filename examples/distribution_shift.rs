@@ -1,0 +1,43 @@
+//! Distribution shift across electricity-price years (paper Fig. 5,
+//! reduced scale): train on one NL price year, evaluate on all three.
+//! The 2022 energy-crisis prices (≈3x level, higher volatility) make
+//! agents trained on 2022 data *worse* — even on 2022 itself.
+//!
+//! Run: `cargo run --release --example distribution_shift`
+//! (CHARGAX_STEPS to change the per-agent budget, default 100k)
+
+use anyhow::Result;
+use chargax::coordinator::metrics;
+use chargax::coordinator::trainer::{self, TrainOptions};
+use chargax::data::{DataStore, Scenario};
+use chargax::runtime::engine::{artifacts_dir, Engine};
+use chargax::runtime::manifest::Manifest;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::var("CHARGAX_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+    let manifest = Manifest::load(&artifacts_dir())?;
+    let store = DataStore::load(&artifacts_dir().join("data"))?;
+    let variant = manifest.variant("mix10dc6ac_e12")?;
+    let engine = Engine::cpu()?;
+    let years = [2021u32, 2022, 2023];
+
+    println!("=== Fig. 5 (reduced): train year -> eval years, NL prices, {steps} steps ===");
+    println!("{:>10} {:>12} {:>12} {:>12}", "train\\eval", 2021, 2022, 2023);
+    for train_year in years {
+        let sc = Scenario { year: train_year, traffic: "high".into(), ..Default::default() };
+        let opts = TrainOptions { seed: 1, total_env_steps: steps, quiet: true, ..Default::default() };
+        let out = trainer::train(&engine, variant, &store, &sc, &opts)?;
+        let mut row = format!("{train_year:>10}");
+        for eval_year in years {
+            let esc = Scenario { year: eval_year, traffic: "high".into(), ..Default::default() };
+            let evals = trainer::evaluate(&engine, &out.session, &store, &esc, 100..106)?;
+            row.push_str(&format!(" {:>12.1}", metrics::mean(&evals)?.get("ep_reward")?));
+        }
+        println!("{row}");
+    }
+    println!("(rows: training year; columns: mean episode reward on eval year)");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Quickstart: load the AOT artifacts, reset a vectorized station, step it
+//! with hand-picked actions, and read the metrics — the minimal use of the
+//! public API.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+use chargax::coordinator::metrics::NamedVec;
+use chargax::data::{DataStore, Scenario};
+use chargax::runtime::engine::{artifacts_dir, Engine};
+use chargax::runtime::manifest::Manifest;
+use chargax::runtime::tensor::Tensor;
+
+fn main() -> Result<()> {
+    // 1. Load the manifest (the AOT contract) and the bundled data stack.
+    let manifest = Manifest::load(&artifacts_dir())?;
+    let store = DataStore::load(&artifacts_dir().join("data"))?;
+    let variant = manifest.variant("mix10dc6ac_e12")?;
+    println!(
+        "variant mix10dc6ac_e12: {} envs x {} ports, obs_dim {}",
+        variant.meta.num_envs, variant.meta.n_ports, variant.meta.obs_dim
+    );
+
+    // 2. Pick a scenario (everything swappable without re-AOT).
+    let scenario = Scenario {
+        scenario: "shopping".into(),
+        country: "NL".into(),
+        year: 2021,
+        traffic: "high".into(),
+        ..Default::default()
+    };
+    let exog: Vec<xla::Literal> = scenario
+        .to_tensors(&store)?
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<_>>()?;
+
+    // 3. Compile + reset.
+    let engine = Engine::cpu()?;
+    let reset = engine.load(variant.program("env_reset")?)?;
+    let step = engine.load(variant.program("env_step")?)?;
+    let seed = Tensor::scalar_u32(7).to_literal()?;
+    let mut ins: Vec<&xla::Literal> = vec![&seed];
+    ins.extend(exog.iter());
+    let mut outs = reset.run_literals(&ins)?;
+    let _obs = outs.pop().unwrap();
+    let n_state = outs.len();
+    let mut state = outs;
+
+    // 4. Step for two simulated hours: all chargers at 80%, battery idle.
+    let e = variant.meta.num_envs;
+    let p = variant.meta.n_ports;
+    let mut action = vec![8i32; e * p];
+    for env_i in 0..e {
+        action[env_i * p + p - 1] = 10; // battery midpoint = 0 A
+    }
+    let action = Tensor::i32(vec![e, p], action)?.to_literal()?;
+
+    let metric_fields = &variant.meta.metric_fields;
+    for step_i in 0..24 {
+        let mut ins: Vec<&xla::Literal> = state.iter().collect();
+        ins.push(&action);
+        ins.extend(exog.iter());
+        let full = step.run_literals(&ins)?;
+        // outputs: state' ++ [obs, reward, done, metrics]
+        let metrics = Tensor::from_literal(&full[n_state + 3])?;
+        let row = metrics.as_f32()?;
+        // mean over envs for display
+        let m = variant.meta.metric_fields.len();
+        let mean: Vec<f32> = (0..m)
+            .map(|k| (0..e).map(|i| row[i * m + k]).sum::<f32>() / e as f32)
+            .collect();
+        let nv = NamedVec::new(metric_fields, mean)?;
+        if step_i % 6 == 0 {
+            println!(
+                "t={:>3} min: {}",
+                (step_i + 1) * 5,
+                nv.fmt_fields(&["reward", "profit", "energy_to_cars_kwh", "arrived"])
+            );
+        }
+        state = full.into_iter().take(n_state).collect();
+    }
+    println!("quickstart OK — the station simulated 2 hours under a fixed policy");
+    Ok(())
+}

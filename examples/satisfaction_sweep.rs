@@ -1,0 +1,42 @@
+//! User-satisfaction reward shaping (paper Fig. 4b, reduced scale):
+//! sweep the alpha weight of the satisfaction0 penalty (kWh missing when a
+//! time-sensitive user departs) and watch missing-charge fall while profit
+//! stays roughly level — the paper's headline qualitative result.
+//!
+//! Run: `cargo run --release --example satisfaction_sweep`
+
+use anyhow::Result;
+use chargax::coordinator::metrics;
+use chargax::coordinator::trainer::{self, TrainOptions};
+use chargax::data::{DataStore, Scenario};
+use chargax::runtime::engine::{artifacts_dir, Engine};
+use chargax::runtime::manifest::Manifest;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::var("CHARGAX_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+    let manifest = Manifest::load(&artifacts_dir())?;
+    let store = DataStore::load(&artifacts_dir().join("data"))?;
+    let variant = manifest.variant("mix10dc6ac_e12")?;
+    let engine = Engine::cpu()?;
+
+    println!("=== Fig. 4b (reduced): alpha_satisfaction0 sweep, {steps} steps/agent ===");
+    println!("{:>8} {:>18} {:>14}", "alpha", "missing kWh/ep", "profit/ep");
+    for alpha in [0.0f32, 0.5, 2.0, 8.0] {
+        let sc = Scenario { traffic: "high".into(), ..Default::default() }
+            .with_alpha("satisfaction0", alpha)?;
+        let opts = TrainOptions { seed: 2, total_env_steps: steps, quiet: true, ..Default::default() };
+        let out = trainer::train(&engine, variant, &store, &sc, &opts)?;
+        let evals = trainer::evaluate(&engine, &out.session, &store, &sc, 300..308)?;
+        let m = metrics::mean(&evals)?;
+        println!(
+            "{alpha:>8.1} {:>18.2} {:>14.1}",
+            m.get("ep_missing_kwh")?,
+            m.get("ep_profit")?
+        );
+    }
+    println!("(higher alpha should push missing kWh toward 0 at similar profit)");
+    Ok(())
+}

@@ -1,0 +1,3 @@
+# CPU gym-style comparators (DESIGN.md §Substitutions): a per-step,
+# object-per-car numpy simulator + a numpy PPO, standing in for the
+# EV2Gym/Chargym/SustainGym + SB3 rows of Table 2.

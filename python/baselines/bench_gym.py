@@ -1,0 +1,61 @@
+"""Timing harness for the python gym comparator (Table 2 rows).
+
+Prints one JSON object: {"mode": ..., "steps": N, "seconds_per_100k": S}.
+Invoked by `chargax bench table2` as a subprocess — this is a *comparator*,
+not part of the system; the chargax hot path never calls Python.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from .gym_env import GymChargingEnv, default_tables
+from .ppo_numpy import NumpyPpo
+
+
+def bench_random(steps: int) -> float:
+    import numpy as np
+
+    env = GymChargingEnv(default_tables(), seed=0)
+    nvec = env.action_nvec()
+    rng = np.random.default_rng(1)
+    actions = rng.integers(0, nvec, size=(steps, len(nvec)))
+    t0 = time.perf_counter()
+    for i in range(steps):
+        env.step(actions[i])
+    return (time.perf_counter() - t0) * 100_000 / steps
+
+
+def bench_ppo(steps: int, num_envs: int) -> float:
+    envs = [GymChargingEnv(default_tables(), seed=i) for i in range(num_envs)]
+    ppo = NumpyPpo(envs, seed=0)
+    ppo.iteration()  # warm numpy caches
+    per_iter = num_envs * ppo.rollout_steps
+    iters = max(steps // per_iter, 1)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        ppo.iteration()
+    el = time.perf_counter() - t0
+    return el * 100_000 / (iters * per_iter)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["random", "ppo1", "ppo16"], required=True)
+    ap.add_argument("--steps", type=int, default=20_000)
+    args = ap.parse_args()
+    if args.mode == "random":
+        sec = bench_random(args.steps)
+    elif args.mode == "ppo1":
+        sec = bench_ppo(args.steps, 1)
+    else:
+        sec = bench_ppo(args.steps, 16)
+    print(json.dumps({"mode": args.mode, "steps": args.steps, "seconds_per_100k": sec}))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

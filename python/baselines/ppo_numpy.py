@@ -1,0 +1,208 @@
+"""Minimal numpy PPO (SB3-style CPU training loop) for the gym comparator.
+
+Same algorithm family and hyperparameters as the fused JAX PPO (Table 3):
+MLP actor-critic with concatenated categorical heads, GAE, clipped
+surrogate, Adam. Used only by bench_gym.py to time the Table 2
+"PPO (1)" / "PPO (16)" baseline rows.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from .gym_env import GymChargingEnv
+
+
+class NumpyMlp:
+    def __init__(self, rng, obs_dim: int, hidden: int, n_logits: int):
+        def init(rows, cols, scale):
+            return (rng.standard_normal((rows, cols)) * scale / np.sqrt(rows)).astype(
+                np.float32
+            )
+
+        self.w1 = init(obs_dim, hidden, 1.4)
+        self.b1 = np.zeros(hidden, np.float32)
+        self.w2 = init(hidden, hidden, 1.4)
+        self.b2 = np.zeros(hidden, np.float32)
+        self.wpi = init(hidden, n_logits, 0.01)
+        self.bpi = np.zeros(n_logits, np.float32)
+        self.wv = init(hidden, 1, 1.0)
+        self.bv = np.zeros(1, np.float32)
+
+    def params(self):
+        return [self.w1, self.b1, self.w2, self.b2, self.wpi, self.bpi, self.wv, self.bv]
+
+    def forward(self, obs):
+        h1 = np.tanh(obs @ self.w1 + self.b1)
+        h2 = np.tanh(h1 @ self.w2 + self.b2)
+        logits = h2 @ self.wpi + self.bpi
+        value = (h2 @ self.wv + self.bv)[:, 0]
+        return h1, h2, logits, value
+
+    def backward(self, obs, h1, h2, dlogits, dvalue):
+        dh2 = dlogits @ self.wpi.T + dvalue[:, None] @ self.wv.T
+        g_wpi = h2.T @ dlogits
+        g_bpi = dlogits.sum(0)
+        g_wv = h2.T @ dvalue[:, None]
+        g_bv = dvalue.sum(0, keepdims=True)
+        dh2 = dh2 * (1 - h2 * h2)
+        g_w2 = h1.T @ dh2
+        g_b2 = dh2.sum(0)
+        dh1 = dh2 @ self.w2.T * (1 - h1 * h1)
+        g_w1 = obs.T @ dh1
+        g_b1 = dh1.sum(0)
+        return [g_w1, g_b1, g_w2, g_b2, g_wpi, g_bpi, g_wv, g_bv]
+
+
+class Adam:
+    def __init__(self, params: List[np.ndarray], lr=2.5e-4):
+        self.m = [np.zeros_like(p) for p in params]
+        self.v = [np.zeros_like(p) for p in params]
+        self.t = 0
+        self.lr = lr
+
+    def step(self, params, grads):
+        self.t += 1
+        b1c = 1 - 0.9**self.t
+        b2c = 1 - 0.999**self.t
+        for p, g, m, v in zip(params, grads, self.m, self.v):
+            m[:] = 0.9 * m + 0.1 * g
+            v[:] = 0.999 * v + 0.001 * g * g
+            p -= self.lr * (m / b1c) / (np.sqrt(v / b2c) + 1e-8)
+
+
+def head_slices(nvec):
+    out, ofs = [], 0
+    for n in nvec:
+        out.append((ofs, ofs + n))
+        ofs += n
+    return out
+
+
+class NumpyPpo:
+    def __init__(self, envs: List[GymChargingEnv], seed=0, hidden=128,
+                 rollout_steps=300, n_minibatches=4, update_epochs=4):
+        self.envs = envs
+        self.rng = np.random.default_rng(seed)
+        self.nvec = envs[0].action_nvec()
+        self.slices = head_slices(self.nvec)
+        self.n_logits = sum(self.nvec)
+        self.mlp = NumpyMlp(self.rng, envs[0].obs_dim, hidden, self.n_logits)
+        self.adam = Adam(self.mlp.params())
+        self.rollout_steps = rollout_steps
+        self.n_minibatches = n_minibatches
+        self.update_epochs = update_epochs
+        self.obs = np.stack([e.observe() for e in envs])
+        self.gamma, self.lam = 0.99, 0.95
+        self.clip_eps, self.vf_clip = 0.2, 10.0
+        self.ent_coef, self.vf_coef = 0.01, 0.25
+
+    def _sample(self, logits):
+        e = logits.shape[0]
+        actions = np.zeros((e, len(self.nvec)), np.int64)
+        logp = np.zeros(e, np.float32)
+        for h, (s, t) in enumerate(self.slices):
+            lg = logits[:, s:t]
+            lg = lg - lg.max(1, keepdims=True)
+            p = np.exp(lg)
+            p /= p.sum(1, keepdims=True)
+            for i in range(e):
+                a = self.rng.choice(t - s, p=p[i])
+                actions[i, h] = a
+                logp[i] += np.log(p[i, a] + 1e-12)
+        return actions, logp
+
+    def _logp_ent(self, logits, actions):
+        b = logits.shape[0]
+        logp = np.zeros(b, np.float32)
+        ent = np.zeros(b, np.float32)
+        dlogp = np.zeros_like(logits)
+        dent = np.zeros_like(logits)
+        for h, (s, t) in enumerate(self.slices):
+            lg = logits[:, s:t] - logits[:, s:t].max(1, keepdims=True)
+            p = np.exp(lg)
+            p /= p.sum(1, keepdims=True)
+            lp = np.log(p + 1e-12)
+            a = actions[:, h]
+            logp += lp[np.arange(b), a]
+            hent = -(p * lp).sum(1)
+            ent += hent
+            dlogp[:, s:t] = -p
+            dlogp[np.arange(b), s + a] += 1.0
+            dent[:, s:t] = -p * (lp + hent[:, None])
+        return logp, ent, dlogp, dent
+
+    def iteration(self):
+        e = len(self.envs)
+        t_len = self.rollout_steps
+        obs_b, act_b, logp_b, val_b, rew_b, done_b = [], [], [], [], [], []
+        for _ in range(t_len):
+            _, _, logits, value = self.mlp.forward(self.obs)
+            actions, logp = self._sample(logits)
+            obs_b.append(self.obs.copy())
+            new_obs = np.empty_like(self.obs)
+            rew = np.zeros(e, np.float32)
+            done = np.zeros(e, np.float32)
+            for i, env in enumerate(self.envs):
+                o, r, d, _ = env.step(actions[i])
+                new_obs[i], rew[i], done[i] = o, r, d
+            self.obs = new_obs
+            act_b.append(actions)
+            logp_b.append(logp)
+            val_b.append(value)
+            rew_b.append(rew)
+            done_b.append(done)
+        obs_b = np.asarray(obs_b)
+        act_b = np.asarray(act_b)
+        logp_b = np.asarray(logp_b)
+        val_b = np.asarray(val_b)
+        rew_b = np.asarray(rew_b)
+        done_b = np.asarray(done_b)
+        _, _, _, last_v = self.mlp.forward(self.obs)
+
+        adv = np.zeros_like(rew_b)
+        g = np.zeros(e, np.float32)
+        for t in range(t_len - 1, -1, -1):
+            nv = last_v if t == t_len - 1 else val_b[t + 1]
+            nonterm = 1.0 - done_b[t]
+            delta = rew_b[t] + self.gamma * nv * nonterm - val_b[t]
+            g = delta + self.gamma * self.lam * nonterm * g
+            adv[t] = g
+        targets = adv + val_b
+
+        bsz = e * t_len
+        flat = lambda x: x.reshape(bsz, *x.shape[2:])
+        obs_f, act_f, logp_f, val_f = flat(obs_b), flat(act_b), flat(logp_b), flat(val_b)
+        adv_f, tgt_f = flat(adv), flat(targets)
+        mb = bsz // self.n_minibatches
+        for _ in range(self.update_epochs):
+            perm = self.rng.permutation(bsz)
+            for k in range(self.n_minibatches):
+                idx = perm[k * mb : (k + 1) * mb]
+                self._update(obs_f[idx], act_f[idx], logp_f[idx], val_f[idx],
+                             adv_f[idx], tgt_f[idx])
+        return float(rew_b.mean())
+
+    def _update(self, obs, act, old_logp, old_v, adv, tgt):
+        b = obs.shape[0]
+        a_n = (adv - adv.mean()) / (adv.std() + 1e-8)
+        h1, h2, logits, value = self.mlp.forward(obs)
+        logp, ent, dlogp, dent = self._logp_ent(logits, act)
+        ratio = np.exp(logp - old_logp)
+        clipped = np.clip(ratio, 1 - self.clip_eps, 1 + self.clip_eps)
+        use_unclipped = ratio * a_n <= clipped * a_n
+        dpg = np.where(use_unclipped, -ratio * a_n, 0.0)
+        v_clip = old_v + np.clip(value - old_v, -self.vf_clip, self.vf_clip)
+        e1 = (value - tgt) ** 2
+        e2 = (v_clip - tgt) ** 2
+        dv = np.where(e1 >= e2, value - tgt, np.where(
+            np.abs(value - old_v) < self.vf_clip, v_clip - tgt, 0.0))
+        dlogits = (dpg[:, None] * dlogp - self.ent_coef * dent) / b
+        dvalue = (self.vf_coef * dv / b).astype(np.float32)
+        grads = self.mlp.backward(obs, h1, h2, dlogits.astype(np.float32), dvalue)
+        norm = np.sqrt(sum((g * g).sum() for g in grads))
+        if norm > 100.0:
+            grads = [g * (100.0 / norm) for g in grads]
+        self.adam.step(self.mlp.params(), grads)

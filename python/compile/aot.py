@@ -1,0 +1,238 @@
+"""AOT entrypoint: lower every program of every variant to HLO *text*.
+
+HLO text — NOT ``lowered.compile().serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts [--variants a,b] [--quick]
+
+Writes::
+
+    artifacts/<program>_<variant>.hlo.txt
+    artifacts/manifest.json       # I/O leaf specs per program
+    artifacts/data/*.json         # exogenous tables for the Rust side
+    artifacts/data/test_vectors.json  # cross-check vectors (rust tests)
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from . import data
+from .config import PpoConfig, make_configs
+from .model import ModelBundle, leaf_spec
+
+# Variants built by default: the Table-3 training config (12 envs), the
+# Table-2 single-env and 16-env benchmark configs, and the Fig. 9-11
+# charger mixes.
+DEFAULT_VARIANTS = (
+    ("mix10dc6ac", 12),
+    ("mix10dc6ac", 1),
+    ("mix10dc6ac", 16),
+    ("ac16", 12),
+    ("mix8dc8ac", 12),
+    ("dc16", 12),
+    # CPU-fast kernel routing (jnp oracles; XLA fuses them far better than
+    # interpret-mode Pallas on CPU) — the Table 2 / production-CPU variants.
+    ("mix10dc6ac-ref", 12),
+    ("mix10dc6ac-ref", 1),
+    ("mix10dc6ac-ref", 16),
+)
+
+RANDOM_ROLLOUT_STEPS = 1000
+
+
+def build_variant(station: str, num_envs: int, out_dir: str, quick: bool) -> dict:
+    # "-ref" variants route kernels through the jnp oracles (read at trace
+    # time by compile.kernels).
+    if station.endswith("-ref"):
+        os.environ["CHARGAX_NO_PALLAS"] = "1"
+    else:
+        os.environ.pop("CHARGAX_NO_PALLAS", None)
+    env_cfg, ppo_cfg = make_configs(station, num_envs)
+    if quick:
+        ppo_cfg = PpoConfig(num_envs=num_envs, rollout_steps=32, n_minibatches=2)
+    bundle = ModelBundle(env_cfg, ppo_cfg)
+    key = f"{station}_e{num_envs}"
+
+    programs = [
+        bundle.program_train_init(),
+        bundle.program_train_iter(),
+        bundle.program_eval("net"),
+        bundle.program_eval("max"),
+        bundle.program_eval("random"),
+        bundle.program_random_rollout(RANDOM_ROLLOUT_STEPS),
+        bundle.program_env_reset(),
+        bundle.program_env_step(),
+    ]
+
+    entry = {"meta": bundle.env_meta(), "programs": {}}
+    entry["meta"]["random_rollout_steps"] = RANDOM_ROLLOUT_STEPS
+    for prog in programs:
+        t0 = time.time()
+        text = prog.lower_hlo_text()
+        fname = f"{prog.name}_{key}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        outputs = _output_specs(prog)
+        entry["programs"][prog.name] = {
+            "file": fname,
+            "inputs": [
+                leaf_spec(n, x)
+                for n, x in zip(prog.input_names, prog.example_inputs)
+            ],
+            "outputs": outputs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(
+            f"  [{key}] {prog.name}: {len(text) / 1e6:.2f} MB HLO"
+            f" ({time.time() - t0:.1f}s)",
+            flush=True,
+        )
+    return entry
+
+
+def _output_specs(prog) -> list:
+    import jax
+
+    shapes = jax.eval_shape(prog.fn, *prog.example_inputs)
+    leaves = jax.tree_util.tree_leaves(shapes)
+    assert len(leaves) == len(prog.output_names), (
+        prog.name, len(leaves), len(prog.output_names),
+    )
+    return [
+        leaf_spec(n, np.zeros(s.shape, s.dtype))
+        for n, s in zip(prog.output_names, leaves)
+    ]
+
+
+def export_test_vectors(out_path: str) -> None:
+    """Deterministic transition/reward vectors for the Rust cross-check."""
+    import jax.numpy as jnp
+
+    from .env.state import PENALTIES
+    from .kernels import ref
+
+    rng = np.random.default_rng(42)
+    cases = []
+    p, n = 17, 3
+    volt = np.where(np.arange(p) < 10, 400.0, 230.0).astype(np.float32)
+    volt[-1] = 400.0
+    mem = np.zeros((n, p), np.float32)
+    mem[0] = 1.0
+    mem[1, :10] = 1.0
+    mem[2, 10:16] = 1.0
+    lim = np.array([600.0, 450.0, 60.0], np.float32)
+    eta = np.array([0.98, 0.98, 0.98], np.float32)
+    for _ in range(16):
+        i = rng.normal(0.0, 150.0, p).astype(np.float32)
+        si, ex = ref.constraint_projection_ref(
+            jnp.asarray(i), jnp.asarray(volt), jnp.asarray(mem),
+            jnp.asarray(lim), jnp.asarray(eta),
+        )
+        cases.append(
+            {
+                "kind": "constraint",
+                "i_drawn": i.tolist(),
+                "volt": volt.tolist(),
+                "membership": mem.tolist(),
+                "limits": lim.tolist(),
+                "eta": eta.tolist(),
+                "want_i": np.asarray(si).tolist(),
+                "want_excess": float(ex),
+            }
+        )
+    for _ in range(16):
+        soc = rng.uniform(0.0, 1.0, p).astype(np.float32)
+        pres = (rng.random(p) < 0.7).astype(np.float32)
+        i = rng.normal(0.0, 120.0, p).astype(np.float32)
+        de = rng.uniform(0.0, 60.0, p).astype(np.float32)
+        dtr = rng.uniform(0.0, 40.0, p).astype(np.float32)
+        cap = rng.uniform(20.0, 110.0, p).astype(np.float32)
+        rbar = rng.uniform(5.0, 160.0, p).astype(np.float32)
+        tau = rng.uniform(0.4, 0.8, p).astype(np.float32)
+        outs = ref.charge_update_ref(
+            jnp.asarray(i)[None], jnp.asarray(volt)[None], pres[None],
+            soc[None], de[None], dtr[None], cap[None], rbar[None], tau[None],
+            1.0 / 12.0,
+        )
+        cases.append(
+            {
+                "kind": "charge",
+                "i_drawn": i.tolist(), "volt": volt.tolist(),
+                "present": pres.tolist(), "soc": soc.tolist(),
+                "de_remain": de.tolist(), "dt_remain": dtr.tolist(),
+                "cap": cap.tolist(), "r_bar": rbar.tolist(),
+                "tau": tau.tolist(), "dt_hours": 1.0 / 12.0,
+                "want": [np.asarray(o)[0].tolist() for o in outs],
+            }
+        )
+    for _ in range(8):
+        soc = float(rng.uniform(0, 1))
+        rbar = float(rng.uniform(5, 200))
+        tau = float(rng.uniform(0.3, 0.9))
+        cases.append(
+            {
+                "kind": "curve",
+                "soc": soc, "r_bar": rbar, "tau": tau,
+                "want_charge": float(ref.charging_curve(soc, rbar, tau)),
+                "want_discharge": float(ref.discharging_curve(soc, rbar, tau)),
+            }
+        )
+    with open(out_path, "w") as f:
+        json.dump({"penalty_order": list(PENALTIES), "cases": cases}, f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default=",".join(f"{s}_e{e}" for s, e in DEFAULT_VARIANTS),
+        help="comma-separated station_eN keys",
+    )
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="tiny rollout/minibatch sizes (CI smoke builds)",
+    )
+    ap.add_argument(
+        "--merge", action="store_true",
+        help="merge new variants into an existing manifest instead of replacing it",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    data_dir = os.path.join(args.out_dir, "data")
+    print("exporting data tables ...", flush=True)
+    data.export_all(data_dir)
+    export_test_vectors(os.path.join(data_dir, "test_vectors.json"))
+
+    manifest = {"format": 1, "quick": args.quick, "variants": {}}
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if args.merge and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    for spec in args.variants.split(","):
+        station, e = spec.rsplit("_e", 1)
+        print(f"building variant {spec} ...", flush=True)
+        manifest["variants"][spec] = build_variant(
+            station, int(e), args.out_dir, args.quick
+        )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("manifest written", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

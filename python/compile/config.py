@@ -1,0 +1,159 @@
+"""Static environment / training configuration.
+
+Everything in :class:`EnvConfig` is baked into the AOT-lowered HLO (shapes,
+station architecture, discretization). Everything *exogenous* — prices, car
+tables, arrival profiles, penalty weights — is passed as runtime inputs so the
+Rust coordinator can swap scenario data without re-AOT (see
+``model.py::EXOG_SPEC``).
+
+Mirrors the paper's Table 3 defaults: 16 chargers (10 DC / 6 AC), 5-minute
+timesteps, 24-hour episodes, discretization factor 10, p_sell = 0.75.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ChargerSpec:
+    """One charger type: electrical limits of the EVSE."""
+
+    kind: str  # "ac" | "dc"
+    voltage: float  # V (already encodes phases, paper A.1)
+    i_max: float  # A
+
+    @property
+    def p_max_kw(self) -> float:
+        return self.voltage * self.i_max / 1000.0
+
+
+# Default EVSE types (paper: 150 kW DC fast chargers, 11.5 kW AC).
+DC_CHARGER = ChargerSpec(kind="dc", voltage=400.0, i_max=375.0)  # 150 kW
+AC_CHARGER = ChargerSpec(kind="ac", voltage=230.0, i_max=50.0)  # 11.5 kW
+
+
+@dataclasses.dataclass(frozen=True)
+class StationConfig:
+    """Station architecture: charger mix + constraint tree (paper Fig. 3b).
+
+    The tree is: root (grid connection) -> one splitter per charger type ->
+    EVSEs; the battery hangs off the root. Node capacities are expressed in
+    kW (power) — with fixed per-leaf voltage this is equivalent to the
+    paper's per-current constraints within a splitter, and is well-defined
+    at the root where AC and DC leaves mix.
+    """
+
+    n_dc: int = 10
+    n_ac: int = 6
+    root_p_kw: float = 600.0
+    dc_split_p_kw: float = 450.0
+    ac_split_p_kw: float = 60.0
+    node_eta: float = 0.98  # transformer/cable efficiency per internal node
+    evse_eta: float = 0.95  # EVSE power-electronics efficiency
+    # Station battery (paper: optional; default on, it enables V2G strategy).
+    battery_capacity_kwh: float = 200.0
+    battery_p_max_kw: float = 100.0
+    battery_voltage: float = 400.0
+    battery_tau: float = 0.8
+    battery_soc0: float = 0.5
+
+    @property
+    def n_chargers(self) -> int:
+        return self.n_dc + self.n_ac
+
+    @property
+    def n_ports(self) -> int:
+        """Chargers + battery (battery is port index n_chargers)."""
+        return self.n_chargers + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvConfig:
+    """Full static config for one AOT variant."""
+
+    station: StationConfig = StationConfig()
+    minutes_per_step: int = 5
+    episode_hours: int = 24
+    # Action discretization (paper B.1: factor 10 -> fractions 0..100%).
+    n_levels: int = 11  # car ports: 0%,10%,...,100% of port max
+    n_levels_battery: int = 21  # battery: -100%..100% in 10% steps
+    max_arrivals_per_step: int = 6
+    n_car_models: int = 20
+    n_days: int = 365  # price-table length (exploring-starts sampling)
+    fixed_cost_per_step: float = 0.25  # c_dt, EUR
+    feed_in_ratio: float = 0.9  # p_sell_grid = ratio * p_buy (if no table)
+
+    @property
+    def steps_per_episode(self) -> int:
+        return self.episode_hours * 60 // self.minutes_per_step  # 288
+
+    @property
+    def dt_hours(self) -> float:
+        return self.minutes_per_step / 60.0
+
+
+@dataclasses.dataclass(frozen=True)
+class PpoConfig:
+    """PPO hyperparameters (paper Table 3)."""
+
+    num_envs: int = 12
+    rollout_steps: int = 300
+    lr: float = 2.5e-4
+    anneal_lr: bool = True
+    gamma: float = 0.99
+    gae_lambda: float = 0.95
+    clip_eps: float = 0.2
+    vf_clip: float = 10.0
+    ent_coef: float = 0.01
+    vf_coef: float = 0.25
+    max_grad_norm: float = 100.0
+    n_minibatches: int = 4
+    update_epochs: int = 4
+    hidden: int = 128
+    total_timesteps: int = 10_000_000  # paper budget; L3 scales this down
+
+    @property
+    def batch_size(self) -> int:
+        return self.num_envs * self.rollout_steps
+
+    @property
+    def minibatch_size(self) -> int:
+        return self.batch_size // self.n_minibatches
+
+
+# ---------------------------------------------------------------------------
+# Named station variants used by the paper's figures.
+# ---------------------------------------------------------------------------
+
+STATION_VARIANTS = {
+    # 10 DC + 6 AC — Table 2 / Fig. 4 / Fig. 6-8 default station.
+    "mix10dc6ac": StationConfig(n_dc=10, n_ac=6),
+    # Fig. 9: 16 AC (11.5 kW).
+    "ac16": StationConfig(n_dc=0, n_ac=16, root_p_kw=200.0, dc_split_p_kw=1.0, ac_split_p_kw=160.0),
+    # Fig. 10: 8 AC + 8 DC.
+    "mix8dc8ac": StationConfig(n_dc=8, n_ac=8, dc_split_p_kw=400.0, ac_split_p_kw=80.0),
+    # Fig. 11: 16 DC (150 kW).
+    "dc16": StationConfig(n_dc=16, n_ac=0, root_p_kw=800.0, dc_split_p_kw=700.0, ac_split_p_kw=1.0),
+}
+
+
+def variant_key(station_name: str, num_envs: int) -> str:
+    """Canonical artifact key, e.g. ``mix10dc6ac_e12``.
+
+    A ``-ref`` suffix on the station name selects the CPU-fast kernel
+    routing (pure-jnp oracles instead of interpret-mode Pallas) at AOT
+    time; the station itself is unchanged.
+    """
+    return f"{station_name}_e{num_envs}"
+
+
+def station_base_name(station_name: str) -> str:
+    return station_name.removesuffix("-ref")
+
+
+def make_configs(station_name: str, num_envs: int) -> Tuple[EnvConfig, PpoConfig]:
+    env = EnvConfig(station=STATION_VARIANTS[station_base_name(station_name)])
+    ppo = PpoConfig(num_envs=num_envs)
+    return env, ppo

@@ -1,0 +1,267 @@
+"""Exogenous data stack (paper Table 1).
+
+Everything here is generated *deterministically* (fixed seeds) at build time
+and exported both as JAX arrays (baked into exogenous-input literals) and as
+``artifacts/data/*.json`` consumed bit-identically by the Rust scalar
+simulator and coordinator.
+
+Substitutions (see DESIGN.md §Substitutions):
+
+* **Price profiles NL/FR/DE × 2021/2022/2023** — the paper uses ENTSO-E
+  day-ahead prices. We synthesize them: a daily duck-curve shape, a weekly
+  pattern, a seasonal component, and AR(1) noise, with country-specific
+  levels. 2022 carries the EU energy-crisis surge (≈3× level, 2.5×
+  volatility) that drives the paper's Fig. 5 distribution-shift result.
+* **Car distributions EU/US/World** — a catalog of 20 real EV models with
+  public spec-sheet values (usable capacity kWh, max AC kW, max DC kW, τ)
+  and per-region market-share-inspired weights (US skews to larger packs).
+* **Arrival frequencies** — hourly rate shapes for highway / residential /
+  work / shopping stations × low / medium / high traffic.
+* **User profiles** — per-scenario stay duration, arrival SoC, target SoC,
+  and time- vs charge-sensitivity mix.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Dict, List
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Price profiles (EUR/kWh), day-ahead granularity: hourly, expanded to the
+# 5-minute step grid by the env (price index = step // 12).
+# ---------------------------------------------------------------------------
+
+# (level EUR/MWh, volatility) per country-year. 2022 is the crisis year.
+_PRICE_PARAMS = {
+    ("NL", 2021): (103.0, 0.45),
+    ("NL", 2022): (242.0, 0.95),
+    ("NL", 2023): (95.0, 0.40),
+    ("FR", 2021): (109.0, 0.42),
+    ("FR", 2022): (276.0, 1.05),
+    ("FR", 2023): (97.0, 0.38),
+    ("DE", 2021): (97.0, 0.48),
+    ("DE", 2022): (235.0, 1.00),
+    ("DE", 2023): (92.0, 0.42),
+}
+
+PRICE_COUNTRIES = ("NL", "FR", "DE")
+PRICE_YEARS = (2021, 2022, 2023)
+
+# Normalized daily shape (24h): morning ramp, midday solar dip (duck curve),
+# evening peak, night trough.
+_DAILY_SHAPE = np.array(
+    [
+        0.78, 0.74, 0.72, 0.71, 0.73, 0.80,  # 00-05
+        0.95, 1.12, 1.18, 1.10, 0.98, 0.90,  # 06-11
+        0.84, 0.80, 0.82, 0.90, 1.02, 1.22,  # 12-17
+        1.35, 1.30, 1.18, 1.05, 0.95, 0.85,  # 18-23
+    ]
+)
+
+
+def _seed_for(country: str, year: int) -> int:
+    return (hash_str(country) * 31 + year) % (2**31)
+
+
+def hash_str(s: str) -> int:
+    """Deterministic string hash (Python's hash() is salted per process)."""
+    h = 2166136261
+    for ch in s.encode():
+        h = ((h ^ ch) * 16777619) % (2**32)
+    return h
+
+
+def price_table(country: str, year: int, n_days: int = 365) -> np.ndarray:
+    """Hourly buy price, EUR/kWh, shape [n_days, 24]."""
+    level, vol = _PRICE_PARAMS[(country, year)]
+    rng = np.random.default_rng(_seed_for(country, year))
+    days = np.arange(n_days)
+    # Seasonal: winter high, summer low (Europe). 2022 ramps up through the
+    # year (invasion-driven surge peaking in Q3).
+    seasonal = 1.0 + 0.22 * np.cos(2 * math.pi * (days - 15) / 365.0)
+    if year == 2022:
+        surge = 1.0 + 0.9 * np.clip(np.sin(math.pi * (days - 40) / 300.0), 0.0, None)
+        seasonal = seasonal * surge
+    weekly = np.where((days % 7) >= 5, 0.88, 1.03)  # weekend dip
+    # AR(1) day-level noise.
+    ar = np.empty(n_days)
+    ar[0] = 0.0
+    eps = rng.normal(0.0, vol * 0.18, size=n_days)
+    for d in range(1, n_days):
+        ar[d] = 0.82 * ar[d - 1] + eps[d]
+    day_level = level * seasonal * weekly * np.exp(ar - ar.var() / 2)
+    hour_noise = rng.normal(0.0, vol * 0.06, size=(n_days, 24))
+    table = day_level[:, None] * _DAILY_SHAPE[None, :] * np.exp(hour_noise)
+    # Rare negative-price hours in low-demand periods (real EU phenomenon).
+    neg_mask = (rng.random((n_days, 24)) < 0.004) & (_DAILY_SHAPE[None, :] < 0.85)
+    table = np.where(neg_mask, -table * 0.15, table)
+    return (table / 1000.0).astype(np.float32)  # EUR/MWh -> EUR/kWh
+
+
+def moer_table(n_days: int = 365, seed: int = 7) -> np.ndarray:
+    """Marginal operating emissions rate, kgCO2/kWh, [n_days, 24].
+
+    Anti-correlated with solar output: low midday, high at the evening ramp.
+    """
+    rng = np.random.default_rng(seed)
+    shape = 0.35 + 0.15 * (_DAILY_SHAPE - _DAILY_SHAPE.min()) / np.ptp(_DAILY_SHAPE)
+    days = np.arange(n_days)
+    seasonal = 1.0 + 0.10 * np.cos(2 * math.pi * (days - 15) / 365.0)
+    noise = rng.normal(1.0, 0.05, size=(n_days, 24))
+    return (shape[None, :] * seasonal[:, None] * noise).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Car catalog: 20 real EV models. Columns: usable capacity (kWh), max AC
+# charging (kW), max DC charging (kW), tau (bulk->absorption knee, fraction
+# of SoC at which the max rate starts tapering; from typical charging curves).
+# ---------------------------------------------------------------------------
+
+CAR_CATALOG: List[Dict] = [
+    {"name": "Tesla Model 3 SR", "cap": 57.5, "ac": 11.0, "dc": 170.0, "tau": 0.55},
+    {"name": "Tesla Model Y LR", "cap": 75.0, "ac": 11.0, "dc": 250.0, "tau": 0.50},
+    {"name": "VW ID.4", "cap": 77.0, "ac": 11.0, "dc": 135.0, "tau": 0.60},
+    {"name": "VW ID.3", "cap": 58.0, "ac": 11.0, "dc": 120.0, "tau": 0.60},
+    {"name": "Renault Zoe", "cap": 52.0, "ac": 22.0, "dc": 46.0, "tau": 0.65},
+    {"name": "Hyundai Ioniq 5", "cap": 72.6, "ac": 11.0, "dc": 220.0, "tau": 0.55},
+    {"name": "Kia EV6", "cap": 74.0, "ac": 11.0, "dc": 233.0, "tau": 0.55},
+    {"name": "Fiat 500e", "cap": 37.3, "ac": 11.0, "dc": 85.0, "tau": 0.65},
+    {"name": "Peugeot e-208", "cap": 45.0, "ac": 11.0, "dc": 99.0, "tau": 0.62},
+    {"name": "Skoda Enyaq", "cap": 77.0, "ac": 11.0, "dc": 135.0, "tau": 0.60},
+    {"name": "BMW i4", "cap": 80.7, "ac": 11.0, "dc": 205.0, "tau": 0.52},
+    {"name": "Audi Q4 e-tron", "cap": 76.6, "ac": 11.0, "dc": 135.0, "tau": 0.58},
+    {"name": "Tesla Model S", "cap": 95.0, "ac": 11.5, "dc": 250.0, "tau": 0.48},
+    {"name": "Ford Mustang Mach-E", "cap": 91.0, "ac": 10.5, "dc": 150.0, "tau": 0.58},
+    {"name": "Ford F-150 Lightning", "cap": 98.0, "ac": 17.2, "dc": 155.0, "tau": 0.60},
+    {"name": "Chevrolet Bolt", "cap": 65.0, "ac": 11.5, "dc": 55.0, "tau": 0.68},
+    {"name": "Rivian R1T", "cap": 128.9, "ac": 11.5, "dc": 210.0, "tau": 0.55},
+    {"name": "Nissan Leaf", "cap": 39.0, "ac": 6.6, "dc": 46.0, "tau": 0.70},
+    {"name": "BYD Atto 3", "cap": 60.5, "ac": 11.0, "dc": 88.0, "tau": 0.62},
+    {"name": "Wuling Mini EV", "cap": 13.8, "ac": 3.3, "dc": 25.0, "tau": 0.75},
+]
+
+# Region market-mix weights over the catalog (normalized at use).
+CAR_WEIGHTS: Dict[str, List[float]] = {
+    # Europe: compacts + VW group + Tesla.
+    "EU": [10, 8, 7, 7, 6, 5, 5, 5, 5, 5, 4, 4, 2, 2, 0.5, 1, 0.5, 4, 4, 1],
+    # US: Tesla-heavy, trucks/large SUVs, almost no city cars.
+    "US": [14, 16, 4, 1, 0.2, 4, 4, 0.3, 0.2, 0.5, 3, 3, 6, 8, 9, 7, 6, 2, 0.5, 0.1],
+    # World: adds the Chinese mass market (BYD, Wuling).
+    "WORLD": [9, 9, 5, 4, 3, 4, 4, 3, 3, 3, 3, 3, 2, 2, 2, 3, 1, 4, 12, 12],
+}
+
+CAR_REGIONS = ("EU", "US", "WORLD")
+
+
+def car_table(region: str) -> Dict[str, np.ndarray]:
+    """Catalog columns + normalized sampling weights for one region."""
+    cols = np.array(
+        [[m["cap"], m["ac"], m["dc"], m["tau"]] for m in CAR_CATALOG],
+        dtype=np.float32,
+    )
+    w = np.asarray(CAR_WEIGHTS[region], dtype=np.float32)
+    return {"table": cols, "weights": w / w.sum()}
+
+
+# ---------------------------------------------------------------------------
+# Arrival frequency: expected arrivals per HOUR for a 16-charger station,
+# shaped per scenario; env scales to per-step and by a traffic multiplier.
+# ---------------------------------------------------------------------------
+
+_ARRIVAL_SHAPES = {
+    # hours 0..23
+    "shopping": [0.2, 0.1, 0.1, 0.1, 0.1, 0.2, 0.5, 1.0, 2.0, 3.5, 4.5, 5.0,
+                 5.0, 4.8, 4.5, 4.2, 4.0, 3.8, 3.0, 2.0, 1.2, 0.8, 0.4, 0.3],
+    "work": [0.1, 0.1, 0.1, 0.1, 0.2, 0.5, 2.0, 5.0, 6.0, 4.0, 2.0, 1.2,
+             1.5, 1.5, 1.0, 0.8, 0.5, 0.4, 0.3, 0.2, 0.2, 0.1, 0.1, 0.1],
+    "residential": [0.5, 0.3, 0.2, 0.2, 0.2, 0.3, 0.5, 0.8, 0.8, 0.6, 0.6, 0.8,
+                    1.0, 1.0, 1.2, 1.8, 3.0, 4.5, 5.0, 4.0, 3.0, 2.0, 1.2, 0.8],
+    "highway": [0.8, 0.6, 0.5, 0.5, 0.6, 1.0, 2.0, 3.2, 3.5, 3.2, 3.0, 3.2,
+                3.5, 3.4, 3.2, 3.5, 3.8, 4.0, 3.5, 2.8, 2.2, 1.8, 1.4, 1.0],
+}
+
+SCENARIOS = ("shopping", "work", "residential", "highway")
+
+TRAFFIC_MULTIPLIERS = {"low": 0.5, "medium": 1.0, "high": 1.8}
+
+
+def arrival_rate(scenario: str) -> np.ndarray:
+    """Expected arrivals/hour, shape [24] (medium traffic, 16 chargers)."""
+    return np.asarray(_ARRIVAL_SHAPES[scenario], dtype=np.float32)
+
+
+# ---------------------------------------------------------------------------
+# User profiles: how owners use the station, per scenario.
+#   stay_mean_h / stay_std_h : lognormal-ish stay duration
+#   soc0_a, soc0_b           : Beta params of arrival SoC
+#   target_soc               : desired SoC at departure
+#   p_time_sensitive         : fraction of users leaving at their deadline
+#                              (u=0 in the paper; rest are charge-sensitive)
+# ---------------------------------------------------------------------------
+
+USER_PROFILES: Dict[str, Dict[str, float]] = {
+    "highway": {"stay_mean_h": 0.6, "stay_std_h": 0.25, "soc0_a": 2.0, "soc0_b": 5.0,
+                "target_soc": 0.80, "p_time_sensitive": 0.25},
+    "residential": {"stay_mean_h": 9.0, "stay_std_h": 3.0, "soc0_a": 3.0, "soc0_b": 4.0,
+                    "target_soc": 0.90, "p_time_sensitive": 0.70},
+    "work": {"stay_mean_h": 7.5, "stay_std_h": 1.8, "soc0_a": 3.0, "soc0_b": 3.5,
+             "target_soc": 0.85, "p_time_sensitive": 0.80},
+    "shopping": {"stay_mean_h": 1.5, "stay_std_h": 0.6, "soc0_a": 2.5, "soc0_b": 3.0,
+                 "target_soc": 0.80, "p_time_sensitive": 0.65},
+}
+
+USER_PROFILE_FIELDS = (
+    "stay_mean_h", "stay_std_h", "soc0_a", "soc0_b", "target_soc", "p_time_sensitive",
+)
+
+
+def user_profile_vec(scenario: str) -> np.ndarray:
+    p = USER_PROFILES[scenario]
+    return np.asarray([p[f] for f in USER_PROFILE_FIELDS], dtype=np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Export for the Rust side.
+# ---------------------------------------------------------------------------
+
+def export_all(out_dir: str, n_days: int = 365) -> None:
+    """Write every table as JSON under ``out_dir`` (consumed by rust/src/data)."""
+    os.makedirs(out_dir, exist_ok=True)
+
+    prices = {
+        f"{c}_{y}": price_table(c, y, n_days).tolist()
+        for c in PRICE_COUNTRIES
+        for y in PRICE_YEARS
+    }
+    with open(os.path.join(out_dir, "prices.json"), "w") as f:
+        json.dump({"unit": "EUR/kWh", "granularity": "hourly", "tables": prices}, f)
+
+    with open(os.path.join(out_dir, "moer.json"), "w") as f:
+        json.dump({"unit": "kgCO2/kWh", "table": moer_table(n_days).tolist()}, f)
+
+    cars = {
+        "catalog": CAR_CATALOG,
+        "columns": ["cap_kwh", "ac_kw", "dc_kw", "tau"],
+        "weights": {r: car_table(r)["weights"].tolist() for r in CAR_REGIONS},
+    }
+    with open(os.path.join(out_dir, "cars.json"), "w") as f:
+        json.dump(cars, f, indent=1)
+
+    with open(os.path.join(out_dir, "arrivals.json"), "w") as f:
+        json.dump(
+            {
+                "unit": "cars/hour (16-charger station, medium traffic)",
+                "shapes": {s: arrival_rate(s).tolist() for s in SCENARIOS},
+                "traffic_multipliers": TRAFFIC_MULTIPLIERS,
+            },
+            f,
+            indent=1,
+        )
+
+    with open(os.path.join(out_dir, "user_profiles.json"), "w") as f:
+        json.dump({"fields": list(USER_PROFILE_FIELDS),
+                   "profiles": USER_PROFILES}, f, indent=1)

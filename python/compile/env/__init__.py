@@ -1,0 +1,12 @@
+"""Chargax environment (L2): vectorized JAX implementation.
+
+The environment is written *batched* — every state array carries a leading
+env dimension [E, ...], so no vmap is needed and the L1 Pallas kernels see
+full [E, P] tiles directly.
+"""
+
+from .env import ChargaxEnv
+from .state import EnvState, ExogData, METRIC_FIELDS
+from .tree import StationTree
+
+__all__ = ["ChargaxEnv", "EnvState", "ExogData", "StationTree", "METRIC_FIELDS"]

@@ -1,0 +1,247 @@
+"""ChargaxEnv: batched reset/step with auto-reset (gymnax-style).
+
+The environment object holds only *static* data (config + flattened station
+tree); all dynamic state travels through ``EnvState`` and all swappable data
+through ``ExogData``, so jitted/lowered functions close over shapes, never
+values. Observations, actions and metrics are documented in README §State.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import EnvConfig
+from . import reward as rew
+from . import transition as tr
+from .state import METRIC_FIELDS, EnvState, ExogData
+from .tree import StationTree
+
+
+class ChargaxEnv:
+    """Vectorized EV-charging-station environment (paper §4)."""
+
+    def __init__(self, cfg: EnvConfig, allow_v2g: bool = False):
+        self.cfg = cfg
+        self.tree = StationTree.standard(cfg.station)
+        self.tree.validate()
+        t = self.tree
+        self.static = tr.Static(
+            volt=jnp.asarray(t.volt),
+            i_max=jnp.asarray(t.i_max),
+            p_max=jnp.asarray(t.p_max),
+            eta_port=jnp.asarray(t.eta_port),
+            is_dc=jnp.asarray(t.is_dc),
+            membership=jnp.asarray(t.membership),
+            node_limit=jnp.asarray(t.node_limit),
+            node_eta=jnp.asarray(t.node_eta),
+            n_chargers=t.n_chargers,
+            n_ports=t.n_ports,
+            dt_hours=cfg.dt_hours,
+            steps_per_episode=cfg.steps_per_episode,
+            n_levels=cfg.n_levels,
+            n_levels_battery=cfg.n_levels_battery,
+            max_arrivals=cfg.max_arrivals_per_step,
+            n_days=cfg.n_days,
+            battery_soc0=cfg.station.battery_soc0,
+            allow_v2g=allow_v2g,
+        )
+
+    # -- spaces ------------------------------------------------------------
+
+    @property
+    def n_ports(self) -> int:
+        return self.static.n_ports
+
+    @property
+    def n_chargers(self) -> int:
+        return self.static.n_chargers
+
+    @property
+    def obs_dim(self) -> int:
+        return 6 * self.n_chargers + 3 + 4 + 4
+
+    @property
+    def action_nvec(self) -> np.ndarray:
+        """Per-port category counts (MultiDiscrete): cars then battery."""
+        return np.asarray(
+            [self.cfg.n_levels] * self.n_chargers + [self.cfg.n_levels_battery]
+        )
+
+    # -- core --------------------------------------------------------------
+
+    def reset(self, key: jnp.ndarray, exog: ExogData) -> Tuple[EnvState, jnp.ndarray]:
+        """Batched reset. ``key``: [E, 2] u32. Samples a random data day per
+        env (exploring starts, paper B.1)."""
+        e = key.shape[0]
+        c, p = self.n_chargers, self.n_ports
+        keys = jax.vmap(lambda k: jax.random.split(k, 2))(key)
+        key_day, key_state = keys[:, 0], keys[:, 1]
+        day = jax.vmap(
+            lambda k: jax.random.randint(k, (), 0, self.static.n_days)
+        )(key_day).astype(jnp.int32)
+
+        zc = jnp.zeros((e, c), jnp.float32)
+        zp = jnp.zeros((e, p), jnp.float32)
+        cap = jnp.ones((e, p), jnp.float32)
+        cap = cap.at[:, c].set(self.cfg.station.battery_capacity_kwh)
+        soc = zp.at[:, c].set(self.static.battery_soc0)
+        r_bar = zp.at[:, c].set(self.cfg.station.battery_p_max_kw)
+        tau = zp.at[:, c].set(self.cfg.station.battery_tau)
+        from ..kernels.ref import charging_curve
+
+        r_hat = charging_curve(soc, r_bar, jnp.maximum(tau, 1e-3)) * (
+            jnp.zeros((e, p)).at[:, c].set(1.0)
+        )
+        state = EnvState(
+            t=jnp.zeros((e,), jnp.int32),
+            day=day,
+            key=key_state,
+            i_drawn=zp,
+            occup=zc,
+            soc=soc,
+            de_remain=zc,
+            dt_remain=zc,
+            cap=cap,
+            r_bar=r_bar,
+            tau=tau,
+            pref=zc,
+            r_hat=r_hat,
+            ep_return=jnp.zeros((e,), jnp.float32),
+            ep_profit=jnp.zeros((e,), jnp.float32),
+        )
+        return state, self.observe(state, exog)
+
+    def step(
+        self, state: EnvState, action: jnp.ndarray, exog: ExogData
+    ) -> Tuple[EnvState, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """One environment step with auto-reset.
+
+        Returns (state', obs, reward [E], done [E], metrics [E, M]).
+        """
+        st = self.static
+        steps_per_hour = int(round(1.0 / st.dt_hours))
+        hour = jnp.clip(state.t // steps_per_hour, 0, 23)
+        p_buy = exog.price_buy[state.day, hour]
+        p_sell_grid = exog.price_sell_grid[state.day, hour]
+        moer = exog.moer[state.day, hour]
+        grid_demand = exog.grid_demand[state.day, hour]
+
+        # (i) apply actions + Eq. 5 projection (L1 kernel).
+        i_new, excess = tr.apply_actions(state, action, st)
+        # (ii) charge (L1 kernel) — also advances t.
+        state, e_port = tr.charge(state, i_new, st)
+        # (iii) departures.
+        state, missing, overtime, early, departed = tr.departures(state, st)
+        # (iv) arrivals.
+        state, rejected, arrived = tr.arrivals(state, exog, st)
+
+        # Reward (Eq. 2-3).
+        de_net, de_grid_net = rew.grid_energy(e_port, st)
+        pi = rew.profit(
+            de_net, de_grid_net, p_buy, p_sell_grid, exog.p_sell,
+            self.cfg.fixed_cost_per_step,
+        )
+        costs = rew.StepCosts(
+            excess_kw=excess,
+            missing_kwh=missing,
+            overtime_steps=overtime,
+            early_steps=early,
+            rejected=rejected,
+        )
+        pens = rew.penalties(
+            costs, de_grid_net, de_net, e_port, moer, grid_demand, exog, st
+        )
+        r = rew.reward(pi, pens, exog)
+
+        done = (state.t >= st.steps_per_episode).astype(jnp.float32)
+        ep_return = state.ep_return + r
+        ep_profit = state.ep_profit + pi
+        state = state._replace(ep_return=ep_return, ep_profit=ep_profit)
+
+        metrics = jnp.stack(
+            [
+                r,
+                pi,
+                de_net,
+                de_grid_net,
+                excess,
+                missing,
+                overtime,
+                rejected,
+                departed,
+                arrived,
+                done,
+                ep_return * done,
+                ep_profit * done,
+            ],
+            axis=1,
+        )
+        assert metrics.shape[1] == len(METRIC_FIELDS)
+
+        # Auto-reset finished envs (fresh day, fresh key).
+        reset_state, _ = self.reset(state.key, exog)
+        state = jax.tree.map(
+            lambda fresh, cur: jnp.where(
+                done.reshape((-1,) + (1,) * (cur.ndim - 1)).astype(cur.dtype) > 0,
+                fresh,
+                cur,
+            ),
+            reset_state,
+            state,
+        )
+        return state, self.observe(state, exog), r, done, metrics
+
+    # -- observation --------------------------------------------------------
+
+    def observe(self, state: EnvState, exog: ExogData) -> jnp.ndarray:
+        """Flat observation [E, obs_dim]; see README §Observation."""
+        st = self.static
+        c = st.n_chargers
+        steps_per_hour = int(round(1.0 / st.dt_hours))
+        hour = jnp.clip(state.t // steps_per_hour, 0, 23)
+        hour_next = jnp.clip(hour + 1, 0, 23)
+
+        per_port = jnp.concatenate(
+            [
+                state.occup,
+                state.soc[:, :c],
+                state.de_remain / 100.0,
+                state.dt_remain / float(st.steps_per_episode),
+                state.r_hat[:, :c] / st.p_max[None, :c],
+                state.i_drawn[:, :c] / st.i_max[None, :c],
+            ],
+            axis=1,
+        )
+        battery = jnp.stack(
+            [
+                state.soc[:, c],
+                state.i_drawn[:, c] / st.i_max[c],
+                state.r_hat[:, c] / st.p_max[c],
+            ],
+            axis=1,
+        )
+        phase = 2.0 * jnp.pi * state.t.astype(jnp.float32) / float(st.steps_per_episode)
+        weekday = ((state.day % 7) < 5).astype(jnp.float32)
+        time_feat = jnp.stack(
+            [
+                jnp.sin(phase),
+                jnp.cos(phase),
+                weekday,
+                state.day.astype(jnp.float32) / float(st.n_days),
+            ],
+            axis=1,
+        )
+        price_feat = jnp.stack(
+            [
+                exog.price_buy[state.day, hour],
+                exog.price_buy[state.day, hour_next],
+                exog.price_sell_grid[state.day, hour],
+                exog.moer[state.day, hour],
+            ],
+            axis=1,
+        )
+        return jnp.concatenate([per_port, battery, time_feat, price_feat], axis=1)

@@ -1,0 +1,99 @@
+"""Profit and penalty terms (paper §4 Reward Function / A.3), batched.
+
+Profit (Eq. 2): energy is metered at the port on the car side (ΔE_net);
+grid-side flows carry the EVSE efficiency (charging draws e/η from the
+grid, discharging feeds η·e into it); the battery contributes its port
+energy directly (A.3). The net grid flow is bought at p_buy when positive
+and sold at p_sell_grid when negative.
+
+Reward (Eq. 3): r = Π − Σ_c α_c·c(t) with the seven penalty families of
+A.3; the weights live in ``ExogData.alpha`` so sweeps (Fig. 4b/c) need no
+re-AOT.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from .state import ExogData
+from .transition import Static
+
+
+class StepCosts(NamedTuple):
+    """Per-step penalty inputs gathered by env.step()."""
+
+    excess_kw: jnp.ndarray      # [E] pre-projection node overload
+    missing_kwh: jnp.ndarray    # [E] unmet demand of departing u=0 users
+    overtime_steps: jnp.ndarray # [E] overtime of departing u=1 users
+    early_steps: jnp.ndarray    # [E] early departure of u=1 users
+    rejected: jnp.ndarray       # [E]
+
+
+def grid_energy(e_port: jnp.ndarray, st: Static) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Split port energies into car-side ΔE_net and grid-side ΔE_grid,net.
+
+    Args:
+      e_port: [E, P] signed kWh transferred at each port this step.
+
+    Returns (de_net [E] car ports only, de_grid_net [E] incl. battery).
+    """
+    c = st.n_chargers
+    e_cars = e_port[:, :c]
+    de_net = jnp.sum(e_cars, axis=1)
+
+    eta = st.eta_port[None, :c]
+    grid_cars = jnp.where(e_cars > 0.0, e_cars / eta, e_cars * eta)
+    # Battery: ΔE_b,net enters the grid balance directly (A.3).
+    e_bat = e_port[:, c]
+    de_grid_net = jnp.sum(grid_cars, axis=1) + e_bat
+    return de_net, de_grid_net
+
+
+def profit(
+    de_net: jnp.ndarray,
+    de_grid_net: jnp.ndarray,
+    p_buy: jnp.ndarray,
+    p_sell_grid: jnp.ndarray,
+    p_sell: jnp.ndarray,
+    fixed_cost: float,
+) -> jnp.ndarray:
+    """Eq. 2. All price args broadcast over [E]."""
+    grid_price = jnp.where(de_grid_net > 0.0, p_buy, p_sell_grid)
+    return p_sell * de_net - grid_price * de_grid_net - fixed_cost
+
+
+def penalties(
+    costs: StepCosts,
+    de_grid_net: jnp.ndarray,
+    de_net: jnp.ndarray,
+    e_port: jnp.ndarray,
+    moer: jnp.ndarray,
+    grid_demand: jnp.ndarray,
+    exog: ExogData,
+    st: Static,
+) -> jnp.ndarray:
+    """Stack the seven A.3 penalty terms -> [E, 7] (order: state.PENALTIES)."""
+    c = st.n_chargers
+    e_bat = e_port[:, c]
+    discharge_cars = jnp.sum(jnp.maximum(-e_port[:, :c], 0.0), axis=1)
+
+    c_constraint = costs.excess_kw
+    c_sat0 = costs.missing_kwh
+    c_sat1 = costs.overtime_steps - exog.beta * costs.early_steps
+    c_sustain = moer * de_grid_net
+    c_declined = costs.rejected
+    c_degrad = jnp.maximum(-e_bat, 0.0) + discharge_cars
+    c_grid = jnp.abs(de_net - grid_demand)
+    return jnp.stack(
+        [c_constraint, c_sat0, c_sat1, c_sustain, c_declined, c_degrad, c_grid],
+        axis=1,
+    )
+
+
+def reward(
+    pi: jnp.ndarray, pens: jnp.ndarray, exog: ExogData
+) -> jnp.ndarray:
+    """Eq. 3: profit minus the α-weighted penalty combination."""
+    return pi - jnp.sum(pens * exog.alpha[None, :], axis=1)

@@ -1,0 +1,89 @@
+"""State containers (paper Table 4) and the exogenous-data bundle.
+
+``EnvState`` is the endogenous state (batched, [E, ...] leading dim)
+plus the per-car exogenous attributes that stay fixed while a car is
+parked (paper A.1 "car state"). ``ExogData`` carries every swappable
+time-series / distribution table — the Rust coordinator substitutes these
+literals at runtime to change scenario, region, price year, traffic level
+or reward weights *without re-AOT*.
+
+Port layout: ``P = n_chargers + 1``; car ports are ``[0, C)``; the station
+battery is lane ``C``. Arrays over car-only quantities have width C.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class EnvState(NamedTuple):
+    """Endogenous state (+ fixed per-car attributes), all batched [E, ...]."""
+
+    t: jnp.ndarray          # [E] i32, step within episode
+    day: jnp.ndarray        # [E] i32, day index into the price tables
+    key: jnp.ndarray        # [E, 2] u32, per-env PRNG key
+    i_drawn: jnp.ndarray    # [E, P] f32, signed port current (A)
+    occup: jnp.ndarray      # [E, C] f32 0/1
+    soc: jnp.ndarray        # [E, P] f32, car/battery state of charge
+    de_remain: jnp.ndarray  # [E, C] f32 kWh still wanted (can go <= 0)
+    dt_remain: jnp.ndarray  # [E, C] f32 steps until desired departure
+    cap: jnp.ndarray        # [E, P] f32 kWh battery capacity (car/battery)
+    r_bar: jnp.ndarray      # [E, P] f32 kW max rate at *this* port
+    tau: jnp.ndarray        # [E, P] f32 charging-curve knee
+    pref: jnp.ndarray       # [E, C] f32, 0 = time-sensitive, 1 = charge-sensitive
+    r_hat: jnp.ndarray      # [E, P] f32 kW current max rate (curve at SoC)
+    ep_return: jnp.ndarray  # [E] f32, running episode return
+    ep_profit: jnp.ndarray  # [E] f32, running episode profit
+
+
+class ExogData(NamedTuple):
+    """Runtime-swappable exogenous tables (model EXOG inputs, in order)."""
+
+    price_buy: jnp.ndarray        # [D, 24] EUR/kWh
+    price_sell_grid: jnp.ndarray  # [D, 24] EUR/kWh feed-in price
+    moer: jnp.ndarray             # [D, 24] kgCO2/kWh
+    grid_demand: jnp.ndarray      # [D, 24] kW V2G demand signal (c_grid)
+    arrival_rate: jnp.ndarray     # [24] cars/hour (medium traffic)
+    car_table: jnp.ndarray        # [M, 4] cap, ac_kw, dc_kw, tau
+    car_weights: jnp.ndarray      # [M] sampling weights (sum 1)
+    user_profile: jnp.ndarray     # [6] see data.USER_PROFILE_FIELDS
+    alpha: jnp.ndarray            # [7] penalty weights (Eq. 3), order below
+    p_sell: jnp.ndarray           # [] EUR/kWh customer tariff
+    traffic: jnp.ndarray          # [] arrival-rate multiplier
+    beta: jnp.ndarray             # [] early-departure bonus weight (A.3)
+
+
+# Penalty order for ExogData.alpha (paper A.3).
+PENALTIES = (
+    "constraint",     # pre-projection node overload (kW)
+    "satisfaction0",  # kWh missing for departing time-sensitive users
+    "satisfaction1",  # overtime (minus beta * early) for charge-sensitive
+    "sustain",        # MOER-weighted net grid energy
+    "declined",       # rejected cars
+    "degradation",    # battery + car discharge throughput
+    "grid",           # |net car energy - grid demand signal|
+)
+
+# Per-step metric vector layout (step() returns metrics [E, len(METRIC_FIELDS)];
+# the Rust coordinator and eval_rollout aggregate them).
+METRIC_FIELDS = (
+    "reward",
+    "profit",
+    "energy_to_cars_kwh",   # ΔE_net (car ports, signed)
+    "energy_grid_net_kwh",  # ΔE_grid,net
+    "excess_kw",            # pre-projection constraint violation
+    "missing_kwh",          # satisfaction0 contribution this step
+    "overtime_steps",       # charge-sensitive overtime at departure
+    "rejected",             # cars turned away this step
+    "departed",             # cars that left this step
+    "arrived",              # cars that parked this step
+    "done",                 # episode terminated after this step
+    "ep_return",            # return of the episode that just finished (else 0)
+    "ep_profit",            # profit of the episode that just finished (else 0)
+)
+
+
+def metric_index(name: str) -> int:
+    return METRIC_FIELDS.index(name)

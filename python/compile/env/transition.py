@@ -1,0 +1,274 @@
+"""The four-step transition function (paper §4 / A.2), fully batched.
+
+Step order (A.2): (i) apply actions — clamp to port, car-curve and headroom
+limits, then project onto the station-tree constraints (L1 kernel);
+(ii) charge stationed cars (L1 kernel); (iii) departures; (iv) arrivals.
+
+Sampling notes:
+* Arrival counts are Poisson (paper B.1), rate = hourly shape * traffic
+  multiplier, converted to per-step.
+* Arrival SoC uses a Kumaraswamy(a, b) draw — closed-form inverse CDF with
+  the same support/shape family as the Beta the paper implies. jax.random's
+  Beta lowers to a rejection-sampling while-loop; Kumaraswamy lowers to two
+  pows, which keeps the AOT HLO small and the Rust scalar mirror exact.
+* Stay duration is a truncated Normal (>= 1 step).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import kernels
+from ..kernels.ref import charging_curve, discharging_curve
+from .state import EnvState, ExogData
+
+
+class Static(NamedTuple):
+    """Station tree + config constants as device arrays / Python scalars."""
+
+    volt: jnp.ndarray        # [P]
+    i_max: jnp.ndarray       # [P]
+    p_max: jnp.ndarray       # [P]
+    eta_port: jnp.ndarray    # [P]
+    is_dc: jnp.ndarray       # [C]
+    membership: jnp.ndarray  # [N, P]
+    node_limit: jnp.ndarray  # [N]
+    node_eta: jnp.ndarray    # [N]
+    n_chargers: int
+    n_ports: int
+    dt_hours: float
+    steps_per_episode: int
+    n_levels: int
+    n_levels_battery: int
+    max_arrivals: int
+    n_days: int
+    battery_soc0: float
+    allow_v2g: bool  # cars may discharge (battery always may)
+
+
+def _present(state: EnvState) -> jnp.ndarray:
+    """[E, P] mask: occupied car ports + the always-present battery."""
+    ones = jnp.ones_like(state.occup[:, :1])
+    return jnp.concatenate([state.occup, ones], axis=1)
+
+
+def apply_actions(
+    state: EnvState, action: jnp.ndarray, st: Static
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """A.2 step (i): discrete levels -> clamped signed currents -> Eq. 5.
+
+    ``action`` is [E, P] int32: car ports select a fraction of the port
+    maximum in {0, 1/(L-1), ..., 1} (paper B.1 discretization; negative
+    fractions when V2G is enabled); the battery lane uses a symmetric
+    (-1..1) ladder.
+
+    Returns (i_drawn [E, P], excess_kw [E]).
+    """
+    c = st.n_chargers
+    lvl = action.astype(jnp.float32)
+    frac_car = lvl[:, :c] / (st.n_levels - 1)
+    if st.allow_v2g:
+        # Levels span [-1, 1] for car ports too.
+        frac_car = 2.0 * frac_car - 1.0
+    half = (st.n_levels_battery - 1) / 2.0
+    frac_bat = lvl[:, c:] / half - 1.0
+    frac = jnp.concatenate([frac_car, frac_bat], axis=1)
+    i_target = frac * st.i_max[None, :]
+
+    pres = _present(state)
+    p_target = i_target * st.volt[None, :] / 1000.0  # kW, signed
+    # Car charging curve (and its flipped discharge twin, A.1).
+    r_ch = charging_curve(state.soc, state.r_bar, state.tau)
+    r_dis = discharging_curve(state.soc, state.r_bar, state.tau)
+    # Headroom: cannot over-fill / over-drain within one step.
+    head_up = (1.0 - state.soc) * state.cap / st.dt_hours
+    head_dn = state.soc * state.cap / st.dt_hours
+    p_new = jnp.clip(p_target, -jnp.minimum(r_dis, head_dn), jnp.minimum(r_ch, head_up))
+    p_new = p_new * pres
+    i_new = p_new * 1000.0 / st.volt[None, :]
+
+    return kernels.constraint_projection(
+        i_new, st.volt, st.membership, st.node_limit, st.node_eta
+    )
+
+
+def charge(state: EnvState, i_drawn: jnp.ndarray, st: Static):
+    """A.2 step (ii): advance SoC / demand / time via the charge kernel.
+
+    Returns (state', e_port [E, P]).
+    """
+    pres = _present(state)
+    de_full = jnp.concatenate(
+        [state.de_remain, jnp.zeros_like(state.de_remain[:, :1])], axis=1
+    )
+    dt_full = jnp.concatenate(
+        [state.dt_remain, jnp.zeros_like(state.dt_remain[:, :1])], axis=1
+    )
+    soc_n, de_n, dt_n, r_hat_n, e_port = kernels.charge_update(
+        i_drawn, st.volt, pres, state.soc, de_full, dt_full,
+        state.cap, state.r_bar, state.tau, st.dt_hours,
+    )
+    c = st.n_chargers
+    state = state._replace(
+        i_drawn=i_drawn,
+        soc=soc_n,
+        de_remain=de_n[:, :c],
+        dt_remain=dt_n[:, :c],
+        r_hat=r_hat_n,
+        t=state.t + 1,
+    )
+    return state, e_port
+
+
+def departures(state: EnvState, st: Static):
+    """A.2 step (iii): time-sensitive leave at the deadline, charge-sensitive
+    when their demand is met.
+
+    Returns (state', missing_kwh [E], overtime_steps [E], early_steps [E],
+    departed [E]).
+    """
+    eps = 1e-6
+    time_up = (state.pref == 0.0) & (state.dt_remain <= 0.0)
+    charged = (state.pref == 1.0) & (state.de_remain <= eps)
+    leave = (state.occup > 0.0) & (time_up | charged)
+    leave_f = leave.astype(jnp.float32)
+
+    missing = jnp.sum(
+        leave_f * (state.pref == 0.0) * jnp.maximum(state.de_remain, 0.0), axis=1
+    )
+    overtime = jnp.sum(
+        leave_f * (state.pref == 1.0) * jnp.maximum(-state.dt_remain, 0.0), axis=1
+    )
+    early = jnp.sum(
+        leave_f * (state.pref == 1.0) * jnp.maximum(state.dt_remain, 0.0), axis=1
+    )
+    departed = jnp.sum(leave_f, axis=1)
+
+    keep = 1.0 - leave_f
+    c = st.n_chargers
+    keep_p = jnp.concatenate([keep, jnp.ones_like(keep[:, :1])], axis=1)
+    state = state._replace(
+        occup=state.occup * keep,
+        soc=state.soc * keep_p,
+        de_remain=state.de_remain * keep,
+        dt_remain=state.dt_remain * keep,
+        cap=state.cap * keep_p + (1.0 - keep_p) * _cap_fill(state, c),
+        r_bar=state.r_bar * keep_p,
+        tau=state.tau * keep_p,
+        pref=state.pref * keep,
+        r_hat=state.r_hat * keep_p,
+        i_drawn=state.i_drawn * keep_p,
+    )
+    return state, missing, overtime, early, departed
+
+
+def _cap_fill(state: EnvState, c: int) -> jnp.ndarray:
+    """Empty car lanes keep cap=1 (avoids 0/0 in the charge kernel); the
+    battery lane keeps its true capacity."""
+    ones = jnp.ones_like(state.cap)
+    return ones.at[:, c].set(state.cap[:, c])
+
+
+def _sample_candidates(key, exog: ExogData, st: Static):
+    """Sample ``max_arrivals`` candidate (car, user) profiles for one env.
+
+    Returns dict of [A]-shaped arrays.
+    """
+    a = st.max_arrivals
+    k_model, k_stay, k_soc, k_pref = jax.random.split(key, 4)
+    logw = jnp.log(jnp.maximum(exog.car_weights, 1e-30))
+    model = jax.random.categorical(k_model, logw, shape=(a,))
+    row = exog.car_table[model]  # [A, 4]
+    cap, ac_kw, dc_kw, tau = row[:, 0], row[:, 1], row[:, 2], row[:, 3]
+
+    up = exog.user_profile
+    stay_mean_h, stay_std_h = up[0], up[1]
+    soc0_a, soc0_b, target_soc, p_time = up[2], up[3], up[4], up[5]
+    stay_h = stay_mean_h + stay_std_h * jax.random.normal(k_stay, (a,))
+    stay_steps = jnp.maximum(jnp.round(stay_h / st.dt_hours), 1.0)
+    # Kumaraswamy(a, b) arrival SoC (see module docstring).
+    u = jax.random.uniform(k_soc, (a,), minval=1e-6, maxval=1.0 - 1e-6)
+    soc0 = (1.0 - (1.0 - u) ** (1.0 / soc0_b)) ** (1.0 / soc0_a)
+    soc0 = jnp.clip(soc0, 0.02, 0.98)
+    de = jnp.maximum(target_soc - soc0, 0.0) * cap
+    pref = (jax.random.uniform(k_pref, (a,)) < (1.0 - p_time)).astype(jnp.float32)
+    return {
+        "cap": cap, "ac_kw": ac_kw, "dc_kw": dc_kw, "tau": tau,
+        "stay": stay_steps, "soc0": soc0, "de": de, "pref": pref,
+    }
+
+
+def arrivals(state: EnvState, exog: ExogData, st: Static):
+    """A.2 step (iv): Poisson arrivals, first-come-first-served first-fit.
+
+    Returns (state', rejected [E], arrived [E]).
+    """
+    c = st.n_chargers
+    e = state.occup.shape[0]
+
+    keys = jax.vmap(lambda k: jax.random.split(k, 3))(state.key)  # [E, 3, 2]
+    key_next, k_count, k_cand = keys[:, 0], keys[:, 1], keys[:, 2]
+
+    steps_per_hour = int(round(1.0 / st.dt_hours))
+    hour = jnp.clip(state.t // steps_per_hour, 0, 23)
+    lam = exog.arrival_rate[hour] * exog.traffic / steps_per_hour  # [E]
+    m = jax.vmap(lambda k, l: jax.random.poisson(k, l))(k_count, lam)
+    m = m.astype(jnp.int32)
+
+    free = 1.0 - state.occup  # [E, C]
+    n_free = jnp.sum(free, axis=1).astype(jnp.int32)
+    n_take = jnp.minimum(jnp.minimum(m, n_free), st.max_arrivals)
+    rejected = jnp.maximum(m - n_take, 0).astype(jnp.float32)
+
+    cand = jax.vmap(lambda k: _sample_candidates(k, exog, st))(k_cand)
+
+    # First-fit: the j-th accepted car takes the j-th free port.
+    rank = jnp.cumsum(free, axis=1) - 1.0  # [E, C], rank among free ports
+    rank = jnp.where(free > 0.0, rank, -1.0)
+    # assign[e, j, p] = 1 iff candidate j parks at port p.
+    j_idx = jnp.arange(st.max_arrivals, dtype=jnp.float32)
+    assign = (
+        (rank[:, None, :] == j_idx[None, :, None])
+        & (j_idx[None, :, None] < n_take[:, None, None].astype(jnp.float32))
+    ).astype(jnp.float32)  # [E, A, C]
+
+    def place(col):  # [E, A] -> [E, C] scattered onto ports
+        return jnp.einsum("ea,eac->ec", col, assign)
+
+    newly = jnp.sum(assign, axis=1)  # [E, C] 0/1
+    # Port-dependent max rate: DC ports use the car's DC limit, AC its AC
+    # limit, both capped by the port's own power rating.
+    car_rate = jnp.where(
+        st.is_dc[None, None, :] > 0.0,
+        cand["dc_kw"][:, :, None],
+        cand["ac_kw"][:, :, None],
+    )  # [E, A, C]
+    r_bar_new = jnp.einsum("eac,eac->ec", car_rate, assign)
+    r_bar_new = jnp.minimum(r_bar_new, st.p_max[None, :c]) * newly
+
+    soc_new = place(cand["soc0"])
+    cap_new = place(cand["cap"])
+    tau_new = place(cand["tau"])
+
+    occup = state.occup + newly
+    pad = lambda x: jnp.concatenate([x, jnp.zeros_like(x[:, :1])], axis=1)
+    keep_cap = state.cap * (1.0 - pad(newly)) + pad(cap_new)
+    r_hat_new = charging_curve(soc_new, r_bar_new, jnp.maximum(tau_new, 1e-3)) * newly
+
+    state = state._replace(
+        key=key_next,
+        occup=occup,
+        soc=state.soc * (1.0 - pad(newly)) + pad(soc_new),
+        de_remain=state.de_remain * (1.0 - newly) + place(cand["de"]),
+        dt_remain=state.dt_remain * (1.0 - newly) + place(cand["stay"]),
+        cap=keep_cap,
+        r_bar=state.r_bar * (1.0 - pad(newly)) + pad(r_bar_new),
+        tau=state.tau * (1.0 - pad(newly)) + pad(tau_new),
+        pref=state.pref * (1.0 - newly) + place(cand["pref"]),
+        r_hat=state.r_hat * (1.0 - pad(newly)) + pad(r_hat_new),
+    )
+    arrived = jnp.sum(newly, axis=1)
+    return state, rejected, arrived

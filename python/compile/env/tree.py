@@ -1,0 +1,142 @@
+"""Station architecture as flat arrays (paper Fig. 3 / §EV Station Layout).
+
+A station is a tree: root = grid connection, internal nodes = splitters /
+transformers / cables with a power capacity and an efficiency coefficient,
+leaves = EVSEs (+ the station battery). For the kernels we flatten the tree
+into an ancestor *membership matrix* ``[n_nodes, n_ports]`` — Eq. 5 then
+becomes a matmul + rescale (see kernels/constraint.py).
+
+``StationTree.standard`` builds the paper's default layout (Fig. 3b): one
+splitter per charger type, battery directly under the root. Custom trees can
+be built by passing explicit node lists to the constructor, mirroring
+real-world infrastructure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from ..config import AC_CHARGER, DC_CHARGER, StationConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class StationTree:
+    """Flattened station electrical topology. All arrays are numpy (static)."""
+
+    # Per-port (chargers first, battery last):
+    volt: np.ndarray       # [P] V
+    i_max: np.ndarray      # [P] A
+    p_max: np.ndarray      # [P] kW
+    eta_port: np.ndarray   # [P] EVSE efficiency
+    is_dc: np.ndarray      # [C] 1.0 for DC chargers
+    # Tree nodes:
+    membership: np.ndarray  # [N, P] 0/1 ancestor matrix
+    node_limit: np.ndarray  # [N] kW
+    node_eta: np.ndarray    # [N]
+    node_names: Tuple[str, ...]
+
+    @property
+    def n_ports(self) -> int:
+        return int(self.volt.shape[0])
+
+    @property
+    def n_chargers(self) -> int:
+        return int(self.is_dc.shape[0])
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.node_limit.shape[0])
+
+    @staticmethod
+    def standard(cfg: StationConfig) -> "StationTree":
+        """Paper Fig. 3b: root -> {DC splitter, AC splitter, battery}."""
+        c = cfg.n_chargers
+        p = cfg.n_ports
+        volt = np.empty(p, np.float32)
+        i_max = np.empty(p, np.float32)
+        volt[: cfg.n_dc] = DC_CHARGER.voltage
+        i_max[: cfg.n_dc] = DC_CHARGER.i_max
+        volt[cfg.n_dc : c] = AC_CHARGER.voltage
+        i_max[cfg.n_dc : c] = AC_CHARGER.i_max
+        volt[c] = cfg.battery_voltage
+        i_max[c] = cfg.battery_p_max_kw * 1000.0 / cfg.battery_voltage
+        p_max = volt * i_max / 1000.0
+        eta_port = np.full(p, cfg.evse_eta, np.float32)
+        is_dc = np.zeros(c, np.float32)
+        is_dc[: cfg.n_dc] = 1.0
+
+        names: List[str] = ["root"]
+        membership = [np.ones(p, np.float32)]  # root covers everything
+        limits = [cfg.root_p_kw]
+        if cfg.n_dc > 0:
+            row = np.zeros(p, np.float32)
+            row[: cfg.n_dc] = 1.0
+            membership.append(row)
+            limits.append(cfg.dc_split_p_kw)
+            names.append("dc_splitter")
+        if cfg.n_ac > 0:
+            row = np.zeros(p, np.float32)
+            row[cfg.n_dc : c] = 1.0
+            membership.append(row)
+            limits.append(cfg.ac_split_p_kw)
+            names.append("ac_splitter")
+        return StationTree(
+            volt=volt,
+            i_max=i_max,
+            p_max=p_max.astype(np.float32),
+            eta_port=eta_port,
+            is_dc=is_dc,
+            membership=np.stack(membership),
+            node_limit=np.asarray(limits, np.float32),
+            node_eta=np.full(len(limits), cfg.node_eta, np.float32),
+            node_names=tuple(names),
+        )
+
+    @staticmethod
+    def custom(
+        cfg: StationConfig,
+        nodes: Sequence[Tuple[str, Sequence[int], float, float]],
+    ) -> "StationTree":
+        """Build an arbitrary architecture (paper Fig. 3c).
+
+        ``nodes`` is a list of (name, port_indices, limit_kw, eta). A root
+        covering every port is prepended automatically if absent.
+        """
+        base = StationTree.standard(cfg)
+        p = cfg.n_ports
+        names: List[str] = []
+        rows: List[np.ndarray] = []
+        limits: List[float] = []
+        etas: List[float] = []
+        has_root = any(sorted(ports) == list(range(p)) for _, ports, _, _ in nodes)
+        if not has_root:
+            names.append("root")
+            rows.append(np.ones(p, np.float32))
+            limits.append(cfg.root_p_kw)
+            etas.append(cfg.node_eta)
+        for name, ports, limit, eta in nodes:
+            row = np.zeros(p, np.float32)
+            row[np.asarray(list(ports), int)] = 1.0
+            names.append(name)
+            rows.append(row)
+            limits.append(float(limit))
+            etas.append(float(eta))
+        return dataclasses.replace(
+            base,
+            membership=np.stack(rows),
+            node_limit=np.asarray(limits, np.float32),
+            node_eta=np.asarray(etas, np.float32),
+            node_names=tuple(names),
+        )
+
+    def validate(self) -> None:
+        """Sanity checks used by pytest and aot.py."""
+        assert self.membership.shape == (self.n_nodes, self.n_ports)
+        assert np.all((self.membership == 0) | (self.membership == 1))
+        assert np.all(self.membership[0] == 1), "node 0 must be the root"
+        assert np.all(self.node_limit > 0)
+        assert np.all((self.node_eta > 0) & (self.node_eta <= 1))
+        assert np.all(self.p_max > 0)

@@ -1,0 +1,53 @@
+"""Build ExogData bundles from the data stack.
+
+The bundle's *shapes* are part of the AOT contract; its *values* are runtime
+inputs. ``default_exog`` is what aot.py embeds in the manifest as the
+defaults; the Rust coordinator overrides individual leaves (price year, car
+region, scenario, traffic, alpha) per experiment.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .env.state import PENALTIES, ExogData
+
+
+def default_exog(
+    scenario: str = "shopping",
+    region: str = "EU",
+    country: str = "NL",
+    year: int = 2021,
+    traffic: str = "medium",
+    alpha: dict | None = None,
+    beta: float = 0.1,
+    p_sell: float = 0.75,
+    n_days: int = 365,
+    feed_in_ratio: float = 0.9,
+) -> ExogData:
+    """Assemble a full exogenous bundle for one named scenario."""
+    buy = data.price_table(country, year, n_days)
+    cars = data.car_table(region)
+    alpha_vec = np.zeros(len(PENALTIES), np.float32)
+    for name, val in (alpha or {}).items():
+        alpha_vec[PENALTIES.index(name)] = val
+    moer = data.moer_table(n_days)
+    # Synthetic V2G demand signal (used only when alpha["grid"] > 0):
+    # follows the price shape, scaled to station-sized kWh per step.
+    grid_demand = (buy / np.maximum(buy.mean(), 1e-6) - 1.0) * 5.0
+    return ExogData(
+        price_buy=jnp.asarray(buy),
+        price_sell_grid=jnp.asarray(buy * feed_in_ratio),
+        moer=jnp.asarray(moer),
+        grid_demand=jnp.asarray(grid_demand.astype(np.float32)),
+        arrival_rate=jnp.asarray(data.arrival_rate(scenario)),
+        car_table=jnp.asarray(cars["table"]),
+        car_weights=jnp.asarray(cars["weights"]),
+        user_profile=jnp.asarray(data.user_profile_vec(scenario)),
+        alpha=jnp.asarray(alpha_vec),
+        p_sell=jnp.asarray(p_sell, jnp.float32),
+        traffic=jnp.asarray(data.TRAFFIC_MULTIPLIERS[traffic], jnp.float32),
+        beta=jnp.asarray(beta, jnp.float32),
+    )

@@ -1,0 +1,56 @@
+"""L1 Pallas kernels for the Chargax hot path.
+
+Routing: by default every kernel runs as a Pallas kernel (interpret=True —
+the only mode CPU PJRT can execute; real-TPU lowering emits Mosaic
+custom-calls). Set ``CHARGAX_NO_PALLAS=1`` to route through the pure-jnp
+oracles in ref.py instead — mathematically identical (pytest asserts
+allclose on both paths), but XLA can fuse the jnp form far better on CPU,
+so aot.py uses it for the ``*-ref`` CPU-fast artifact variants (see
+EXPERIMENTS.md §Perf for the measured gap). The env var is read at call
+time so one process can build both variants.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from . import ref
+from .charge import charge_update as _charge_update_pallas
+from .constraint import constraint_projection as _constraint_projection_pallas
+from .gae import gae as _gae_pallas
+
+
+def _use_ref() -> bool:
+    return os.environ.get("CHARGAX_NO_PALLAS", "0") == "1"
+
+
+def constraint_projection(i_drawn, volt, membership, limits_kw, node_eta):
+    if _use_ref():
+        return jax.vmap(
+            lambda i: ref.constraint_projection_ref(i, volt, membership, limits_kw, node_eta)
+        )(i_drawn)
+    return _constraint_projection_pallas(i_drawn, volt, membership, limits_kw, node_eta)
+
+
+def charge_update(i_drawn, volt, present, soc, de_remain, dt_remain, cap,
+                  r_bar, tau, dt_hours):
+    if _use_ref():
+        return ref.charge_update_ref(
+            i_drawn, volt[None, :], present, soc, de_remain, dt_remain,
+            cap, r_bar, tau, dt_hours,
+        )
+    return _charge_update_pallas(
+        i_drawn, volt, present, soc, de_remain, dt_remain, cap, r_bar, tau,
+        dt_hours,
+    )
+
+
+def gae(rewards, values, dones, last_value, gamma, lam):
+    if _use_ref():
+        return ref.gae_ref(rewards, values, dones, last_value, gamma, lam)
+    return _gae_pallas(rewards, values, dones, last_value, gamma, lam)
+
+
+__all__ = ["constraint_projection", "charge_update", "gae", "ref"]

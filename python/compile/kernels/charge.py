@@ -1,0 +1,71 @@
+"""Pallas kernel: charge-stationed-cars state update (paper A.2 step ii).
+
+Pure VPU elementwise over the [E, P] state tile: port power -> transferred
+energy (with over-fill / over-drain clips) -> SoC / remaining-demand /
+remaining-time / charging-curve updates. 9 input lanes, 5 output lanes,
+one VMEM tile per E-block; no MXU use. interpret=True on this image;
+numerics validated against ``ref.charge_update_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-9
+_BLOCK_E = 128
+
+
+def _kernel(i_ref, volt_ref, pres_ref, soc_ref, de_ref, dt_ref, cap_ref,
+            rbar_ref, tau_ref, soc_o, de_o, dt_o, rhat_o, e_o, *, dt_hours: float):
+    volt = volt_ref[...]
+    pres = pres_ref[...]
+    soc = soc_ref[...]
+    cap = cap_ref[...]
+    rbar = rbar_ref[...]
+    tau = tau_ref[...]
+
+    p_kw = i_ref[...] * volt / 1000.0 * pres
+    e = p_kw * dt_hours
+    e = jnp.minimum(e, (1.0 - soc) * cap)
+    e = jnp.maximum(e, -soc * cap)
+    soc_n = jnp.clip(soc + e / jnp.maximum(cap, EPS), 0.0, 1.0)
+    taper = (1.0 - soc_n) * rbar / jnp.maximum(1.0 - tau, EPS)
+    r_hat = jnp.where(soc_n <= tau, rbar, jnp.maximum(taper, 0.0)) * pres
+
+    soc_o[...] = soc_n
+    de_o[...] = de_ref[...] - e
+    dt_o[...] = dt_ref[...] - pres
+    rhat_o[...] = r_hat
+    e_o[...] = e
+
+
+@functools.partial(jax.jit, static_argnames=("dt_hours", "interpret"))
+def charge_update(i_drawn, volt, present, soc, de_remain, dt_remain, cap,
+                  r_bar, tau, dt_hours: float, interpret: bool = True):
+    """Batched charging step. All tensors [E, P] except volt [P].
+
+    Returns (soc', de_remain', dt_remain', r_hat', e_port) — see
+    ``ref.charge_update_ref`` for semantics.
+    """
+    e_dim, p = i_drawn.shape
+    be = min(e_dim, _BLOCK_E)
+    grid = (pl.cdiv(e_dim, be),)
+    tile = pl.BlockSpec((be, p), lambda i: (i, 0))
+    row = pl.BlockSpec((1, p), lambda i: (0, 0))
+    f32 = lambda x: x.astype(jnp.float32)
+    outs = pl.pallas_call(
+        functools.partial(_kernel, dt_hours=dt_hours),
+        grid=grid,
+        in_specs=[tile, row] + [tile] * 7,
+        out_specs=[tile] * 5,
+        out_shape=[jax.ShapeDtypeStruct((e_dim, p), jnp.float32)] * 5,
+        interpret=interpret,
+    )(
+        f32(i_drawn), f32(volt[None, :]), f32(present), f32(soc),
+        f32(de_remain), f32(dt_remain), f32(cap), f32(r_bar), f32(tau),
+    )
+    return tuple(outs)

@@ -1,0 +1,104 @@
+"""Pallas kernel: station-tree constraint projection (paper Eq. 5).
+
+The station architecture is a tree; every internal node n carries the net
+power of the ports below it and must respect ``|flow_n| / eta_n <= limit_n``.
+Violations are resolved by uniformly rescaling the offending subtree's port
+currents — the "safety infrastructure on top of the controller" of A.2.
+
+Kernel shape story (TPU): state is laid out [E, P] (envs x ports) so an
+E-block is one VMEM tile; ``flow = p @ membership^T`` is an (E x P)·(P x N)
+matmul on the MXU, everything else is VPU elementwise. N and P are tiny
+(N <= 8 nodes, P = 17 ports by default), so the whole tree fits VMEM many
+times over; we tile only over E. On this image Pallas runs interpret=True
+(CPU PJRT cannot execute Mosaic custom-calls) — numerics are validated
+against ``ref.constraint_projection_ref`` in pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-9
+_BLOCK_E = 128  # env rows per VMEM tile
+
+
+def _kernel(i_ref, volt_ref, mem_ref, lim_ref, eta_ref, out_i_ref, out_x_ref,
+            *, n_nodes: int):
+    i = i_ref[...]  # [Be, P]
+    volt = volt_ref[...]  # [1, P]
+    mem = mem_ref[...]  # [N, P]
+    lim = lim_ref[...]  # [1, N]
+    eta = eta_ref[...]  # [1, N]
+
+    # Two fixed-point passes (see ref.constraint_projection_ref): exact for
+    # the paper's depth-2 trees even with mixed-sign (V2G) flows.
+    for p in range(2):
+        p_kw = i * volt / 1000.0
+        # MXU: [Be, P] @ [P, N] -> [Be, N] signed node flows.
+        flow = jax.lax.dot_general(
+            p_kw, mem.T, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        absf = jnp.abs(flow)
+        load = absf / jnp.maximum(eta, EPS)
+        if p == 0:
+            out_x_ref[...] = jnp.max(
+                jnp.maximum(load - lim, 0.0), axis=1, keepdims=True
+            )
+        scale_n = jnp.minimum(1.0, lim * eta / jnp.maximum(absf, EPS))  # [Be, N]
+        leaf = jnp.ones_like(i)
+        for n in range(n_nodes):  # N is tiny and static: unroll
+            sel = mem[n][None, :] > 0.0  # [1, P]
+            leaf = jnp.minimum(leaf, jnp.where(sel, scale_n[:, n][:, None], 1.0))
+        i = i * leaf
+    out_i_ref[...] = i
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def constraint_projection(i_drawn, volt, membership, limits_kw, node_eta,
+                          interpret: bool = True):
+    """Batched Eq. 5 projection.
+
+    Args:
+      i_drawn:    [E, P] signed port currents (A).
+      volt:       [P] port voltages.
+      membership: [N, P] 0/1 ancestor matrix.
+      limits_kw:  [N]; node_eta: [N].
+
+    Returns: (i_scaled [E, P], excess_kw [E]).
+    """
+    e, p = i_drawn.shape
+    n = membership.shape[0]
+    be = min(e, _BLOCK_E)
+    grid = (pl.cdiv(e, be),)
+    out_i, out_x = pl.pallas_call(
+        functools.partial(_kernel, n_nodes=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((be, p), lambda i: (i, 0)),
+            pl.BlockSpec((1, p), lambda i: (0, 0)),
+            pl.BlockSpec((n, p), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((be, p), lambda i: (i, 0)),
+            pl.BlockSpec((be, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e, p), jnp.float32),
+            jax.ShapeDtypeStruct((e, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        i_drawn.astype(jnp.float32),
+        volt[None, :].astype(jnp.float32),
+        membership.astype(jnp.float32),
+        limits_kw[None, :].astype(jnp.float32),
+        node_eta[None, :].astype(jnp.float32),
+    )
+    return out_i, out_x[:, 0]

@@ -1,0 +1,57 @@
+"""Pallas kernel: generalized advantage estimation (reverse-time scan).
+
+GAE is the one PPO stage that resists XLA fusion — a strict reverse-time
+recurrence over the rollout. The kernel keeps the whole [T, E] rollout tile
+resident in VMEM (T=300, E<=16 by default: 300*16*4B*3 arrays ≈ 58 KB) and
+walks it backwards with a fori_loop, carrying the running GAE accumulator
+in registers. interpret=True on this image; validated against
+``ref.gae_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(r_ref, v_ref, d_ref, lv_ref, adv_ref, *, gamma: float, lam: float):
+    t_len = r_ref.shape[0]
+
+    def body(i, gae):
+        t = t_len - 1 - i
+        rt = pl.load(r_ref, (pl.dslice(t, 1), slice(None)))
+        vt = pl.load(v_ref, (pl.dslice(t, 1), slice(None)))
+        dt = pl.load(d_ref, (pl.dslice(t, 1), slice(None)))
+        nv = jax.lax.cond(
+            t == t_len - 1,
+            lambda: lv_ref[...],
+            lambda: pl.load(v_ref, (pl.dslice(jnp.minimum(t + 1, t_len - 1), 1), slice(None))),
+        )
+        nonterm = 1.0 - dt
+        delta = rt + gamma * nv * nonterm - vt
+        gae = delta + gamma * lam * nonterm * gae
+        pl.store(adv_ref, (pl.dslice(t, 1), slice(None)), gae)
+        return gae
+
+    zero = jnp.zeros_like(lv_ref[...])
+    jax.lax.fori_loop(0, t_len, body, zero)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "lam", "interpret"))
+def gae(rewards, values, dones, last_value, gamma: float, lam: float,
+        interpret: bool = True):
+    """GAE over a rollout: rewards/values/dones [T, E], last_value [E].
+
+    Returns (advantages [T, E], value_targets [T, E]).
+    """
+    t_len, e = rewards.shape
+    f32 = lambda x: x.astype(jnp.float32)
+    adv = pl.pallas_call(
+        functools.partial(_kernel, gamma=gamma, lam=lam),
+        out_shape=jax.ShapeDtypeStruct((t_len, e), jnp.float32),
+        interpret=interpret,
+    )(f32(rewards), f32(values), f32(dones), f32(last_value[None, :]))
+    return adv, adv + values

@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *semantics* of the three L1 kernels — small, obviously-correct
+jnp implementations used (a) by pytest to validate the Pallas kernels and
+(b) as a drop-in fallback (``CHARGAX_NO_PALLAS=1``) when debugging lowering.
+
+Conventions
+-----------
+* Currents ``i`` are signed amperes (+ = charging the car / battery).
+* ``volt`` is the per-port voltage (phases pre-multiplied, paper A.1),
+  so port power in kW is ``volt * i / 1000``.
+* All per-port arrays have length P (chargers + battery last).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-9
+
+
+def charging_curve(soc, r_bar, tau):
+    """Paper A.1 piecewise-linear max charging power r̂(SoC), in kW.
+
+    r̂ = r̄ for SoC ≤ τ, then tapers linearly to 0 at SoC = 1.
+    """
+    taper = (1.0 - soc) * r_bar / jnp.maximum(1.0 - tau, EPS)
+    return jnp.where(soc <= tau, r_bar, jnp.maximum(taper, 0.0))
+
+
+def discharging_curve(soc, r_bar, tau):
+    """Discharge limit: the charging curve flipped at SoC = 0.5 (paper A.1)."""
+    return charging_curve(1.0 - soc, r_bar, tau)
+
+
+def constraint_projection_ref(i_drawn, volt, membership, limits_kw, node_eta):
+    """Eq. 5 safety layer: rescale port currents so every tree node holds.
+
+    Args:
+      i_drawn:    [P] signed port currents (A).
+      volt:       [P] port voltages (V).
+      membership: [N, P] 0/1 — node n is an ancestor of port p.
+      limits_kw:  [N] node power capacity (kW).
+      node_eta:   [N] node efficiency; a node carrying |f| kW of port power
+                  loads the upstream side with |f|/η.
+
+    Returns:
+      (i_scaled [P], excess_kw scalar) — excess is the pre-projection
+      constraint violation magnitude max_n max(0, |f_n|/η_n − limit_n),
+      used by the soft-constraint penalty (paper A.3).
+    """
+    excess = jnp.asarray(0.0)
+    # Two fixed-point passes: one subtree's rescale can re-expose an
+    # ancestor whose flow had mixed-sign cancellation (battery discharging
+    # while cars charge). For the paper's depth-2 trees (root -> per-type
+    # splitters, Fig. 3b) depth passes are exact; excess reports the
+    # pre-projection violation only.
+    for p in range(2):
+        p_kw = volt * i_drawn / 1000.0
+        flow = membership @ p_kw  # [N] signed net node flow
+        load = jnp.abs(flow) / jnp.maximum(node_eta, EPS)
+        if p == 0:
+            excess = jnp.max(jnp.maximum(load - limits_kw, 0.0))
+        scale_n = jnp.minimum(
+            1.0, limits_kw * node_eta / jnp.maximum(jnp.abs(flow), EPS)
+        )
+        # Each port is scaled by the tightest of its ancestors.
+        per_port = jnp.where(membership > 0, scale_n[:, None], 1.0)  # [N, P]
+        leaf_scale = jnp.min(per_port, axis=0)
+        i_drawn = i_drawn * leaf_scale
+    return i_drawn, excess
+
+
+def charge_update_ref(i_drawn, volt, present, soc, de_remain, dt_remain,
+                      cap, r_bar, tau, dt_hours):
+    """Charge-stationed-cars step (paper A.2), battery included as a lane.
+
+    ``present`` masks unoccupied ports (the battery lane is always 1).
+    Energy is metered at the port: the car/battery side receives exactly
+    e = p·Δt; grid-side losses are handled in the reward (A.3).
+
+    Returns (soc', de_remain', dt_remain', r_hat', e_port) with
+    e_port [P] the signed per-port energy (kWh) actually transferred.
+    """
+    p_kw = volt * i_drawn / 1000.0 * present
+    e = p_kw * dt_hours  # kWh into the car (signed)
+    # Safety clips (apply_actions already enforces these; keep the kernel
+    # total regardless of inputs): cannot over-fill or over-drain.
+    e = jnp.minimum(e, (1.0 - soc) * cap)
+    e = jnp.maximum(e, -soc * cap)
+    soc_n = jnp.clip(soc + e / jnp.maximum(cap, EPS), 0.0, 1.0)
+    de_n = de_remain - e
+    dt_n = dt_remain - 1.0 * present
+    r_hat_n = charging_curve(soc_n, r_bar, tau) * present
+    return soc_n, de_n, dt_n, r_hat_n, e
+
+
+def gae_ref(rewards, values, dones, last_value, gamma, lam):
+    """Generalized advantage estimation over a rollout.
+
+    Args:
+      rewards, values, dones: [T, E]; dones marks the step AFTER which the
+        episode reset (value bootstrap is cut).
+      last_value: [E] value of the state following the rollout.
+
+    Returns (advantages [T, E], value_targets [T, E]).
+    """
+    T = rewards.shape[0]
+    next_values = jnp.concatenate([values[1:], last_value[None, :]], axis=0)
+    gae = jnp.zeros_like(last_value)
+    out = []
+    for t in range(T - 1, -1, -1):
+        nonterm = 1.0 - dones[t]
+        delta = rewards[t] + gamma * next_values[t] * nonterm - values[t]
+        gae = delta + gamma * lam * nonterm * gae
+        out.append(gae)
+    adv = jnp.stack(out[::-1], axis=0)
+    return adv, adv + values

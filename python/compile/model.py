@@ -1,0 +1,267 @@
+"""L2 program definitions: what gets AOT-lowered, with flat-leaf signatures.
+
+Each exported program takes/returns a *flat* tuple of arrays; the pytree
+structure (carry = params / Adam / env state / obs / rng, exog = the
+ExogData bundle) is recorded in the manifest so the Rust coordinator can
+splice individual leaves (e.g. swap the price table) positionally without
+understanding JAX pytrees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import networks, ppo
+from .config import EnvConfig, PpoConfig
+from .env import ChargaxEnv
+from .env.state import METRIC_FIELDS, ExogData
+from .exog import default_exog
+
+_DTYPES = {
+    np.dtype("float32"): "f32",
+    np.dtype("int32"): "i32",
+    np.dtype("uint32"): "u32",
+}
+
+
+def leaf_spec(name: str, x) -> Dict:
+    x = np.asarray(x)
+    return {"name": name, "shape": list(x.shape), "dtype": _DTYPES[x.dtype]}
+
+
+def _names_of(tree) -> List[str]:
+    """Dotted leaf paths, e.g. ``params.w1``, ``env_state.soc``."""
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    names = []
+    for path, _ in paths:
+        parts = []
+        for k in path:
+            if isinstance(k, jax.tree_util.GetAttrKey):
+                parts.append(k.name)
+            elif isinstance(k, jax.tree_util.DictKey):
+                parts.append(str(k.key))
+            elif isinstance(k, jax.tree_util.SequenceKey):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        names.append(".".join(parts))
+    return names
+
+
+@dataclasses.dataclass
+class Program:
+    """One lowered program: fn over flat leaves + example inputs."""
+
+    name: str
+    fn: Callable
+    example_inputs: Tuple
+    input_names: List[str]
+    output_names: List[str]
+
+    def lower_hlo_text(self) -> str:
+        from jax._src.lib import xla_client as xc
+
+        # keep_unused: the manifest promises the full flat signature; jit
+        # would otherwise prune inputs a program doesn't read (env_reset
+        # ignores most exog leaves) and the Rust call would mismatch.
+        lowered = jax.jit(self.fn, keep_unused=True).lower(*self.example_inputs)
+        mlir_mod = lowered.compiler_ir("stablehlo")
+        comp = xc._xla.mlir.mlir_module_to_xla_computation(
+            str(mlir_mod), use_tuple_args=False, return_tuple=True
+        )
+        # print_large_constants: the default printer elides arrays >10
+        # elements as `constant({...})`, which the text parser on the rust
+        # side silently turns into garbage (NaNs). Station-tree vectors
+        # (volt/p_max/membership) are exactly such constants.
+        return comp.as_hlo_text(print_large_constants=True)
+
+
+class ModelBundle:
+    """All programs for one (station, num_envs) variant."""
+
+    def __init__(self, env_cfg: EnvConfig, ppo_cfg: PpoConfig):
+        self.env_cfg = env_cfg
+        self.ppo_cfg = ppo_cfg
+        self.env = ChargaxEnv(env_cfg)
+        self.exog = default_exog(n_days=env_cfg.n_days)
+        self.exog_leaves, self.exog_def = jax.tree_util.tree_flatten(self.exog)
+        self.exog_names = list(ExogData._fields)
+        self.total_updates = max(
+            ppo_cfg.total_timesteps // ppo_cfg.batch_size, 1
+        )
+
+        # Carry structure comes from eval_shape of init (shapes only; cheap).
+        init_fn = ppo.make_train_init(self.env, ppo_cfg, self.exog)
+        carry_shape = jax.eval_shape(init_fn, jnp.asarray(0, jnp.uint32))
+        self.carry_def = jax.tree_util.tree_structure(carry_shape)
+        self.carry_names = _names_of(carry_shape)
+        self.carry_example = jax.tree_util.tree_leaves(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), carry_shape)
+        )
+        # Param sub-tree (for eval programs): dict -> leaves sorted by key.
+        params_shape = carry_shape.params
+        self.param_names = ["params." + k for k in sorted(params_shape.keys())]
+        self.param_example = [
+            jnp.zeros(params_shape[k].shape, params_shape[k].dtype)
+            for k in sorted(params_shape.keys())
+        ]
+        self.params_def = jax.tree_util.tree_structure(params_shape)
+        self._init_state_spec()
+
+    # -- helpers -----------------------------------------------------------
+
+    def _unflatten_exog(self, leaves) -> ExogData:
+        return jax.tree_util.tree_unflatten(self.exog_def, list(leaves))
+
+    def _init_state_spec(self):
+        state_shape = jax.eval_shape(
+            lambda s: self.env.reset(
+                jax.random.split(jax.random.PRNGKey(s), self.ppo_cfg.num_envs),
+                self.exog,
+            )[0],
+            jnp.asarray(0, jnp.uint32),
+        )
+        self.state_names = _names_of(state_shape)
+        self.state_example = jax.tree_util.tree_leaves(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), state_shape)
+        )
+        self.state_def = jax.tree_util.tree_structure(state_shape)
+
+    def seed_example(self):
+        return jnp.asarray(0, jnp.uint32)
+
+    # -- programs ----------------------------------------------------------
+
+    def program_train_init(self) -> Program:
+        init_fn = ppo.make_train_init(self.env, self.ppo_cfg, self.exog)
+
+        def fn(seed):
+            return tuple(jax.tree_util.tree_leaves(init_fn(seed)))
+
+        return Program(
+            "train_init", fn, (self.seed_example(),), ["seed"], self.carry_names
+        )
+
+    def program_train_iter(self) -> Program:
+        iter_fn = ppo.make_train_iter(self.env, self.ppo_cfg, self.total_updates)
+        n_carry = len(self.carry_example)
+
+        def fn(*leaves):
+            carry = jax.tree_util.tree_unflatten(
+                self.carry_def, list(leaves[:n_carry])
+            )
+            exog = self._unflatten_exog(leaves[n_carry:])
+            carry, metrics = iter_fn(carry, exog)
+            return tuple(jax.tree_util.tree_leaves(carry)) + (metrics,)
+
+        return Program(
+            "train_iter",
+            fn,
+            tuple(self.carry_example) + tuple(self.exog_leaves),
+            self.carry_names + self.exog_names,
+            self.carry_names + ["metrics"],
+        )
+
+    def program_eval(self, policy: str) -> Program:
+        ev = ppo.make_eval_rollout(self.env, self.ppo_cfg, policy)
+        n_par = len(self.param_example)
+
+        def fn(*leaves):
+            params = jax.tree_util.tree_unflatten(
+                self.params_def, list(leaves[:n_par])
+            )
+            seed = leaves[n_par]
+            exog = self._unflatten_exog(leaves[n_par + 1 :])
+            return (ev(params, seed, exog),)
+
+        return Program(
+            f"eval_{policy}",
+            fn,
+            tuple(self.param_example) + (self.seed_example(),) + tuple(self.exog_leaves),
+            self.param_names + ["seed"] + self.exog_names,
+            ["eval_metrics"],
+        )
+
+    def program_random_rollout(self, n_steps: int) -> Program:
+        rr = ppo.make_random_rollout(self.env, self.ppo_cfg.num_envs, n_steps)
+
+        def fn(seed, *ex):
+            mets, steps = rr(seed, self._unflatten_exog(ex))
+            return mets, steps
+
+        return Program(
+            "random_rollout",
+            fn,
+            (self.seed_example(),) + tuple(self.exog_leaves),
+            ["seed"] + self.exog_names,
+            ["step_metrics_mean", "steps_done"],
+        )
+
+    def program_env_reset(self) -> Program:
+        def fn(seed, *ex):
+            exog = self._unflatten_exog(ex)
+            keys = jax.random.split(
+                jax.random.PRNGKey(seed), self.ppo_cfg.num_envs
+            )
+            state, obs = self.env.reset(keys, exog)
+            return tuple(jax.tree_util.tree_leaves(state)) + (obs,)
+
+        return Program(
+            "env_reset",
+            fn,
+            (self.seed_example(),) + tuple(self.exog_leaves),
+            ["seed"] + self.exog_names,
+            self.state_names + ["obs"],
+        )
+
+    def program_env_step(self) -> Program:
+        n_state = len(self.state_example)
+        action_ex = jnp.zeros(
+            (self.ppo_cfg.num_envs, self.env.n_ports), jnp.int32
+        )
+
+        def fn(*leaves):
+            state = jax.tree_util.tree_unflatten(
+                self.state_def, list(leaves[:n_state])
+            )
+            action = leaves[n_state]
+            exog = self._unflatten_exog(leaves[n_state + 1 :])
+            state, obs, r, done, metrics = self.env.step(state, action, exog)
+            return tuple(jax.tree_util.tree_leaves(state)) + (obs, r, done, metrics)
+
+        return Program(
+            "env_step",
+            fn,
+            tuple(self.state_example) + (action_ex,) + tuple(self.exog_leaves),
+            self.state_names + ["action"] + self.exog_names,
+            self.state_names + ["obs", "reward", "done", "metrics"],
+        )
+
+    # -- manifest ----------------------------------------------------------
+
+    def env_meta(self) -> Dict:
+        return {
+            "obs_dim": self.env.obs_dim,
+            "n_ports": self.env.n_ports,
+            "n_chargers": self.env.n_chargers,
+            "n_dc": self.env_cfg.station.n_dc,
+            "action_nvec": [int(x) for x in self.env.action_nvec],
+            "steps_per_episode": self.env_cfg.steps_per_episode,
+            "num_envs": self.ppo_cfg.num_envs,
+            "rollout_steps": self.ppo_cfg.rollout_steps,
+            "batch_size": self.ppo_cfg.batch_size,
+            "total_updates_for_anneal": self.total_updates,
+            "metric_fields": list(METRIC_FIELDS),
+            "train_metric_fields": list(ppo.TRAIN_METRIC_FIELDS),
+            "eval_metric_fields": list(ppo.EVAL_METRIC_FIELDS),
+            "n_params": networks.n_params(
+                jax.tree_util.tree_unflatten(self.params_def, self.param_example)
+            ),
+            "n_carry_leaves": len(self.carry_example),
+            "n_exog_leaves": len(self.exog_leaves),
+        }

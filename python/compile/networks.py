@@ -1,0 +1,105 @@
+"""Actor-critic network (PureJaxRL-style MLP, paper Appendix B).
+
+A shared tanh torso feeds (a) one categorical head per port — 16 car heads
+with ``n_levels`` choices plus one battery head with ``n_levels_battery``
+choices, emitted as a single concatenated logit vector — and (b) a scalar
+value head. Pure jnp, no flax: parameters are a flat dict of arrays so the
+AOT carry flattening is trivial and the Rust PPO baseline mirrors the same
+math.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, jnp.ndarray]
+
+
+def head_slices(action_nvec: Sequence[int]) -> List[Tuple[int, int]]:
+    """(start, end) of each port's logits inside the concatenated vector."""
+    out, ofs = [], 0
+    for n in action_nvec:
+        out.append((ofs, ofs + int(n)))
+        ofs += int(n)
+    return out
+
+
+def _orthogonal(key, shape, scale):
+    """Variance-scaled normal init.
+
+    PureJaxRL uses orthogonal init, but ``jnp.linalg.qr`` lowers to a
+    typed-FFI custom-call (lapack geqrf) that xla_extension 0.5.1 — the
+    version the rust `xla` crate binds — cannot compile. A fan-in-scaled
+    normal is the standard drop-in (DESIGN.md §Substitutions) and lowers
+    to pure HLO.
+    """
+    fan_in = shape[0]
+    return scale * jax.random.normal(key, shape) / jnp.sqrt(float(fan_in))
+
+
+def init_params(
+    key: jnp.ndarray, obs_dim: int, hidden: int, action_nvec: Sequence[int]
+) -> Params:
+    n_logits = int(np.sum(action_nvec))
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "w1": _orthogonal(k1, (obs_dim, hidden), float(np.sqrt(2.0))),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": _orthogonal(k2, (hidden, hidden), float(np.sqrt(2.0))),
+        "b2": jnp.zeros((hidden,), jnp.float32),
+        "wpi": _orthogonal(k3, (hidden, n_logits), 0.01),
+        "bpi": jnp.zeros((n_logits,), jnp.float32),
+        "wv": _orthogonal(k4, (hidden, 1), 1.0),
+        "bv": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def apply(params: Params, obs: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """obs [B, obs_dim] -> (logits [B, sum(nvec)], value [B])."""
+    h = jnp.tanh(obs @ params["w1"] + params["b1"])
+    h = jnp.tanh(h @ params["w2"] + params["b2"])
+    logits = h @ params["wpi"] + params["bpi"]
+    value = (h @ params["wv"] + params["bv"])[:, 0]
+    return logits, value
+
+
+def sample_actions(
+    key: jnp.ndarray, logits: jnp.ndarray, action_nvec: Sequence[int]
+) -> jnp.ndarray:
+    """Per-head categorical sample. Returns [B, n_ports] int32."""
+    keys = jax.random.split(key, len(action_nvec))
+    cols = []
+    for k, (s, e) in zip(keys, head_slices(action_nvec)):
+        cols.append(jax.random.categorical(k, logits[:, s:e], axis=-1))
+    return jnp.stack(cols, axis=1).astype(jnp.int32)
+
+
+def greedy_actions(logits: jnp.ndarray, action_nvec: Sequence[int]) -> jnp.ndarray:
+    cols = [
+        jnp.argmax(logits[:, s:e], axis=-1) for s, e in head_slices(action_nvec)
+    ]
+    return jnp.stack(cols, axis=1).astype(jnp.int32)
+
+
+def log_prob_entropy(
+    logits: jnp.ndarray, actions: jnp.ndarray, action_nvec: Sequence[int]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Joint (independent-head) log-prob of ``actions`` and total entropy.
+
+    logits [B, sum(nvec)], actions [B, n_ports] -> (logp [B], ent [B]).
+    """
+    logp = 0.0
+    ent = 0.0
+    for h, (s, e) in enumerate(head_slices(action_nvec)):
+        lg = jax.nn.log_softmax(logits[:, s:e], axis=-1)
+        logp = logp + jnp.take_along_axis(lg, actions[:, h][:, None], axis=1)[:, 0]
+        ent = ent - jnp.sum(jnp.exp(lg) * lg, axis=-1)
+    return logp, ent
+
+
+def n_params(params: Params) -> int:
+    return int(sum(int(np.prod(v.shape)) for v in params.values()))

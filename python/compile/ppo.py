@@ -1,0 +1,342 @@
+"""Fused PPO training iteration (PureJaxRL-style, paper Appendix B).
+
+One call to :func:`make_train_iter`'s returned function performs, entirely
+inside XLA:
+
+  1. a ``rollout_steps``-long environment rollout (lax.scan over the batched
+     env step — the L1 Pallas kernels lower inline),
+  2. GAE via the L1 reverse-scan kernel,
+  3. ``update_epochs`` x ``n_minibatches`` clipped-surrogate PPO updates with
+     Adam and global grad-norm clipping.
+
+The Rust coordinator calls it in a loop, feeding the returned carry back in
+(see rust/src/coordinator/session.rs). Hyperparameters follow Table 3.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels, networks
+from .config import PpoConfig
+from .env.env import ChargaxEnv
+from .env.state import METRIC_FIELDS, EnvState, ExogData
+
+
+class AdamState(NamedTuple):
+    m: dict
+    v: dict
+    count: jnp.ndarray  # [] i32
+
+
+class TrainCarry(NamedTuple):
+    params: dict
+    opt: AdamState
+    env_state: EnvState
+    last_obs: jnp.ndarray  # [E, obs_dim]
+    key: jnp.ndarray       # [2] u32
+    update_i: jnp.ndarray  # [] i32 (lr annealing)
+
+
+class Transition(NamedTuple):
+    obs: jnp.ndarray
+    action: jnp.ndarray
+    logp: jnp.ndarray
+    value: jnp.ndarray
+    reward: jnp.ndarray
+    done: jnp.ndarray
+    metrics: jnp.ndarray
+
+
+# Extra loss/diagnostic metrics appended to the env metric means.
+TRAIN_METRIC_FIELDS = tuple(f"mean_{f}" for f in METRIC_FIELDS) + (
+    "completed_episodes",
+    "mean_completed_return",
+    "mean_completed_profit",
+    "total_loss",
+    "pg_loss",
+    "vf_loss",
+    "entropy",
+    "approx_kl",
+    "clip_frac",
+    "lr",
+)
+
+
+def adam_init(params: dict) -> AdamState:
+    z = jax.tree.map(jnp.zeros_like, params)
+    return AdamState(m=z, v=jax.tree.map(jnp.zeros_like, params),
+                     count=jnp.zeros((), jnp.int32))
+
+
+def adam_update(grads: dict, opt: AdamState, params: dict, lr,
+                b1=0.9, b2=0.999, eps=1e-8) -> Tuple[dict, AdamState]:
+    count = opt.count + 1
+    cf = count.astype(jnp.float32)
+    m = jax.tree.map(lambda mo, g: b1 * mo + (1 - b1) * g, opt.m, grads)
+    v = jax.tree.map(lambda vo, g: b2 * vo + (1 - b2) * g * g, opt.v, grads)
+    mhat = jax.tree.map(lambda x: x / (1 - b1 ** cf), m)
+    vhat = jax.tree.map(lambda x: x / (1 - b2 ** cf), v)
+    new_params = jax.tree.map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return new_params, AdamState(m=m, v=v, count=count)
+
+
+def clip_global_norm(grads: dict, max_norm: float) -> dict:
+    sq = sum(jnp.sum(g * g) for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def make_train_init(env: ChargaxEnv, ppo: PpoConfig, exog: ExogData):
+    """seed [] u32 -> TrainCarry (used once, lowered as train_init)."""
+
+    nvec = tuple(int(x) for x in env.action_nvec)
+
+    def train_init(seed):
+        key = jax.random.PRNGKey(seed)
+        k_net, k_env, k_run = jax.random.split(key, 3)
+        params = networks.init_params(k_net, env.obs_dim, ppo.hidden, nvec)
+        env_keys = jax.random.split(k_env, ppo.num_envs)
+        env_state, obs = env.reset(env_keys, exog)
+        return TrainCarry(
+            params=params,
+            opt=adam_init(params),
+            env_state=env_state,
+            last_obs=obs,
+            key=k_run,
+            update_i=jnp.zeros((), jnp.int32),
+        )
+
+    return train_init
+
+
+def make_train_iter(env: ChargaxEnv, ppo: PpoConfig, total_updates: int):
+    """Build the fused (carry, exog) -> (carry', metrics) iteration."""
+
+    nvec = tuple(int(x) for x in env.action_nvec)
+
+    def rollout_step(carry, _, exog: ExogData):
+        tc: TrainCarry = carry
+        key, k_act = jax.random.split(tc.key)
+        logits, value = networks.apply(tc.params, tc.last_obs)
+        action = networks.sample_actions(k_act, logits, nvec)
+        logp, _ = networks.log_prob_entropy(logits, action, nvec)
+        env_state, obs, rwd, done, metrics = env.step(tc.env_state, action, exog)
+        trans = Transition(
+            obs=tc.last_obs, action=action, logp=logp, value=value,
+            reward=rwd, done=done, metrics=metrics,
+        )
+        return tc._replace(env_state=env_state, last_obs=obs, key=key), trans
+
+    def loss_fn(params, batch, clip_eps, ent_coef, vf_coef, vf_clip):
+        obs, action, old_logp, old_value, adv, target = batch
+        logits, value = networks.apply(params, obs)
+        logp, ent = networks.log_prob_entropy(logits, action, nvec)
+        ratio = jnp.exp(logp - old_logp)
+        adv_n = (adv - adv.mean()) / (adv.std() + 1e-8)
+        pg1 = ratio * adv_n
+        pg2 = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv_n
+        pg_loss = -jnp.mean(jnp.minimum(pg1, pg2))
+        v_clipped = old_value + jnp.clip(value - old_value, -vf_clip, vf_clip)
+        vf_loss = 0.5 * jnp.mean(
+            jnp.maximum((value - target) ** 2, (v_clipped - target) ** 2)
+        )
+        ent_mean = jnp.mean(ent)
+        total = pg_loss + vf_coef * vf_loss - ent_coef * ent_mean
+        approx_kl = jnp.mean(old_logp - logp)
+        clip_frac = jnp.mean((jnp.abs(ratio - 1.0) > clip_eps).astype(jnp.float32))
+        return total, (pg_loss, vf_loss, ent_mean, approx_kl, clip_frac)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_iter(carry: TrainCarry, exog: ExogData):
+        # ---- 1. rollout ----------------------------------------------------
+        carry, traj = jax.lax.scan(
+            lambda c, x: rollout_step(c, x, exog), carry, None,
+            length=ppo.rollout_steps,
+        )
+        _, last_value = networks.apply(carry.params, carry.last_obs)
+
+        # ---- 2. GAE (L1 kernel) -------------------------------------------
+        adv, target = kernels.gae(
+            traj.reward, traj.value, traj.done, last_value,
+            ppo.gamma, ppo.gae_lambda,
+        )
+        adv = jax.lax.stop_gradient(adv)
+        target = jax.lax.stop_gradient(target)
+
+        lr = jnp.asarray(ppo.lr, jnp.float32)
+        if ppo.anneal_lr:
+            frac = 1.0 - carry.update_i.astype(jnp.float32) / float(total_updates)
+            lr = lr * jnp.maximum(frac, 0.0)
+
+        # ---- 3. minibatched updates ----------------------------------------
+        bsz = ppo.batch_size
+        flat = lambda x: x.reshape((bsz,) + x.shape[2:])
+        dataset = (
+            flat(traj.obs), flat(traj.action), flat(traj.logp),
+            flat(traj.value), flat(adv), flat(target),
+        )
+
+        def epoch(state, _):
+            params, opt, key = state
+            key, k_perm = jax.random.split(key)
+            perm = jax.random.permutation(k_perm, bsz)
+            shuffled = tuple(x[perm] for x in dataset)
+            mb = tuple(
+                x.reshape((ppo.n_minibatches, ppo.minibatch_size) + x.shape[1:])
+                for x in shuffled
+            )
+
+            def minibatch(state, batch):
+                params, opt = state
+                (total, aux), grads = grad_fn(
+                    params, batch, ppo.clip_eps, ppo.ent_coef, ppo.vf_coef,
+                    ppo.vf_clip,
+                )
+                grads = clip_global_norm(grads, ppo.max_grad_norm)
+                params, opt = adam_update(grads, opt, params, lr)
+                return (params, opt), jnp.stack((total,) + aux)
+
+            (params, opt), stats = jax.lax.scan(minibatch, (params, opt), mb)
+            return (params, opt, key), stats
+
+        (params, opt, key), stats = jax.lax.scan(
+            epoch, (carry.params, carry.opt, carry.key), None,
+            length=ppo.update_epochs,
+        )
+        stats = stats.reshape((-1, 6)).mean(axis=0)
+
+        carry = carry._replace(
+            params=params, opt=opt, key=key, update_i=carry.update_i + 1
+        )
+
+        # ---- metrics --------------------------------------------------------
+        met_mean = traj.metrics.mean(axis=(0, 1))  # [len(METRIC_FIELDS)]
+        done_cnt = jnp.maximum(traj.metrics[:, :, METRIC_FIELDS.index("done")].sum(), 1.0)
+        comp_ret = traj.metrics[:, :, METRIC_FIELDS.index("ep_return")].sum() / done_cnt
+        comp_prof = traj.metrics[:, :, METRIC_FIELDS.index("ep_profit")].sum() / done_cnt
+        metrics = jnp.concatenate([
+            met_mean,
+            jnp.stack([
+                traj.metrics[:, :, METRIC_FIELDS.index("done")].sum(),
+                comp_ret,
+                comp_prof,
+                stats[0], stats[1], stats[2], stats[3], stats[4], stats[5],
+                lr,
+            ]),
+        ])
+        return carry, metrics
+
+    assert len(TRAIN_METRIC_FIELDS) == len(METRIC_FIELDS) + 10
+    return train_iter
+
+
+def make_eval_rollout(env: ChargaxEnv, ppo: PpoConfig, policy: str = "net"):
+    """Full-episode evaluation: (params, seed, exog) -> summary vector.
+
+    ``policy``: 'net' (greedy argmax), 'max' (paper's always-charge-max
+    baseline, battery idle), 'random'. Returns EVAL_METRIC_FIELDS.
+    """
+    nvec = tuple(int(x) for x in env.action_nvec)
+    n_ports = env.n_ports
+
+    def act(params, obs, key):
+        if policy == "net":
+            logits, _ = networks.apply(params, obs)
+            return networks.greedy_actions(logits, nvec)
+        e = obs.shape[0]
+        if policy == "max":
+            a = jnp.full((e, n_ports), 0, jnp.int32)
+            a = a.at[:, : n_ports - 1].set(
+                jnp.asarray([n - 1 for n in nvec[:-1]], jnp.int32)[None, :]
+            )
+            # battery idle = midpoint level (zero current)
+            a = a.at[:, n_ports - 1].set((nvec[-1] - 1) // 2)
+            return a
+        # random
+        cols = [
+            jax.random.randint(jax.random.fold_in(key, h), (e,), 0, nvec[h])
+            for h in range(n_ports)
+        ]
+        return jnp.stack(cols, axis=1).astype(jnp.int32)
+
+    def eval_rollout(params, seed, exog: ExogData):
+        key = jax.random.PRNGKey(seed)
+        k_env, k_act = jax.random.split(key)
+        env_keys = jax.random.split(k_env, ppo.num_envs)
+        state, obs = env.reset(env_keys, exog)
+
+        def step(c, i):
+            state, obs = c
+            a = act(params, obs, jax.random.fold_in(k_act, i))
+            state, obs, r, done, metrics = env.step(state, a, exog)
+            return (state, obs), metrics
+
+        _, mets = jax.lax.scan(
+            step, (state, obs), jnp.arange(env.static.steps_per_episode)
+        )
+        # mets: [T, E, M] — exactly one episode per env (reset at t=T).
+        total = mets.sum(axis=0)  # [E, M]
+        mi = METRIC_FIELDS.index
+        return jnp.stack([
+            total[:, mi("reward")].mean(),
+            total[:, mi("profit")].mean(),
+            total[:, mi("energy_to_cars_kwh")].mean(),
+            total[:, mi("missing_kwh")].mean(),
+            total[:, mi("overtime_steps")].mean(),
+            total[:, mi("rejected")].mean(),
+            total[:, mi("departed")].mean(),
+            total[:, mi("arrived")].mean(),
+            total[:, mi("excess_kw")].mean(),
+            total[:, mi("energy_grid_net_kwh")].mean(),
+        ])
+
+    return eval_rollout
+
+
+EVAL_METRIC_FIELDS = (
+    "ep_reward", "ep_profit", "ep_energy_kwh", "ep_missing_kwh",
+    "ep_overtime_steps", "ep_rejected", "ep_departed", "ep_arrived",
+    "ep_excess_kw", "ep_grid_net_kwh",
+)
+
+
+def make_random_rollout(env: ChargaxEnv, num_envs: int, n_steps: int):
+    """(seed, exog) -> (mean step metrics, steps done). Table 2 'Random' row.
+
+    The whole n_steps rollout is one fused scan — a single PJRT call
+    advances num_envs * n_steps environment steps.
+    """
+    nvec = tuple(int(x) for x in env.action_nvec)
+
+    def random_rollout(seed, exog: ExogData):
+        key = jax.random.PRNGKey(seed)
+        k_env, k_act = jax.random.split(key)
+        env_keys = jax.random.split(k_env, num_envs)
+        state, obs = env.reset(env_keys, exog)
+
+        def step(c, i):
+            state, obs = c
+            cols = [
+                jax.random.randint(
+                    jax.random.fold_in(jax.random.fold_in(k_act, i), h),
+                    (num_envs,), 0, nvec[h],
+                )
+                for h in range(len(nvec))
+            ]
+            a = jnp.stack(cols, axis=1).astype(jnp.int32)
+            state, obs, r, done, metrics = env.step(state, a, exog)
+            return (state, obs), metrics
+
+        _, mets = jax.lax.scan(step, (state, obs), jnp.arange(n_steps))
+        return mets.mean(axis=(0, 1)), jnp.asarray(n_steps * num_envs, jnp.int32)
+
+    return random_rollout

@@ -1,0 +1,116 @@
+"""Data stack: determinism, realism constraints, export integrity."""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile import data
+
+
+class TestPrices:
+    def test_deterministic(self):
+        a = data.price_table("NL", 2021)
+        b = data.price_table("NL", 2021)
+        np.testing.assert_array_equal(a, b)
+
+    def test_shape_and_units(self):
+        t = data.price_table("DE", 2023, n_days=100)
+        assert t.shape == (100, 24)
+        # EUR/kWh: typical European day-ahead range.
+        assert 0.02 < float(np.median(t)) < 0.5
+
+    @pytest.mark.parametrize("country", data.PRICE_COUNTRIES)
+    def test_2022_surge(self, country):
+        """The EU energy crisis must be visible (drives paper Fig. 5)."""
+        p21 = float(data.price_table(country, 2021).mean())
+        p22 = float(data.price_table(country, 2022).mean())
+        p23 = float(data.price_table(country, 2023).mean())
+        assert p22 > 1.8 * p21
+        assert p22 > 1.8 * p23
+
+    def test_2022_more_volatile(self):
+        v21 = float(data.price_table("NL", 2021).std())
+        v22 = float(data.price_table("NL", 2022).std())
+        assert v22 > 2.0 * v21
+
+    def test_evening_peak_exceeds_midday(self):
+        t = data.price_table("NL", 2021)
+        assert float(t[:, 18].mean()) > float(t[:, 13].mean())
+
+    def test_countries_differ(self):
+        assert not np.allclose(
+            data.price_table("NL", 2021), data.price_table("FR", 2021)
+        )
+
+
+class TestCars:
+    def test_catalog_sane(self):
+        assert len(data.CAR_CATALOG) == 20
+        for m in data.CAR_CATALOG:
+            assert 10 < m["cap"] < 150
+            assert 3 <= m["ac"] <= 25
+            assert 20 <= m["dc"] <= 300
+            assert 0.4 <= m["tau"] <= 0.8
+
+    @pytest.mark.parametrize("region", data.CAR_REGIONS)
+    def test_weights_normalized(self, region):
+        w = data.car_table(region)["weights"]
+        assert np.isclose(w.sum(), 1.0)
+        assert (w >= 0).all()
+
+    def test_us_skews_to_larger_packs(self):
+        caps = data.car_table("EU")["table"][:, 0]
+        eu = float((data.car_table("EU")["weights"] * caps).sum())
+        us = float((data.car_table("US")["weights"] * caps).sum())
+        assert us > eu + 5.0  # kWh
+
+
+class TestArrivals:
+    @pytest.mark.parametrize("scenario", data.SCENARIOS)
+    def test_shapes(self, scenario):
+        r = data.arrival_rate(scenario)
+        assert r.shape == (24,)
+        assert (r >= 0).all()
+
+    def test_scenario_signatures(self):
+        work = data.arrival_rate("work")
+        assert work[7:9].mean() > 4 * work[14:20].mean()  # morning rush
+        resi = data.arrival_rate("residential")
+        assert resi[17:20].mean() > 3 * resi[8:12].mean()  # evening peak
+        shop = data.arrival_rate("shopping")
+        assert shop[11:16].mean() > 5 * shop[0:5].mean()  # daytime
+
+
+class TestUserProfiles:
+    @pytest.mark.parametrize("scenario", data.SCENARIOS)
+    def test_vector_layout(self, scenario):
+        v = data.user_profile_vec(scenario)
+        assert v.shape == (6,)
+        stay_mean, stay_std, a, b, target, p_time = v
+        assert 0.2 <= stay_mean <= 12
+        assert 0 < stay_std < stay_mean
+        assert 0 < p_time < 1
+        assert 0.5 <= target <= 1.0
+
+    def test_highway_short_residential_long(self):
+        assert (
+            data.USER_PROFILES["highway"]["stay_mean_h"]
+            < data.USER_PROFILES["shopping"]["stay_mean_h"]
+            < data.USER_PROFILES["residential"]["stay_mean_h"]
+        )
+
+
+class TestExport:
+    def test_export_roundtrip(self, tmp_path):
+        data.export_all(str(tmp_path), n_days=30)
+        for f in ["prices.json", "moer.json", "cars.json", "arrivals.json",
+                  "user_profiles.json"]:
+            with open(tmp_path / f) as fh:
+                j = json.load(fh)
+            assert j
+        with open(tmp_path / "prices.json") as fh:
+            p = json.load(fh)
+        assert len(p["tables"]) == 9
+        arr = np.asarray(p["tables"]["NL_2021"], np.float32)
+        np.testing.assert_allclose(arr, data.price_table("NL", 2021, 30), atol=1e-6)

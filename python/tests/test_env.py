@@ -1,0 +1,201 @@
+"""L2 environment invariants: transition structure, reward identity,
+auto-reset, arrivals/departures bookkeeping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import EnvConfig, PpoConfig, StationConfig, STATION_VARIANTS
+from compile.env import ChargaxEnv
+from compile.env.state import METRIC_FIELDS, metric_index
+from compile.exog import default_exog
+
+
+@pytest.fixture(scope="module")
+def env():
+    return ChargaxEnv(EnvConfig())
+
+
+@pytest.fixture(scope="module")
+def exog():
+    return default_exog(traffic="high")
+
+
+def batched_keys(e, base=0):
+    return jax.vmap(jax.random.PRNGKey)(jnp.arange(base, base + e, dtype=jnp.uint32))
+
+
+def random_actions(rng, env, e):
+    return jnp.asarray(
+        rng.integers(0, np.asarray(env.action_nvec)[None, :].repeat(e, 0)),
+        dtype=jnp.int32,
+    )
+
+
+class TestReset:
+    def test_shapes_and_emptiness(self, env, exog):
+        e = 5
+        state, obs = env.reset(batched_keys(e), exog)
+        assert obs.shape == (e, env.obs_dim)
+        assert state.occup.shape == (e, env.n_chargers)
+        assert float(state.occup.sum()) == 0.0
+        assert np.allclose(np.asarray(state.soc)[:, -1], 0.5)  # battery soc0
+        assert (np.asarray(state.day) >= 0).all()
+        assert (np.asarray(state.day) < 365).all()
+
+    def test_different_keys_different_days(self, env, exog):
+        state, _ = env.reset(batched_keys(64), exog)
+        assert len(np.unique(np.asarray(state.day))) > 5
+
+    def test_observation_finite(self, env, exog):
+        _, obs = env.reset(batched_keys(8), exog)
+        assert bool(jnp.isfinite(obs).all())
+
+
+class TestStep:
+    def test_metric_vector_layout(self, env, exog):
+        e = 3
+        state, _ = env.reset(batched_keys(e), exog)
+        rng = np.random.default_rng(0)
+        state, obs, r, done, met = jax.jit(env.step)(
+            state, random_actions(rng, env, e), exog
+        )
+        assert met.shape == (e, len(METRIC_FIELDS))
+        np.testing.assert_allclose(
+            np.asarray(met[:, metric_index("reward")]), np.asarray(r), atol=1e-5
+        )
+
+    def test_time_advances_and_autoreset(self, env, exog):
+        e = 2
+        state, _ = env.reset(batched_keys(e), exog)
+        step = jax.jit(env.step)
+        rng = np.random.default_rng(1)
+        for i in range(env.cfg.steps_per_episode):
+            state, _, _, done, _ = step(state, random_actions(rng, env, e), exog)
+        # Episode ended exactly at step 288 and auto-reset to t=0.
+        assert bool((np.asarray(done) == 1.0).all())
+        assert (np.asarray(state.t) == 0).all()
+        assert float(state.occup.sum()) == 0.0
+
+    def test_occupancy_bounded(self, env, exog):
+        e = 4
+        state, _ = env.reset(batched_keys(e), exog)
+        step = jax.jit(env.step)
+        rng = np.random.default_rng(2)
+        for _ in range(150):
+            state, _, _, _, met = step(state, random_actions(rng, env, e), exog)
+            occ = np.asarray(state.occup)
+            assert ((occ == 0.0) | (occ == 1.0)).all()
+            assert bool(jnp.isfinite(state.soc).all())
+            soc = np.asarray(state.soc)
+            assert (soc >= -1e-5).all() and (soc <= 1.0 + 1e-5).all()
+
+    def test_idle_actions_cost_fixed_fee(self, env, exog):
+        """All-zero actions + empty station: reward = -c_dt (no arrivals at
+        midnight is the common case; allow arrivals by masking)."""
+        e = 4
+        state, _ = env.reset(batched_keys(e), exog)
+        a = jnp.zeros((e, env.n_ports), jnp.int32)
+        # battery midpoint level = zero current
+        a = a.at[:, -1].set((env.cfg.n_levels_battery - 1) // 2)
+        state, _, r, _, met = jax.jit(env.step)(state, a, exog)
+        de = np.asarray(met[:, metric_index("energy_to_cars_kwh")])
+        np.testing.assert_allclose(de, 0.0, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(r), -env.cfg.fixed_cost_per_step, atol=1e-5
+        )
+
+    def test_cars_arrive_and_depart_over_a_day(self, env, exog):
+        e = 4
+        state, _ = env.reset(batched_keys(e, base=50), exog)
+        step = jax.jit(env.step)
+        rng = np.random.default_rng(3)
+        acc = np.zeros((e, len(METRIC_FIELDS)))
+        for _ in range(env.cfg.steps_per_episode):
+            state, _, _, _, met = step(state, random_actions(rng, env, e), exog)
+            acc += np.asarray(met)
+        arrived = acc[:, metric_index("arrived")]
+        departed = acc[:, metric_index("departed")]
+        assert (arrived > 20).all(), arrived  # high-traffic shopping day
+        assert (departed <= arrived).all()
+        assert (departed >= arrived * 0.7).all()
+
+    def test_max_actions_transfer_energy(self, env, exog):
+        e = 4
+        state, _ = env.reset(batched_keys(e, base=80), exog)
+        step = jax.jit(env.step)
+        a = jnp.full((e, env.n_ports), env.cfg.n_levels - 1, jnp.int32)
+        a = a.at[:, -1].set((env.cfg.n_levels_battery - 1) // 2)
+        total_e = np.zeros(e)
+        for _ in range(180):
+            state, _, _, _, met = step(state, a, exog)
+            total_e += np.asarray(met[:, metric_index("energy_to_cars_kwh")])
+        assert (total_e > 50.0).all(), total_e
+
+
+class TestConstraintsInsideStep:
+    def test_node_limits_hold_for_any_action(self, env, exog):
+        """Post-projection drawn power can never exceed the root limit."""
+        e = 6
+        state, _ = env.reset(batched_keys(e, base=7), exog)
+        step = jax.jit(env.step)
+        a = jnp.full((e, env.n_ports), env.cfg.n_levels - 1, jnp.int32)
+        a = a.at[:, -1].set(env.cfg.n_levels_battery - 1)  # battery max charge
+        tree = env.tree
+        for _ in range(100):
+            state, _, _, _, _ = step(state, a, exog)
+            p_kw = np.asarray(state.i_drawn) * tree.volt[None, :] / 1000.0
+            flows = p_kw @ tree.membership.T
+            load = np.abs(flows) / tree.node_eta[None, :]
+            assert (load <= tree.node_limit[None, :] + 1e-2).all()
+
+
+class TestRewardIdentity:
+    def test_profit_formula(self, env, exog):
+        """reward == profit when all alpha are 0 (default exog)."""
+        e = 3
+        state, _ = env.reset(batched_keys(e, base=11), exog)
+        rng = np.random.default_rng(4)
+        step = jax.jit(env.step)
+        for _ in range(50):
+            state, _, r, _, met = step(state, random_actions(rng, env, e), exog)
+            np.testing.assert_allclose(
+                np.asarray(r),
+                np.asarray(met[:, metric_index("profit")]),
+                atol=1e-5,
+            )
+
+    def test_alpha_declined_reduces_reward(self, env):
+        exog_pen = default_exog(traffic="high", alpha={"declined": 5.0})
+        exog_free = default_exog(traffic="high")
+        e = 8
+        state_p, _ = env.reset(batched_keys(e, base=21), exog_pen)
+        state_f, _ = env.reset(batched_keys(e, base=21), exog_f := exog_free)
+        step = jax.jit(env.step)
+        rng = np.random.default_rng(5)
+        rp = rf = 0.0
+        rej = 0.0
+        for _ in range(288):
+            a = random_actions(rng, env, e)
+            state_p, _, r1, _, met1 = step(state_p, a, exog_pen)
+            state_f, _, r2, _, _ = step(state_f, a, exog_f)
+            rp += float(r1.sum())
+            rf += float(r2.sum())
+            rej += float(met1[:, metric_index("rejected")].sum())
+        if rej > 0:
+            assert rp < rf
+
+
+class TestVariants:
+    @pytest.mark.parametrize("name", list(STATION_VARIANTS))
+    def test_all_station_variants_step(self, name, exog):
+        env = ChargaxEnv(EnvConfig(station=STATION_VARIANTS[name]))
+        e = 2
+        state, obs = env.reset(batched_keys(e), exog)
+        rng = np.random.default_rng(0)
+        state, obs, r, done, met = jax.jit(env.step)(
+            state, random_actions(rng, env, e), exog
+        )
+        assert obs.shape == (e, env.obs_dim)
+        assert bool(jnp.isfinite(obs).all())

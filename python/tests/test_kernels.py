@@ -1,0 +1,246 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and value ranges; every property asserts
+allclose against ref.py — the core correctness signal of the L1 layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import charge, constraint, ref
+from compile.kernels.gae import gae as gae_fn
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def rng_arrays(seed, *specs):
+    r = np.random.default_rng(seed)
+    out = []
+    for lo, hi, shape in specs:
+        out.append(r.uniform(lo, hi, shape).astype(np.float32))
+    return out
+
+
+@st.composite
+def tree_case(draw):
+    """Hierarchical depth-2 trees (paper Fig. 3: root + disjoint splitters).
+
+    The two-pass projection is exact for this family; arbitrary overlapping
+    node sets are out of scope (the builders in env/tree.py only produce
+    hierarchical trees).
+    """
+    e = draw(st.integers(1, 40))
+    p = draw(st.integers(2, 24))
+    n_children = draw(st.integers(0, 4))
+    seed = draw(st.integers(0, 2**31 - 1))
+    r = np.random.default_rng(seed)
+    i = r.normal(0, 150, (e, p)).astype(np.float32)
+    volt = r.uniform(100, 500, p).astype(np.float32)
+    rows = [np.ones(p, np.float32)]  # root
+    if n_children > 0:
+        assignment = r.integers(0, n_children + 1, p)  # 0 = direct to root
+        for child in range(1, n_children + 1):
+            row = (assignment == child).astype(np.float32)
+            if row.sum() > 0:
+                rows.append(row)
+    mem = np.stack(rows)
+    n = mem.shape[0]
+    lim = r.uniform(5, 500, n).astype(np.float32)
+    eta = r.uniform(0.8, 1.0, n).astype(np.float32)
+    return i, volt, mem, lim, eta
+
+
+class TestConstraintProjection:
+    @given(tree_case())
+    def test_matches_ref(self, case):
+        i, volt, mem, lim, eta = case
+        si, ex = constraint.constraint_projection(
+            jnp.asarray(i), jnp.asarray(volt), jnp.asarray(mem),
+            jnp.asarray(lim), jnp.asarray(eta),
+        )
+        ri, rx = jax.vmap(
+            lambda a: ref.constraint_projection_ref(a, volt, mem, lim, eta)
+        )(jnp.asarray(i))
+        np.testing.assert_allclose(si, ri, atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(ex, rx, atol=1e-4, rtol=1e-4)
+
+    @given(tree_case())
+    def test_projected_flows_satisfy_constraints(self, case):
+        i, volt, mem, lim, eta = case
+        si, _ = constraint.constraint_projection(
+            jnp.asarray(i), jnp.asarray(volt), jnp.asarray(mem),
+            jnp.asarray(lim), jnp.asarray(eta),
+        )
+        p_kw = np.asarray(si) * volt[None, :] / 1000.0
+        flows = p_kw @ mem.T  # [E, N]
+        load = np.abs(flows) / eta[None, :]
+        assert (load <= lim[None, :] * (1 + 1e-3) + 1e-3).all()
+
+    @given(tree_case())
+    def test_projection_shrinks_never_flips(self, case):
+        i, volt, mem, lim, eta = case
+        si, _ = constraint.constraint_projection(
+            jnp.asarray(i), jnp.asarray(volt), jnp.asarray(mem),
+            jnp.asarray(lim), jnp.asarray(eta),
+        )
+        si = np.asarray(si)
+        assert (np.sign(si) == np.sign(i)).all() or (
+            np.abs(si[np.sign(si) != np.sign(i)]) < 1e-6
+        ).all()
+        assert (np.abs(si) <= np.abs(i) + 1e-5).all()
+
+    def test_zero_current_noop(self):
+        e, p, n = 3, 5, 2
+        mem = np.ones((n, p), np.float32)
+        si, ex = constraint.constraint_projection(
+            jnp.zeros((e, p)), jnp.full((p,), 400.0), jnp.asarray(mem),
+            jnp.full((n,), 100.0), jnp.full((n,), 0.98),
+        )
+        assert np.allclose(si, 0.0)
+        assert np.allclose(ex, 0.0)
+
+
+class TestChargeUpdate:
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 32), st.integers(2, 20))
+    def test_matches_ref(self, seed, e, p):
+        r = np.random.default_rng(seed)
+        i = r.normal(0, 120, (e, p)).astype(np.float32)
+        volt = r.uniform(100, 500, p).astype(np.float32)
+        pres = (r.random((e, p)) < 0.7).astype(np.float32)
+        soc = r.random((e, p)).astype(np.float32)
+        de = r.uniform(0, 60, (e, p)).astype(np.float32)
+        dtr = r.uniform(0, 40, (e, p)).astype(np.float32)
+        cap = r.uniform(10, 120, (e, p)).astype(np.float32)
+        rbar = r.uniform(3, 200, (e, p)).astype(np.float32)
+        tau = r.uniform(0.3, 0.9, (e, p)).astype(np.float32)
+        outs = charge.charge_update(
+            jnp.asarray(i), jnp.asarray(volt), pres, soc, de, dtr, cap, rbar,
+            tau, 1.0 / 12.0,
+        )
+        refs = ref.charge_update_ref(
+            i, volt[None, :], pres, soc, de, dtr, cap, rbar, tau, 1.0 / 12.0
+        )
+        for o, rr, name in zip(outs, refs, ["soc", "de", "dt", "rhat", "e"]):
+            np.testing.assert_allclose(o, rr, atol=1e-4, rtol=1e-4, err_msg=name)
+
+    @given(st.integers(0, 2**31 - 1))
+    def test_soc_stays_in_unit_interval(self, seed):
+        r = np.random.default_rng(seed)
+        e, p = 8, 17
+        outs = charge.charge_update(
+            jnp.asarray(r.normal(0, 500, (e, p)).astype(np.float32)),  # huge currents
+            jnp.full((p,), 400.0, np.float32),
+            jnp.ones((e, p), jnp.float32),
+            jnp.asarray(r.random((e, p)).astype(np.float32)),
+            jnp.zeros((e, p)), jnp.zeros((e, p)),
+            jnp.asarray(r.uniform(10, 100, (e, p)).astype(np.float32)),
+            jnp.full((e, p), 150.0), jnp.full((e, p), 0.6),
+            1.0 / 12.0,
+        )
+        soc = np.asarray(outs[0])
+        assert (soc >= 0.0).all() and (soc <= 1.0).all()
+
+    def test_energy_conservation(self):
+        """Port energy == cap * delta_soc when no clipping binds."""
+        e, p = 4, 6
+        i = jnp.full((e, p), 50.0)
+        volt = jnp.full((p,), 400.0)
+        soc = jnp.full((e, p), 0.3)
+        cap = jnp.full((e, p), 80.0)
+        outs = charge.charge_update(
+            i, volt, jnp.ones((e, p)), soc, jnp.full((e, p), 50.0),
+            jnp.full((e, p), 20.0), cap, jnp.full((e, p), 150.0),
+            jnp.full((e, p), 0.8), 1.0 / 12.0,
+        )
+        soc_n, _, _, _, e_port = [np.asarray(o) for o in outs]
+        np.testing.assert_allclose(
+            (soc_n - 0.3) * 80.0, e_port, atol=1e-4
+        )
+
+    def test_absent_port_untouched(self):
+        e, p = 2, 3
+        outs = charge.charge_update(
+            jnp.full((e, p), 100.0), jnp.full((p,), 400.0),
+            jnp.zeros((e, p)),  # nothing present
+            jnp.full((e, p), 0.5), jnp.full((e, p), 10.0),
+            jnp.full((e, p), 5.0), jnp.full((e, p), 60.0),
+            jnp.full((e, p), 100.0), jnp.full((e, p), 0.6), 1.0 / 12.0,
+        )
+        soc_n, de_n, dt_n, rhat_n, e_port = [np.asarray(o) for o in outs]
+        assert np.allclose(soc_n, 0.5)
+        assert np.allclose(de_n, 10.0)
+        assert np.allclose(dt_n, 5.0)  # presence-gated decrement
+        assert np.allclose(e_port, 0.0)
+        assert np.allclose(rhat_n, 0.0)
+
+
+class TestGae:
+    @given(
+        st.integers(0, 2**31 - 1),
+        st.integers(1, 64),
+        st.integers(1, 12),
+        st.floats(0.5, 0.999),
+        st.floats(0.5, 1.0),
+    )
+    def test_matches_ref(self, seed, t, e, gamma, lam):
+        r = np.random.default_rng(seed)
+        rew = r.normal(0, 1, (t, e)).astype(np.float32)
+        val = r.normal(0, 1, (t, e)).astype(np.float32)
+        done = (r.random((t, e)) < 0.15).astype(np.float32)
+        lv = r.normal(0, 1, e).astype(np.float32)
+        a1, t1 = gae_fn(rew, val, done, lv, gamma, lam)
+        a2, t2 = ref.gae_ref(rew, val, done, lv, gamma, lam)
+        np.testing.assert_allclose(a1, a2, atol=2e-4, rtol=1e-3)
+        np.testing.assert_allclose(t1, t2, atol=2e-4, rtol=1e-3)
+
+    def test_terminal_cuts_bootstrap(self):
+        rew = jnp.asarray([[1.0], [1.0]])
+        val = jnp.asarray([[0.0], [5.0]])
+        done = jnp.asarray([[1.0], [0.0]])
+        lv = jnp.asarray([100.0])
+        adv, _ = gae_fn(rew, val, done, lv, 0.99, 0.95)
+        # t=0 terminal: advantage = r - v = 1.0, ignoring the future.
+        np.testing.assert_allclose(np.asarray(adv)[0, 0], 1.0, atol=1e-5)
+
+    def test_gamma_zero_is_td_residual(self):
+        r = np.random.default_rng(1)
+        rew = r.normal(0, 1, (5, 2)).astype(np.float32)
+        val = r.normal(0, 1, (5, 2)).astype(np.float32)
+        adv, _ = gae_fn(
+            rew, val, np.zeros((5, 2), np.float32),
+            np.zeros(2, np.float32), 0.0, 0.95,
+        )
+        np.testing.assert_allclose(adv, rew - val, atol=1e-5)
+
+
+class TestCurves:
+    @given(st.floats(0, 1), st.floats(1, 300), st.floats(0.05, 0.95))
+    def test_charging_curve_bounds(self, soc, rbar, tau):
+        v = float(ref.charging_curve(soc, rbar, tau))
+        assert 0.0 <= v <= rbar + 1e-5
+
+    @given(st.floats(0, 1), st.floats(1, 300), st.floats(0.05, 0.95))
+    def test_discharge_is_flipped_charge(self, soc, rbar, tau):
+        a = float(ref.discharging_curve(soc, rbar, tau))
+        b = float(ref.charging_curve(1.0 - soc, rbar, tau))
+        assert abs(a - b) < 1e-5
+
+    def test_zero_at_full(self):
+        assert float(ref.charging_curve(1.0, 150.0, 0.6)) == 0.0
+        assert float(ref.discharging_curve(0.0, 150.0, 0.6)) == 0.0
+
+
+class TestRefFallbackAgreement:
+    """CHARGAX_NO_PALLAS routes through ref; both paths must agree (they're
+    exercised above individually; this is the wiring check)."""
+
+    def test_kernel_init_exports(self):
+        import compile.kernels as K
+
+        assert callable(K.constraint_projection)
+        assert callable(K.charge_update)
+        assert callable(K.gae)

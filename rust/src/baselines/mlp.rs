@@ -1,0 +1,301 @@
+//! Dense actor-critic MLP with hand-written backprop — the network for the
+//! pure-Rust PPO comparator (mirrors python/compile/networks.py: tanh torso,
+//! concatenated categorical heads, scalar value head).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub obs_dim: usize,
+    pub hidden: usize,
+    pub n_logits: usize,
+    // weights (row-major [in][out])
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+    pub wpi: Vec<f32>,
+    pub bpi: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub bv: Vec<f32>,
+}
+
+/// Gradients, same layout as Mlp weights.
+#[derive(Debug, Clone)]
+pub struct Grads {
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+    pub wpi: Vec<f32>,
+    pub bpi: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub bv: Vec<f32>,
+}
+
+/// Forward-pass activations kept for backprop.
+pub struct Cache {
+    pub batch: usize,
+    pub obs: Vec<f32>, // [B, obs_dim]
+    pub h1: Vec<f32>,  // [B, hidden] (post-tanh)
+    pub h2: Vec<f32>,  // [B, hidden]
+    pub logits: Vec<f32>, // [B, n_logits]
+    pub value: Vec<f32>,  // [B]
+}
+
+impl Mlp {
+    pub fn new(rng: &mut Rng, obs_dim: usize, hidden: usize, n_logits: usize) -> Mlp {
+        // He-ish scaled normal init (orthogonal init is overkill here; the
+        // comparator only needs to learn, not match the JAX agent exactly).
+        let init = |rng: &mut Rng, rows: usize, cols: usize, scale: f32| -> Vec<f32> {
+            let s = scale / (rows as f32).sqrt();
+            (0..rows * cols).map(|_| rng.normal() * s).collect()
+        };
+        Mlp {
+            obs_dim,
+            hidden,
+            n_logits,
+            w1: init(rng, obs_dim, hidden, 1.4),
+            b1: vec![0.0; hidden],
+            w2: init(rng, hidden, hidden, 1.4),
+            b2: vec![0.0; hidden],
+            wpi: init(rng, hidden, n_logits, 0.01),
+            bpi: vec![0.0; n_logits],
+            wv: init(rng, hidden, 1, 1.0),
+            bv: vec![0.0; 1],
+        }
+    }
+
+    pub fn zero_grads(&self) -> Grads {
+        Grads {
+            w1: vec![0.0; self.w1.len()],
+            b1: vec![0.0; self.b1.len()],
+            w2: vec![0.0; self.w2.len()],
+            b2: vec![0.0; self.b2.len()],
+            wpi: vec![0.0; self.wpi.len()],
+            bpi: vec![0.0; self.bpi.len()],
+            wv: vec![0.0; self.wv.len()],
+            bv: vec![0.0; self.bv.len()],
+        }
+    }
+
+    /// Batched forward: obs [B * obs_dim] row-major.
+    pub fn forward(&self, obs: &[f32]) -> Cache {
+        let b = obs.len() / self.obs_dim;
+        let mut h1 = vec![0f32; b * self.hidden];
+        matmul_bias(obs, &self.w1, &self.b1, b, self.obs_dim, self.hidden, &mut h1);
+        h1.iter_mut().for_each(|x| *x = x.tanh());
+        let mut h2 = vec![0f32; b * self.hidden];
+        matmul_bias(&h1, &self.w2, &self.b2, b, self.hidden, self.hidden, &mut h2);
+        h2.iter_mut().for_each(|x| *x = x.tanh());
+        let mut logits = vec![0f32; b * self.n_logits];
+        matmul_bias(&h2, &self.wpi, &self.bpi, b, self.hidden, self.n_logits, &mut logits);
+        let mut value = vec![0f32; b];
+        for i in 0..b {
+            let mut v = self.bv[0];
+            for k in 0..self.hidden {
+                v += h2[i * self.hidden + k] * self.wv[k];
+            }
+            value[i] = v;
+        }
+        Cache { batch: b, obs: obs.to_vec(), h1, h2, logits, value }
+    }
+
+    /// Backprop from (dlogits [B, n_logits], dvalue [B]) into grads.
+    pub fn backward(&self, cache: &Cache, dlogits: &[f32], dvalue: &[f32], g: &mut Grads) {
+        let b = cache.batch;
+        let h = self.hidden;
+        // dh2 = dlogits @ wpi^T + dvalue * wv^T
+        let mut dh2 = vec![0f32; b * h];
+        for i in 0..b {
+            for k in 0..h {
+                let mut acc = dvalue[i] * self.wv[k];
+                let row = &self.wpi[k * self.n_logits..(k + 1) * self.n_logits];
+                let dl = &dlogits[i * self.n_logits..(i + 1) * self.n_logits];
+                for (w, d) in row.iter().zip(dl) {
+                    acc += w * d;
+                }
+                dh2[i * h + k] = acc;
+            }
+        }
+        // grads of heads
+        accum_matmul_t(&cache.h2, dlogits, b, h, self.n_logits, &mut g.wpi);
+        accum_colsum(dlogits, b, self.n_logits, &mut g.bpi);
+        for i in 0..b {
+            for k in 0..h {
+                g.wv[k] += cache.h2[i * h + k] * dvalue[i];
+            }
+            g.bv[0] += dvalue[i];
+        }
+        // through tanh of h2
+        for i in 0..b * h {
+            dh2[i] *= 1.0 - cache.h2[i] * cache.h2[i];
+        }
+        // dh1 = dh2 @ w2^T
+        let mut dh1 = vec![0f32; b * h];
+        for i in 0..b {
+            for k in 0..h {
+                let mut acc = 0f32;
+                let row = &self.w2[k * h..(k + 1) * h];
+                let dd = &dh2[i * h..(i + 1) * h];
+                for (w, d) in row.iter().zip(dd) {
+                    acc += w * d;
+                }
+                dh1[i * h + k] = acc;
+            }
+        }
+        accum_matmul_t(&cache.h1, &dh2, b, h, h, &mut g.w2);
+        accum_colsum(&dh2, b, h, &mut g.b2);
+        for i in 0..b * h {
+            dh1[i] *= 1.0 - cache.h1[i] * cache.h1[i];
+        }
+        accum_matmul_t(&cache.obs, &dh1, b, self.obs_dim, h, &mut g.w1);
+        accum_colsum(&dh1, b, h, &mut g.b1);
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut Vec<f32>> {
+        vec![
+            &mut self.w1, &mut self.b1, &mut self.w2, &mut self.b2,
+            &mut self.wpi, &mut self.bpi, &mut self.wv, &mut self.bv,
+        ]
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.w1.len() + self.b1.len() + self.w2.len() + self.b2.len()
+            + self.wpi.len() + self.bpi.len() + self.wv.len() + self.bv.len()
+    }
+}
+
+impl Grads {
+    pub fn as_slices_mut(&mut self) -> Vec<&mut Vec<f32>> {
+        vec![
+            &mut self.w1, &mut self.b1, &mut self.w2, &mut self.b2,
+            &mut self.wpi, &mut self.bpi, &mut self.wv, &mut self.bv,
+        ]
+    }
+
+    pub fn global_norm(&self) -> f32 {
+        let sq: f32 = [
+            &self.w1, &self.b1, &self.w2, &self.b2,
+            &self.wpi, &self.bpi, &self.wv, &self.bv,
+        ]
+        .iter()
+        .map(|v| v.iter().map(|x| x * x).sum::<f32>())
+        .sum();
+        sq.sqrt()
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in self.as_slices_mut() {
+            v.iter_mut().for_each(|x| *x *= s);
+        }
+    }
+}
+
+/// out[i][j] = sum_k a[i][k] w[k][j] + bias[j]  (a: [B,K], w: [K,J])
+fn matmul_bias(a: &[f32], w: &[f32], bias: &[f32], b: usize, k_dim: usize, j_dim: usize, out: &mut [f32]) {
+    for i in 0..b {
+        let orow = &mut out[i * j_dim..(i + 1) * j_dim];
+        orow.copy_from_slice(bias);
+        let arow = &a[i * k_dim..(i + 1) * k_dim];
+        for (k, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let wrow = &w[k * j_dim..(k + 1) * j_dim];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += av * wv;
+            }
+        }
+    }
+}
+
+/// gw[k][j] += sum_i a[i][k] d[i][j]
+fn accum_matmul_t(a: &[f32], d: &[f32], b: usize, k_dim: usize, j_dim: usize, gw: &mut [f32]) {
+    for i in 0..b {
+        let arow = &a[i * k_dim..(i + 1) * k_dim];
+        let drow = &d[i * j_dim..(i + 1) * j_dim];
+        for (k, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let grow = &mut gw[k * j_dim..(k + 1) * j_dim];
+            for (g, &dv) in grow.iter_mut().zip(drow) {
+                *g += av * dv;
+            }
+        }
+    }
+}
+
+fn accum_colsum(d: &[f32], b: usize, j_dim: usize, gb: &mut [f32]) {
+    for i in 0..b {
+        for j in 0..j_dim {
+            gb[j] += d[i * j_dim + j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Finite-difference check of the full backward pass.
+    #[test]
+    fn backprop_matches_finite_difference() {
+        let mut rng = Rng::new(11);
+        let (od, h, nl, b) = (5, 8, 6, 3);
+        let mlp = Mlp::new(&mut rng, od, h, nl);
+        let obs: Vec<f32> = (0..b * od).map(|_| rng.normal()).collect();
+        // loss = sum(logits * cl) + sum(value * cv) for fixed random c's
+        let cl: Vec<f32> = (0..b * nl).map(|_| rng.normal()).collect();
+        let cv: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        let loss = |m: &Mlp| -> f32 {
+            let c = m.forward(&obs);
+            c.logits.iter().zip(&cl).map(|(a, b)| a * b).sum::<f32>()
+                + c.value.iter().zip(&cv).map(|(a, b)| a * b).sum::<f32>()
+        };
+        let cache = mlp.forward(&obs);
+        let mut g = mlp.zero_grads();
+        mlp.backward(&cache, &cl, &cv, &mut g);
+
+        let eps = 1e-3f32;
+        // probe a few weights in each matrix
+        let checks: Vec<(usize, usize)> = vec![(0, 3), (1, 0), (2, 17), (4, 5), (6, 2)];
+        for (pi, wi) in checks {
+            let mut mp = mlp.clone();
+            mp.params_mut()[pi][wi] += eps;
+            let lp = loss(&mp);
+            let mut mm = mlp.clone();
+            mm.params_mut()[pi][wi] -= eps;
+            let lm = loss(&mm);
+            let fd = (lp - lm) / (2.0 * eps);
+            let mut gref = g.clone();
+            let an = gref.as_slices_mut()[pi][wi];
+            assert!(
+                (fd - an).abs() < 2e-2 * (1.0 + fd.abs()),
+                "param {pi}[{wi}]: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(3);
+        let mlp = Mlp::new(&mut rng, 4, 8, 5);
+        let c = mlp.forward(&vec![0.1; 2 * 4]);
+        assert_eq!(c.logits.len(), 10);
+        assert_eq!(c.value.len(), 2);
+    }
+
+    #[test]
+    fn grad_norm_and_scale() {
+        let mut rng = Rng::new(4);
+        let mlp = Mlp::new(&mut rng, 3, 4, 2);
+        let mut g = mlp.zero_grads();
+        g.w1[0] = 3.0;
+        g.wv[1] = 4.0;
+        assert!((g.global_norm() - 5.0).abs() < 1e-6);
+        g.scale(0.5);
+        assert!((g.global_norm() - 2.5).abs() < 1e-6);
+    }
+}

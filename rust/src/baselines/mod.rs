@@ -1,0 +1,7 @@
+//! CPU comparators (DESIGN.md §Substitutions): a pure-Rust PPO + heuristic
+//! policies over the scalar simulator, standing in for the paper's
+//! SB3-on-CPU-gym baseline rows in Table 2 / Fig. 1.
+
+pub mod mlp;
+pub mod policies;
+pub mod ppo;

@@ -1,0 +1,138 @@
+//! Parameter-free controllers over the scalar simulator: the paper's
+//! always-charge-max baseline (Fig. 4a), a random policy (Table 2 "Random"
+//! row), and a price-threshold heuristic (ablation).
+
+use crate::env::scalar::{ScalarEnv, StepInfo, N_LEVELS, N_LEVELS_BATTERY};
+use crate::util::rng::Rng;
+
+pub trait Policy {
+    fn act(&mut self, env: &ScalarEnv, action: &mut [usize]);
+    fn name(&self) -> &'static str;
+}
+
+/// Paper Fig. 4a baseline: every occupied port at 100%, battery idle.
+pub struct MaxCharge;
+
+impl Policy for MaxCharge {
+    fn act(&mut self, env: &ScalarEnv, action: &mut [usize]) {
+        let c = env.cfg.n_chargers();
+        for (j, a) in action.iter_mut().enumerate().take(c) {
+            *a = if env.cars[j].is_some() { N_LEVELS - 1 } else { 0 };
+        }
+        action[c] = (N_LEVELS_BATTERY - 1) / 2; // zero current
+    }
+
+    fn name(&self) -> &'static str {
+        "max_charge"
+    }
+}
+
+/// Uniform random action per port.
+pub struct RandomPolicy {
+    pub rng: Rng,
+}
+
+impl Policy for RandomPolicy {
+    fn act(&mut self, env: &ScalarEnv, action: &mut [usize]) {
+        let c = env.cfg.n_chargers();
+        for (j, a) in action.iter_mut().enumerate() {
+            let n = if j < c { N_LEVELS } else { N_LEVELS_BATTERY };
+            *a = self.rng.below(n as u32) as usize;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Heuristic: charge hard when the buy price is below its running mean,
+/// throttle when above; battery buys low / sells high (ablation baseline).
+pub struct PriceThreshold {
+    price_sum: f64,
+    price_n: u64,
+}
+
+impl Default for PriceThreshold {
+    fn default() -> Self {
+        PriceThreshold { price_sum: 0.0, price_n: 0 }
+    }
+}
+
+impl Policy for PriceThreshold {
+    fn act(&mut self, env: &ScalarEnv, action: &mut [usize]) {
+        let c = env.cfg.n_chargers();
+        let hour = (env.t / crate::env::scalar::STEPS_PER_HOUR).min(23);
+        let price = env.tables.price_buy[env.day * 24 + hour];
+        self.price_sum += price as f64;
+        self.price_n += 1;
+        let mean = (self.price_sum / self.price_n as f64) as f32;
+        let cheap = price <= mean;
+        for (j, a) in action.iter_mut().enumerate().take(c) {
+            *a = match (env.cars[j].is_some(), cheap) {
+                (false, _) => 0,
+                (true, true) => N_LEVELS - 1,
+                // still serve customers, at reduced rate, when expensive
+                (true, false) => (N_LEVELS - 1) / 2,
+            };
+        }
+        let mid = (N_LEVELS_BATTERY - 1) / 2;
+        action[c] = if cheap { N_LEVELS_BATTERY - 1 } else { mid / 2 };
+    }
+
+    fn name(&self) -> &'static str {
+        "price_threshold"
+    }
+}
+
+/// Roll a policy for `steps` env steps; returns per-step infos summary.
+pub struct RolloutSummary {
+    pub steps: usize,
+    pub mean_reward: f64,
+    pub mean_profit: f64,
+    pub total_missing_kwh: f64,
+    pub total_overtime_steps: f64,
+    pub total_rejected: f64,
+    pub episodes: usize,
+    pub mean_episode_return: f64,
+}
+
+pub fn rollout(env: &mut ScalarEnv, policy: &mut dyn Policy, steps: usize) -> RolloutSummary {
+    let n_ports = env.n_ports();
+    let mut action = vec![0usize; n_ports];
+    // An RL loop consumes an observation every step; build it so the
+    // comparator pays the same per-step cost the paper's gym envs do.
+    let mut obs = vec![0f32; env.obs_dim()];
+    let mut sum_r = 0f64;
+    let mut sum_p = 0f64;
+    let mut missing = 0f64;
+    let mut overtime = 0f64;
+    let mut rejected = 0f64;
+    let mut episodes = 0usize;
+    let mut ep_returns = 0f64;
+    for _ in 0..steps {
+        env.observe(&mut obs);
+        policy.act(env, &mut action);
+        let prev_return = env.ep_return;
+        let info: StepInfo = env.step(&action);
+        sum_r += info.reward as f64;
+        sum_p += info.profit as f64;
+        missing += info.missing_kwh as f64;
+        overtime += info.overtime_steps as f64;
+        rejected += info.rejected as f64;
+        if info.done {
+            episodes += 1;
+            ep_returns += (prev_return + info.reward) as f64;
+        }
+    }
+    RolloutSummary {
+        steps,
+        mean_reward: sum_r / steps as f64,
+        mean_profit: sum_p / steps as f64,
+        total_missing_kwh: missing,
+        total_overtime_steps: overtime,
+        total_rejected: rejected,
+        episodes,
+        mean_episode_return: if episodes > 0 { ep_returns / episodes as f64 } else { 0.0 },
+    }
+}

@@ -1,0 +1,548 @@
+//! Pure-Rust PPO on the scalar simulator — the "SB3 on CPU" comparator for
+//! Table 2. Same algorithm and hyperparameters as the fused JAX PPO
+//! (Table 3): vectorized env instances stepped in a host loop, GAE,
+//! minibatched clipped-surrogate epochs, Adam, global grad-norm clip.
+
+use crate::env::scalar::{ScalarEnv, ScenarioTables, StepInfo};
+use crate::env::tree::StationConfig;
+use crate::util::rng::Rng;
+
+use super::mlp::{Grads, Mlp};
+
+#[derive(Debug, Clone)]
+pub struct PpoParams {
+    pub num_envs: usize,
+    pub rollout_steps: usize,
+    pub lr: f32,
+    pub gamma: f32,
+    pub gae_lambda: f32,
+    pub clip_eps: f32,
+    pub vf_clip: f32,
+    pub ent_coef: f32,
+    pub vf_coef: f32,
+    pub max_grad_norm: f32,
+    pub n_minibatches: usize,
+    pub update_epochs: usize,
+    pub hidden: usize,
+}
+
+impl Default for PpoParams {
+    fn default() -> Self {
+        PpoParams {
+            num_envs: 12,
+            rollout_steps: 300,
+            lr: 2.5e-4,
+            gamma: 0.99,
+            gae_lambda: 0.95,
+            clip_eps: 0.2,
+            vf_clip: 10.0,
+            ent_coef: 0.01,
+            vf_coef: 0.25,
+            max_grad_norm: 100.0,
+            n_minibatches: 4,
+            update_epochs: 4,
+            hidden: 128,
+        }
+    }
+}
+
+pub struct Adam {
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    count: i32,
+}
+
+impl Adam {
+    pub fn new(mlp: &Mlp) -> Adam {
+        let sizes = [
+            mlp.w1.len(), mlp.b1.len(), mlp.w2.len(), mlp.b2.len(),
+            mlp.wpi.len(), mlp.bpi.len(), mlp.wv.len(), mlp.bv.len(),
+        ];
+        Adam {
+            m: sizes.iter().map(|&s| vec![0.0; s]).collect(),
+            v: sizes.iter().map(|&s| vec![0.0; s]).collect(),
+            count: 0,
+        }
+    }
+
+    pub fn update(&mut self, mlp: &mut Mlp, grads: &mut Grads, lr: f32) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        self.count += 1;
+        let c = self.count as f32;
+        let bias1 = 1.0 - B1.powf(c);
+        let bias2 = 1.0 - B2.powf(c);
+        for (((p, g), m), v) in mlp
+            .params_mut()
+            .into_iter()
+            .zip(grads.as_slices_mut())
+            .zip(self.m.iter_mut())
+            .zip(self.v.iter_mut())
+        {
+            for i in 0..p.len() {
+                m[i] = B1 * m[i] + (1.0 - B1) * g[i];
+                v[i] = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
+                let mh = m[i] / bias1;
+                let vh = v[i] / bias2;
+                p[i] -= lr * mh / (vh.sqrt() + EPS);
+            }
+        }
+    }
+}
+
+/// Multi-head categorical helpers over a concatenated logit vector.
+pub struct Heads {
+    pub nvec: Vec<usize>,
+    pub offsets: Vec<usize>,
+    pub n_logits: usize,
+}
+
+impl Heads {
+    pub fn new(nvec: Vec<usize>) -> Heads {
+        let mut offsets = Vec::with_capacity(nvec.len());
+        let mut ofs = 0;
+        for n in &nvec {
+            offsets.push(ofs);
+            ofs += n;
+        }
+        Heads { nvec, offsets, n_logits: ofs }
+    }
+
+    /// Sample all heads for one row of logits; returns (action, logp).
+    pub fn sample(&self, rng: &mut Rng, logits: &[f32], action: &mut [usize]) -> f32 {
+        let mut logp = 0f32;
+        for (h, (&ofs, &n)) in self.offsets.iter().zip(&self.nvec).enumerate() {
+            let lg = &logits[ofs..ofs + n];
+            let lse = log_sum_exp(lg);
+            // Gumbel-max is what jax uses; inverse-CDF is equivalent.
+            let mut x = rng.f32();
+            let mut pick = n - 1;
+            for (i, &l) in lg.iter().enumerate() {
+                let p = (l - lse).exp();
+                if x < p {
+                    pick = i;
+                    break;
+                }
+                x -= p;
+            }
+            action[h] = pick;
+            logp += lg[pick] - lse;
+        }
+        logp
+    }
+
+    /// Joint log-prob + entropy of a stored action; also fills dlogits with
+    /// d(logp)/d(logits) and dent with d(entropy)/d(logits).
+    pub fn logp_entropy(
+        &self,
+        logits: &[f32],
+        action: &[usize],
+        dlogp: &mut [f32],
+        dent: &mut [f32],
+    ) -> (f32, f32) {
+        let mut logp = 0f32;
+        let mut ent = 0f32;
+        for (h, (&ofs, &n)) in self.offsets.iter().zip(&self.nvec).enumerate() {
+            let lg = &logits[ofs..ofs + n];
+            let lse = log_sum_exp(lg);
+            let a = action[h];
+            logp += lg[a] - lse;
+            let mut h_ent = 0f32;
+            // p_i, entropy and gradients.
+            for i in 0..n {
+                let p = (lg[i] - lse).exp();
+                let lpi = lg[i] - lse;
+                h_ent -= p * lpi;
+                dlogp[ofs + i] = -p;
+                // d(-sum p log p)/dlogit_i = -p_i (log p_i + 1 - H... ) use:
+                // dH/dl_i = -p_i * (lpi + H_partial) computed after loop.
+                dent[ofs + i] = p * lpi; // temp store p*lpi
+            }
+            dlogp[ofs + a] += 1.0;
+            // dH/dl_i = -p_i*(lpi - sum_j p_j lpj) = -p_i*lpi + p_i*(-H)... :
+            // H = -sum p lpi => sum_j p_j lpj = -H
+            for i in 0..n {
+                let p = (lg[i] - lse).exp();
+                let lpi = lg[i] - lse;
+                dent[ofs + i] = -p * (lpi + h_ent);
+            }
+            ent += h_ent;
+        }
+        (logp, ent)
+    }
+}
+
+fn log_sum_exp(x: &[f32]) -> f32 {
+    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    m + x.iter().map(|v| (v - m).exp()).sum::<f32>().ln()
+}
+
+/// GAE identical to kernels/ref.py::gae_ref (time-major flat arrays).
+pub fn gae(
+    rewards: &[f32],
+    values: &[f32],
+    dones: &[f32],
+    last_value: &[f32],
+    e: usize,
+    gamma: f32,
+    lam: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let t_len = rewards.len() / e;
+    let mut adv = vec![0f32; rewards.len()];
+    let mut g = vec![0f32; e];
+    for t in (0..t_len).rev() {
+        for j in 0..e {
+            let idx = t * e + j;
+            let nv = if t == t_len - 1 { last_value[j] } else { values[(t + 1) * e + j] };
+            let nonterm = 1.0 - dones[idx];
+            let delta = rewards[idx] + gamma * nv * nonterm - values[idx];
+            g[j] = delta + gamma * lam * nonterm * g[j];
+            adv[idx] = g[j];
+        }
+    }
+    let targets: Vec<f32> = adv.iter().zip(values).map(|(a, v)| a + v).collect();
+    (adv, targets)
+}
+
+pub struct TrainStats {
+    pub mean_reward: f32,
+    pub mean_profit: f32,
+    pub total_loss: f32,
+    pub entropy: f32,
+    pub completed_return_mean: f32,
+}
+
+/// The CPU PPO trainer (comparator).
+pub struct PpoTrainer {
+    pub cfg: PpoParams,
+    pub envs: Vec<ScalarEnv>,
+    pub mlp: Mlp,
+    pub heads: Heads,
+    pub adam: Adam,
+    pub rng: Rng,
+    pub obs_dim: usize,
+    last_obs: Vec<f32>, // [E, obs_dim]
+    pub env_steps: usize,
+}
+
+impl PpoTrainer {
+    pub fn new(
+        cfg: PpoParams,
+        station: StationConfig,
+        mk_tables: impl Fn() -> ScenarioTables,
+        seed: u64,
+    ) -> PpoTrainer {
+        let mut rng = Rng::new(seed);
+        let envs: Vec<ScalarEnv> = (0..cfg.num_envs)
+            .map(|i| ScalarEnv::new(station.clone(), mk_tables(), seed ^ (i as u64 * 7919 + 13)))
+            .collect();
+        let obs_dim = envs[0].obs_dim();
+        let heads = Heads::new(envs[0].action_nvec());
+        let mlp = Mlp::new(&mut rng, obs_dim, cfg.hidden, heads.n_logits);
+        let adam = Adam::new(&mlp);
+        let mut last_obs = vec![0f32; cfg.num_envs * obs_dim];
+        for (j, env) in envs.iter().enumerate() {
+            env.observe(&mut last_obs[j * obs_dim..(j + 1) * obs_dim]);
+        }
+        PpoTrainer {
+            cfg,
+            envs,
+            mlp,
+            heads,
+            adam,
+            rng,
+            obs_dim,
+            last_obs,
+            env_steps: 0,
+        }
+    }
+
+    /// One PPO iteration (rollout + update). Mirrors ppo.py::train_iter.
+    pub fn iteration(&mut self) -> TrainStats {
+        let e = self.cfg.num_envs;
+        let t_len = self.cfg.rollout_steps;
+        let n_ports = self.heads.nvec.len();
+        let bsz = e * t_len;
+
+        let mut obs_buf = vec![0f32; bsz * self.obs_dim];
+        let mut act_buf = vec![0usize; bsz * n_ports];
+        let mut logp_buf = vec![0f32; bsz];
+        let mut val_buf = vec![0f32; bsz];
+        let mut rew_buf = vec![0f32; bsz];
+        let mut done_buf = vec![0f32; bsz];
+        let mut profit_sum = 0f64;
+        let mut comp_returns: Vec<f32> = Vec::new();
+
+        // ---- rollout ------------------------------------------------------
+        let mut action = vec![0usize; n_ports];
+        for t in 0..t_len {
+            let cache = self.mlp.forward(&self.last_obs);
+            for j in 0..e {
+                let idx = t * e + j;
+                obs_buf[idx * self.obs_dim..(idx + 1) * self.obs_dim]
+                    .copy_from_slice(&self.last_obs[j * self.obs_dim..(j + 1) * self.obs_dim]);
+                let lg = &cache.logits[j * self.heads.n_logits..(j + 1) * self.heads.n_logits];
+                let logp = self.heads.sample(&mut self.rng, lg, &mut action);
+                let prev_return = self.envs[j].ep_return;
+                let info: StepInfo = self.envs[j].step(&action);
+                if info.done {
+                    comp_returns.push(prev_return + info.reward);
+                }
+                act_buf[idx * n_ports..(idx + 1) * n_ports].copy_from_slice(&action);
+                logp_buf[idx] = logp;
+                val_buf[idx] = cache.value[j];
+                rew_buf[idx] = info.reward;
+                done_buf[idx] = info.done as i32 as f32;
+                profit_sum += info.profit as f64;
+                self.envs[j]
+                    .observe(&mut self.last_obs[j * self.obs_dim..(j + 1) * self.obs_dim]);
+            }
+        }
+        self.env_steps += bsz;
+        let last_cache = self.mlp.forward(&self.last_obs);
+        let (adv, targets) = gae(
+            &rew_buf, &val_buf, &done_buf, &last_cache.value, e,
+            self.cfg.gamma, self.cfg.gae_lambda,
+        );
+
+        // ---- update -------------------------------------------------------
+        let mb = bsz / self.cfg.n_minibatches;
+        let mut total_loss_acc = 0f64;
+        let mut ent_acc = 0f64;
+        let mut n_upd = 0usize;
+        for _ in 0..self.cfg.update_epochs {
+            let perm = self.rng.permutation(bsz);
+            for mbi in 0..self.cfg.n_minibatches {
+                let idxs = &perm[mbi * mb..(mbi + 1) * mb];
+                let (loss, ent) = self.minibatch_update(
+                    idxs, &obs_buf, &act_buf, &logp_buf, &val_buf, &adv, &targets,
+                );
+                total_loss_acc += loss as f64;
+                ent_acc += ent as f64;
+                n_upd += 1;
+            }
+        }
+
+        TrainStats {
+            mean_reward: rew_buf.iter().sum::<f32>() / bsz as f32,
+            mean_profit: (profit_sum / bsz as f64) as f32,
+            total_loss: (total_loss_acc / n_upd as f64) as f32,
+            entropy: (ent_acc / n_upd as f64) as f32,
+            completed_return_mean: if comp_returns.is_empty() {
+                0.0
+            } else {
+                comp_returns.iter().sum::<f32>() / comp_returns.len() as f32
+            },
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn minibatch_update(
+        &mut self,
+        idxs: &[usize],
+        obs_buf: &[f32],
+        act_buf: &[usize],
+        logp_buf: &[f32],
+        val_buf: &[f32],
+        adv: &[f32],
+        targets: &[f32],
+    ) -> (f32, f32) {
+        let b = idxs.len();
+        let n_ports = self.heads.nvec.len();
+        let nl = self.heads.n_logits;
+        // gather minibatch
+        let mut obs = vec![0f32; b * self.obs_dim];
+        for (r, &i) in idxs.iter().enumerate() {
+            obs[r * self.obs_dim..(r + 1) * self.obs_dim]
+                .copy_from_slice(&obs_buf[i * self.obs_dim..(i + 1) * self.obs_dim]);
+        }
+        // normalize advantages over the minibatch (PureJaxRL convention).
+        let madv: Vec<f32> = idxs.iter().map(|&i| adv[i]).collect();
+        let mean = madv.iter().sum::<f32>() / b as f32;
+        let var = madv.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / b as f32;
+        let std = var.sqrt() + 1e-8;
+
+        let cache = self.mlp.forward(&obs);
+        let mut dlogits = vec![0f32; b * nl];
+        let mut dvalue = vec![0f32; b];
+        let mut loss_acc = 0f32;
+        let mut ent_acc = 0f32;
+        let mut dlp = vec![0f32; nl];
+        let mut dent = vec![0f32; nl];
+        for (r, &i) in idxs.iter().enumerate() {
+            let lg = &cache.logits[r * nl..(r + 1) * nl];
+            let act = &act_buf[i * n_ports..(i + 1) * n_ports];
+            dlp.iter_mut().for_each(|x| *x = 0.0);
+            dent.iter_mut().for_each(|x| *x = 0.0);
+            let (logp, ent) = self.heads.logp_entropy(lg, act, &mut dlp, &mut dent);
+            let a_n = (adv[i] - mean) / std;
+            let ratio = (logp - logp_buf[i]).exp();
+            let clipped = ratio.clamp(1.0 - self.cfg.clip_eps, 1.0 + self.cfg.clip_eps);
+            let pg1 = ratio * a_n;
+            let pg2 = clipped * a_n;
+            // d(-min(pg1,pg2))/dlogp
+            let dpg_dlogp = if pg1 <= pg2 {
+                -ratio * a_n // d(-ratio*a)/dlogp = -a*ratio
+            } else if (ratio < 1.0 - self.cfg.clip_eps && a_n < 0.0)
+                || (ratio > 1.0 + self.cfg.clip_eps && a_n > 0.0)
+            {
+                0.0 // clipped branch, constant
+            } else {
+                -ratio * a_n
+            };
+            loss_acc += -pg1.min(pg2);
+            ent_acc += ent;
+            // value loss (clipped)
+            let v = cache.value[r];
+            let v_old = val_buf[i];
+            let v_clip = v_old + (v - v_old).clamp(-self.cfg.vf_clip, self.cfg.vf_clip);
+            let e1 = (v - targets[i]) * (v - targets[i]);
+            let e2 = (v_clip - targets[i]) * (v_clip - targets[i]);
+            loss_acc += 0.5 * self.cfg.vf_coef * e1.max(e2);
+            let dv = if e1 >= e2 {
+                v - targets[i]
+            } else if (v - v_old).abs() < self.cfg.vf_clip {
+                v_clip - targets[i]
+            } else {
+                0.0
+            };
+            dvalue[r] = self.cfg.vf_coef * dv / b as f32;
+            for k in 0..nl {
+                dlogits[r * nl + k] = (dpg_dlogp * dlp[k]
+                    - self.cfg.ent_coef * dent[k])
+                    / b as f32;
+            }
+            loss_acc -= self.cfg.ent_coef * ent;
+        }
+        let mut grads = self.mlp.zero_grads();
+        self.mlp.backward(&cache, &dlogits, &dvalue, &mut grads);
+        let norm = grads.global_norm();
+        if norm > self.cfg.max_grad_norm {
+            grads.scale(self.cfg.max_grad_norm / norm);
+        }
+        self.adam.update(&mut self.mlp, &mut grads, self.cfg.lr);
+        (loss_acc / b as f32, ent_acc / b as f32)
+    }
+
+    /// Greedy evaluation for one full episode; returns total reward/profit.
+    pub fn eval_episode(&mut self, seed: u64) -> (f32, f32) {
+        let mut env = ScalarEnv::new(
+            self.envs[0].cfg.clone(),
+            ScenarioTables {
+                price_buy: self.envs[0].tables.price_buy.clone(),
+                price_sell_grid: self.envs[0].tables.price_sell_grid.clone(),
+                moer: self.envs[0].tables.moer.clone(),
+                arrival_rate: self.envs[0].tables.arrival_rate.clone(),
+                car_table: self.envs[0].tables.car_table.clone(),
+                car_weights: self.envs[0].tables.car_weights.clone(),
+                user_profile: self.envs[0].tables.user_profile.clone(),
+                n_days: self.envs[0].tables.n_days,
+                alpha: self.envs[0].tables.alpha,
+                beta: self.envs[0].tables.beta,
+                p_sell: self.envs[0].tables.p_sell,
+                traffic: self.envs[0].tables.traffic,
+            },
+            seed,
+        );
+        let mut obs = vec![0f32; self.obs_dim];
+        let mut action = vec![0usize; self.heads.nvec.len()];
+        let mut tot_r = 0f32;
+        let mut tot_p = 0f32;
+        for _ in 0..crate::env::scalar::STEPS_PER_EPISODE {
+            env.observe(&mut obs);
+            let cache = self.mlp.forward(&obs);
+            for (h, (&ofs, &n)) in self.heads.offsets.iter().zip(&self.heads.nvec).enumerate() {
+                let lg = &cache.logits[ofs..ofs + n];
+                action[h] = lg
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+            }
+            let info = env.step(&action);
+            tot_r += info.reward;
+            tot_p += info.profit;
+        }
+        (tot_r, tot_p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gae_matches_hand_rolled_two_steps() {
+        // T=2, E=1, no dones.
+        let (adv, tgt) = gae(&[1.0, 1.0], &[0.5, 0.5], &[0.0, 0.0], &[0.5], 1, 0.9, 0.8);
+        let d1 = 1.0 + 0.9 * 0.5 - 0.5; // 0.95
+        let d0 = 1.0 + 0.9 * 0.5 - 0.5 + 0.9 * 0.8 * 0.95;
+        assert!((adv[1] - d1).abs() < 1e-6);
+        assert!((adv[0] - d0).abs() < 1e-6);
+        assert!((tgt[0] - (adv[0] + 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gae_cuts_at_done() {
+        let (adv, _) = gae(&[1.0, 1.0], &[0.0, 0.0], &[1.0, 0.0], &[9.0], 1, 0.9, 0.8);
+        // t=0 terminal: delta = r - v = 1, no bootstrap, no propagation.
+        assert!((adv[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn heads_sample_and_logp_consistent() {
+        let heads = Heads::new(vec![3, 4]);
+        let mut rng = Rng::new(5);
+        let logits = vec![0.1, 0.5, -0.2, 1.0, 0.0, -1.0, 0.3];
+        let mut action = vec![0usize; 2];
+        let lp = heads.sample(&mut rng, &logits, &mut action);
+        let mut d1 = vec![0f32; 7];
+        let mut d2 = vec![0f32; 7];
+        let (lp2, ent) = heads.logp_entropy(&logits, &action, &mut d1, &mut d2);
+        assert!((lp - lp2).abs() < 1e-5);
+        assert!(ent > 0.0);
+    }
+
+    #[test]
+    fn entropy_gradient_finite_difference() {
+        let heads = Heads::new(vec![4]);
+        let logits = vec![0.3f32, -0.1, 0.7, 0.0];
+        let mut dlp = vec![0f32; 4];
+        let mut dent = vec![0f32; 4];
+        let (_, _) = heads.logp_entropy(&logits, &[2], &mut dlp, &mut dent);
+        let eps = 1e-3f32;
+        for k in 0..4 {
+            let mut lp = logits.clone();
+            lp[k] += eps;
+            let (_, e_p) = heads.logp_entropy(&lp, &[2], &mut vec![0f32; 4], &mut vec![0f32; 4]);
+            let mut lm = logits.clone();
+            lm[k] -= eps;
+            let (_, e_m) = heads.logp_entropy(&lm, &[2], &mut vec![0f32; 4], &mut vec![0f32; 4]);
+            let fd = (e_p - e_m) / (2.0 * eps);
+            assert!((fd - dent[k]).abs() < 1e-3, "k={k} fd={fd} an={}", dent[k]);
+        }
+    }
+
+    #[test]
+    fn logp_gradient_finite_difference() {
+        let heads = Heads::new(vec![3, 2]);
+        let logits = vec![0.3f32, -0.1, 0.7, 0.2, -0.4];
+        let act = [1usize, 0];
+        let mut dlp = vec![0f32; 5];
+        let mut dent = vec![0f32; 5];
+        heads.logp_entropy(&logits, &act, &mut dlp, &mut dent);
+        let eps = 1e-3f32;
+        for k in 0..5 {
+            let mut lp = logits.clone();
+            lp[k] += eps;
+            let (l_p, _) = heads.logp_entropy(&lp, &act, &mut vec![0f32; 5], &mut vec![0f32; 5]);
+            let mut lm = logits.clone();
+            lm[k] -= eps;
+            let (l_m, _) = heads.logp_entropy(&lm, &act, &mut vec![0f32; 5], &mut vec![0f32; 5]);
+            let fd = (l_p - l_m) / (2.0 * eps);
+            assert!((fd - dlp[k]).abs() < 1e-3, "k={k} fd={fd} an={}", dlp[k]);
+        }
+    }
+}

@@ -1,0 +1,46 @@
+// Debug probe: run env_reset and report non-finite observation entries.
+use anyhow::Result;
+use chargax::data::{DataStore, Scenario};
+use chargax::runtime::engine::{artifacts_dir, Engine};
+use chargax::runtime::manifest::Manifest;
+use chargax::runtime::tensor::Tensor;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(&artifacts_dir())?;
+    let store = DataStore::load(&artifacts_dir().join("data"))?;
+    let v = manifest.variant("mix10dc6ac_e12")?;
+    let engine = Engine::cpu()?;
+    let reset = engine.load(v.program("env_reset")?)?;
+    let exog: Vec<xla::Literal> = Scenario::default()
+        .to_tensors(&store)?
+        .iter()
+        .map(|t| t.to_literal().unwrap())
+        .collect();
+    let seed = Tensor::scalar_u32(42).to_literal()?;
+    let mut ins: Vec<&xla::Literal> = vec![&seed];
+    ins.extend(exog.iter());
+    let outs = reset.run_literals(&ins)?;
+    for (spec, lit) in v.program("env_reset")?.outputs.iter().zip(&outs) {
+        let t = Tensor::from_literal(lit)?;
+        match &t {
+            Tensor::F32 { data, .. } => {
+                let bad = data.iter().filter(|x| !x.is_finite()).count();
+                let mn = data.iter().cloned().fold(f32::INFINITY, f32::min);
+                let mx = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                println!("{:<24} f32 {:?} bad={} range=[{:.3},{:.3}]", spec.name, t.shape(), bad, mn, mx);
+                if bad > 0 && spec.name == "obs" {
+                    for (i, x) in data.iter().enumerate().filter(|(_, x)| !x.is_finite()).take(200) {
+                        println!("   obs[{}] (col {}) = {}", i, i % 107, x);
+                    }
+                }
+            }
+            Tensor::I32 { data, .. } => {
+                println!("{:<24} i32 {:?} first={:?}", spec.name, t.shape(), &data[..data.len().min(4)]);
+            }
+            Tensor::U32 { data, .. } => {
+                println!("{:<24} u32 {:?} first={:?}", spec.name, t.shape(), &data[..data.len().min(4)]);
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+// Spike: load HLO text with PRNG+scan+multi-output, execute, feed outputs back.
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("platform={}", client.platform_name());
+    let proto = xla::HloModuleProto::from_text_file("/tmp/spike.hlo.txt")
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let key = xla::Literal::vec1(&[0u32, 0u32]);
+    let x = xla::Literal::vec1(&[0f32; 4]);
+    let result = exe
+        .execute::<xla::Literal>(&[key, x])
+        .map_err(|e| anyhow::anyhow!("{e}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let parts = result.to_tuple().map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("n outputs: {}", parts.len());
+    for (i, p) in parts.iter().enumerate() {
+        println!("  out[{i}]: {:?}", p.shape());
+    }
+    let key_out = parts[0].to_vec::<u32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let x_out = parts[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let ys = parts[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("key={key_out:?} x={x_out:?} ys={ys:?}");
+    assert_eq!(key_out, vec![3952908011u32, 3835524538u32]);
+    assert_eq!(x_out, vec![13.0, 15.0, 24.0, 8.0]);
+    assert_eq!(ys, vec![10.0, 21.0, 33.0, 49.0, 60.0]);
+
+    // feed carry back: inputs (key, x) <- outputs (key, x)
+    let mut parts = parts;
+    let x2 = parts.remove(1);
+    let k2 = parts.remove(0);
+    let result2 = exe
+        .execute::<xla::Literal>(&[k2, x2])
+        .map_err(|e| anyhow::anyhow!("{e}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let parts2 = result2.to_tuple().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let x_out2 = parts2[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("x after feedback={x_out2:?}");
+    println!("spike OK");
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Run configuration: CLI-facing experiment settings.
+//!
+//! Configs load from JSON files (configs/*.json, parsed with util::json —
+//! no serde offline) and/or `--key value` CLI overrides; `RunConfig`
+//! bundles the scenario, variant and budgets every subcommand needs.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+use crate::data::Scenario;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub variant: String,
+    pub scenario: Scenario,
+    pub seed: u32,
+    pub n_seeds: usize,
+    pub total_env_steps: usize,
+    pub eval_seeds: usize,
+    pub paper_scale: bool,
+    pub out_path: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            variant: "mix10dc6ac_e12".into(),
+            scenario: Scenario::default(),
+            seed: 0,
+            n_seeds: 3,
+            total_env_steps: 200_000,
+            eval_seeds: 8,
+            paper_scale: false,
+            out_path: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load a JSON config file, then apply `--key value` overrides.
+    pub fn load(path: Option<&str>, overrides: &[(String, String)]) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(p) = path {
+            cfg.apply_json(p)?;
+        }
+        for (k, v) in overrides {
+            cfg.set(k, v)
+                .with_context(|| format!("applying override --{k} {v}"))?;
+        }
+        Ok(cfg)
+    }
+
+    fn apply_json(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(Path::new(path))
+            .with_context(|| format!("reading config {path}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        let obj = j.as_obj().ok_or_else(|| anyhow!("config root must be an object"))?;
+        for (k, v) in obj {
+            let val = match v {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) => format!("{n}"),
+                Json::Bool(b) => format!("{b}"),
+                other => {
+                    return Err(anyhow!("config key '{k}': unsupported value {other:?}"))
+                }
+            };
+            self.set(k, &val)?;
+        }
+        Ok(())
+    }
+
+    /// Set one field by name (shared by JSON loader and CLI overrides).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        match key {
+            "variant" => self.variant = val.to_string(),
+            "scenario" => self.scenario.scenario = val.to_string(),
+            "region" => self.scenario.region = val.to_string(),
+            "country" => self.scenario.country = val.to_string(),
+            "year" => self.scenario.year = val.parse()?,
+            "traffic" => self.scenario.traffic = val.to_string(),
+            "p_sell" => self.scenario.p_sell = val.parse()?,
+            "beta" => self.scenario.beta = val.parse()?,
+            "seed" => self.seed = val.parse()?,
+            "n_seeds" => self.n_seeds = val.parse()?,
+            "total_env_steps" | "steps" => self.total_env_steps = val.parse()?,
+            "eval_seeds" => self.eval_seeds = val.parse()?,
+            "paper_scale" => self.paper_scale = val.parse()?,
+            "out" => self.out_path = Some(val.to_string()),
+            k if k.starts_with("alpha_") => {
+                let name = &k["alpha_".len()..];
+                self.scenario = self.scenario.clone().with_alpha(name, val.parse()?)?;
+            }
+            other => return Err(anyhow!("unknown config key '{other}'")),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = RunConfig::default();
+        cfg.set("year", "2022").unwrap();
+        cfg.set("traffic", "high").unwrap();
+        cfg.set("alpha_satisfaction0", "1.5").unwrap();
+        cfg.set("steps", "5000").unwrap();
+        assert_eq!(cfg.scenario.year, 2022);
+        assert_eq!(cfg.scenario.traffic, "high");
+        assert_eq!(cfg.scenario.alpha[1], 1.5);
+        assert_eq!(cfg.total_env_steps, 5000);
+        assert!(cfg.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn json_config_loads() {
+        let dir = std::env::temp_dir().join("chargax_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.json");
+        std::fs::write(&p, r#"{"variant": "dc16_e12", "year": 2023, "n_seeds": 5}"#).unwrap();
+        let cfg = RunConfig::load(Some(p.to_str().unwrap()), &[]).unwrap();
+        assert_eq!(cfg.variant, "dc16_e12");
+        assert_eq!(cfg.scenario.year, 2023);
+        assert_eq!(cfg.n_seeds, 5);
+    }
+}

@@ -1,0 +1,106 @@
+//! Named metric vectors: the AOT programs return flat f32 vectors whose
+//! field names live in the manifest; this gives them string-keyed access
+//! plus simple aggregation across seeds/iterations.
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone)]
+pub struct NamedVec {
+    pub fields: Vec<String>,
+    pub values: Vec<f32>,
+}
+
+impl NamedVec {
+    pub fn new(fields: &[String], values: Vec<f32>) -> Result<NamedVec> {
+        if fields.len() != values.len() {
+            return Err(anyhow!(
+                "metric vector length {} != field count {}",
+                values.len(),
+                fields.len()
+            ));
+        }
+        Ok(NamedVec { fields: fields.to_vec(), values })
+    }
+
+    pub fn get(&self, name: &str) -> Result<f32> {
+        self.fields
+            .iter()
+            .position(|f| f == name)
+            .map(|i| self.values[i])
+            .ok_or_else(|| anyhow!("no metric '{name}' (have {:?})", self.fields))
+    }
+
+    pub fn fmt_fields(&self, names: &[&str]) -> String {
+        names
+            .iter()
+            .map(|n| format!("{n}={:.3}", self.get(n).unwrap_or(f32::NAN)))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Mean over a set of NamedVecs with identical fields.
+pub fn mean(vecs: &[NamedVec]) -> Result<NamedVec> {
+    let first = vecs.first().ok_or_else(|| anyhow!("empty metric set"))?;
+    let mut acc = vec![0f64; first.values.len()];
+    for v in vecs {
+        if v.fields != first.fields {
+            return Err(anyhow!("inconsistent metric fields"));
+        }
+        for (a, x) in acc.iter_mut().zip(&v.values) {
+            *a += *x as f64;
+        }
+    }
+    NamedVec::new(
+        &first.fields,
+        acc.iter().map(|a| (*a / vecs.len() as f64) as f32).collect(),
+    )
+}
+
+/// Std-dev (sample) per field.
+pub fn std(vecs: &[NamedVec]) -> Result<NamedVec> {
+    let m = mean(vecs)?;
+    let n = vecs.len();
+    let mut acc = vec![0f64; m.values.len()];
+    for v in vecs {
+        for ((a, x), mu) in acc.iter_mut().zip(&v.values).zip(&m.values) {
+            let d = (*x - *mu) as f64;
+            *a += d * d;
+        }
+    }
+    let denom = n.max(2) as f64 - 1.0;
+    NamedVec::new(
+        &m.fields,
+        acc.iter().map(|a| ((*a / denom).sqrt()) as f32).collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nv(vals: &[f32]) -> NamedVec {
+        NamedVec::new(&["a".to_string(), "b".to_string()], vals.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn get_by_name() {
+        let v = nv(&[1.0, 2.0]);
+        assert_eq!(v.get("b").unwrap(), 2.0);
+        assert!(v.get("c").is_err());
+    }
+
+    #[test]
+    fn mean_std() {
+        let m = mean(&[nv(&[1.0, 10.0]), nv(&[3.0, 30.0])]).unwrap();
+        assert_eq!(m.get("a").unwrap(), 2.0);
+        assert_eq!(m.get("b").unwrap(), 20.0);
+        let s = std(&[nv(&[1.0, 10.0]), nv(&[3.0, 30.0])]).unwrap();
+        assert!((s.get("a").unwrap() - std::f32::consts::SQRT_2).abs() < 1e-5);
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        assert!(NamedVec::new(&["a".to_string()], vec![1.0, 2.0]).is_err());
+    }
+}

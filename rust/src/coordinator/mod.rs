@@ -1,0 +1,6 @@
+//! L3 coordinator: sessions (carry-feedback loop over the AOT programs),
+//! the training driver, and named metrics.
+
+pub mod metrics;
+pub mod session;
+pub mod trainer;

@@ -1,0 +1,250 @@
+//! Training / evaluation sessions: the carry-feedback loop around the AOT
+//! programs. This is the hot path — Python is not involved.
+//!
+//! A `TrainSession` owns the PJRT executables for one variant plus the
+//! current carry (params, Adam state, env states, last obs, rng) held as
+//! opaque literals. `step()` executes one fused PPO iteration
+//! (rollout_steps x num_envs env steps + GAE + minibatched updates) and
+//! feeds the returned carry straight back in by reference; only the small
+//! metrics leaf is copied to host.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::{DataStore, Scenario};
+use crate::runtime::engine::{Engine, Executable};
+use crate::runtime::manifest::Variant;
+use crate::runtime::tensor::Tensor;
+
+use super::metrics::NamedVec;
+
+pub struct TrainSession {
+    pub variant: Variant,
+    train_init: Arc<Executable>,
+    train_iter: Arc<Executable>,
+    carry: Vec<xla::Literal>,
+    exog: Vec<xla::Literal>,
+    param_indices: Vec<usize>,
+    pub iters_done: usize,
+    pub env_steps_done: usize,
+}
+
+impl TrainSession {
+    /// Compile (or fetch cached) programs and initialize the carry.
+    pub fn new(
+        engine: &Engine,
+        variant: &Variant,
+        store: &DataStore,
+        scenario: &Scenario,
+        seed: u32,
+    ) -> Result<TrainSession> {
+        let init_spec = variant.program("train_init")?;
+        let iter_spec = variant.program("train_iter")?;
+        let train_init = engine.load(init_spec)?;
+        let train_iter = engine.load(iter_spec)?;
+
+        let n_carry = iter_spec
+            .outputs
+            .iter()
+            .filter(|o| o.name != "metrics")
+            .count();
+        let exog = build_exog(scenario, store, variant, n_carry)?;
+        let param_indices: Vec<usize> = iter_spec
+            .outputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.name.starts_with("params."))
+            .map(|(i, _)| i)
+            .collect();
+        if param_indices.is_empty() {
+            return Err(anyhow!("train_iter carry has no params.* leaves"));
+        }
+
+        let seed_lit = Tensor::scalar_u32(seed).to_literal()?;
+        let carry = train_init
+            .run_literals(&[seed_lit])
+            .context("train_init")?;
+
+        Ok(TrainSession {
+            variant: variant.clone(),
+            train_init,
+            train_iter,
+            carry,
+            exog,
+            param_indices,
+            iters_done: 0,
+            env_steps_done: 0,
+        })
+    }
+
+    /// Swap the scenario (e.g. a different price year) without resetting
+    /// the carry — used by the distribution-shift experiment.
+    pub fn set_scenario(&mut self, store: &DataStore, scenario: &Scenario) -> Result<()> {
+        let n_carry = self.carry.len();
+        self.exog = build_exog(scenario, store, &self.variant, n_carry)?;
+        Ok(())
+    }
+
+    /// Re-initialize the carry from a fresh seed (keeps compiled programs).
+    pub fn reset(&mut self, seed: u32) -> Result<()> {
+        let seed_lit = Tensor::scalar_u32(seed).to_literal()?;
+        self.carry = self.train_init.run_literals(&[seed_lit])?;
+        self.iters_done = 0;
+        self.env_steps_done = 0;
+        Ok(())
+    }
+
+    /// One fused PPO iteration; returns the train metrics.
+    pub fn step(&mut self) -> Result<NamedVec> {
+        let inputs: Vec<&xla::Literal> =
+            self.carry.iter().chain(self.exog.iter()).collect();
+        let mut outs = self.train_iter.run_literals(&inputs)?;
+        let metrics_lit = outs.pop().expect("train_iter returns metrics last");
+        self.carry = outs;
+        self.iters_done += 1;
+        self.env_steps_done += self.variant.meta.batch_size;
+        let metrics = Tensor::from_literal(&metrics_lit)?;
+        NamedVec::new(
+            &self.variant.meta.train_metric_fields,
+            metrics.as_f32()?.to_vec(),
+        )
+    }
+
+    /// Borrow the current policy parameter leaves (for EvalSession).
+    pub fn params(&self) -> Vec<&xla::Literal> {
+        self.param_indices.iter().map(|&i| &self.carry[i]).collect()
+    }
+}
+
+/// Evaluation runner: full-episode rollouts under a fixed policy.
+pub struct EvalSession {
+    pub variant: Variant,
+    exe: Arc<Executable>,
+    exog: Vec<xla::Literal>,
+    n_params: usize,
+}
+
+impl EvalSession {
+    /// `policy`: "net" | "max" | "random" (the paper's PPO policy,
+    /// always-charge-max baseline, and random baseline).
+    pub fn new(
+        engine: &Engine,
+        variant: &Variant,
+        store: &DataStore,
+        scenario: &Scenario,
+        policy: &str,
+    ) -> Result<EvalSession> {
+        let spec = variant.program(&format!("eval_{policy}"))?;
+        let exe = engine.load(spec)?;
+        let n_params = spec
+            .inputs
+            .iter()
+            .filter(|s| s.name.starts_with("params."))
+            .count();
+        let n_non_exog = n_params + 1; // params + seed
+        let exog = build_exog(scenario, store, variant, n_non_exog)
+            .with_context(|| format!("exog for eval_{policy}"))?;
+        Ok(EvalSession { variant: variant.clone(), exe, exog, n_params })
+    }
+
+    pub fn set_scenario(&mut self, store: &DataStore, scenario: &Scenario) -> Result<()> {
+        self.exog = build_exog(scenario, store, &self.variant, self.n_params + 1)?;
+        Ok(())
+    }
+
+    /// Evaluate with the given parameter leaves (borrowed from a
+    /// TrainSession, or zeros for the non-net policies).
+    pub fn run(&self, params: &[&xla::Literal], seed: u32) -> Result<NamedVec> {
+        if params.len() != self.n_params {
+            return Err(anyhow!(
+                "eval wants {} param leaves, got {}",
+                self.n_params,
+                params.len()
+            ));
+        }
+        let seed_lit = Tensor::scalar_u32(seed).to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = params.to_vec();
+        inputs.push(&seed_lit);
+        inputs.extend(self.exog.iter());
+        let outs = self.exe.run_literals(&inputs)?;
+        let metrics = Tensor::from_literal(&outs[0])?;
+        NamedVec::new(
+            &self.variant.meta.eval_metric_fields,
+            metrics.as_f32()?.to_vec(),
+        )
+    }
+
+    /// Zero parameter literals (for max/random policies, which ignore them).
+    pub fn zero_params(&self) -> Result<Vec<xla::Literal>> {
+        self.exe.spec.inputs[..self.n_params]
+            .iter()
+            .map(|s| Tensor::zeros(s).to_literal())
+            .collect()
+    }
+}
+
+/// Fused random-action rollout (Table 2 "Random" row): one PJRT call
+/// advances `meta.random_rollout_steps * num_envs` env steps.
+pub struct RandomRollout {
+    pub variant: Variant,
+    exe: Arc<Executable>,
+    exog: Vec<xla::Literal>,
+}
+
+impl RandomRollout {
+    pub fn new(
+        engine: &Engine,
+        variant: &Variant,
+        store: &DataStore,
+        scenario: &Scenario,
+    ) -> Result<RandomRollout> {
+        let spec = variant.program("random_rollout")?;
+        let exe = engine.load(spec)?;
+        let exog = build_exog(scenario, store, variant, 1)?;
+        Ok(RandomRollout { variant: variant.clone(), exe, exog })
+    }
+
+    /// Returns (mean step metrics, env-steps advanced).
+    pub fn run(&self, seed: u32) -> Result<(NamedVec, usize)> {
+        let seed_lit = Tensor::scalar_u32(seed).to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = vec![&seed_lit];
+        inputs.extend(self.exog.iter());
+        let outs = self.exe.run_literals(&inputs)?;
+        let metrics = Tensor::from_literal(&outs[0])?;
+        let steps = Tensor::from_literal(&outs[1])?.as_i32()?[0] as usize;
+        Ok((
+            NamedVec::new(
+                &self.variant.meta.metric_fields,
+                metrics.as_f32()?.to_vec(),
+            )?,
+            steps,
+        ))
+    }
+}
+
+/// Build + validate the exogenous literal tail for any program whose
+/// trailing inputs are the ExogData leaves.
+fn build_exog(
+    scenario: &Scenario,
+    store: &DataStore,
+    variant: &Variant,
+    n_leading: usize,
+) -> Result<Vec<xla::Literal>> {
+    let spec = variant.program("train_iter")?;
+    let _ = spec; // exog shapes are identical across programs; validate
+                  // against train_iter's tail (the longest-lived program).
+    let tensors = scenario.to_tensors(store)?;
+    let iter_spec = variant.program("train_iter")?;
+    let tail = &iter_spec.inputs[iter_spec.inputs.len() - tensors.len()..];
+    for (t, s) in tensors.iter().zip(tail) {
+        if !t.matches(s) {
+            return Err(anyhow!(
+                "exog leaf '{}': manifest {:?} {:?}, scenario built {:?} {:?}",
+                s.name, s.dtype, s.shape, t.dtype(), t.shape()
+            ));
+        }
+    }
+    let _ = n_leading;
+    tensors.iter().map(Tensor::to_literal).collect()
+}

@@ -1,0 +1,107 @@
+//! High-level training driver: runs a TrainSession for a step budget,
+//! collects the metric history, and periodically logs / evaluates.
+
+use anyhow::Result;
+
+use crate::data::{DataStore, Scenario};
+use crate::runtime::engine::Engine;
+use crate::runtime::manifest::Variant;
+
+use super::metrics::NamedVec;
+use super::session::{EvalSession, TrainSession};
+
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub seed: u32,
+    pub total_env_steps: usize,
+    pub log_every: usize, // iterations
+    pub quiet: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            seed: 0,
+            total_env_steps: 200_000,
+            log_every: 10,
+            quiet: false,
+        }
+    }
+}
+
+pub struct TrainOutcome {
+    pub history: Vec<NamedVec>,
+    pub env_steps: usize,
+    pub wallclock_s: f64,
+    pub session: TrainSession,
+}
+
+/// Train one agent; returns the per-iteration metric history and the
+/// session (whose carry holds the trained parameters).
+pub fn train(
+    engine: &Engine,
+    variant: &Variant,
+    store: &DataStore,
+    scenario: &Scenario,
+    opts: &TrainOptions,
+) -> Result<TrainOutcome> {
+    let mut session = TrainSession::new(engine, variant, store, scenario, opts.seed)?;
+    let iters = opts.total_env_steps.div_ceil(variant.meta.batch_size).max(1);
+    let t0 = std::time::Instant::now();
+    let mut history = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let m = session.step()?;
+        if !opts.quiet && (i % opts.log_every == 0 || i + 1 == iters) {
+            eprintln!(
+                "[train seed={} iter {}/{} steps {}] {}",
+                opts.seed,
+                i + 1,
+                iters,
+                session.env_steps_done,
+                m.fmt_fields(&[
+                    "mean_reward",
+                    "mean_completed_return",
+                    "mean_profit",
+                    "total_loss",
+                    "entropy",
+                ])
+            );
+        }
+        history.push(m);
+    }
+    Ok(TrainOutcome {
+        env_steps: session.env_steps_done,
+        wallclock_s: t0.elapsed().as_secs_f64(),
+        history,
+        session,
+    })
+}
+
+/// Evaluate a trained session under `eval_net` over `n_seeds` seeds;
+/// returns one NamedVec per seed.
+pub fn evaluate(
+    engine: &Engine,
+    session: &TrainSession,
+    store: &DataStore,
+    scenario: &Scenario,
+    seeds: std::ops::Range<u32>,
+) -> Result<Vec<NamedVec>> {
+    let eval = EvalSession::new(engine, &session.variant, store, scenario, "net")?;
+    let params = session.params();
+    seeds.map(|s| eval.run(&params, s)).collect()
+}
+
+/// Evaluate a parameter-free baseline policy ("max" or "random").
+pub fn evaluate_baseline(
+    engine: &Engine,
+    variant: &Variant,
+    store: &DataStore,
+    scenario: &Scenario,
+    policy: &str,
+    seeds: std::ops::Range<u32>,
+) -> Result<Vec<NamedVec>> {
+    let eval = EvalSession::new(engine, variant, store, scenario, policy)?;
+    let zeros = eval.zero_params()?;
+    let refs: Vec<&xla::Literal> = zeros.iter().collect();
+    seeds.map(|s| eval.run(&refs, s)).collect()
+}

@@ -1,0 +1,249 @@
+//! Exogenous data tables (paper Table 1), loaded from `artifacts/data/*.json`
+//! (exported by python/compile/data.py so both simulators see bit-identical
+//! values).
+//!
+//! `ExogBundle` assembles the 12 exogenous leaves in the exact order of
+//! `ExogData` on the Python side; the manifest's input specs validate the
+//! shapes at session build time.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::tensor::Tensor;
+use crate::util::json::Json;
+
+pub const PENALTIES: [&str; 7] = [
+    "constraint",
+    "satisfaction0",
+    "satisfaction1",
+    "sustain",
+    "declined",
+    "degradation",
+    "grid",
+];
+
+pub const SCENARIOS: [&str; 4] = ["shopping", "work", "residential", "highway"];
+pub const REGIONS: [&str; 3] = ["EU", "US", "WORLD"];
+pub const COUNTRIES: [&str; 3] = ["NL", "FR", "DE"];
+pub const YEARS: [u32; 3] = [2021, 2022, 2023];
+pub const USER_PROFILE_FIELDS: [&str; 6] = [
+    "stay_mean_h", "stay_std_h", "soc0_a", "soc0_b", "target_soc", "p_time_sensitive",
+];
+
+#[derive(Debug, Clone)]
+pub struct DataStore {
+    /// "NL_2021" -> flat [days*24] EUR/kWh.
+    pub prices: BTreeMap<String, Vec<f32>>,
+    pub n_days: usize,
+    pub moer: Vec<f32>,                        // [days*24]
+    pub car_table: Vec<f32>,                   // [n_models*4]
+    pub n_models: usize,
+    pub car_weights: BTreeMap<String, Vec<f32>>,
+    pub car_names: Vec<String>,
+    pub arrival_shapes: BTreeMap<String, Vec<f32>>, // [24] each
+    pub traffic: BTreeMap<String, f32>,
+    pub user_profiles: BTreeMap<String, Vec<f32>>, // [6] each
+}
+
+impl DataStore {
+    pub fn load(data_dir: &Path) -> Result<DataStore> {
+        let read = |name: &str| -> Result<Json> {
+            let p = data_dir.join(name);
+            let text = std::fs::read_to_string(&p)
+                .with_context(|| format!("reading {} (run `make artifacts`)", p.display()))?;
+            Json::parse(&text).with_context(|| format!("parsing {name}"))
+        };
+
+        // prices.json
+        let pj = read("prices.json")?;
+        let mut prices = BTreeMap::new();
+        let mut n_days = 0usize;
+        for (k, v) in pj.get("tables").and_then(Json::as_obj).context("prices.tables")? {
+            let rows = v.as_arr().context("price table")?;
+            n_days = rows.len();
+            prices.insert(k.clone(), v.as_f32_flat().context("price values")?);
+        }
+
+        // moer.json
+        let mj = read("moer.json")?;
+        let moer = mj.get("table").and_then(Json::as_f32_flat).context("moer.table")?;
+
+        // cars.json
+        let cj = read("cars.json")?;
+        let catalog = cj.get("catalog").and_then(Json::as_arr).context("cars.catalog")?;
+        let n_models = catalog.len();
+        let mut car_table = Vec::with_capacity(n_models * 4);
+        let mut car_names = Vec::with_capacity(n_models);
+        for m in catalog {
+            car_names.push(m.get("name").and_then(Json::as_str).context("car name")?.to_string());
+            for f in ["cap", "ac", "dc", "tau"] {
+                car_table.push(m.get(f).and_then(Json::as_f64).context("car col")? as f32);
+            }
+        }
+        let mut car_weights = BTreeMap::new();
+        for (r, w) in cj.get("weights").and_then(Json::as_obj).context("cars.weights")? {
+            car_weights.insert(r.clone(), w.as_f32_flat().context("weights")?);
+        }
+
+        // arrivals.json
+        let aj = read("arrivals.json")?;
+        let mut arrival_shapes = BTreeMap::new();
+        for (s, v) in aj.get("shapes").and_then(Json::as_obj).context("arrivals.shapes")? {
+            arrival_shapes.insert(s.clone(), v.as_f32_flat().context("shape")?);
+        }
+        let mut traffic = BTreeMap::new();
+        for (k, v) in aj
+            .get("traffic_multipliers")
+            .and_then(Json::as_obj)
+            .context("traffic_multipliers")?
+        {
+            traffic.insert(k.clone(), v.as_f64().context("traffic")? as f32);
+        }
+
+        // user_profiles.json
+        let uj = read("user_profiles.json")?;
+        let fields = uj.get("fields").and_then(Json::as_str_vec).context("fields")?;
+        if fields != USER_PROFILE_FIELDS {
+            bail!("user profile field order drifted: {fields:?}");
+        }
+        let mut user_profiles = BTreeMap::new();
+        for (s, p) in uj.get("profiles").and_then(Json::as_obj).context("profiles")? {
+            let vec: Vec<f32> = USER_PROFILE_FIELDS
+                .iter()
+                .map(|f| {
+                    p.get(f)
+                        .and_then(Json::as_f64)
+                        .map(|x| x as f32)
+                        .context(format!("profile field {f}"))
+                })
+                .collect::<Result<_>>()?;
+            user_profiles.insert(s.clone(), vec);
+        }
+
+        Ok(DataStore {
+            prices,
+            n_days,
+            moer,
+            car_table,
+            n_models,
+            car_weights,
+            car_names,
+            arrival_shapes,
+            traffic,
+            user_profiles,
+        })
+    }
+
+    pub fn price(&self, country: &str, year: u32) -> Result<&Vec<f32>> {
+        self.prices
+            .get(&format!("{country}_{year}"))
+            .ok_or_else(|| anyhow!("no price table {country}_{year}"))
+    }
+}
+
+/// A fully-specified exogenous scenario (what the paper calls a
+/// "bundled scenario" + reward weighting).
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub scenario: String, // shopping | work | residential | highway
+    pub region: String,   // EU | US | WORLD
+    pub country: String,  // NL | FR | DE
+    pub year: u32,        // 2021..2023
+    pub traffic: String,  // low | medium | high
+    pub alpha: [f32; 7],
+    pub beta: f32,
+    pub p_sell: f32,
+    pub feed_in_ratio: f32,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            scenario: "shopping".into(),
+            region: "EU".into(),
+            country: "NL".into(),
+            year: 2021,
+            traffic: "medium".into(),
+            alpha: [0.0; 7],
+            beta: 0.1,
+            p_sell: 0.75,
+            feed_in_ratio: 0.9,
+        }
+    }
+}
+
+impl Scenario {
+    pub fn with_alpha(mut self, name: &str, value: f32) -> Result<Self> {
+        let i = PENALTIES
+            .iter()
+            .position(|p| *p == name)
+            .ok_or_else(|| anyhow!("unknown penalty '{name}' (have {PENALTIES:?})"))?;
+        self.alpha[i] = value;
+        Ok(self)
+    }
+
+    /// Build the 12 exogenous leaves in ExogData field order.
+    pub fn to_tensors(&self, store: &DataStore) -> Result<Vec<Tensor>> {
+        let d = store.n_days;
+        let buy = store.price(&self.country, self.year)?.clone();
+        let sell_grid: Vec<f32> = buy.iter().map(|x| x * self.feed_in_ratio).collect();
+        let mean_buy =
+            (buy.iter().map(|x| *x as f64).sum::<f64>() / buy.len() as f64).max(1e-6) as f32;
+        let grid_demand: Vec<f32> = buy.iter().map(|x| (x / mean_buy - 1.0) * 5.0).collect();
+        let arrival = store
+            .arrival_shapes
+            .get(&self.scenario)
+            .ok_or_else(|| anyhow!("unknown scenario '{}'", self.scenario))?
+            .clone();
+        let weights = store
+            .car_weights
+            .get(&self.region)
+            .ok_or_else(|| anyhow!("unknown region '{}'", self.region))?
+            .clone();
+        let profile = store
+            .user_profiles
+            .get(&self.scenario)
+            .ok_or_else(|| anyhow!("no user profile for '{}'", self.scenario))?
+            .clone();
+        let traffic = *store
+            .traffic
+            .get(&self.traffic)
+            .ok_or_else(|| anyhow!("unknown traffic level '{}'", self.traffic))?;
+
+        Ok(vec![
+            Tensor::f32(vec![d, 24], buy)?,
+            Tensor::f32(vec![d, 24], sell_grid)?,
+            Tensor::f32(vec![d, 24], store.moer.clone())?,
+            Tensor::f32(vec![d, 24], grid_demand)?,
+            Tensor::f32(vec![24], arrival)?,
+            Tensor::f32(vec![store.n_models, 4], store.car_table.clone())?,
+            Tensor::f32(vec![store.n_models], normalized(&weights))?,
+            Tensor::f32(vec![6], profile)?,
+            Tensor::f32(vec![7], self.alpha.to_vec())?,
+            Tensor::scalar_f32(self.p_sell),
+            Tensor::scalar_f32(traffic),
+            Tensor::scalar_f32(self.beta),
+        ])
+    }
+}
+
+fn normalized(w: &[f32]) -> Vec<f32> {
+    let s: f32 = w.iter().sum();
+    w.iter().map(|x| x / s.max(1e-12)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_alpha_by_name() {
+        let s = Scenario::default()
+            .with_alpha("satisfaction0", 2.0)
+            .unwrap();
+        assert_eq!(s.alpha[1], 2.0);
+        assert!(Scenario::default().with_alpha("nope", 1.0).is_err());
+    }
+}

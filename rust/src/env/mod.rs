@@ -1,0 +1,13 @@
+//! Pure-Rust scalar reference simulator.
+//!
+//! Semantics mirror the JAX environment (cross-checked in
+//! rust/tests/cross_check.rs against python-exported vectors); the
+//! *architecture* mirrors the paper's comparison environments — a per-step,
+//! per-car, host-RNG object loop — making it the fair CPU-gym comparator
+//! for Table 2.
+
+pub mod scalar;
+pub mod tree;
+
+pub use scalar::{ScalarEnv, ScenarioTables, StepInfo};
+pub use tree::{StationConfig, StationTree};

@@ -1,0 +1,237 @@
+//! Station architecture for the scalar simulator — mirrors
+//! python/compile/env/tree.py (standard Fig. 3b layout: root -> per-type
+//! splitters, battery under the root).
+
+/// One charger type's electrical limits.
+#[derive(Debug, Clone, Copy)]
+pub struct ChargerSpec {
+    pub voltage: f32,
+    pub i_max: f32,
+}
+
+impl ChargerSpec {
+    pub fn p_max_kw(&self) -> f32 {
+        self.voltage * self.i_max / 1000.0
+    }
+}
+
+pub const DC_CHARGER: ChargerSpec = ChargerSpec { voltage: 400.0, i_max: 375.0 }; // 150 kW
+pub const AC_CHARGER: ChargerSpec = ChargerSpec { voltage: 230.0, i_max: 50.0 }; // 11.5 kW
+
+/// Static station config (paper Table 3 defaults; matches python config.py).
+#[derive(Debug, Clone)]
+pub struct StationConfig {
+    pub n_dc: usize,
+    pub n_ac: usize,
+    pub root_p_kw: f32,
+    pub dc_split_p_kw: f32,
+    pub ac_split_p_kw: f32,
+    pub node_eta: f32,
+    pub evse_eta: f32,
+    pub battery_capacity_kwh: f32,
+    pub battery_p_max_kw: f32,
+    pub battery_voltage: f32,
+    pub battery_tau: f32,
+    pub battery_soc0: f32,
+}
+
+impl Default for StationConfig {
+    fn default() -> Self {
+        StationConfig {
+            n_dc: 10,
+            n_ac: 6,
+            root_p_kw: 600.0,
+            dc_split_p_kw: 450.0,
+            ac_split_p_kw: 60.0,
+            node_eta: 0.98,
+            evse_eta: 0.95,
+            battery_capacity_kwh: 200.0,
+            battery_p_max_kw: 100.0,
+            battery_voltage: 400.0,
+            battery_tau: 0.8,
+            battery_soc0: 0.5,
+        }
+    }
+}
+
+impl StationConfig {
+    pub fn n_chargers(&self) -> usize {
+        self.n_dc + self.n_ac
+    }
+
+    pub fn n_ports(&self) -> usize {
+        self.n_chargers() + 1
+    }
+}
+
+/// Flattened tree (membership matrix + per-port electrical data).
+#[derive(Debug, Clone)]
+pub struct StationTree {
+    pub volt: Vec<f32>,
+    pub i_max: Vec<f32>,
+    pub p_max: Vec<f32>,
+    pub eta_port: Vec<f32>,
+    pub is_dc: Vec<bool>,
+    /// membership[n][p]: node n is an ancestor of port p.
+    pub membership: Vec<Vec<bool>>,
+    pub node_limit: Vec<f32>,
+    pub node_eta: Vec<f32>,
+}
+
+impl StationTree {
+    pub fn standard(cfg: &StationConfig) -> StationTree {
+        let c = cfg.n_chargers();
+        let p = cfg.n_ports();
+        let mut volt = vec![0f32; p];
+        let mut i_max = vec![0f32; p];
+        let mut is_dc = vec![false; c];
+        for i in 0..c {
+            let spec = if i < cfg.n_dc { DC_CHARGER } else { AC_CHARGER };
+            volt[i] = spec.voltage;
+            i_max[i] = spec.i_max;
+            is_dc[i] = i < cfg.n_dc;
+        }
+        volt[c] = cfg.battery_voltage;
+        i_max[c] = cfg.battery_p_max_kw * 1000.0 / cfg.battery_voltage;
+        let p_max: Vec<f32> = volt.iter().zip(&i_max).map(|(v, i)| v * i / 1000.0).collect();
+
+        let mut membership = vec![vec![true; p]];
+        let mut node_limit = vec![cfg.root_p_kw];
+        if cfg.n_dc > 0 {
+            let mut row = vec![false; p];
+            row[..cfg.n_dc].fill(true);
+            membership.push(row);
+            node_limit.push(cfg.dc_split_p_kw);
+        }
+        if cfg.n_ac > 0 {
+            let mut row = vec![false; p];
+            row[cfg.n_dc..c].fill(true);
+            membership.push(row);
+            node_limit.push(cfg.ac_split_p_kw);
+        }
+        let node_eta = vec![cfg.node_eta; node_limit.len()];
+        StationTree {
+            volt,
+            i_max,
+            p_max,
+            eta_port: vec![cfg.evse_eta; p],
+            is_dc,
+            membership,
+            node_limit,
+            node_eta,
+        }
+    }
+
+    pub fn n_ports(&self) -> usize {
+        self.volt.len()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.node_limit.len()
+    }
+
+    /// Eq. 5 projection — the scalar mirror of the Pallas
+    /// constraint_projection kernel (two fixed-point passes, exact for the
+    /// paper's depth-2 trees even with mixed-sign V2G flows). Returns the
+    /// pre-projection excess (kW).
+    pub fn project_currents(&self, i_drawn: &mut [f32]) -> f32 {
+        const EPS: f32 = 1e-9;
+        let p = self.n_ports();
+        let mut excess = 0f32;
+        for pass in 0..2 {
+            let mut leaf_scale = vec![1f32; p];
+            for n in 0..self.n_nodes() {
+                let mut flow = 0f32;
+                for j in 0..p {
+                    if self.membership[n][j] {
+                        flow += self.volt[j] * i_drawn[j] / 1000.0;
+                    }
+                }
+                let absf = flow.abs();
+                let load = absf / self.node_eta[n].max(EPS);
+                if pass == 0 {
+                    excess = excess.max((load - self.node_limit[n]).max(0.0));
+                }
+                let scale = (self.node_limit[n] * self.node_eta[n] / absf.max(EPS)).min(1.0);
+                for j in 0..p {
+                    if self.membership[n][j] {
+                        leaf_scale[j] = leaf_scale[j].min(scale);
+                    }
+                }
+            }
+            for j in 0..p {
+                i_drawn[j] *= leaf_scale[j];
+            }
+        }
+        excess
+    }
+}
+
+/// Paper A.1 piecewise-linear charging curve (kW), identical to
+/// kernels/ref.py::charging_curve.
+pub fn charging_curve(soc: f32, r_bar: f32, tau: f32) -> f32 {
+    const EPS: f32 = 1e-9;
+    if soc <= tau {
+        r_bar
+    } else {
+        ((1.0 - soc) * r_bar / (1.0 - tau).max(EPS)).max(0.0)
+    }
+}
+
+/// Discharge limit: the charging curve flipped at SoC = 0.5.
+pub fn discharging_curve(soc: f32, r_bar: f32, tau: f32) -> f32 {
+    charging_curve(1.0 - soc, r_bar, tau)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_tree_shapes() {
+        let cfg = StationConfig::default();
+        let t = StationTree::standard(&cfg);
+        assert_eq!(t.n_ports(), 17);
+        assert_eq!(t.n_nodes(), 3);
+        assert!((t.p_max[0] - 150.0).abs() < 1e-3);
+        assert!((t.p_max[10] - 11.5).abs() < 1e-3);
+        assert!((t.p_max[16] - 100.0).abs() < 1e-3);
+        assert!(t.membership[0].iter().all(|&x| x));
+    }
+
+    #[test]
+    fn projection_enforces_limits() {
+        let t = StationTree::standard(&StationConfig::default());
+        // All DC chargers at max: 10 * 150 kW >> dc_split 450 kW.
+        let mut i = vec![0f32; 17];
+        for j in 0..10 {
+            i[j] = 375.0;
+        }
+        let excess = t.project_currents(&mut i);
+        assert!(excess > 0.0);
+        let flow: f32 = (0..10).map(|j| 400.0 * i[j] / 1000.0).sum();
+        assert!(flow / 0.98 <= 450.0 + 1e-3, "flow {flow}");
+    }
+
+    #[test]
+    fn projection_noop_within_limits() {
+        let t = StationTree::standard(&StationConfig::default());
+        let mut i = vec![0f32; 17];
+        i[0] = 100.0;
+        i[12] = 20.0;
+        let before = i.clone();
+        let excess = t.project_currents(&mut i);
+        assert_eq!(excess, 0.0);
+        assert_eq!(i, before);
+    }
+
+    #[test]
+    fn curve_shape() {
+        assert_eq!(charging_curve(0.2, 100.0, 0.6), 100.0);
+        assert!((charging_curve(0.8, 100.0, 0.6) - 50.0).abs() < 1e-4);
+        assert_eq!(charging_curve(1.0, 100.0, 0.6), 0.0);
+        // discharge curve mirrors
+        assert_eq!(discharging_curve(0.8, 100.0, 0.6), 100.0);
+        assert!((discharging_curve(0.2, 100.0, 0.6) - 50.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,677 @@
+//! Paper table/figure regenerators (`chargax bench <id>`).
+//!
+//! Every experiment in the paper's evaluation maps to one function here
+//! (DESIGN.md §Experiment-index). Budgets are scaled for the CPU-PJRT
+//! testbed; `--paper_scale true` restores the paper's (GPU-sized) budgets.
+//! Results print as the paper's rows/series and also land in runs/*.csv.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use chargax::baselines::policies::{self, RandomPolicy};
+use chargax::baselines::ppo::{PpoParams, PpoTrainer};
+use chargax::config::RunConfig;
+use chargax::coordinator::metrics;
+use chargax::coordinator::session::RandomRollout;
+use chargax::coordinator::trainer::{self, TrainOptions};
+use chargax::data::{DataStore, Scenario};
+use chargax::env::scalar::{ScalarEnv, ScenarioTables};
+use chargax::env::tree::StationConfig;
+use chargax::runtime::engine::{artifacts_dir, Engine};
+use chargax::runtime::manifest::Manifest;
+use chargax::util::rng::Rng;
+use chargax::util::stats;
+
+pub fn run(id: &str, cfg: &RunConfig) -> Result<()> {
+    std::fs::create_dir_all("runs").ok();
+    match id {
+        "table2" => table2(cfg),
+        "fig4a" => fig4a(cfg),
+        "fig4bc" => fig4bc(cfg),
+        "fig5" => fig5(cfg),
+        "fig6to8" => fig_scenarios(cfg, &["EU", "US", "WORLD"], &["mix10dc6ac_e12"], "fig6to8"),
+        "fig9to11" => fig_scenarios(
+            cfg,
+            &["EU"],
+            &["ac16_e12", "mix8dc8ac_e12", "dc16_e12"],
+            "fig9to11",
+        ),
+        "perf" => perf(cfg),
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (table2 fig4a fig4bc fig5 fig6to8 fig9to11 perf)"
+        ),
+    }
+}
+
+fn setup() -> Result<(Manifest, DataStore, Engine)> {
+    let manifest = Manifest::load(&artifacts_dir())?;
+    let store = DataStore::load(&artifacts_dir().join("data"))?;
+    let engine = Engine::cpu()?;
+    Ok((manifest, store, engine))
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 + Fig. 1: seconds per 100k env steps (Random / PPO(1) / PPO(16)).
+// ---------------------------------------------------------------------------
+
+fn table2(cfg: &RunConfig) -> Result<()> {
+    let (manifest, store, engine) = setup()?;
+    let sc = &cfg.scenario;
+    const TARGET: f64 = 100_000.0;
+
+    println!("Table 2 — seconds to complete 100k environment steps");
+    println!("(Chargax = this repo's AOT fast path; scalar-gym = pure-Rust per-step CPU");
+    println!(" simulator; python-gym = per-step numpy simulator; see DESIGN.md §Substitutions)\n");
+    let mut rows: Vec<(String, f64, Option<f64>, Option<f64>)> = Vec::new();
+
+    // -- Chargax rows --------------------------------------------------------
+    // Prefer the CPU-fast kernel routing ("-ref": jnp oracles, XLA-fused)
+    // over interpret-mode Pallas; see EXPERIMENTS.md §Perf.
+    let pick = |key: &str, fallback: &str| -> anyhow::Result<&chargax::runtime::manifest::Variant> {
+        manifest.variant(key).or_else(|_| manifest.variant(fallback))
+    };
+    {
+        let v16 = pick("mix10dc6ac-ref_e16", "mix10dc6ac_e16")?;
+        let rr = RandomRollout::new(&engine, v16, &store, sc)?;
+        rr.run(0)?; // warm (compile already cached by ::new; first run warms)
+        let chunk = (v16.meta.random_rollout_steps * v16.meta.num_envs) as f64;
+        let calls = (TARGET / chunk).ceil() as usize;
+        let t0 = Instant::now();
+        for s in 0..calls {
+            rr.run(s as u32 + 1)?;
+        }
+        let el = t0.elapsed().as_secs_f64();
+        let per_100k = el * TARGET / (chunk * calls as f64);
+        rows.push(("Random".into(), per_100k, None, None));
+        println!("  chargax random: {calls} calls x {chunk} steps -> {:.2}s/100k", per_100k);
+    }
+    for (label, vkey, fb) in [
+        ("PPO (1)", "mix10dc6ac-ref_e1", "mix10dc6ac_e1"),
+        ("PPO (16)", "mix10dc6ac-ref_e16", "mix10dc6ac_e16"),
+    ] {
+        let v = pick(vkey, fb)?;
+        let mut session =
+            chargax::coordinator::session::TrainSession::new(&engine, v, &store, sc, 0)?;
+        session.step()?; // warm
+        session.reset(0)?;
+        let iters = (TARGET / v.meta.batch_size as f64).ceil() as usize;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            session.step()?;
+        }
+        let el = t0.elapsed().as_secs_f64();
+        let per_100k = el * TARGET / (v.meta.batch_size as f64 * iters as f64);
+        rows.push((label.into(), per_100k, None, None));
+        println!("  chargax {label}: {iters} iters -> {:.2}s/100k", per_100k);
+    }
+
+    // -- Rust scalar-gym rows ------------------------------------------------
+    let mk_tables = || ScenarioTables::build(&store, sc).expect("tables");
+    {
+        let mut env = ScalarEnv::new(StationConfig::default(), mk_tables(), 7);
+        let mut pol = RandomPolicy { rng: Rng::new(3) };
+        let n = 100_000;
+        let t0 = Instant::now();
+        policies::rollout(&mut env, &mut pol, n);
+        let el = t0.elapsed().as_secs_f64() * TARGET / n as f64;
+        rows[0].2 = Some(el);
+    }
+    for (row, envs) in [(1usize, 1usize), (2, 16)] {
+        let params = PpoParams { num_envs: envs, ..Default::default() };
+        let mut tr = PpoTrainer::new(params, StationConfig::default(), mk_tables, 7);
+        tr.iteration(); // warm caches
+        let measure_steps = 24_000.max(tr.cfg.num_envs * tr.cfg.rollout_steps);
+        let iters = measure_steps / (tr.cfg.num_envs * tr.cfg.rollout_steps);
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            tr.iteration();
+        }
+        let el = t0.elapsed().as_secs_f64();
+        let steps = (iters * tr.cfg.num_envs * tr.cfg.rollout_steps) as f64;
+        rows[row].2 = Some(el * TARGET / steps);
+    }
+
+    // -- Python gym rows (optional subprocess) -------------------------------
+    for (row, mode) in [(0usize, "random"), (1, "ppo1"), (2, "ppo16")] {
+        match python_gym_bench(mode) {
+            Ok(sec) => rows[row].3 = Some(sec),
+            Err(e) => eprintln!("  (python-gym {mode} skipped: {e})"),
+        }
+    }
+
+    println!("\n{:<10} {:>14} {:>18} {:>12} {:>18} {:>12}", "", "Chargax (s)", "scalar-gym (s)", "speedup", "python-gym (s)", "speedup");
+    let mut csv = String::from("row,chargax_s,scalar_gym_s,python_gym_s\n");
+    for (name, ours, scalar, py) in &rows {
+        let fmt_col = |x: &Option<f64>| {
+            x.map(|v| format!("{v:>18.2}")).unwrap_or_else(|| format!("{:>18}", "-"))
+        };
+        let fmt_speedup = |x: &Option<f64>| {
+            x.map(|v| format!("{:>11.1}x", v / ours)).unwrap_or_else(|| format!("{:>12}", "-"))
+        };
+        println!(
+            "{name:<10} {ours:>14.2} {} {} {} {}",
+            fmt_col(scalar), fmt_speedup(scalar), fmt_col(py), fmt_speedup(py)
+        );
+        writeln!(
+            csv, "{name},{ours},{},{}",
+            scalar.map(|v| v.to_string()).unwrap_or_default(),
+            py.map(|v| v.to_string()).unwrap_or_default()
+        ).ok();
+    }
+    std::fs::write("runs/table2.csv", csv).context("writing runs/table2.csv")?;
+    println!("\nwrote runs/table2.csv");
+    Ok(())
+}
+
+fn python_gym_bench(mode: &str) -> Result<f64> {
+    let steps = match mode {
+        "random" => 20_000,
+        "ppo1" => 3_000,
+        _ => 6_000,
+    };
+    let out = std::process::Command::new("python")
+        .args(["-m", "baselines.bench_gym", "--mode", mode, "--steps", &steps.to_string()])
+        .current_dir("python")
+        .output()
+        .context("spawning python")?;
+    if !out.status.success() {
+        anyhow::bail!("python exited: {}", String::from_utf8_lossy(&out.stderr));
+    }
+    let text = String::from_utf8_lossy(&out.stdout);
+    let j = chargax::util::json::Json::parse(text.trim())
+        .context("parsing bench_gym output")?;
+    j.get("seconds_per_100k")
+        .and_then(|x| x.as_f64())
+        .context("seconds_per_100k missing")
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4a: PPO vs max-charge baseline, shopping scenario, 3 traffic levels.
+// ---------------------------------------------------------------------------
+
+fn fig4a(cfg: &RunConfig) -> Result<()> {
+    let (manifest, store, engine) = setup()?;
+    let variant = manifest.variant(&cfg.variant)?;
+    let n_seeds = if cfg.paper_scale { 20 } else { cfg.n_seeds };
+    let steps = if cfg.paper_scale { 10_000_000 } else { cfg.total_env_steps };
+
+    println!("Fig. 4a — PPO vs max-charge baseline (shopping, {} seeds, {} steps)\n", n_seeds, steps);
+    let mut csv = String::from("traffic,seed,iter,env_steps,mean_completed_return\n");
+    let mut summary = Vec::new();
+    for traffic in ["low", "medium", "high"] {
+        let sc = Scenario { traffic: traffic.into(), ..cfg.scenario.clone() };
+        // baseline
+        let base = trainer::evaluate_baseline(&engine, variant, &store, &sc, "max", 500..510)?;
+        let base_profit = metrics::mean(&base)?.get("ep_profit")?;
+        let base_reward = metrics::mean(&base)?.get("ep_reward")?;
+
+        let mut finals = Vec::new();
+        for seed in 0..n_seeds as u32 {
+            let opts = TrainOptions {
+                seed,
+                total_env_steps: steps,
+                quiet: true,
+                ..Default::default()
+            };
+            let out = trainer::train(&engine, variant, &store, &sc, &opts)?;
+            for (i, m) in out.history.iter().enumerate() {
+                writeln!(
+                    csv, "{traffic},{seed},{i},{},{}",
+                    (i + 1) * variant.meta.batch_size,
+                    m.get("mean_completed_return").unwrap_or(f32::NAN)
+                ).ok();
+            }
+            let evals = trainer::evaluate(&engine, &out.session, &store, &sc, 900..908)?;
+            finals.push(metrics::mean(&evals)?);
+        }
+        let m = metrics::mean(&finals)?;
+        let s = metrics::std(&finals)?;
+        println!(
+            "  traffic={traffic:<7} PPO return {:>9.1} ± {:<7.1} profit {:>9.1} | baseline reward {:>9.1} profit {:>9.1}  -> uplift {:+.1}%",
+            m.get("ep_reward")?, s.get("ep_reward")?, m.get("ep_profit")?,
+            base_reward, base_profit,
+            100.0 * (m.get("ep_profit")? - base_profit) / base_profit.abs().max(1e-6),
+        );
+        summary.push((traffic, m.get("ep_profit")?, base_profit));
+    }
+    std::fs::write("runs/fig4a.csv", csv)?;
+    println!("\nwrote runs/fig4a.csv (training curves per traffic level/seed)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4b/4c: user-satisfaction sweeps over alpha.
+// ---------------------------------------------------------------------------
+
+fn fig4bc(cfg: &RunConfig) -> Result<()> {
+    let (manifest, store, engine) = setup()?;
+    let variant = manifest.variant(&cfg.variant)?;
+    let n_seeds = if cfg.paper_scale { 5 } else { cfg.n_seeds.min(3) };
+    let steps = if cfg.paper_scale { 10_000_000 } else { cfg.total_env_steps };
+    let eval_seeds = if cfg.paper_scale { 125 } else { 25 };
+
+    let mut csv = String::from("panel,alpha,seed,ep_missing_kwh,ep_overtime_steps,ep_profit\n");
+    for (panel, penalty, alphas) in [
+        ("4b", "satisfaction0", vec![0.0f32, 0.5, 2.0, 8.0]),
+        ("4c", "satisfaction1", vec![0.0f32, 0.05, 0.2, 1.0]),
+    ] {
+        println!("\nFig. {panel} — alpha_{penalty} sweep ({n_seeds} seeds x {steps} steps, {eval_seeds} eval episodes/seed-batch)");
+        println!("  {:>8} {:>16} {:>18} {:>12}", "alpha", "missing kWh/ep", "overtime steps/ep", "profit/ep");
+        for &a in &alphas {
+            let sc = cfg.scenario.clone().with_alpha(penalty, a)?;
+            let mut per_seed = Vec::new();
+            for seed in 0..n_seeds as u32 {
+                let opts = TrainOptions {
+                    seed: seed + 37,
+                    total_env_steps: steps,
+                    quiet: true,
+                    ..Default::default()
+                };
+                let out = trainer::train(&engine, variant, &store, &sc, &opts)?;
+                let evals = trainer::evaluate(
+                    &engine, &out.session, &store, &sc,
+                    2000..2000 + eval_seeds as u32 / 8,
+                )?;
+                let m = metrics::mean(&evals)?;
+                writeln!(
+                    csv, "{panel},{a},{seed},{},{},{}",
+                    m.get("ep_missing_kwh")?, m.get("ep_overtime_steps")?, m.get("ep_profit")?
+                ).ok();
+                per_seed.push(m);
+            }
+            let m = metrics::mean(&per_seed)?;
+            let s = metrics::std(&per_seed)?;
+            println!(
+                "  {a:>8.2} {:>9.2} ± {:<5.2} {:>11.1} ± {:<5.1} {:>12.1}",
+                m.get("ep_missing_kwh")?, s.get("ep_missing_kwh")?,
+                m.get("ep_overtime_steps")?, s.get("ep_overtime_steps")?,
+                m.get("ep_profit")?
+            );
+        }
+    }
+    std::fs::write("runs/fig4bc.csv", csv)?;
+    println!("\nwrote runs/fig4bc.csv");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5: distribution shift across NL price years.
+// ---------------------------------------------------------------------------
+
+fn fig5(cfg: &RunConfig) -> Result<()> {
+    let (manifest, store, engine) = setup()?;
+    let variant = manifest.variant(&cfg.variant)?;
+    let n_seeds = if cfg.paper_scale { 10 } else { cfg.n_seeds };
+    let steps = if cfg.paper_scale { 10_000_000 } else { cfg.total_env_steps };
+    let years = [2021u32, 2022, 2023];
+
+    println!("Fig. 5 — train on one NL price year, evaluate on all ({} seeds x {} steps)\n", n_seeds, steps);
+    let mut matrix = vec![vec![Vec::<f32>::new(); 3]; 3];
+    for (ti, &train_year) in years.iter().enumerate() {
+        for seed in 0..n_seeds as u32 {
+            let sc = Scenario { year: train_year, ..cfg.scenario.clone() };
+            let opts = TrainOptions {
+                seed: seed + 100,
+                total_env_steps: steps,
+                quiet: true,
+                ..Default::default()
+            };
+            let out = trainer::train(&engine, variant, &store, &sc, &opts)?;
+            for (ei, &eval_year) in years.iter().enumerate() {
+                let esc = Scenario { year: eval_year, ..cfg.scenario.clone() };
+                let evals =
+                    trainer::evaluate(&engine, &out.session, &store, &esc, 3000..3008)?;
+                matrix[ti][ei].push(metrics::mean(&evals)?.get("ep_reward")?);
+            }
+        }
+    }
+    println!("  mean episode reward (rows = train year, cols = eval year)");
+    println!("  {:>10} {:>12} {:>12} {:>12}", "", "2021", "2022", "2023");
+    let mut csv = String::from("train_year,eval_year,mean_reward,std_reward\n");
+    for (ti, &ty) in years.iter().enumerate() {
+        let mut row = format!("  {ty:>10}");
+        for (ei, &ey) in years.iter().enumerate() {
+            let xs: Vec<f64> = matrix[ti][ei].iter().map(|x| *x as f64).collect();
+            let (m, s) = stats::mean_std(&xs);
+            write!(row, " {m:>7.1}±{s:<4.1}").ok();
+            writeln!(csv, "{ty},{ey},{m},{s}").ok();
+        }
+        println!("{row}");
+    }
+    std::fs::write("runs/fig5.csv", csv)?;
+    println!("\nwrote runs/fig5.csv");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6-8 (regions) and Fig. 9-11 (charger mixes): 4 bundled scenarios.
+// ---------------------------------------------------------------------------
+
+fn fig_scenarios(
+    cfg: &RunConfig,
+    regions: &[&str],
+    variants: &[&str],
+    tag: &str,
+) -> Result<()> {
+    let (manifest, store, engine) = setup()?;
+    let steps = if cfg.paper_scale { 10_000_000 } else { cfg.total_env_steps };
+    let scenarios = ["shopping", "work", "residential", "highway"];
+
+    println!("Fig. {tag} — 4 bundled scenarios ({} steps/agent, PPO vs max baseline)\n", steps);
+    let mut csv = String::from("variant,region,scenario,ppo_reward,ppo_profit,base_reward,base_profit\n");
+    for vkey in variants {
+        let variant = manifest.variant(vkey)?;
+        for region in regions {
+            println!("  [{vkey} / {region} cars]");
+            println!(
+                "  {:>12} {:>12} {:>12} {:>14} {:>12}",
+                "scenario", "PPO reward", "PPO profit", "base reward", "base profit"
+            );
+            for scen in scenarios {
+                let sc = Scenario {
+                    scenario: scen.into(),
+                    region: region.to_string(),
+                    ..cfg.scenario.clone()
+                };
+                let base =
+                    trainer::evaluate_baseline(&engine, variant, &store, &sc, "max", 600..608)?;
+                let bm = metrics::mean(&base)?;
+                let opts = TrainOptions {
+                    seed: cfg.seed,
+                    total_env_steps: steps,
+                    quiet: true,
+                    ..Default::default()
+                };
+                let out = trainer::train(&engine, variant, &store, &sc, &opts)?;
+                let evals = trainer::evaluate(&engine, &out.session, &store, &sc, 700..708)?;
+                let m = metrics::mean(&evals)?;
+                println!(
+                    "  {scen:>12} {:>12.1} {:>12.1} {:>14.1} {:>12.1}",
+                    m.get("ep_reward")?, m.get("ep_profit")?,
+                    bm.get("ep_reward")?, bm.get("ep_profit")?
+                );
+                writeln!(
+                    csv, "{vkey},{region},{scen},{},{},{},{}",
+                    m.get("ep_reward")?, m.get("ep_profit")?,
+                    bm.get("ep_reward")?, bm.get("ep_profit")?
+                ).ok();
+            }
+        }
+    }
+    std::fs::write(format!("runs/{tag}.csv"), csv)?;
+    println!("\nwrote runs/{tag}.csv");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// perf: layer-by-layer profile (EXPERIMENTS.md §Perf data source).
+// ---------------------------------------------------------------------------
+
+fn perf(cfg: &RunConfig) -> Result<()> {
+    let (manifest, store, engine) = setup()?;
+    let sc = &cfg.scenario;
+    println!("Perf profile (see EXPERIMENTS.md §Perf)\n");
+
+    // L3 naive wiring: per-step env_step PJRT calls.
+    let v = manifest.variant("mix10dc6ac_e16")?;
+    let step_spec = v.program("env_step")?;
+    let reset_spec = v.program("env_reset")?;
+    let step_exe = engine.load(step_spec)?;
+    let reset_exe = engine.load(reset_spec)?;
+    let exog: Vec<chargax::runtime::tensor::Tensor> = sc.to_tensors(&store)?;
+    let exog_lits: Vec<xla::Literal> = exog
+        .iter()
+        .map(|t| t.to_literal().unwrap())
+        .collect();
+    let seed = chargax::runtime::tensor::Tensor::scalar_u32(1).to_literal()?;
+    let mut inputs: Vec<&xla::Literal> = vec![&seed];
+    inputs.extend(exog_lits.iter());
+    let mut state = reset_exe.run_literals(&inputs)?;
+    state.pop(); // drop obs
+    let n_state = state.len();
+    let action = chargax::runtime::tensor::Tensor::i32(
+        vec![v.meta.num_envs, v.meta.n_ports],
+        vec![5; v.meta.num_envs * v.meta.n_ports],
+    )?
+    .to_literal()?;
+    let per_step = stats::bench(3, 50, || {
+        let mut ins: Vec<&xla::Literal> = state.iter().collect();
+        ins.push(&action);
+        ins.extend(exog_lits.iter());
+        let mut outs = step_exe.run_literals(&ins).unwrap();
+        outs.truncate(n_state);
+        state = outs;
+    });
+    let steps_per_call = v.meta.num_envs as f64;
+    println!(
+        "L3 naive (per-step env_step calls):  {}  -> {:.0} env-steps/s",
+        per_step.fmt_human(),
+        steps_per_call / per_step.mean_s
+    );
+
+    // L3 fused rollout.
+    let rr = RandomRollout::new(&engine, v, &store, sc)?;
+    rr.run(0)?;
+    let fused = stats::bench(1, 10, || {
+        rr.run(1).unwrap();
+    });
+    let fused_steps = (v.meta.random_rollout_steps * v.meta.num_envs) as f64;
+    println!(
+        "L3 fused (random_rollout scan):      {}  -> {:.0} env-steps/s  ({:.0}x over naive)",
+        fused.fmt_human(),
+        fused_steps / fused.mean_s,
+        (fused_steps / fused.mean_s) / (steps_per_call / per_step.mean_s)
+    );
+
+    // train_iter throughput.
+    let mut session =
+        chargax::coordinator::session::TrainSession::new(&engine, v, &store, sc, 0)?;
+    session.step()?;
+    let ti = stats::bench(0, 5, || {
+        session.step().unwrap();
+    });
+    println!(
+        "L2 fused train_iter:                 {}  -> {:.0} env-steps/s (incl. PPO update)",
+        ti.fmt_human(),
+        v.meta.batch_size as f64 / ti.mean_s
+    );
+
+    // L1 routing ablation: interpret-mode Pallas vs XLA-fused jnp oracles.
+    println!("\nL1 kernel routing (fused 1000-step random rollout, 16 envs):");
+    for (label, key) in [
+        ("pallas interpret=True", "mix10dc6ac_e16"),
+        ("jnp oracles (XLA-fused)", "mix10dc6ac-ref_e16"),
+    ] {
+        match manifest.variant(key) {
+            Ok(vv) => {
+                let rr = RandomRollout::new(&engine, vv, &store, sc)?;
+                rr.run(0)?;
+                let s = stats::bench(1, 8, || {
+                    rr.run(1).unwrap();
+                });
+                let steps = (vv.meta.random_rollout_steps * vv.meta.num_envs) as f64;
+                println!(
+                    "  {label:<26} {}  -> {:.0} env-steps/s",
+                    s.fmt_human(),
+                    steps / s.mean_s
+                );
+            }
+            Err(_) => println!("  {label:<26} (variant {key} not built)"),
+        }
+    }
+
+    // Vectorization scaling: the paper's Fig. 1 lever (more envs per fused
+    // call). Variants built by `aot.py --variants ... --merge`.
+    println!("\nvectorization scaling (fused rollout + train_iter, jnp-oracle routing):");
+    for key in ["mix10dc6ac-ref_e16", "mix10dc6ac-ref_e64", "mix10dc6ac-ref_e256"] {
+        let Ok(vv) = manifest.variant(key) else {
+            println!("  {key:<22} (not built)");
+            continue;
+        };
+        let rr = RandomRollout::new(&engine, vv, &store, sc)?;
+        rr.run(0)?;
+        let s = stats::bench(1, 5, || {
+            rr.run(1).unwrap();
+        });
+        let steps = (vv.meta.random_rollout_steps * vv.meta.num_envs) as f64;
+        let mut session =
+            chargax::coordinator::session::TrainSession::new(&engine, vv, &store, sc, 0)?;
+        session.step()?;
+        let st = stats::bench(0, 3, || {
+            session.step().unwrap();
+        });
+        println!(
+            "  {key:<22} rollout {:>9.0} steps/s | train {:>9.0} steps/s",
+            steps / s.mean_s,
+            vv.meta.batch_size as f64 / st.mean_s
+        );
+    }
+
+    // scalar env for reference.
+    let mut env = ScalarEnv::new(
+        StationConfig::default(),
+        ScenarioTables::build(&store, sc)?,
+        3,
+    );
+    let mut pol = RandomPolicy { rng: Rng::new(5) };
+    let t0 = Instant::now();
+    policies::rollout(&mut env, &mut pol, 100_000);
+    let el = t0.elapsed().as_secs_f64();
+    println!(
+        "scalar-gym reference:                {:.2} s/100k -> {:.0} env-steps/s",
+        el,
+        100_000.0 / el
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// cross-check: scalar vs JAX env_step on deterministic sub-transitions.
+// ---------------------------------------------------------------------------
+
+pub fn cross_check(_variant: &str) -> Result<String> {
+    use chargax::env::tree::{charging_curve, discharging_curve, StationTree};
+    use chargax::util::json::Json;
+
+    let path = artifacts_dir().join("data").join("test_vectors.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text)?;
+    let cases = j.get("cases").and_then(Json::as_arr).context("cases")?;
+    let mut n_ok = 0usize;
+    let mut out = String::new();
+    for (i, case) in cases.iter().enumerate() {
+        let kind = case.get("kind").and_then(Json::as_str).context("kind")?;
+        let ok = match kind {
+            "constraint" => check_constraint(case)?,
+            "charge" => check_charge(case)?,
+            "curve" => {
+                let soc = case.get("soc").and_then(Json::as_f64).unwrap() as f32;
+                let rb = case.get("r_bar").and_then(Json::as_f64).unwrap() as f32;
+                let tau = case.get("tau").and_then(Json::as_f64).unwrap() as f32;
+                let wc = case.get("want_charge").and_then(Json::as_f64).unwrap() as f32;
+                let wd = case.get("want_discharge").and_then(Json::as_f64).unwrap() as f32;
+                (charging_curve(soc, rb, tau) - wc).abs() < 1e-3
+                    && (discharging_curve(soc, rb, tau) - wd).abs() < 1e-3
+            }
+            other => anyhow::bail!("unknown case kind {other}"),
+        };
+        if ok {
+            n_ok += 1;
+        } else {
+            writeln!(out, "case {i} ({kind}): MISMATCH").ok();
+        }
+    }
+    writeln!(
+        out,
+        "cross-check: {n_ok}/{} python-exported vectors match the rust scalar env",
+        cases.len()
+    )
+    .ok();
+    if n_ok != cases.len() {
+        anyhow::bail!("cross-check failures:\n{out}");
+    }
+
+    // silence unused import warning path for StationTree used below
+    let _ = StationTree::standard(&StationConfig::default());
+    Ok(out)
+}
+
+fn get_vec(j: &chargax::util::json::Json, k: &str) -> Result<Vec<f32>> {
+    j.get(k)
+        .and_then(|x| x.as_f32_flat())
+        .with_context(|| format!("field {k}"))
+}
+
+fn check_constraint(case: &chargax::util::json::Json) -> Result<bool> {
+    use chargax::env::tree::StationTree;
+    let mut i = get_vec(case, "i_drawn")?;
+    let volt = get_vec(case, "volt")?;
+    let mem = get_vec(case, "membership")?;
+    let lim = get_vec(case, "limits")?;
+    let eta = get_vec(case, "eta")?;
+    let want_i = get_vec(case, "want_i")?;
+    let want_x = case.get("want_excess").and_then(|x| x.as_f64()).unwrap() as f32;
+    let p = i.len();
+    let n = lim.len();
+    let tree = StationTree {
+        volt,
+        i_max: vec![1.0; p],
+        p_max: vec![1.0; p],
+        eta_port: vec![1.0; p],
+        is_dc: vec![false; p - 1],
+        membership: (0..n)
+            .map(|r| (0..p).map(|c| mem[r * p + c] > 0.5).collect())
+            .collect(),
+        node_limit: lim,
+        node_eta: eta,
+    };
+    let x = tree.project_currents(&mut i);
+    let ok_i = i
+        .iter()
+        .zip(&want_i)
+        .all(|(a, b)| (a - b).abs() < 1e-2 * (1.0 + b.abs()));
+    Ok(ok_i && (x - want_x).abs() < 1e-2 * (1.0 + want_x.abs()))
+}
+
+fn check_charge(case: &chargax::util::json::Json) -> Result<bool> {
+    use chargax::env::tree::charging_curve;
+    let i = get_vec(case, "i_drawn")?;
+    let volt = get_vec(case, "volt")?;
+    let present = get_vec(case, "present")?;
+    let soc = get_vec(case, "soc")?;
+    let de = get_vec(case, "de_remain")?;
+    let dtr = get_vec(case, "dt_remain")?;
+    let cap = get_vec(case, "cap")?;
+    let rbar = get_vec(case, "r_bar")?;
+    let tau = get_vec(case, "tau")?;
+    let dt_hours = case.get("dt_hours").and_then(|x| x.as_f64()).unwrap() as f32;
+    let want = case.get("want").and_then(|x| x.as_arr()).context("want")?;
+    let w_soc = want[0].as_f32_flat().unwrap();
+    let w_de = want[1].as_f32_flat().unwrap();
+    let w_dt = want[2].as_f32_flat().unwrap();
+    let w_rh = want[3].as_f32_flat().unwrap();
+    let w_e = want[4].as_f32_flat().unwrap();
+    for j in 0..i.len() {
+        // replicate ref.charge_update_ref per lane
+        let p_kw = volt[j] * i[j] / 1000.0 * present[j];
+        let mut e = p_kw * dt_hours;
+        e = e.min((1.0 - soc[j]) * cap[j]).max(-soc[j] * cap[j]);
+        let soc_n = (soc[j] + e / cap[j].max(1e-9)).clamp(0.0, 1.0);
+        let de_n = de[j] - e;
+        let dt_n = dtr[j] - present[j];
+        let rh = charging_curve(soc_n, rbar[j], tau[j]) * present[j];
+        let close = |a: f32, b: f32| (a - b).abs() < 1e-3 * (1.0 + b.abs());
+        if !(close(soc_n, w_soc[j])
+            && close(de_n, w_de[j])
+            && close(dt_n, w_dt[j])
+            && close(rh, w_rh[j])
+            && close(e, w_e[j]))
+        {
+            return Ok(false);
+        }
+    }
+    Ok(true)
+}

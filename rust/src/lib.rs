@@ -1,0 +1,23 @@
+//! Chargax reproduction: a three-layer Rust + JAX + Pallas system.
+//!
+//! Layer 3 (this crate) is the coordinator: it loads AOT-compiled XLA
+//! programs (HLO text produced by `python/compile/aot.py`) through the PJRT
+//! C API and drives training, evaluation, and the paper's benchmark suite.
+//! Python is never on the hot path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! * [`runtime`] — manifest + PJRT engine + tensor/literal bridge,
+//! * [`coordinator`] — train/eval sessions and the training driver,
+//! * [`data`] — exogenous tables (prices, cars, arrivals, profiles),
+//! * [`env`] — pure-Rust scalar reference simulator (CPU-gym comparator),
+//! * [`baselines`] — pure-Rust PPO + heuristic policies (CPU comparators),
+//! * [`config`] — experiment configuration,
+//! * [`util`] — in-tree JSON / RNG / bench-stat / property-test substrates.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod env;
+pub mod runtime;
+pub mod util;

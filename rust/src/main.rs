@@ -1,0 +1,231 @@
+//! `chargax` CLI — leader entrypoint for the L3 coordinator.
+//!
+//! Subcommands:
+//!   train          train a PPO agent (AOT fast path) and report metrics
+//!   eval           evaluate a policy (net after training, or max/random)
+//!   bench <id>     regenerate a paper table/figure (table2, fig4a, fig4bc,
+//!                  fig5, fig6to8, fig9to11)
+//!   list-profiles  show the bundled data stack (paper Table 1)
+//!   list-artifacts show AOT variants + programs from the manifest
+//!   cross-check    scalar-vs-JAX transition equivalence report
+//!
+//! Options are `--key value` pairs (see config::RunConfig::set) plus
+//! `--config file.json`. clap is unavailable offline; parsing is manual.
+
+use anyhow::{anyhow, bail, Result};
+
+use chargax::config::RunConfig;
+use chargax::coordinator::{metrics, trainer};
+use chargax::data::DataStore;
+use chargax::runtime::engine::{artifacts_dir, Engine};
+use chargax::runtime::manifest::Manifest;
+
+mod experiments;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let (config_path, overrides) = parse_flags(&args[1..])?;
+    // Command-local flags that RunConfig doesn't own.
+    let cfg_overrides: Vec<(String, String)> = overrides
+        .iter()
+        .filter(|(k, _)| k != "policy")
+        .cloned()
+        .collect();
+    let cfg = RunConfig::load(config_path.as_deref(), &cfg_overrides)?;
+
+    match cmd.as_str() {
+        "train" => cmd_train(&cfg),
+        "eval" => cmd_eval(&cfg, &overrides),
+        "bench" => {
+            let id = args
+                .get(1)
+                .filter(|a| !a.starts_with("--"))
+                .ok_or_else(|| anyhow!("bench needs an experiment id"))?;
+            experiments::run(id, &cfg)
+        }
+        "list-profiles" => cmd_list_profiles(),
+        "list-artifacts" => cmd_list_artifacts(),
+        "cross-check" => cmd_cross_check(&cfg),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `chargax help`)"),
+    }
+}
+
+fn parse_flags(args: &[String]) -> Result<(Option<String>, Vec<(String, String)>)> {
+    let mut config = None;
+    let mut overrides = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let val = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+            if key == "config" {
+                config = Some(val.clone());
+            } else {
+                overrides.push((key.to_string(), val.clone()));
+            }
+            i += 2;
+        } else {
+            i += 1; // positional (subcommand argument), handled by caller
+        }
+    }
+    Ok((config, overrides))
+}
+
+fn cmd_train(cfg: &RunConfig) -> Result<()> {
+    let manifest = Manifest::load(&artifacts_dir())?;
+    let variant = manifest.variant(&cfg.variant)?;
+    let store = DataStore::load(&artifacts_dir().join("data"))?;
+    let engine = Engine::cpu()?;
+    eprintln!(
+        "training on {} ({} envs x {} rollout steps, {} params) scenario={} {} {}/{} traffic={}",
+        cfg.variant,
+        variant.meta.num_envs,
+        variant.meta.rollout_steps,
+        variant.meta.n_params,
+        cfg.scenario.scenario,
+        cfg.scenario.region,
+        cfg.scenario.country,
+        cfg.scenario.year,
+        cfg.scenario.traffic,
+    );
+    let opts = trainer::TrainOptions {
+        seed: cfg.seed,
+        total_env_steps: cfg.total_env_steps,
+        ..Default::default()
+    };
+    let out = trainer::train(&engine, variant, &store, &cfg.scenario, &opts)?;
+    eprintln!(
+        "trained {} env steps in {:.2}s ({:.0} steps/s)",
+        out.env_steps,
+        out.wallclock_s,
+        out.env_steps as f64 / out.wallclock_s
+    );
+    let evals = trainer::evaluate(
+        &engine,
+        &out.session,
+        &store,
+        &cfg.scenario,
+        1000..1000 + cfg.eval_seeds as u32,
+    )?;
+    let mean = metrics::mean(&evals)?;
+    println!(
+        "eval (net, {} seeds): {}",
+        evals.len(),
+        mean.fmt_fields(&["ep_reward", "ep_profit", "ep_missing_kwh", "ep_overtime_steps"])
+    );
+    Ok(())
+}
+
+fn cmd_eval(cfg: &RunConfig, overrides: &[(String, String)]) -> Result<()> {
+    let policy = overrides
+        .iter()
+        .find(|(k, _)| k == "policy")
+        .map(|(_, v)| v.as_str())
+        .unwrap_or("max");
+    if policy == "net" {
+        bail!("eval --policy net requires training first; use `chargax train`");
+    }
+    let manifest = Manifest::load(&artifacts_dir())?;
+    let variant = manifest.variant(&cfg.variant)?;
+    let store = DataStore::load(&artifacts_dir().join("data"))?;
+    let engine = Engine::cpu()?;
+    let evals = trainer::evaluate_baseline(
+        &engine,
+        variant,
+        &store,
+        &cfg.scenario,
+        policy,
+        1000..1000 + cfg.eval_seeds as u32,
+    )?;
+    let mean = metrics::mean(&evals)?;
+    let std = metrics::std(&evals)?;
+    println!("policy={policy} scenario={} {} seeds:", cfg.scenario.scenario, evals.len());
+    for f in &evals[0].fields {
+        println!("  {f:>22}: {:>10.3} ± {:.3}", mean.get(f)?, std.get(f)?);
+    }
+    Ok(())
+}
+
+fn cmd_list_profiles() -> Result<()> {
+    let store = DataStore::load(&artifacts_dir().join("data"))?;
+    println!("Price profiles (hourly, {} days):", store.n_days);
+    for k in store.prices.keys() {
+        println!("  {k}");
+    }
+    println!("Car catalog ({} models):", store.n_models);
+    for (i, n) in store.car_names.iter().enumerate() {
+        let row = &store.car_table[i * 4..i * 4 + 4];
+        println!(
+            "  {n:<22} cap={:>5.1} kWh  AC={:>4.1} kW  DC={:>5.1} kW  tau={:.2}",
+            row[0], row[1], row[2], row[3]
+        );
+    }
+    println!("Car regions: {:?}", store.car_weights.keys().collect::<Vec<_>>());
+    println!("Arrival scenarios: {:?}", store.arrival_shapes.keys().collect::<Vec<_>>());
+    println!("Traffic levels: {:?}", store.traffic);
+    println!("User profiles: {:?}", store.user_profiles.keys().collect::<Vec<_>>());
+    Ok(())
+}
+
+fn cmd_list_artifacts() -> Result<()> {
+    let manifest = Manifest::load(&artifacts_dir())?;
+    for (key, v) in &manifest.variants {
+        println!(
+            "{key}: obs_dim={} ports={} envs={} batch={}",
+            v.meta.obs_dim, v.meta.n_ports, v.meta.num_envs, v.meta.batch_size
+        );
+        for (name, p) in &v.programs {
+            println!(
+                "  {name:<16} {} inputs, {} outputs  ({})",
+                p.inputs.len(),
+                p.outputs.len(),
+                p.file.file_name().unwrap_or_default().to_string_lossy()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_cross_check(cfg: &RunConfig) -> Result<()> {
+    let report = experiments::cross_check(&cfg.variant)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "chargax — Chargax (JAX EV-charging RL) reproduction, rust coordinator
+
+USAGE: chargax <command> [--config file.json] [--key value ...]
+
+COMMANDS:
+  train            train PPO on the AOT fast path
+  eval             evaluate max/random baseline policies
+  bench <id>       regenerate a paper table/figure:
+                   table2 | fig4a | fig4bc | fig5 | fig6to8 | fig9to11 | perf
+  list-profiles    bundled data stack (paper Table 1)
+  list-artifacts   AOT variants and programs
+  cross-check      scalar-vs-JAX transition equivalence
+  help             this text
+
+KEYS: variant scenario region country year traffic p_sell beta seed n_seeds
+      steps eval_seeds paper_scale out alpha_<penalty>"
+    );
+}

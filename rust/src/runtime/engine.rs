@@ -1,0 +1,139 @@
+//! PJRT engine: load HLO-text artifacts, compile once, execute many.
+//!
+//! Adapted from /opt/xla-example/load_hlo/. All programs are lowered with
+//! `return_tuple=True`, so execution yields a single tuple literal that we
+//! decompose into output leaves. Compilation results are cached per
+//! program file.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::ProgramSpec;
+use super::tensor::Tensor;
+
+/// Wrapper shared by every coordinator component. `Engine` is `Sync`
+/// behind a mutex on the executable cache only; execution itself takes
+/// `&self`.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ProgramSpec,
+    pub compile_time_s: f64,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile a program (cached by program file path).
+    pub fn load(&self, spec: &ProgramSpec) -> Result<std::sync::Arc<Executable>> {
+        let key = spec.file.display().to_string();
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let exe = std::sync::Arc::new(self.compile(spec)?);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    fn compile(&self, spec: &ProgramSpec) -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", spec.file.display()))?;
+        Ok(Executable {
+            exe,
+            spec: spec.clone(),
+            compile_time_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with pre-built input literals (fast path: literals for
+    /// static inputs are built once by the caller and reused; `execute`
+    /// borrows, so carry literals can be passed as references).
+    pub fn run_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let bufs = self
+            .exe
+            .execute::<L>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e}", self.spec.name))?;
+        let tuple = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", self.spec.name))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing result of {}: {e}", self.spec.name))?;
+        if parts.len() != self.spec.outputs.len() {
+            return Err(anyhow!(
+                "{}: manifest promises {} outputs, program returned {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            ));
+        }
+        Ok(parts)
+    }
+
+    /// Execute with host tensors (convenience path; validates against the
+    /// manifest specs).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if !t.matches(spec) {
+                return Err(anyhow!(
+                    "{}: input '{}' wants {:?} {:?}, got {:?} {:?}",
+                    self.spec.name,
+                    spec.name,
+                    spec.dtype,
+                    spec.shape,
+                    t.dtype(),
+                    t.shape()
+                ));
+            }
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<_>>()?;
+        let outs = self.run_literals(&lits)?;
+        outs.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+/// Resolve the artifacts dir: $CHARGAX_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("CHARGAX_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| Path::new("artifacts").to_path_buf())
+}

@@ -1,0 +1,250 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest is the AOT contract: for every program of every variant it
+//! records the flat input/output leaf order with shapes and dtypes, plus
+//! env metadata (metric field names, action arity, ...). The coordinator
+//! trusts these specs instead of introspecting HLO.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            other => bail!("unknown dtype {other}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl LeafSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn parse(j: &Json) -> Result<Self> {
+        Ok(LeafSpec {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .context("leaf name")?
+                .to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("leaf shape")?
+                .iter()
+                .map(|x| x.as_usize().context("shape dim"))
+                .collect::<Result<_>>()?,
+            dtype: DType::parse(j.get("dtype").and_then(Json::as_str).context("dtype")?)?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<LeafSpec>,
+    pub outputs: Vec<LeafSpec>,
+}
+
+impl ProgramSpec {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|l| l.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|l| l.name == name)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EnvMeta {
+    pub obs_dim: usize,
+    pub n_ports: usize,
+    pub n_chargers: usize,
+    pub n_dc: usize,
+    pub action_nvec: Vec<usize>,
+    pub steps_per_episode: usize,
+    pub num_envs: usize,
+    pub rollout_steps: usize,
+    pub batch_size: usize,
+    pub random_rollout_steps: usize,
+    pub n_params: usize,
+    pub metric_fields: Vec<String>,
+    pub train_metric_fields: Vec<String>,
+    pub eval_metric_fields: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub key: String,
+    pub meta: EnvMeta,
+    pub programs: BTreeMap<String, ProgramSpec>,
+}
+
+impl Variant {
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("variant {} has no program {name}", self.key))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, Variant>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut variants = BTreeMap::new();
+        for (key, vj) in j
+            .get("variants")
+            .and_then(Json::as_obj)
+            .context("manifest.variants")?
+        {
+            variants.insert(key.clone(), parse_variant(key, vj, artifacts_dir)?);
+        }
+        Ok(Manifest { dir: artifacts_dir.to_path_buf(), variants })
+    }
+
+    pub fn variant(&self, key: &str) -> Result<&Variant> {
+        self.variants.get(key).ok_or_else(|| {
+            anyhow!(
+                "no variant '{key}' in manifest (have: {})",
+                self.variants.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+}
+
+fn parse_variant(key: &str, j: &Json, dir: &Path) -> Result<Variant> {
+    let m = j.get("meta").context("variant meta")?;
+    let geti = |name: &str| -> Result<usize> {
+        m.get(name).and_then(Json::as_usize).context(format!("meta.{name}"))
+    };
+    let gets = |name: &str| -> Result<Vec<String>> {
+        m.get(name).and_then(Json::as_str_vec).context(format!("meta.{name}"))
+    };
+    let meta = EnvMeta {
+        obs_dim: geti("obs_dim")?,
+        n_ports: geti("n_ports")?,
+        n_chargers: geti("n_chargers")?,
+        n_dc: geti("n_dc")?,
+        action_nvec: m
+            .get("action_nvec")
+            .and_then(Json::as_arr)
+            .context("meta.action_nvec")?
+            .iter()
+            .map(|x| x.as_usize().context("nvec"))
+            .collect::<Result<_>>()?,
+        steps_per_episode: geti("steps_per_episode")?,
+        num_envs: geti("num_envs")?,
+        rollout_steps: geti("rollout_steps")?,
+        batch_size: geti("batch_size")?,
+        random_rollout_steps: geti("random_rollout_steps")?,
+        n_params: geti("n_params")?,
+        metric_fields: gets("metric_fields")?,
+        train_metric_fields: gets("train_metric_fields")?,
+        eval_metric_fields: gets("eval_metric_fields")?,
+    };
+    let mut programs = BTreeMap::new();
+    for (name, pj) in j
+        .get("programs")
+        .and_then(Json::as_obj)
+        .context("variant programs")?
+    {
+        let parse_leaves = |field: &str| -> Result<Vec<LeafSpec>> {
+            pj.get(field)
+                .and_then(Json::as_arr)
+                .context(format!("{name}.{field}"))?
+                .iter()
+                .map(LeafSpec::parse)
+                .collect()
+        };
+        programs.insert(
+            name.clone(),
+            ProgramSpec {
+                name: name.clone(),
+                file: dir.join(pj.get("file").and_then(Json::as_str).context("file")?),
+                inputs: parse_leaves("inputs")?,
+                outputs: parse_leaves("outputs")?,
+            },
+        );
+    }
+    Ok(Variant { key: key.to_string(), meta, programs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_json() -> &'static str {
+        r#"{
+          "format": 1,
+          "variants": {
+            "v_e2": {
+              "meta": {
+                "obs_dim": 10, "n_ports": 3, "n_chargers": 2, "n_dc": 1,
+                "action_nvec": [11, 11, 21], "steps_per_episode": 288,
+                "num_envs": 2, "rollout_steps": 4, "batch_size": 8,
+                "random_rollout_steps": 16, "n_params": 100,
+                "metric_fields": ["reward"],
+                "train_metric_fields": ["mean_reward"],
+                "eval_metric_fields": ["ep_reward"]
+              },
+              "programs": {
+                "train_init": {
+                  "file": "train_init_v_e2.hlo.txt",
+                  "inputs": [{"name": "seed", "shape": [], "dtype": "u32"}],
+                  "outputs": [{"name": "params.w1", "shape": [10, 4], "dtype": "f32"}]
+                }
+              }
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("chargax_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("v_e2").unwrap();
+        assert_eq!(v.meta.action_nvec, vec![11, 11, 21]);
+        assert_eq!(v.meta.num_envs, 2);
+        let p = v.program("train_init").unwrap();
+        assert_eq!(p.inputs[0].dtype, DType::U32);
+        assert_eq!(p.outputs[0].elem_count(), 40);
+        assert!(m.variant("nope").is_err());
+        assert!(v.program("nope").is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! PJRT runtime: manifest-driven loading and execution of the HLO-text
+//! artifacts produced by `python/compile/aot.py`.
+//! Adapted from /opt/xla-example/load_hlo/.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;

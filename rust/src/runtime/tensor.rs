@@ -1,0 +1,160 @@
+//! Host-side tensor <-> xla::Literal conversion.
+//!
+//! `Tensor` is the coordinator's plain-old-data view of a leaf (flat data +
+//! shape + dtype); literals are built once per upload and reused across
+//! executions (PJRT keeps its own device copy).
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{DType, LeafSpec};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl Tensor {
+    pub fn zeros(spec: &LeafSpec) -> Tensor {
+        let n = spec.elem_count();
+        match spec.dtype {
+            DType::F32 => Tensor::F32 { shape: spec.shape.clone(), data: vec![0.0; n] },
+            DType::I32 => Tensor::I32 { shape: spec.shape.clone(), data: vec![0; n] },
+            DType::U32 => Tensor::U32 { shape: spec.shape.clone(), data: vec![0; n] },
+        }
+    }
+
+    pub fn scalar_u32(v: u32) -> Tensor {
+        Tensor::U32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elems, got {}", data.len());
+        }
+        Ok(Tensor::F32 { shape, data })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elems, got {}", data.len());
+        }
+        Ok(Tensor::I32 { shape, data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } | Tensor::U32 { shape, .. } => {
+                shape
+            }
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+            Tensor::U32 { .. } => DType::U32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+            Tensor::U32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    /// Check against a manifest leaf spec.
+    pub fn matches(&self, spec: &LeafSpec) -> bool {
+        self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::U32 { data, .. } => xla::Literal::vec1(data),
+        };
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("literal shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            }),
+            xla::ElementType::S32 => Ok(Tensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?,
+            }),
+            xla::ElementType::U32 => Ok(Tensor::U32 {
+                shape: dims,
+                data: lit.to_vec::<u32>().map_err(|e| anyhow!("{e}"))?,
+            }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_match_spec() {
+        let spec = LeafSpec {
+            name: "x".into(),
+            shape: vec![2, 3],
+            dtype: DType::F32,
+        };
+        let t = Tensor::zeros(&spec);
+        assert_eq!(t.len(), 6);
+        assert!(t.matches(&spec));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::f32(vec![2, 2], vec![1.0; 3]).is_err());
+        assert!(Tensor::i32(vec![3], vec![1, 2, 3]).is_ok());
+    }
+
+    #[test]
+    fn scalar_roundtrip_shape() {
+        let t = Tensor::scalar_u32(7);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.len(), 1);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small in-tree substrates (JSON, RNG, bench stats, property testing).
+//!
+//! These exist because the image's offline crate cache only carries the
+//! `xla` dependency closure — see DESIGN.md §Substitutions.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,91 @@
+//! Property-testing micro-harness.
+//!
+//! `proptest` is not in the offline crate cache, so invariant tests use
+//! this quickcheck-style helper: N seeded random cases per property, with
+//! the failing seed printed for reproduction (no shrinking — cases are
+//! generated from compact primitives, so failures are already small).
+
+use super::rng::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 256, seed: 0xC0FFEE }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Self {
+        Prop { cases, ..Default::default() }
+    }
+
+    /// Run `f(rng)` for each case; panic with the case seed on failure.
+    pub fn check<F: FnMut(&mut Rng)>(&self, name: &str, mut f: F) {
+        for case in 0..self.cases {
+            let case_seed = self
+                .seed
+                .wrapping_mul(0x9e3779b97f4a7c15)
+                .wrapping_add(case as u64);
+            let mut rng = Rng::new(case_seed);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f(&mut rng)
+            }));
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                panic!(
+                    "property '{name}' failed on case {case} (seed {case_seed:#x}): {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// Generators for common test inputs.
+pub mod gen {
+    use super::Rng;
+
+    pub fn vec_f32(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.range_f32(lo, hi)).collect()
+    }
+
+    pub fn vec_f32_len(rng: &mut Rng, min_len: usize, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let len = min_len + rng.below((max_len - min_len + 1) as u32) as usize;
+        vec_f32(rng, len, lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        Prop::new(32).check("reflexive", |rng| {
+            let x = rng.f32();
+            assert_eq!(x, x);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failures() {
+        Prop::new(4).check("always-fails", |_| panic!("boom"));
+    }
+
+    #[test]
+    fn gen_respects_bounds() {
+        Prop::new(16).check("gen-bounds", |rng| {
+            let v = gen::vec_f32_len(rng, 1, 10, -2.0, 3.0);
+            assert!(!v.is_empty() && v.len() <= 10);
+            assert!(v.iter().all(|x| (-2.0..=3.0).contains(x)));
+        });
+    }
+}

@@ -1,0 +1,218 @@
+//! Deterministic PRNG + distributions.
+//!
+//! The offline crate cache has no `rand`/`rand_distr`, so the scalar
+//! simulator and the Rust PPO baseline use this small PCG64-based
+//! generator (DESIGN.md §Substitutions). Not cryptographic; seeded runs
+//! are fully reproducible across platforms.
+
+/// PCG-XSH-RR 64/32 with 64-bit output composed from two draws.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut r = Rng { state: 0, inc: (seed << 1) | 1 };
+        r.next_u32();
+        r.state = r.state.wrapping_add(0x853c49e6748fea9b ^ seed);
+        r.next_u32();
+        r
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc | 1);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 / (1u32 << 24) as f32
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n) (n > 0), unbiased via rejection.
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        let zone = u32::MAX - (u32::MAX % n);
+        loop {
+            let v = self.next_u32();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Standard normal via Box-Muller (one value per call; simple > fast).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.f32();
+            if u1 > 1e-7 {
+                let u2 = self.f32();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f32::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Poisson sample; Knuth for small lambda, normal approx above 30.
+    pub fn poisson(&mut self, lambda: f32) -> u32 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 30.0 {
+            let v = lambda + lambda.sqrt() * self.normal();
+            return v.max(0.0).round() as u32;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0u32;
+        let mut p = 1.0f32;
+        loop {
+            p *= self.f32();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+            if k > 1000 {
+                return k; // numeric guard; unreachable for sane lambda
+            }
+        }
+    }
+
+    /// Categorical sample from (unnormalized, non-negative) weights.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f32 = weights.iter().sum();
+        if total <= 0.0 {
+            return 0;
+        }
+        let mut x = self.f32() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Kumaraswamy(a, b) — the closed-form Beta stand-in used by the JAX
+    /// env (transition.py) so both simulators draw from the same family.
+    pub fn kumaraswamy(&mut self, a: f32, b: f32) -> f32 {
+        let u = self.f32().clamp(1e-6, 1.0 - 1e-6);
+        (1.0 - (1.0 - u).powf(1.0 / b)).powf(1.0 / a)
+    }
+
+    /// Fisher-Yates shuffle of indices 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.below((i + 1) as u32) as usize;
+            v.swap(i, j);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+        let mut c = Rng::new(8);
+        assert_ne!(a.next_u32(), c.next_u32());
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 20000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Rng::new(3);
+        for &lam in &[0.3f32, 2.0, 8.0, 50.0] {
+            let n = 20000;
+            let m = (0..n).map(|_| r.poisson(lam) as f64).sum::<f64>() / n as f64;
+            assert!((m - lam as f64).abs() < 0.15 * lam as f64 + 0.05, "lam {lam} got {m}");
+        }
+    }
+
+    #[test]
+    fn categorical_distribution() {
+        let mut r = Rng::new(4);
+        let w = [1.0f32, 3.0, 6.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..30000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert!((counts[2] as f64 / 30000.0 - 0.6).abs() < 0.02);
+        assert!((counts[1] as f64 / 30000.0 - 0.3).abs() < 0.02);
+    }
+
+    #[test]
+    fn below_unbiased_bounds() {
+        let mut r = Rng::new(5);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::new(6);
+        let p = r.permutation(100);
+        let mut seen = vec![false; 100];
+        for i in p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn kumaraswamy_support() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let x = r.kumaraswamy(2.5, 3.0);
+            assert!((0.0..=1.0).contains(&x));
+        }
+    }
+}

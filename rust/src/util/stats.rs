@@ -1,0 +1,110 @@
+//! Benchmark timing statistics (criterion is unavailable offline; the
+//! bench harnesses under rust/benches use this instead — warmup + N
+//! timed samples + mean/std/min, DESIGN.md §Substitutions).
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub n: usize,
+}
+
+impl Sample {
+    pub fn from_durations(xs: &[f64]) -> Sample {
+        let n = xs.len().max(1);
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n.max(2).saturating_sub(1) as f64;
+        Sample {
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_s: xs.iter().cloned().fold(0.0, f64::max),
+            n,
+        }
+    }
+
+    pub fn fmt_human(&self) -> String {
+        format!(
+            "{} ± {} (n={})",
+            fmt_duration(self.mean_s),
+            fmt_duration(self.std_s),
+            self.n
+        )
+    }
+}
+
+/// Time `f` with `warmup` discarded runs then `samples` measured runs.
+pub fn bench<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut xs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        xs.push(t0.elapsed().as_secs_f64());
+    }
+    Sample::from_durations(&xs)
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.2} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Mean / std over a slice of f64 metrics.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / xs.len().max(2).saturating_sub(1) as f64;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_stats() {
+        let s = Sample::from_durations(&[1.0, 2.0, 3.0]);
+        assert!((s.mean_s - 2.0).abs() < 1e-12);
+        assert!((s.std_s - 1.0).abs() < 1e-12);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 3.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn durations_format() {
+        assert_eq!(fmt_duration(2.5), "2.50 s");
+        assert_eq!(fmt_duration(0.0025), "2.50 ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.5 µs");
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[2.0, 4.0]);
+        assert!((m - 3.0).abs() < 1e-12);
+        assert!((s - std::f64::consts::SQRT_2).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,229 @@
+//! Integration tests over real artifacts + a live PJRT client.
+//!
+//! These need `make artifacts` to have run; they skip (with a message)
+//! when artifacts/ is absent so `cargo test` stays green on a fresh
+//! checkout.
+
+use std::path::PathBuf;
+
+use chargax::coordinator::session::{EvalSession, RandomRollout, TrainSession};
+use chargax::coordinator::trainer::{self, TrainOptions};
+use chargax::data::{DataStore, Scenario};
+use chargax::runtime::engine::Engine;
+use chargax::runtime::manifest::Manifest;
+use chargax::runtime::tensor::Tensor;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+/// PjRtClient is not Sync (Rc internals): each test owns its engine.
+fn new_engine() -> Engine {
+    Engine::cpu().expect("pjrt cpu client")
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(p) => p,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_loads_and_has_default_variants() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    for v in ["mix10dc6ac_e12", "mix10dc6ac_e1", "mix10dc6ac_e16"] {
+        let var = m.variant(v).unwrap();
+        assert_eq!(var.meta.n_ports, 17);
+        assert_eq!(var.meta.obs_dim, 107);
+        for prog in [
+            "train_init", "train_iter", "eval_net", "eval_max", "eval_random",
+            "random_rollout", "env_reset", "env_step",
+        ] {
+            assert!(var.programs.contains_key(prog), "{v} missing {prog}");
+        }
+    }
+}
+
+#[test]
+fn datastore_loads_all_tables() {
+    let dir = require_artifacts!();
+    let store = DataStore::load(&dir.join("data")).unwrap();
+    assert_eq!(store.prices.len(), 9); // 3 countries x 3 years
+    assert_eq!(store.n_models, 20);
+    assert_eq!(store.n_days, 365);
+    assert_eq!(store.arrival_shapes.len(), 4);
+    // crisis year visible (drives fig5)
+    let p21: f64 = store.price("NL", 2021).unwrap().iter().map(|x| *x as f64).sum();
+    let p22: f64 = store.price("NL", 2022).unwrap().iter().map(|x| *x as f64).sum();
+    assert!(p22 > 1.8 * p21);
+}
+
+#[test]
+fn env_step_executes_and_feeds_back() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let store = DataStore::load(&dir.join("data")).unwrap();
+    let v = m.variant("mix10dc6ac_e12").unwrap();
+    let sc = Scenario::default();
+
+    let reset = &new_engine().load(v.program("env_reset").unwrap()).unwrap();
+    let step = &new_engine().load(v.program("env_step").unwrap()).unwrap();
+    let exog: Vec<xla::Literal> = sc
+        .to_tensors(&store)
+        .unwrap()
+        .iter()
+        .map(|t| t.to_literal().unwrap())
+        .collect();
+
+    let seed = Tensor::scalar_u32(42).to_literal().unwrap();
+    let mut ins: Vec<&xla::Literal> = vec![&seed];
+    ins.extend(exog.iter());
+    let mut outs = reset.run_literals(&ins).unwrap();
+    let obs = outs.pop().unwrap();
+    let obs_t = Tensor::from_literal(&obs).unwrap();
+    assert_eq!(obs_t.shape(), &[12, 107]);
+    assert!(obs_t.as_f32().unwrap().iter().all(|x| x.is_finite()));
+
+    // 30 feedback steps with constant mid-level actions.
+    let action = Tensor::i32(vec![12, 17], vec![5; 12 * 17])
+        .unwrap()
+        .to_literal()
+        .unwrap();
+    let n_state = outs.len();
+    let mut state = outs;
+    for _ in 0..30 {
+        let mut ins: Vec<&xla::Literal> = state.iter().collect();
+        ins.push(&action);
+        ins.extend(exog.iter());
+        let full = step.run_literals(&ins).unwrap();
+        // outputs: state' ++ [obs, reward, done, metrics]
+        assert_eq!(full.len(), n_state + 4);
+        let reward = Tensor::from_literal(&full[n_state + 1]).unwrap();
+        assert_eq!(reward.shape(), &[12]);
+        assert!(reward.as_f32().unwrap().iter().all(|x| x.is_finite()));
+        state = full.into_iter().take(n_state).collect();
+    }
+    // t advanced to 30 for every env (state leaf 't' is output index of
+    // name "t").
+    let t_idx = step
+        .spec
+        .outputs
+        .iter()
+        .position(|s| s.name == "t")
+        .unwrap();
+    let t = Tensor::from_literal(&state[t_idx]).unwrap();
+    assert_eq!(t.as_i32().unwrap(), &[30i32; 12]);
+}
+
+#[test]
+fn train_session_learns_and_is_deterministic() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let store = DataStore::load(&dir.join("data")).unwrap();
+    let v = m.variant("mix10dc6ac_e12").unwrap();
+    let sc = Scenario { traffic: "high".into(), ..Default::default() };
+
+    let mut s1 = TrainSession::new(&new_engine(), v, &store, &sc, 123).unwrap();
+    let m1 = s1.step().unwrap();
+    assert!(m1.get("total_loss").unwrap().is_finite());
+    assert!(m1.get("entropy").unwrap() > 0.0);
+    assert_eq!(s1.env_steps_done, v.meta.batch_size);
+
+    // determinism: same seed, same first-iteration metrics
+    let mut s2 = TrainSession::new(&new_engine(), v, &store, &sc, 123).unwrap();
+    let m2 = s2.step().unwrap();
+    assert_eq!(m1.values, m2.values);
+
+    // different seed diverges
+    let mut s3 = TrainSession::new(&new_engine(), v, &store, &sc, 124).unwrap();
+    let m3 = s3.step().unwrap();
+    assert_ne!(m1.values, m3.values);
+}
+
+#[test]
+fn eval_policies_rank_sanely() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let store = DataStore::load(&dir.join("data")).unwrap();
+    let v = m.variant("mix10dc6ac_e12").unwrap();
+    let sc = Scenario { traffic: "high".into(), ..Default::default() };
+
+    let max_eval = EvalSession::new(&new_engine(), v, &store, &sc, "max").unwrap();
+    let rand_eval = EvalSession::new(&new_engine(), v, &store, &sc, "random").unwrap();
+    let zeros = max_eval.zero_params().unwrap();
+    let refs: Vec<&xla::Literal> = zeros.iter().collect();
+    let mm = max_eval.run(&refs, 7).unwrap();
+    let mr = rand_eval.run(&refs, 7).unwrap();
+    // max-charge delivers more energy and leaves less unmet demand.
+    assert!(mm.get("ep_energy_kwh").unwrap() > mr.get("ep_energy_kwh").unwrap());
+    assert!(mm.get("ep_missing_kwh").unwrap() <= mr.get("ep_missing_kwh").unwrap());
+    // both served cars
+    assert!(mm.get("ep_arrived").unwrap() > 10.0);
+}
+
+#[test]
+fn random_rollout_advances_envs() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let store = DataStore::load(&dir.join("data")).unwrap();
+    let v = m.variant("mix10dc6ac_e16").unwrap();
+    let rr = RandomRollout::new(&new_engine(), v, &store, &Scenario::default()).unwrap();
+    let (mets, steps) = rr.run(3).unwrap();
+    assert_eq!(steps, v.meta.random_rollout_steps * v.meta.num_envs);
+    assert!(mets.get("reward").unwrap().is_finite());
+    // deterministic per seed
+    let (mets2, _) = rr.run(3).unwrap();
+    assert_eq!(mets.values, mets2.values);
+}
+
+#[test]
+fn trainer_improves_reward_over_short_run() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let store = DataStore::load(&dir.join("data")).unwrap();
+    let v = m.variant("mix10dc6ac_e12").unwrap();
+    let sc = Scenario { traffic: "high".into(), ..Default::default() };
+    let opts = TrainOptions {
+        seed: 5,
+        total_env_steps: 15 * v.meta.batch_size,
+        quiet: true,
+        ..Default::default()
+    };
+    let out = trainer::train(&new_engine(), v, &store, &sc, &opts).unwrap();
+    let first = out.history.first().unwrap().get("mean_reward").unwrap();
+    let last = out.history.last().unwrap().get("mean_reward").unwrap();
+    assert!(
+        last > first,
+        "no learning signal: first {first}, last {last}"
+    );
+
+    // trained params evaluate
+    let evals = trainer::evaluate(&new_engine(), &out.session, &store, &sc, 0..3).unwrap();
+    assert_eq!(evals.len(), 3);
+    assert!(evals[0].get("ep_reward").unwrap().is_finite());
+}
+
+#[test]
+fn scenario_swap_changes_exog_not_carry() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let store = DataStore::load(&dir.join("data")).unwrap();
+    let v = m.variant("mix10dc6ac_e12").unwrap();
+    let mut s = TrainSession::new(&new_engine(), v, &store, &Scenario::default(), 9).unwrap();
+    s.step().unwrap();
+    let steps_before = s.env_steps_done;
+    // swap to crisis-year prices mid-training (fig5 machinery)
+    s.set_scenario(&store, &Scenario { year: 2022, ..Default::default() })
+        .unwrap();
+    let m2 = s.step().unwrap();
+    assert!(m2.get("mean_reward").unwrap().is_finite());
+    assert_eq!(s.env_steps_done, steps_before + v.meta.batch_size);
+}

@@ -1,0 +1,191 @@
+#!/usr/bin/env python3
+"""Render the CSVs under runs/ into paper-style figures (PNG).
+
+Usage: python scripts/plot_runs.py [runs_dir] [out_dir]
+
+Produces (when the corresponding CSV exists):
+  fig1_table2.png        — Table 2 / Fig. 1 bar chart (log-scale seconds)
+  fig4a_training.png     — reward curves per traffic level (paper Fig. 4a)
+  fig4bc_satisfaction.png— alpha sweeps (paper Fig. 4b/c)
+  fig5_shift.png         — train-year x eval-year matrix (paper Fig. 5)
+  fig6to11_scenarios.png — scenario/region/mix bars (paper Fig. 6-11)
+  train_shopping.png     — E2E loss/reward curve (examples/train_shopping)
+"""
+
+import csv
+import os
+import sys
+from collections import defaultdict
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt
+
+
+def read_csv(path):
+    with open(path) as f:
+        return list(csv.DictReader(f))
+
+
+def maybe(path):
+    return os.path.exists(path)
+
+
+def plot_table2(runs, out):
+    rows = read_csv(os.path.join(runs, "table2.csv"))
+    labels = [r["row"] for r in rows]
+    series = [
+        ("Chargax (AOT)", "chargax_s"),
+        ("scalar-gym (rust)", "scalar_gym_s"),
+        ("python-gym", "python_gym_s"),
+    ]
+    fig, ax = plt.subplots(figsize=(7, 4))
+    width = 0.25
+    for i, (name, key) in enumerate(series):
+        xs = [j + (i - 1) * width for j in range(len(rows))]
+        ys = [float(r[key]) if r[key] else float("nan") for r in rows]
+        ax.bar(xs, ys, width, label=name)
+    ax.set_xticks(range(len(rows)))
+    ax.set_xticklabels(labels)
+    ax.set_yscale("log")
+    ax.set_ylabel("seconds / 100k env steps (log)")
+    ax.set_title("Table 2 / Fig. 1 — wallclock per 100k steps")
+    ax.legend()
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig1_table2.png"), dpi=130)
+
+
+def plot_fig4a(runs, out):
+    rows = read_csv(os.path.join(runs, "fig4a.csv"))
+    by = defaultdict(lambda: defaultdict(list))  # traffic -> iter -> returns
+    for r in rows:
+        val = float(r["mean_completed_return"])
+        if val == val and val != 0.0:
+            by[r["traffic"]][int(r["iter"])].append(val)
+    fig, ax = plt.subplots(figsize=(7, 4))
+    for traffic, pts in by.items():
+        its = sorted(pts)
+        mean = [sum(pts[i]) / len(pts[i]) for i in its]
+        ax.plot(its, mean, label=f"traffic={traffic}")
+    ax.set_xlabel("PPO iteration (3600 env steps each)")
+    ax.set_ylabel("mean completed-episode return")
+    ax.set_title("Fig. 4a — PPO training, shopping scenario")
+    ax.legend()
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig4a_training.png"), dpi=130)
+
+
+def plot_fig4bc(runs, out):
+    rows = read_csv(os.path.join(runs, "fig4bc.csv"))
+    fig, axes = plt.subplots(1, 2, figsize=(10, 4))
+    for ax, panel, field, ylabel in [
+        (axes[0], "4b", "ep_missing_kwh", "kWh missing at departure"),
+        (axes[1], "4c", "ep_overtime_steps", "overtime (steps)"),
+    ]:
+        by = defaultdict(list)
+        for r in rows:
+            if r["panel"] == panel:
+                by[float(r["alpha"])].append(float(r[field]))
+        alphas = sorted(by)
+        means = [sum(by[a]) / len(by[a]) for a in alphas]
+        ax.bar(range(len(alphas)), means, 0.6)
+        ax.set_xticks(range(len(alphas)))
+        ax.set_xticklabels([str(a) for a in alphas])
+        ax.set_xlabel("alpha")
+        ax.set_ylabel(ylabel)
+        ax.set_title(f"Fig. {panel}")
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig4bc_satisfaction.png"), dpi=130)
+
+
+def plot_fig5(runs, out):
+    rows = read_csv(os.path.join(runs, "fig5.csv"))
+    years = sorted({r["train_year"] for r in rows})
+    mat = [[0.0] * len(years) for _ in years]
+    for r in rows:
+        i = years.index(r["train_year"])
+        j = years.index(r["eval_year"])
+        mat[i][j] = float(r["mean_reward"])
+    fig, ax = plt.subplots(figsize=(5, 4))
+    im = ax.imshow(mat, cmap="viridis")
+    ax.set_xticks(range(len(years)), years)
+    ax.set_yticks(range(len(years)), years)
+    ax.set_xlabel("evaluation year")
+    ax.set_ylabel("training year")
+    for i in range(len(years)):
+        for j in range(len(years)):
+            ax.text(j, i, f"{mat[i][j]:.0f}", ha="center", va="center", color="w")
+    ax.set_title("Fig. 5 — price-year distribution shift")
+    fig.colorbar(im, label="mean episode reward")
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig5_shift.png"), dpi=130)
+
+
+def plot_scenarios(runs, out):
+    paths = [p for p in ["fig6to8.csv", "fig9to11.csv"] if maybe(os.path.join(runs, p))]
+    if not paths:
+        return
+    fig, axes = plt.subplots(1, len(paths), figsize=(6 * len(paths), 4))
+    if len(paths) == 1:
+        axes = [axes]
+    for ax, p in zip(axes, paths):
+        rows = read_csv(os.path.join(runs, p))
+        groups = sorted({(r["variant"], r["region"]) for r in rows})
+        scenarios = ["shopping", "work", "residential", "highway"]
+        width = 0.8 / len(groups)
+        for gi, (v, reg) in enumerate(groups):
+            ys = []
+            for s in scenarios:
+                match = [r for r in rows if r["variant"] == v and r["region"] == reg and r["scenario"] == s]
+                ys.append(float(match[0]["ppo_profit"]) if match else 0.0)
+            xs = [i + gi * width for i in range(len(scenarios))]
+            label = reg if p == "fig6to8.csv" else v.split("_")[0]
+            ax.bar(xs, ys, width, label=label)
+        ax.set_xticks(range(len(scenarios)))
+        ax.set_xticklabels(scenarios)
+        ax.set_ylabel("PPO profit / episode")
+        ax.set_title("Fig. 6-8 (regions)" if p == "fig6to8.csv" else "Fig. 9-11 (charger mixes)")
+        ax.legend()
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig6to11_scenarios.png"), dpi=130)
+
+
+def plot_e2e(runs, out):
+    rows = read_csv(os.path.join(runs, "train_shopping.csv"))
+    fig, ax1 = plt.subplots(figsize=(7, 4))
+    xs = [int(r["env_steps"]) for r in rows]
+    ax1.plot(xs, [float(r["mean_reward"]) for r in rows], "C0", label="mean reward/step")
+    ax1.set_xlabel("environment steps")
+    ax1.set_ylabel("mean reward / step", color="C0")
+    ax2 = ax1.twinx()
+    ax2.plot(xs, [float(r["total_loss"]) for r in rows], "C1", alpha=0.6, label="PPO loss")
+    ax2.set_ylabel("total loss", color="C1")
+    ax1.set_title("E2E training run (examples/train_shopping)")
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "train_shopping.png"), dpi=130)
+
+
+def main():
+    runs = sys.argv[1] if len(sys.argv) > 1 else "runs"
+    out = sys.argv[2] if len(sys.argv) > 2 else runs
+    os.makedirs(out, exist_ok=True)
+    made = []
+    for name, fn in [
+        ("table2.csv", plot_table2),
+        ("fig4a.csv", plot_fig4a),
+        ("fig4bc.csv", plot_fig4bc),
+        ("fig5.csv", plot_fig5),
+        ("fig6to8.csv", plot_scenarios),
+        ("train_shopping.csv", plot_e2e),
+    ]:
+        if maybe(os.path.join(runs, name)):
+            fn(runs, out)
+            made.append(name)
+        else:
+            print(f"skip: {name} not found in {runs}/")
+    print(f"plotted {len(made)} figure sets into {out}/")
+
+
+if __name__ == "__main__":
+    main()
