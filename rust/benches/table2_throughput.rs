@@ -2,6 +2,14 @@
 //! steps on every execution path. (criterion is unavailable offline; this
 //! uses util::stats' warmup+samples harness. The full paper table with
 //! the python comparator is `chargax bench table2`.)
+//!
+//! Always runs the native rows (scalar-gym comparators + the SoA
+//! `VectorEnv` batch sweep B ∈ {1, 16, 256, 1024}); the PJRT rows run only
+//! when AOT artifacts and a real PJRT runtime are present. Writes the
+//! machine-readable perf trajectory to `BENCH_table2.json` at the repo
+//! root so the numbers are tracked across PRs.
+
+use std::sync::Arc;
 
 use chargax::baselines::policies::{self, RandomPolicy};
 use chargax::baselines::ppo::{PpoParams, PpoTrainer};
@@ -11,69 +19,73 @@ use chargax::env::scalar::{ScalarEnv, ScenarioTables};
 use chargax::env::tree::StationConfig;
 use chargax::runtime::engine::{artifacts_dir, Engine};
 use chargax::runtime::manifest::Manifest;
+use chargax::util::json::{self, Json};
 use chargax::util::rng::Rng;
 use chargax::util::stats;
 
-fn main() {
-    let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("bench skipped: run `make artifacts` first");
-        return;
+struct BenchRow {
+    name: String,
+    batch: usize,
+    steps_per_sec: f64,
+    s_per_100k: f64,
+}
+
+fn row(name: &str, batch: usize, steps: f64, seconds: f64) -> BenchRow {
+    BenchRow {
+        name: name.to_string(),
+        batch,
+        steps_per_sec: steps / seconds,
+        s_per_100k: seconds * 100_000.0 / steps,
     }
-    let manifest = Manifest::load(&dir).unwrap();
-    let store = DataStore::load(&dir.join("data")).unwrap();
-    let engine = Engine::cpu().unwrap();
+}
+
+fn main() {
     let sc = Scenario::default();
+    let dir = artifacts_dir();
+    let store = DataStore::load(&dir.join("data")).ok();
+    let tables: Arc<ScenarioTables> = Arc::new(match &store {
+        Some(s) => ScenarioTables::build(s, &sc).expect("tables from artifacts"),
+        None => {
+            eprintln!("(artifacts/data not exported; using synthetic scenario tables)");
+            ScenarioTables::synthetic_for(&sc)
+        }
+    });
 
     println!("== Table 2 core timings (seconds per 100k env steps) ==\n");
+    let mut rows: Vec<BenchRow> = Vec::new();
 
-    // Chargax fused random rollout (e16).
-    let v16 = manifest.variant("mix10dc6ac_e16").unwrap();
-    let rr = RandomRollout::new(&engine, v16, &store, &sc).unwrap();
-    rr.run(0).unwrap();
-    let chunk = (v16.meta.random_rollout_steps * v16.meta.num_envs) as f64;
-    let s = stats::bench(1, 8, || {
-        rr.run(1).unwrap();
-    });
-    println!(
-        "chargax random (fused, 16 envs): {}/chunk -> {:.2} s/100k",
-        s.fmt_human(),
-        s.mean_s * 100_000.0 / chunk
-    );
-
-    // Chargax PPO(1) and PPO(16).
-    for vkey in ["mix10dc6ac_e1", "mix10dc6ac_e16"] {
-        let v = manifest.variant(vkey).unwrap();
-        let mut session = TrainSession::new(&engine, v, &store, &sc, 0).unwrap();
-        session.step().unwrap();
-        let s = stats::bench(0, 5, || {
-            session.step().unwrap();
-        });
-        println!(
-            "chargax PPO ({:>2} envs) train_iter: {}/iter -> {:.2} s/100k",
-            v.meta.num_envs,
-            s.fmt_human(),
-            s.mean_s * 100_000.0 / v.meta.batch_size as f64
-        );
+    // -- Chargax PJRT rows (gated on artifacts + runtime) -------------------
+    match (Manifest::load(&dir), store.as_ref(), Engine::cpu()) {
+        (Ok(manifest), Some(store), Ok(engine)) => {
+            pjrt_rows(&manifest, store, &engine, &sc, &mut rows);
+        }
+        (manifest, _, engine) => {
+            let why = manifest
+                .err()
+                .map(|e| format!("{e:#}"))
+                .or_else(|| engine.err().map(|e| format!("{e:#}")))
+                .unwrap_or_else(|| "artifacts/data missing".into());
+            println!("chargax PJRT rows skipped: {why}\n");
+        }
     }
 
-    // Scalar-gym comparators.
-    let mk = || ScenarioTables::build(&store, &sc).unwrap();
+    // -- Scalar-gym comparators ---------------------------------------------
     {
-        let mut env = ScalarEnv::new(StationConfig::default(), mk(), 7);
+        let mut env = ScalarEnv::new(StationConfig::default(), Arc::clone(&tables), 7);
         let mut pol = RandomPolicy { rng: Rng::new(3) };
         let s = stats::bench(1, 5, || {
             policies::rollout(&mut env, &mut pol, 20_000);
         });
         println!(
-            "scalar-gym random:               {}/20k -> {:.2} s/100k",
+            "scalar-gym random (B=1):         {}/20k -> {:.2} s/100k",
             s.fmt_human(),
             s.mean_s * 5.0
         );
+        rows.push(row("scalar-gym random", 1, 20_000.0, s.mean_s));
     }
     for envs in [1usize, 16] {
         let params = PpoParams { num_envs: envs, ..Default::default() };
-        let mut tr = PpoTrainer::new(params, StationConfig::default(), mk, 7);
+        let mut tr = PpoTrainer::new(params, StationConfig::default(), Arc::clone(&tables), 7);
         tr.iteration();
         let per_iter = (envs * tr.cfg.rollout_steps) as f64;
         let s = stats::bench(0, 3, || {
@@ -84,5 +96,123 @@ fn main() {
             s.fmt_human(),
             s.mean_s * 100_000.0 / per_iter
         );
+        rows.push(row(&format!("scalar-gym PPO ({envs})"), envs, per_iter, s.mean_s));
+    }
+
+    // -- Native-vector sweep: SoA batched env, random actions ----------------
+    println!("\nnative-vector sweep (SoA step_all, thread-sharded, random actions):");
+    let scalar_b1 = rows
+        .iter()
+        .find(|r| r.name == "scalar-gym random")
+        .map(|r| r.steps_per_sec);
+    let mut b1024_speedup = None;
+    for &b in &[1usize, 16, 256, 1024] {
+        let r = native_vector_row(Arc::clone(&tables), b);
+        let vs = scalar_b1
+            .map(|s| format!("  ({:.1}x vs scalar-gym B=1)", r.steps_per_sec / s))
+            .unwrap_or_default();
+        println!(
+            "  B={b:<5} {:>12.0} steps/s  {:>8.3} s/100k{vs}",
+            r.steps_per_sec, r.s_per_100k
+        );
+        if b == 1024 {
+            b1024_speedup = scalar_b1.map(|s| r.steps_per_sec / s);
+        }
+        rows.push(r);
+    }
+    if let Some(x) = b1024_speedup {
+        println!("\nnative-vector B=1024 vs scalar-gym B=1: {x:.1}x steps/sec");
+    }
+
+    // -- BENCH_table2.json: perf trajectory across PRs -----------------------
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            json::obj(vec![
+                ("variant", Json::Str(r.name.clone())),
+                ("batch", Json::Num(r.batch as f64)),
+                ("steps_per_sec", Json::Num(r.steps_per_sec)),
+                ("s_per_100k", Json::Num(r.s_per_100k)),
+            ])
+        })
+        .collect();
+    let mut top = vec![
+        ("bench", Json::Str("table2_throughput".into())),
+        ("unit", Json::Str("env_steps".into())),
+        ("rows", Json::Arr(json_rows)),
+    ];
+    if let Some(x) = b1024_speedup {
+        top.push(("speedup_native_b1024_vs_scalar_b1", Json::Num(x)));
+    }
+    // Prefer the source checkout root (so the artifact is tracked next to
+    // the repo); fall back to the current directory when the binary runs
+    // from a moved/copied tree.
+    let payload = json::obj(top).to_string();
+    let repo_root = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_table2.json");
+    match std::fs::write(repo_root, &payload) {
+        Ok(()) => println!("wrote {repo_root}"),
+        Err(_) => match std::fs::write("BENCH_table2.json", &payload) {
+            Ok(()) => println!("wrote BENCH_table2.json (cwd)"),
+            Err(e) => eprintln!("could not write BENCH_table2.json: {e}"),
+        },
+    }
+}
+
+/// Raw `VectorEnv::step_all` throughput at batch size `b` (shared
+/// measurement protocol: `vector::measure_step_throughput`).
+fn native_vector_row(tables: Arc<ScenarioTables>, b: usize) -> BenchRow {
+    let (steps_per_sec, s_per_100k) = chargax::env::vector::measure_step_throughput(tables, b);
+    BenchRow {
+        name: format!("native-vector (B={b})"),
+        batch: b,
+        steps_per_sec,
+        s_per_100k,
+    }
+}
+
+/// The AOT fast-path rows (only with artifacts + a real PJRT runtime).
+fn pjrt_rows(
+    manifest: &Manifest,
+    store: &DataStore,
+    engine: &Engine,
+    sc: &Scenario,
+    rows: &mut Vec<BenchRow>,
+) {
+    if let Ok(v16) = manifest.variant("mix10dc6ac_e16") {
+        if let Ok(rr) = RandomRollout::new(engine, v16, store, sc) {
+            let _ = rr.run(0);
+            let chunk = (v16.meta.random_rollout_steps * v16.meta.num_envs) as f64;
+            let s = stats::bench(1, 8, || {
+                rr.run(1).unwrap();
+            });
+            println!(
+                "chargax random (fused, 16 envs): {}/chunk -> {:.2} s/100k",
+                s.fmt_human(),
+                s.mean_s * 100_000.0 / chunk
+            );
+            rows.push(row("chargax random (fused)", 16, chunk, s.mean_s));
+        }
+    }
+    for vkey in ["mix10dc6ac_e1", "mix10dc6ac_e16"] {
+        let Ok(v) = manifest.variant(vkey) else { continue };
+        let Ok(mut session) = TrainSession::new(engine, v, store, sc, 0) else { continue };
+        if session.step().is_err() {
+            continue;
+        }
+        let s = stats::bench(0, 5, || {
+            session.step().unwrap();
+        });
+        println!(
+            "chargax PPO ({:>2} envs) train_iter: {}/iter -> {:.2} s/100k",
+            v.meta.num_envs,
+            s.fmt_human(),
+            s.mean_s * 100_000.0 / v.meta.batch_size as f64
+        );
+        rows.push(row(
+            &format!("chargax PPO ({})", v.meta.num_envs),
+            v.meta.num_envs,
+            v.meta.batch_size as f64,
+            s.mean_s,
+        ));
     }
 }

@@ -15,9 +15,9 @@ pub struct MaxCharge;
 
 impl Policy for MaxCharge {
     fn act(&mut self, env: &ScalarEnv, action: &mut [usize]) {
-        let c = env.cfg.n_chargers();
+        let c = env.cfg().n_chargers();
         for (j, a) in action.iter_mut().enumerate().take(c) {
-            *a = if env.cars[j].is_some() { N_LEVELS - 1 } else { 0 };
+            *a = if env.occupied(j) { N_LEVELS - 1 } else { 0 };
         }
         action[c] = (N_LEVELS_BATTERY - 1) / 2; // zero current
     }
@@ -34,7 +34,7 @@ pub struct RandomPolicy {
 
 impl Policy for RandomPolicy {
     fn act(&mut self, env: &ScalarEnv, action: &mut [usize]) {
-        let c = env.cfg.n_chargers();
+        let c = env.cfg().n_chargers();
         for (j, a) in action.iter_mut().enumerate() {
             let n = if j < c { N_LEVELS } else { N_LEVELS_BATTERY };
             *a = self.rng.below(n as u32) as usize;
@@ -61,15 +61,15 @@ impl Default for PriceThreshold {
 
 impl Policy for PriceThreshold {
     fn act(&mut self, env: &ScalarEnv, action: &mut [usize]) {
-        let c = env.cfg.n_chargers();
-        let hour = (env.t / crate::env::scalar::STEPS_PER_HOUR).min(23);
-        let price = env.tables.price_buy[env.day * 24 + hour];
+        let c = env.cfg().n_chargers();
+        let hour = (env.t() / crate::env::scalar::STEPS_PER_HOUR).min(23);
+        let price = env.tables().price_buy[env.day() * 24 + hour];
         self.price_sum += price as f64;
         self.price_n += 1;
         let mean = (self.price_sum / self.price_n as f64) as f32;
         let cheap = price <= mean;
         for (j, a) in action.iter_mut().enumerate().take(c) {
-            *a = match (env.cars[j].is_some(), cheap) {
+            *a = match (env.occupied(j), cheap) {
                 (false, _) => 0,
                 (true, true) => N_LEVELS - 1,
                 // still serve customers, at reduced rate, when expensive
@@ -113,7 +113,7 @@ pub fn rollout(env: &mut ScalarEnv, policy: &mut dyn Policy, steps: usize) -> Ro
     for _ in 0..steps {
         env.observe(&mut obs);
         policy.act(env, &mut action);
-        let prev_return = env.ep_return;
+        let prev_return = env.ep_return();
         let info: StepInfo = env.step(&action);
         sum_r += info.reward as f64;
         sum_p += info.profit as f64;

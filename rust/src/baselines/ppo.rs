@@ -1,10 +1,16 @@
-//! Pure-Rust PPO on the scalar simulator — the "SB3 on CPU" comparator for
-//! Table 2. Same algorithm and hyperparameters as the fused JAX PPO
-//! (Table 3): vectorized env instances stepped in a host loop, GAE,
-//! minibatched clipped-surrogate epochs, Adam, global grad-norm clip.
+//! Pure-Rust PPO — the "SB3 on CPU" comparator for Table 2. Same algorithm
+//! and hyperparameters as the fused JAX PPO (Table 3): GAE, minibatched
+//! clipped-surrogate epochs, Adam, global grad-norm clip. Rollouts step all
+//! environments through one [`VectorEnv::step_all`] call per time step
+//! (SoA lanes, thread-sharded) instead of a per-env host loop; scenario
+//! tables are shared across lanes via `Arc`.
 
-use crate::env::scalar::{ScalarEnv, ScenarioTables, StepInfo};
+use std::sync::Arc;
+
+use crate::env::core::StepInfo;
+use crate::env::scalar::{ScalarEnv, ScenarioTables};
 use crate::env::tree::StationConfig;
+use crate::env::vector::VectorEnv;
 use crate::util::rng::Rng;
 
 use super::mlp::{Grads, Mlp};
@@ -216,7 +222,7 @@ pub struct TrainStats {
 /// The CPU PPO trainer (comparator).
 pub struct PpoTrainer {
     pub cfg: PpoParams,
-    pub envs: Vec<ScalarEnv>,
+    pub venv: VectorEnv,
     pub mlp: Mlp,
     pub heads: Heads,
     pub adam: Adam,
@@ -227,27 +233,33 @@ pub struct PpoTrainer {
 }
 
 impl PpoTrainer {
+    /// `tables` is built once and shared across all `num_envs` lanes (and
+    /// later greedy-eval envs) via `Arc` — no per-env table rebuild/clone.
     pub fn new(
         cfg: PpoParams,
         station: StationConfig,
-        mk_tables: impl Fn() -> ScenarioTables,
+        tables: impl Into<Arc<ScenarioTables>>,
         seed: u64,
     ) -> PpoTrainer {
         let mut rng = Rng::new(seed);
-        let envs: Vec<ScalarEnv> = (0..cfg.num_envs)
-            .map(|i| ScalarEnv::new(station.clone(), mk_tables(), seed ^ (i as u64 * 7919 + 13)))
+        let seeds: Vec<u64> = (0..cfg.num_envs)
+            .map(|i| seed ^ (i as u64 * 7919 + 13))
             .collect();
-        let obs_dim = envs[0].obs_dim();
-        let heads = Heads::new(envs[0].action_nvec());
+        let venv = VectorEnv::with_seeds(
+            station,
+            vec![tables.into()],
+            vec![0; cfg.num_envs],
+            &seeds,
+        );
+        let obs_dim = venv.obs_dim();
+        let heads = Heads::new(venv.action_nvec());
         let mlp = Mlp::new(&mut rng, obs_dim, cfg.hidden, heads.n_logits);
         let adam = Adam::new(&mlp);
         let mut last_obs = vec![0f32; cfg.num_envs * obs_dim];
-        for (j, env) in envs.iter().enumerate() {
-            env.observe(&mut last_obs[j * obs_dim..(j + 1) * obs_dim]);
-        }
+        venv.observe_all(&mut last_obs);
         PpoTrainer {
             cfg,
-            envs,
+            venv,
             mlp,
             heads,
             adam,
@@ -275,29 +287,38 @@ impl PpoTrainer {
         let mut comp_returns: Vec<f32> = Vec::new();
 
         // ---- rollout ------------------------------------------------------
-        let mut action = vec![0usize; n_ports];
+        // Sample every lane's action on the host, then advance all E envs
+        // with one SoA step_all call (thread-sharded inside VectorEnv).
+        let mut actions = vec![0usize; e * n_ports];
+        let mut infos = vec![StepInfo::default(); e];
+        let mut prev_returns = vec![0f32; e];
         for t in 0..t_len {
             let cache = self.mlp.forward(&self.last_obs);
+            obs_buf[t * e * self.obs_dim..(t + 1) * e * self.obs_dim]
+                .copy_from_slice(&self.last_obs);
             for j in 0..e {
                 let idx = t * e + j;
-                obs_buf[idx * self.obs_dim..(idx + 1) * self.obs_dim]
-                    .copy_from_slice(&self.last_obs[j * self.obs_dim..(j + 1) * self.obs_dim]);
                 let lg = &cache.logits[j * self.heads.n_logits..(j + 1) * self.heads.n_logits];
-                let logp = self.heads.sample(&mut self.rng, lg, &mut action);
-                let prev_return = self.envs[j].ep_return;
-                let info: StepInfo = self.envs[j].step(&action);
-                if info.done {
-                    comp_returns.push(prev_return + info.reward);
-                }
-                act_buf[idx * n_ports..(idx + 1) * n_ports].copy_from_slice(&action);
-                logp_buf[idx] = logp;
+                logp_buf[idx] = self.heads.sample(
+                    &mut self.rng,
+                    lg,
+                    &mut actions[j * n_ports..(j + 1) * n_ports],
+                );
                 val_buf[idx] = cache.value[j];
+                prev_returns[j] = self.venv.lane_ep_return(j);
+            }
+            act_buf[t * e * n_ports..(t + 1) * e * n_ports].copy_from_slice(&actions);
+            self.venv.step_all(&actions, &mut infos);
+            for (j, info) in infos.iter().enumerate() {
+                let idx = t * e + j;
+                if info.done {
+                    comp_returns.push(prev_returns[j] + info.reward);
+                }
                 rew_buf[idx] = info.reward;
                 done_buf[idx] = info.done as i32 as f32;
                 profit_sum += info.profit as f64;
-                self.envs[j]
-                    .observe(&mut self.last_obs[j * self.obs_dim..(j + 1) * self.obs_dim]);
             }
+            self.venv.observe_all(&mut self.last_obs);
         }
         self.env_steps += bsz;
         let last_cache = self.mlp.forward(&self.last_obs);
@@ -426,25 +447,10 @@ impl PpoTrainer {
     }
 
     /// Greedy evaluation for one full episode; returns total reward/profit.
+    /// Reuses the training envs' shared scenario tables (Arc) — no rebuild.
     pub fn eval_episode(&mut self, seed: u64) -> (f32, f32) {
-        let mut env = ScalarEnv::new(
-            self.envs[0].cfg.clone(),
-            ScenarioTables {
-                price_buy: self.envs[0].tables.price_buy.clone(),
-                price_sell_grid: self.envs[0].tables.price_sell_grid.clone(),
-                moer: self.envs[0].tables.moer.clone(),
-                arrival_rate: self.envs[0].tables.arrival_rate.clone(),
-                car_table: self.envs[0].tables.car_table.clone(),
-                car_weights: self.envs[0].tables.car_weights.clone(),
-                user_profile: self.envs[0].tables.user_profile.clone(),
-                n_days: self.envs[0].tables.n_days,
-                alpha: self.envs[0].tables.alpha,
-                beta: self.envs[0].tables.beta,
-                p_sell: self.envs[0].tables.p_sell,
-                traffic: self.envs[0].tables.traffic,
-            },
-            seed,
-        );
+        let mut env =
+            ScalarEnv::new(self.venv.cfg.clone(), self.venv.tables_arc(0), seed);
         let mut obs = vec![0f32; self.obs_dim];
         let mut action = vec![0usize; self.heads.nvec.len()];
         let mut tot_r = 0f32;

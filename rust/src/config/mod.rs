@@ -13,9 +13,14 @@ use crate::util::json::Json;
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub variant: String,
+    /// Execution backend for train/eval: "pjrt" (AOT fast path over
+    /// artifacts) or "native" (pure-Rust VectorEnv PPO, no artifacts).
+    pub backend: String,
     pub scenario: Scenario,
     pub seed: u32,
     pub n_seeds: usize,
+    /// Parallel envs for the native backend (PJRT variants bake their own).
+    pub num_envs: usize,
     pub total_env_steps: usize,
     pub eval_seeds: usize,
     pub paper_scale: bool,
@@ -26,9 +31,11 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             variant: "mix10dc6ac_e12".into(),
+            backend: "pjrt".into(),
             scenario: Scenario::default(),
             seed: 0,
             n_seeds: 3,
+            num_envs: 12,
             total_env_steps: 200_000,
             eval_seeds: 8,
             paper_scale: false,
@@ -74,6 +81,11 @@ impl RunConfig {
     pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
         match key {
             "variant" => self.variant = val.to_string(),
+            "backend" => match val {
+                "pjrt" | "native" => self.backend = val.to_string(),
+                other => return Err(anyhow!("unknown backend '{other}' (pjrt | native)")),
+            },
+            "num_envs" | "envs" => self.num_envs = val.parse()?,
             "scenario" => self.scenario.scenario = val.to_string(),
             "region" => self.scenario.region = val.to_string(),
             "country" => self.scenario.country = val.to_string(),
@@ -113,6 +125,11 @@ mod tests {
         assert_eq!(cfg.scenario.alpha[1], 1.5);
         assert_eq!(cfg.total_env_steps, 5000);
         assert!(cfg.set("bogus", "1").is_err());
+        cfg.set("backend", "native").unwrap();
+        cfg.set("num_envs", "64").unwrap();
+        assert_eq!(cfg.backend, "native");
+        assert_eq!(cfg.num_envs, 64);
+        assert!(cfg.set("backend", "tpu").is_err());
     }
 
     #[test]

@@ -1,9 +1,14 @@
-//! High-level training driver: runs a TrainSession for a step budget,
-//! collects the metric history, and periodically logs / evaluates.
+//! High-level training drivers: the PJRT-backed TrainSession loop and the
+//! native-vector loop (pure-Rust PPO over [`VectorEnv`], no artifacts or
+//! PJRT needed). Both run for a step budget, collect per-iteration metric
+//! history, and periodically log.
 
 use anyhow::Result;
 
+use crate::baselines::ppo::{PpoParams, PpoTrainer};
 use crate::data::{DataStore, Scenario};
+use crate::env::scalar::ScenarioTables;
+use crate::env::tree::StationConfig;
 use crate::runtime::engine::Engine;
 use crate::runtime::manifest::Variant;
 
@@ -74,6 +79,81 @@ pub fn train(
         wallclock_s: t0.elapsed().as_secs_f64(),
         history,
         session,
+    })
+}
+
+pub struct NativeTrainOutcome {
+    pub history: Vec<NamedVec>,
+    pub env_steps: usize,
+    pub wallclock_s: f64,
+    pub trainer: PpoTrainer,
+}
+
+/// Train the native-vector PPO agent (the `--backend native` path): the
+/// pure-Rust PPO whose rollouts advance all envs through
+/// `VectorEnv::step_all`. Scenario tables are built (or synthesized) once
+/// and shared across every lane via `Arc`.
+pub fn train_native(
+    store: Option<&DataStore>,
+    scenario: &Scenario,
+    station: StationConfig,
+    params: PpoParams,
+    opts: &TrainOptions,
+) -> Result<NativeTrainOutcome> {
+    let tables = match store {
+        Some(s) => ScenarioTables::build(s, scenario)?,
+        None => ScenarioTables::synthetic_for(scenario),
+    };
+    let mut tr = PpoTrainer::new(params, station, tables, opts.seed as u64);
+    let batch = tr.cfg.num_envs * tr.cfg.rollout_steps;
+    let iters = opts.total_env_steps.div_ceil(batch).max(1);
+    let fields: Vec<String> = [
+        "mean_reward",
+        "mean_completed_return",
+        "mean_profit",
+        "total_loss",
+        "entropy",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let t0 = std::time::Instant::now();
+    let mut history = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let s = tr.iteration();
+        let m = NamedVec::new(
+            &fields,
+            vec![
+                s.mean_reward,
+                s.completed_return_mean,
+                s.mean_profit,
+                s.total_loss,
+                s.entropy,
+            ],
+        )?;
+        if !opts.quiet && (i % opts.log_every == 0 || i + 1 == iters) {
+            eprintln!(
+                "[native-vector seed={} iter {}/{} steps {}] {}",
+                opts.seed,
+                i + 1,
+                iters,
+                tr.env_steps,
+                m.fmt_fields(&[
+                    "mean_reward",
+                    "mean_completed_return",
+                    "mean_profit",
+                    "total_loss",
+                    "entropy",
+                ])
+            );
+        }
+        history.push(m);
+    }
+    Ok(NativeTrainOutcome {
+        env_steps: tr.env_steps,
+        wallclock_s: t0.elapsed().as_secs_f64(),
+        history,
+        trainer: tr,
     })
 }
 

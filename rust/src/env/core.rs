@@ -1,0 +1,479 @@
+//! Shared pure transition core for the native simulators.
+//!
+//! Every piece of the per-step semantics — action → current mapping,
+//! charging/discharging curves, port current allocation (Eq. 5 projection),
+//! battery update, departures, Poisson arrivals, reward (Eq. 2-3), and the
+//! observation builder — lives here as functions over plain state slices.
+//! [`super::scalar::ScalarEnv`] (B = 1) and [`super::vector::VectorEnv`]
+//! (structure-of-arrays, B lanes) are both thin drivers over this module,
+//! so their semantics cannot drift apart. All randomness flows through a
+//! per-lane [`CounterRng`], making results independent of batch sharding
+//! and thread count.
+
+use crate::data::{DataStore, Scenario};
+use crate::util::rng::CounterRng;
+
+use super::tree::{charging_curve, discharging_curve, StationConfig, StationTree};
+
+pub const STEPS_PER_EPISODE: usize = 288;
+pub const DT_HOURS: f32 = 1.0 / 12.0;
+pub const STEPS_PER_HOUR: usize = 12;
+pub const N_LEVELS: usize = 11;
+pub const N_LEVELS_BATTERY: usize = 21;
+pub const MAX_ARRIVALS: usize = 6;
+pub const FIXED_COST_PER_STEP: f32 = 0.25;
+
+/// A parked car (paper A.1 car state) — the AoS view of one charger lane.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Car {
+    pub soc: f32,
+    pub de_remain: f32,
+    pub dt_remain: f32,
+    pub cap: f32,
+    pub r_bar: f32, // max kW at this port
+    pub tau: f32,
+    pub charge_sensitive: bool, // u = 1
+}
+
+/// Per-step outcome metrics (mirrors METRIC_FIELDS where applicable).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepInfo {
+    pub reward: f32,
+    pub profit: f32,
+    pub energy_to_cars_kwh: f32,
+    pub energy_grid_net_kwh: f32,
+    pub excess_kw: f32,
+    pub missing_kwh: f32,
+    pub overtime_steps: f32,
+    pub rejected: f32,
+    pub departed: f32,
+    pub arrived: f32,
+    pub done: bool,
+}
+
+/// Scenario data resolved to flat tables. Shared across envs/lanes via
+/// `Arc<ScenarioTables>` — built once, never cloned per environment.
+pub struct ScenarioTables {
+    pub price_buy: Vec<f32>,       // [days*24]
+    pub price_sell_grid: Vec<f32>, // [days*24]
+    pub moer: Vec<f32>,            // [days*24]
+    pub arrival_rate: Vec<f32>,    // [24]
+    pub car_table: Vec<f32>,       // [models*4]
+    pub car_weights: Vec<f32>,
+    pub user_profile: Vec<f32>, // [6]
+    pub n_days: usize,
+    pub alpha: [f32; 7],
+    pub beta: f32,
+    pub p_sell: f32,
+    pub traffic: f32,
+}
+
+impl ScenarioTables {
+    pub fn build(store: &DataStore, sc: &Scenario) -> anyhow::Result<ScenarioTables> {
+        let buy = store.price(&sc.country, sc.year)?.clone();
+        let sell: Vec<f32> = buy.iter().map(|x| x * sc.feed_in_ratio).collect();
+        Ok(ScenarioTables {
+            price_sell_grid: sell,
+            price_buy: buy,
+            moer: store.moer.clone(),
+            arrival_rate: store.arrival_shapes[&sc.scenario].clone(),
+            car_table: store.car_table.clone(),
+            car_weights: store.car_weights[&sc.region].clone(),
+            user_profile: store.user_profiles[&sc.scenario].clone(),
+            n_days: store.n_days,
+            alpha: sc.alpha,
+            beta: sc.beta,
+            p_sell: sc.p_sell,
+            traffic: store.traffic[&sc.traffic],
+        })
+    }
+
+    /// Synthetic tables needing no artifacts: flat prices, constant
+    /// arrivals, a 3-model car catalog. Used by tests and by benches/CLI
+    /// paths when `artifacts/data` has not been exported.
+    pub fn synthetic(traffic: f32) -> ScenarioTables {
+        ScenarioTables {
+            price_buy: vec![0.10; 365 * 24],
+            price_sell_grid: vec![0.09; 365 * 24],
+            moer: vec![0.3; 365 * 24],
+            arrival_rate: vec![3.0; 24],
+            car_table: vec![
+                60.0, 11.0, 120.0, 0.6, // model 0
+                90.0, 11.0, 200.0, 0.5, // model 1
+                40.0, 7.0, 50.0, 0.7, // model 2
+            ],
+            car_weights: vec![0.5, 0.3, 0.2],
+            user_profile: vec![1.5, 0.6, 2.5, 3.0, 0.8, 0.65],
+            n_days: 365,
+            alpha: [0.0; 7],
+            beta: 0.1,
+            p_sell: 0.75,
+            traffic,
+        }
+    }
+
+    /// Synthetic tables parameterized by a [`Scenario`] (traffic level,
+    /// price year shift, reward weights), so heterogeneous batches differ
+    /// per lane even without exported artifacts.
+    pub fn synthetic_for(sc: &Scenario) -> ScenarioTables {
+        let traffic = match sc.traffic.as_str() {
+            "low" => 0.5,
+            "high" => 2.0,
+            _ => 1.0,
+        };
+        let mut t = ScenarioTables::synthetic(traffic);
+        let level = 0.08 + 0.02 * (sc.year.saturating_sub(2021) as f32);
+        t.price_buy.iter_mut().for_each(|x| *x = level);
+        t.price_sell_grid
+            .iter_mut()
+            .for_each(|x| *x = level * sc.feed_in_ratio);
+        t.alpha = sc.alpha;
+        t.beta = sc.beta;
+        t.p_sell = sc.p_sell;
+        t
+    }
+}
+
+/// Mutable view of one lane's state (B = 1 slice of the SoA block).
+/// Charger-indexed slices have length C; `i_drawn` has length P = C + 1
+/// (last lane is the battery port).
+pub struct LaneView<'a> {
+    pub t: &'a mut u32,
+    pub day: &'a mut u32,
+    pub battery_soc: &'a mut f32,
+    pub ep_return: &'a mut f32,
+    pub ep_profit: &'a mut f32,
+    pub present: &'a mut [bool],
+    pub soc: &'a mut [f32],
+    pub de_remain: &'a mut [f32],
+    pub dt_remain: &'a mut [f32],
+    pub cap: &'a mut [f32],
+    pub r_bar: &'a mut [f32],
+    pub tau: &'a mut [f32],
+    pub sensitive: &'a mut [bool],
+    pub i_drawn: &'a mut [f32],
+}
+
+/// Immutable view of one lane, for the observation builder.
+pub struct LaneRef<'a> {
+    pub t: u32,
+    pub day: u32,
+    pub battery_soc: f32,
+    pub present: &'a [bool],
+    pub soc: &'a [f32],
+    pub de_remain: &'a [f32],
+    pub dt_remain: &'a [f32],
+    pub r_bar: &'a [f32],
+    pub tau: &'a [f32],
+    pub i_drawn: &'a [f32],
+}
+
+/// Per-worker scratch (no per-step allocations on the hot path).
+pub struct Scratch {
+    pub i_new: Vec<f32>,
+    pub leaf_scale: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new(n_ports: usize) -> Scratch {
+        Scratch {
+            i_new: vec![0.0; n_ports],
+            leaf_scale: vec![1.0; n_ports],
+        }
+    }
+}
+
+pub fn obs_dim(cfg: &StationConfig) -> usize {
+    6 * cfg.n_chargers() + 3 + 4 + 4
+}
+
+pub fn action_nvec(cfg: &StationConfig) -> Vec<usize> {
+    let mut v = vec![N_LEVELS; cfg.n_chargers()];
+    v.push(N_LEVELS_BATTERY);
+    v
+}
+
+fn hour(t: u32) -> usize {
+    (t as usize / STEPS_PER_HOUR).min(23)
+}
+
+/// Reset one lane: clear cars/currents, draw a fresh start day.
+pub fn reset_lane(
+    lane: &mut LaneView<'_>,
+    rng: &mut CounterRng,
+    cfg: &StationConfig,
+    tables: &ScenarioTables,
+) {
+    *lane.t = 0;
+    *lane.day = rng.below(tables.n_days as u32);
+    lane.present.iter_mut().for_each(|x| *x = false);
+    lane.i_drawn.iter_mut().for_each(|x| *x = 0.0);
+    *lane.battery_soc = cfg.battery_soc0;
+    *lane.ep_return = 0.0;
+    *lane.ep_profit = 0.0;
+}
+
+/// One env step for one lane. `action[p]` is the discrete level per port.
+/// Semantically identical to the original per-object `ScalarEnv::step`
+/// (same transition order, same RNG draw order).
+pub fn step_lane(
+    lane: &mut LaneView<'_>,
+    rng: &mut CounterRng,
+    cfg: &StationConfig,
+    tree: &StationTree,
+    tables: &ScenarioTables,
+    action: &[usize],
+    scratch: &mut Scratch,
+) -> StepInfo {
+    let c = cfg.n_chargers();
+    let price_idx = *lane.day as usize * 24 + hour(*lane.t);
+    let price_buy = tables.price_buy[price_idx];
+    let price_sell_grid = tables.price_sell_grid[price_idx];
+    let moer = tables.moer[price_idx];
+
+    // (i) apply actions: level -> fraction -> clamped signed current.
+    let i_new = &mut scratch.i_new;
+    for j in 0..c {
+        if !lane.present[j] {
+            i_new[j] = 0.0;
+            continue;
+        }
+        let frac = action[j] as f32 / (N_LEVELS - 1) as f32;
+        let p_target = frac * tree.p_max[j];
+        let r_ch = charging_curve(lane.soc[j], lane.r_bar[j], lane.tau[j]);
+        let head_up = (1.0 - lane.soc[j]) * lane.cap[j] / DT_HOURS;
+        let p_kw = p_target.min(r_ch).min(head_up).max(0.0);
+        i_new[j] = p_kw * 1000.0 / tree.volt[j];
+    }
+    {
+        // battery lane: symmetric ladder.
+        let half = (N_LEVELS_BATTERY - 1) as f32 / 2.0;
+        let frac = action[c] as f32 / half - 1.0;
+        let p_target = frac * tree.p_max[c];
+        let r_ch = charging_curve(*lane.battery_soc, cfg.battery_p_max_kw, cfg.battery_tau);
+        let r_dis = discharging_curve(*lane.battery_soc, cfg.battery_p_max_kw, cfg.battery_tau);
+        let head_up = (1.0 - *lane.battery_soc) * cfg.battery_capacity_kwh / DT_HOURS;
+        let head_dn = *lane.battery_soc * cfg.battery_capacity_kwh / DT_HOURS;
+        let p_kw = p_target.clamp(-r_dis.min(head_dn), r_ch.min(head_up));
+        i_new[c] = p_kw * 1000.0 / tree.volt[c];
+    }
+    let excess = tree.project_currents_scratch(i_new, &mut scratch.leaf_scale);
+    lane.i_drawn.copy_from_slice(i_new);
+
+    // (ii) charge.
+    let mut de_net = 0f32;
+    let mut grid_cars = 0f32;
+    for j in 0..c {
+        if !lane.present[j] {
+            continue;
+        }
+        let p_kw = tree.volt[j] * lane.i_drawn[j] / 1000.0;
+        let mut e = p_kw * DT_HOURS;
+        e = e
+            .min((1.0 - lane.soc[j]) * lane.cap[j])
+            .max(-lane.soc[j] * lane.cap[j]);
+        lane.soc[j] = (lane.soc[j] + e / lane.cap[j].max(1e-9)).clamp(0.0, 1.0);
+        lane.de_remain[j] -= e;
+        lane.dt_remain[j] -= 1.0;
+        de_net += e;
+        grid_cars += if e > 0.0 {
+            e / tree.eta_port[j]
+        } else {
+            e * tree.eta_port[j]
+        };
+    }
+    let e_bat = {
+        let p_kw = tree.volt[c] * lane.i_drawn[c] / 1000.0;
+        let mut e = p_kw * DT_HOURS;
+        e = e
+            .min((1.0 - *lane.battery_soc) * cfg.battery_capacity_kwh)
+            .max(-*lane.battery_soc * cfg.battery_capacity_kwh);
+        *lane.battery_soc = (*lane.battery_soc + e / cfg.battery_capacity_kwh).clamp(0.0, 1.0);
+        e
+    };
+    let de_grid_net = grid_cars + e_bat;
+    *lane.t += 1;
+
+    // (iii) departures.
+    let mut missing = 0f32;
+    let mut overtime = 0f32;
+    let mut early = 0f32;
+    let mut departed = 0f32;
+    let mut car_discharge = 0f32;
+    for j in 0..c {
+        if !lane.present[j] {
+            continue;
+        }
+        let leave = if lane.sensitive[j] {
+            lane.de_remain[j] <= 1e-6
+        } else {
+            lane.dt_remain[j] <= 0.0
+        };
+        if leave {
+            if lane.sensitive[j] {
+                overtime += (-lane.dt_remain[j]).max(0.0);
+                early += lane.dt_remain[j].max(0.0);
+            } else {
+                missing += lane.de_remain[j].max(0.0);
+            }
+            departed += 1.0;
+            lane.present[j] = false;
+            lane.i_drawn[j] = 0.0;
+        }
+    }
+    // degradation: any car-side discharge this step (computed after
+    // departures clear lanes; cars only charge unless V2G, so this is
+    // battery-dominated).
+    for j in 0..c {
+        let p_kw = tree.volt[j] * lane.i_drawn[j] / 1000.0;
+        if p_kw < 0.0 {
+            car_discharge += -p_kw * DT_HOURS;
+        }
+    }
+
+    // (iv) arrivals.
+    let lam =
+        tables.arrival_rate[hour(*lane.t)] * tables.traffic / STEPS_PER_HOUR as f32;
+    let m = rng.poisson(lam) as usize;
+    let n_free = lane.present.iter().filter(|&&p| !p).count();
+    let n_take = m.min(n_free).min(MAX_ARRIVALS);
+    let rejected = (m - n_take) as f32;
+    let mut taken = 0usize;
+    for slot in 0..c {
+        if taken == n_take {
+            break;
+        }
+        if lane.present[slot] {
+            continue;
+        }
+        let car = sample_car(rng, tree, tables, slot);
+        lane.present[slot] = true;
+        lane.soc[slot] = car.soc;
+        lane.de_remain[slot] = car.de_remain;
+        lane.dt_remain[slot] = car.dt_remain;
+        lane.cap[slot] = car.cap;
+        lane.r_bar[slot] = car.r_bar;
+        lane.tau[slot] = car.tau;
+        lane.sensitive[slot] = car.charge_sensitive;
+        taken += 1;
+    }
+    let arrived = n_take as f32;
+
+    // Reward (Eq. 2-3).
+    let grid_price = if de_grid_net > 0.0 { price_buy } else { price_sell_grid };
+    let profit = tables.p_sell * de_net - grid_price * de_grid_net - FIXED_COST_PER_STEP;
+    let pens = [
+        excess,
+        missing,
+        overtime - tables.beta * early,
+        moer * de_grid_net,
+        rejected,
+        (-e_bat).max(0.0) + car_discharge,
+        (de_net - 0.0).abs(), // grid-demand signal ~0 unless configured
+    ];
+    let mut reward = profit;
+    for (a, c_) in tables.alpha.iter().zip(&pens) {
+        reward -= a * c_;
+    }
+
+    *lane.ep_return += reward;
+    *lane.ep_profit += profit;
+    let done = *lane.t as usize >= STEPS_PER_EPISODE;
+    let info = StepInfo {
+        reward,
+        profit,
+        energy_to_cars_kwh: de_net,
+        energy_grid_net_kwh: de_grid_net,
+        excess_kw: excess,
+        missing_kwh: missing,
+        overtime_steps: overtime,
+        rejected,
+        departed,
+        arrived,
+        done,
+    };
+    if done {
+        reset_lane(lane, rng, cfg, tables);
+    }
+    info
+}
+
+/// Draw a car for `slot` (paper A.1 arrival model). Consumes exactly one
+/// categorical, one normal, one kumaraswamy, and one uniform draw.
+pub fn sample_car(
+    rng: &mut CounterRng,
+    tree: &StationTree,
+    tables: &ScenarioTables,
+    slot: usize,
+) -> Car {
+    let up = &tables.user_profile;
+    let (stay_mean_h, stay_std_h) = (up[0], up[1]);
+    let (soc0_a, soc0_b, target_soc, p_time) = (up[2], up[3], up[4], up[5]);
+    let model = rng.categorical(&tables.car_weights);
+    let row = &tables.car_table[model * 4..model * 4 + 4];
+    let (cap, ac_kw, dc_kw, tau) = (row[0], row[1], row[2], row[3]);
+    let stay_h = stay_mean_h + stay_std_h * rng.normal();
+    let stay_steps = (stay_h / DT_HOURS).round().max(1.0);
+    let soc0 = rng.kumaraswamy(soc0_a, soc0_b).clamp(0.02, 0.98);
+    let de = (target_soc - soc0).max(0.0) * cap;
+    let charge_sensitive = rng.f32() < 1.0 - p_time;
+    let car_rate = if tree.is_dc[slot] { dc_kw } else { ac_kw };
+    Car {
+        soc: soc0,
+        de_remain: de,
+        dt_remain: stay_steps,
+        cap,
+        r_bar: car_rate.min(tree.p_max[slot]),
+        tau,
+        charge_sensitive,
+    }
+}
+
+/// Observation for one lane, mirroring env.py::observe (same layout &
+/// normalizers). `out` has length [`obs_dim`].
+pub fn observe_lane(
+    lane: &LaneRef<'_>,
+    cfg: &StationConfig,
+    tree: &StationTree,
+    tables: &ScenarioTables,
+    out: &mut [f32],
+) {
+    let c = cfg.n_chargers();
+    debug_assert_eq!(out.len(), obs_dim(cfg));
+    let h = hour(lane.t);
+    let hour_next = (h + 1).min(23);
+    for j in 0..c {
+        let occ = lane.present[j] as i32 as f32;
+        let (soc, de, dtr, rhat) = if lane.present[j] {
+            (
+                lane.soc[j],
+                lane.de_remain[j],
+                lane.dt_remain[j],
+                charging_curve(lane.soc[j], lane.r_bar[j], lane.tau[j]),
+            )
+        } else {
+            (0.0, 0.0, 0.0, 0.0)
+        };
+        out[j] = occ;
+        out[c + j] = soc;
+        out[2 * c + j] = de / 100.0;
+        out[3 * c + j] = dtr / STEPS_PER_EPISODE as f32;
+        out[4 * c + j] = rhat / tree.p_max[j];
+        out[5 * c + j] = lane.i_drawn[j] / tree.i_max[j];
+    }
+    let b = 6 * c;
+    out[b] = lane.battery_soc;
+    out[b + 1] = lane.i_drawn[c] / tree.i_max[c];
+    out[b + 2] =
+        charging_curve(lane.battery_soc, cfg.battery_p_max_kw, cfg.battery_tau) / tree.p_max[c];
+    let phase = 2.0 * std::f32::consts::PI * lane.t as f32 / STEPS_PER_EPISODE as f32;
+    out[b + 3] = phase.sin();
+    out[b + 4] = phase.cos();
+    out[b + 5] = ((lane.day % 7) < 5) as i32 as f32;
+    out[b + 6] = lane.day as f32 / tables.n_days as f32;
+    let idx = lane.day as usize * 24 + h;
+    out[b + 7] = tables.price_buy[idx];
+    out[b + 8] = tables.price_buy[lane.day as usize * 24 + hour_next];
+    out[b + 9] = tables.price_sell_grid[idx];
+    out[b + 10] = tables.moer[idx];
+}

@@ -1,13 +1,20 @@
-//! Pure-Rust scalar reference simulator.
+//! Pure-Rust simulators over one shared transition core.
 //!
-//! Semantics mirror the JAX environment (cross-checked in
-//! rust/tests/cross_check.rs against python-exported vectors); the
-//! *architecture* mirrors the paper's comparison environments — a per-step,
-//! per-car, host-RNG object loop — making it the fair CPU-gym comparator
-//! for Table 2.
+//! * [`core`] — the pure per-lane transition semantics (actions, curves,
+//!   current allocation, battery, arrivals/departures, reward, observe),
+//!   cross-checked in rust/tests against python-exported vectors.
+//! * [`vector`] — the native fast path: a structure-of-arrays batched env
+//!   stepping B stations per call, thread-sharded, with counter-based
+//!   per-lane RNG and heterogeneous per-lane scenarios.
+//! * [`scalar`] — the per-step B = 1 comparator wrapper (the paper's
+//!   "classic gym" architecture) used for the Table 2 baseline rows.
 
+pub mod core;
 pub mod scalar;
 pub mod tree;
+pub mod vector;
 
-pub use scalar::{ScalarEnv, ScenarioTables, StepInfo};
+pub use self::core::{Car, ScenarioTables, StepInfo};
+pub use scalar::ScalarEnv;
 pub use tree::{StationConfig, StationTree};
+pub use vector::VectorEnv;

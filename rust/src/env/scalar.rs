@@ -1,377 +1,121 @@
 //! Scalar per-step CPU simulator — the "classic gym" comparator.
 //!
-//! This mirrors the JAX environment's semantics (same transition order,
-//! same charging curve, same reward; deterministic pieces are cross-checked
-//! against python-exported vectors in rust/tests/cross_check.rs) but is
-//! architected the way the paper's comparison environments are: one object
-//! per station, per-step method calls, per-car loops, host RNG. It is the
-//! substrate for the Table 2 baseline rows.
+//! Since the SoA refactor this is a thin B = 1 wrapper over the shared
+//! transition core (`env::core`) driven through [`VectorEnv`]: one station,
+//! per-step method calls, host-visible state accessors. It keeps the
+//! architecture the paper's comparison environments have (one env object,
+//! one step call at a time) and is the substrate for the Table 2 baseline
+//! rows, while being semantically identical to one lane of the batched
+//! environment by construction (cross-checked in rust/tests/vector_env.rs).
 
-use crate::data::{DataStore, Scenario};
-use crate::util::rng::Rng;
+use std::sync::Arc;
 
-use super::tree::{charging_curve, discharging_curve, StationConfig, StationTree};
+use super::tree::{charging_curve, StationConfig, StationTree};
+use super::vector::VectorEnv;
 
-pub const STEPS_PER_EPISODE: usize = 288;
-pub const DT_HOURS: f32 = 1.0 / 12.0;
-pub const STEPS_PER_HOUR: usize = 12;
-pub const N_LEVELS: usize = 11;
-pub const N_LEVELS_BATTERY: usize = 21;
-pub const MAX_ARRIVALS: usize = 6;
-pub const FIXED_COST_PER_STEP: f32 = 0.25;
-
-/// A parked car (paper A.1 car state).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct Car {
-    pub soc: f32,
-    pub de_remain: f32,
-    pub dt_remain: f32,
-    pub cap: f32,
-    pub r_bar: f32, // max kW at this port
-    pub tau: f32,
-    pub charge_sensitive: bool, // u = 1
-}
-
-/// Per-step outcome metrics (mirrors METRIC_FIELDS where applicable).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct StepInfo {
-    pub reward: f32,
-    pub profit: f32,
-    pub energy_to_cars_kwh: f32,
-    pub energy_grid_net_kwh: f32,
-    pub excess_kw: f32,
-    pub missing_kwh: f32,
-    pub overtime_steps: f32,
-    pub rejected: f32,
-    pub departed: f32,
-    pub arrived: f32,
-    pub done: bool,
-}
-
-/// Scenario data resolved to flat tables (borrowed from the DataStore).
-pub struct ScenarioTables {
-    pub price_buy: Vec<f32>,       // [days*24]
-    pub price_sell_grid: Vec<f32>, // [days*24]
-    pub moer: Vec<f32>,            // [days*24]
-    pub arrival_rate: Vec<f32>,    // [24]
-    pub car_table: Vec<f32>,       // [models*4]
-    pub car_weights: Vec<f32>,
-    pub user_profile: Vec<f32>, // [6]
-    pub n_days: usize,
-    pub alpha: [f32; 7],
-    pub beta: f32,
-    pub p_sell: f32,
-    pub traffic: f32,
-}
-
-impl ScenarioTables {
-    pub fn build(store: &DataStore, sc: &Scenario) -> anyhow::Result<ScenarioTables> {
-        let buy = store.price(&sc.country, sc.year)?.clone();
-        let sell: Vec<f32> = buy.iter().map(|x| x * sc.feed_in_ratio).collect();
-        Ok(ScenarioTables {
-            price_sell_grid: sell,
-            price_buy: buy,
-            moer: store.moer.clone(),
-            arrival_rate: store.arrival_shapes[&sc.scenario].clone(),
-            car_table: store.car_table.clone(),
-            car_weights: store.car_weights[&sc.region].clone(),
-            user_profile: store.user_profiles[&sc.scenario].clone(),
-            n_days: store.n_days,
-            alpha: sc.alpha,
-            beta: sc.beta,
-            p_sell: sc.p_sell,
-            traffic: store.traffic[&sc.traffic],
-        })
-    }
-}
+pub use super::core::{
+    Car, ScenarioTables, StepInfo, DT_HOURS, FIXED_COST_PER_STEP, MAX_ARRIVALS, N_LEVELS,
+    N_LEVELS_BATTERY, STEPS_PER_EPISODE, STEPS_PER_HOUR,
+};
 
 pub struct ScalarEnv {
-    pub cfg: StationConfig,
-    pub tree: StationTree,
-    pub tables: ScenarioTables,
-    rng: Rng,
-    // state
-    pub t: usize,
-    pub day: usize,
-    pub cars: Vec<Option<Car>>, // per charger
-    pub i_drawn: Vec<f32>,      // per port (signed A)
-    pub battery_soc: f32,
-    pub ep_return: f32,
-    pub ep_profit: f32,
+    inner: VectorEnv,
 }
 
 impl ScalarEnv {
-    pub fn new(cfg: StationConfig, tables: ScenarioTables, seed: u64) -> ScalarEnv {
-        let tree = StationTree::standard(&cfg);
-        let c = cfg.n_chargers();
-        let p = cfg.n_ports();
-        let mut env = ScalarEnv {
-            tree,
-            tables,
-            rng: Rng::new(seed),
-            t: 0,
-            day: 0,
-            cars: vec![None; c],
-            i_drawn: vec![0.0; p],
-            battery_soc: cfg.battery_soc0,
-            ep_return: 0.0,
-            ep_profit: 0.0,
-            cfg,
-        };
-        env.reset();
-        env
+    pub fn new(
+        cfg: StationConfig,
+        tables: impl Into<Arc<ScenarioTables>>,
+        seed: u64,
+    ) -> ScalarEnv {
+        ScalarEnv {
+            inner: VectorEnv::with_seeds(cfg, vec![tables.into()], vec![0], &[seed]),
+        }
+    }
+
+    pub fn cfg(&self) -> &StationConfig {
+        &self.inner.cfg
+    }
+
+    pub fn tree(&self) -> &StationTree {
+        &self.inner.tree
+    }
+
+    pub fn tables(&self) -> &ScenarioTables {
+        self.inner.tables_for(0)
+    }
+
+    /// Share this env's scenario tables (cheap Arc clone).
+    pub fn tables_arc(&self) -> Arc<ScenarioTables> {
+        self.inner.tables_arc(0)
     }
 
     pub fn n_ports(&self) -> usize {
-        self.cfg.n_ports()
+        self.inner.n_ports()
     }
 
     pub fn obs_dim(&self) -> usize {
-        6 * self.cfg.n_chargers() + 3 + 4 + 4
+        self.inner.obs_dim()
     }
 
     pub fn action_nvec(&self) -> Vec<usize> {
-        let mut v = vec![N_LEVELS; self.cfg.n_chargers()];
-        v.push(N_LEVELS_BATTERY);
-        v
+        self.inner.action_nvec()
+    }
+
+    pub fn t(&self) -> usize {
+        self.inner.lane_t(0)
+    }
+
+    pub fn day(&self) -> usize {
+        self.inner.lane_day(0)
+    }
+
+    pub fn battery_soc(&self) -> f32 {
+        self.inner.lane_battery_soc(0)
+    }
+
+    pub fn ep_return(&self) -> f32 {
+        self.inner.lane_ep_return(0)
+    }
+
+    pub fn ep_profit(&self) -> f32 {
+        self.inner.lane_ep_profit(0)
+    }
+
+    /// Signed per-port currents (A); last entry is the battery port.
+    pub fn i_drawn(&self) -> &[f32] {
+        self.inner.lane_i_drawn(0)
+    }
+
+    /// The car parked at charger `slot`, if any.
+    pub fn car(&self, slot: usize) -> Option<Car> {
+        self.inner.lane_car(0, slot)
+    }
+
+    pub fn occupied(&self, slot: usize) -> bool {
+        self.car(slot).is_some()
     }
 
     pub fn reset(&mut self) {
-        self.t = 0;
-        self.day = self.rng.below(self.tables.n_days as u32) as usize;
-        self.cars.iter_mut().for_each(|c| *c = None);
-        self.i_drawn.iter_mut().for_each(|i| *i = 0.0);
-        self.battery_soc = self.cfg.battery_soc0;
-        self.ep_return = 0.0;
-        self.ep_profit = 0.0;
-    }
-
-    fn hour(&self) -> usize {
-        (self.t / STEPS_PER_HOUR).min(23)
-    }
-
-    fn price_idx(&self) -> usize {
-        self.day * 24 + self.hour()
+        self.inner.reset_lane_idx(0);
     }
 
     /// One env step. `action[p]` is the discrete level per port.
     pub fn step(&mut self, action: &[usize]) -> StepInfo {
-        let c = self.cfg.n_chargers();
-        let p = self.cfg.n_ports();
-        let price_buy = self.tables.price_buy[self.price_idx()];
-        let price_sell_grid = self.tables.price_sell_grid[self.price_idx()];
-        let moer = self.tables.moer[self.price_idx()];
-
-        // (i) apply actions: level -> fraction -> clamped signed current.
-        let mut i_new = vec![0f32; p];
-        for j in 0..c {
-            let Some(car) = self.cars[j] else { continue };
-            let frac = action[j] as f32 / (N_LEVELS - 1) as f32;
-            let p_target = frac * self.tree.p_max[j];
-            let r_ch = charging_curve(car.soc, car.r_bar, car.tau);
-            let head_up = (1.0 - car.soc) * car.cap / DT_HOURS;
-            let p_kw = p_target.min(r_ch).min(head_up).max(0.0);
-            i_new[j] = p_kw * 1000.0 / self.tree.volt[j];
-        }
-        {
-            // battery lane: symmetric ladder.
-            let half = (N_LEVELS_BATTERY - 1) as f32 / 2.0;
-            let frac = action[c] as f32 / half - 1.0;
-            let p_target = frac * self.tree.p_max[c];
-            let r_ch = charging_curve(self.battery_soc, self.cfg.battery_p_max_kw, self.cfg.battery_tau);
-            let r_dis = discharging_curve(self.battery_soc, self.cfg.battery_p_max_kw, self.cfg.battery_tau);
-            let head_up = (1.0 - self.battery_soc) * self.cfg.battery_capacity_kwh / DT_HOURS;
-            let head_dn = self.battery_soc * self.cfg.battery_capacity_kwh / DT_HOURS;
-            let p_kw = p_target.clamp(-r_dis.min(head_dn), r_ch.min(head_up));
-            i_new[c] = p_kw * 1000.0 / self.tree.volt[c];
-        }
-        let excess = self.tree.project_currents(&mut i_new);
-        self.i_drawn = i_new;
-
-        // (ii) charge.
-        let mut de_net = 0f32;
-        let mut grid_cars = 0f32;
-        for j in 0..c {
-            let Some(car) = self.cars[j].as_mut() else { continue };
-            let p_kw = self.tree.volt[j] * self.i_drawn[j] / 1000.0;
-            let mut e = p_kw * DT_HOURS;
-            e = e.min((1.0 - car.soc) * car.cap).max(-car.soc * car.cap);
-            car.soc = (car.soc + e / car.cap.max(1e-9)).clamp(0.0, 1.0);
-            car.de_remain -= e;
-            car.dt_remain -= 1.0;
-            de_net += e;
-            grid_cars += if e > 0.0 {
-                e / self.tree.eta_port[j]
-            } else {
-                e * self.tree.eta_port[j]
-            };
-        }
-        let e_bat = {
-            let p_kw = self.tree.volt[c] * self.i_drawn[c] / 1000.0;
-            let mut e = p_kw * DT_HOURS;
-            e = e
-                .min((1.0 - self.battery_soc) * self.cfg.battery_capacity_kwh)
-                .max(-self.battery_soc * self.cfg.battery_capacity_kwh);
-            self.battery_soc =
-                (self.battery_soc + e / self.cfg.battery_capacity_kwh).clamp(0.0, 1.0);
-            e
-        };
-        let de_grid_net = grid_cars + e_bat;
-        self.t += 1;
-
-        // (iii) departures.
-        let mut missing = 0f32;
-        let mut overtime = 0f32;
-        let mut early = 0f32;
-        let mut departed = 0f32;
-        let mut car_discharge = 0f32;
-        for j in 0..c {
-            let Some(car) = self.cars[j] else { continue };
-            let leave = if car.charge_sensitive {
-                car.de_remain <= 1e-6
-            } else {
-                car.dt_remain <= 0.0
-            };
-            if leave {
-                if car.charge_sensitive {
-                    overtime += (-car.dt_remain).max(0.0);
-                    early += car.dt_remain.max(0.0);
-                } else {
-                    missing += car.de_remain.max(0.0);
-                }
-                departed += 1.0;
-                self.cars[j] = None;
-                self.i_drawn[j] = 0.0;
-            }
-        }
-        // degradation: any car-side discharge this step (computed before
-        // departures clear lanes; cars only charge unless V2G, so this is
-        // battery-dominated).
-        for j in 0..c {
-            let p_kw = self.tree.volt[j] * self.i_drawn[j] / 1000.0;
-            if p_kw < 0.0 {
-                car_discharge += -p_kw * DT_HOURS;
-            }
-        }
-
-        // (iv) arrivals.
-        let lam = self.tables.arrival_rate[self.hour()] * self.tables.traffic
-            / STEPS_PER_HOUR as f32;
-        let m = self.rng.poisson(lam) as usize;
-        let free: Vec<usize> = (0..c).filter(|&j| self.cars[j].is_none()).collect();
-        let n_take = m.min(free.len()).min(MAX_ARRIVALS);
-        let rejected = (m - n_take) as f32;
-        for &slot in free.iter().take(n_take) {
-            self.cars[slot] = Some(self.sample_car(slot));
-        }
-        let arrived = n_take as f32;
-
-        // Reward (Eq. 2-3).
-        let grid_price = if de_grid_net > 0.0 { price_buy } else { price_sell_grid };
-        let profit =
-            self.tables.p_sell * de_net - grid_price * de_grid_net - FIXED_COST_PER_STEP;
-        let pens = [
-            excess,
-            missing,
-            overtime - self.tables.beta * early,
-            moer * de_grid_net,
-            rejected,
-            (-e_bat).max(0.0) + car_discharge,
-            (de_net - 0.0).abs(), // grid-demand signal ~0 unless configured
-        ];
-        let mut reward = profit;
-        for (a, c_) in self.tables.alpha.iter().zip(&pens) {
-            reward -= a * c_;
-        }
-
-        self.ep_return += reward;
-        self.ep_profit += profit;
-        let done = self.t >= STEPS_PER_EPISODE;
-        let info = StepInfo {
-            reward,
-            profit,
-            energy_to_cars_kwh: de_net,
-            energy_grid_net_kwh: de_grid_net,
-            excess_kw: excess,
-            missing_kwh: missing,
-            overtime_steps: overtime,
-            rejected,
-            departed,
-            arrived,
-            done,
-        };
-        if done {
-            self.reset();
-        }
-        info
-    }
-
-    fn sample_car(&mut self, slot: usize) -> Car {
-        let up = &self.tables.user_profile;
-        let (stay_mean_h, stay_std_h) = (up[0], up[1]);
-        let (soc0_a, soc0_b, target_soc, p_time) = (up[2], up[3], up[4], up[5]);
-        let model = self.rng.categorical(&self.tables.car_weights);
-        let row = &self.tables.car_table[model * 4..model * 4 + 4];
-        let (cap, ac_kw, dc_kw, tau) = (row[0], row[1], row[2], row[3]);
-        let stay_h = stay_mean_h + stay_std_h * self.rng.normal();
-        let stay_steps = (stay_h / DT_HOURS).round().max(1.0);
-        let soc0 = self.rng.kumaraswamy(soc0_a, soc0_b).clamp(0.02, 0.98);
-        let de = (target_soc - soc0).max(0.0) * cap;
-        let charge_sensitive = self.rng.f32() < 1.0 - p_time;
-        let car_rate = if self.tree.is_dc[slot] { dc_kw } else { ac_kw };
-        Car {
-            soc: soc0,
-            de_remain: de,
-            dt_remain: stay_steps,
-            cap,
-            r_bar: car_rate.min(self.tree.p_max[slot]),
-            tau,
-            charge_sensitive,
-        }
+        let mut infos = [StepInfo::default()];
+        self.inner.step_all(action, &mut infos);
+        infos[0]
     }
 
     /// Observation mirroring env.py::observe (same layout & normalizers).
     pub fn observe(&self, out: &mut [f32]) {
-        let c = self.cfg.n_chargers();
-        debug_assert_eq!(out.len(), self.obs_dim());
-        let hour = self.hour();
-        let hour_next = (hour + 1).min(23);
-        for j in 0..c {
-            let car = self.cars[j];
-            let occ = car.is_some() as i32 as f32;
-            let (soc, de, dtr, rhat) = match car {
-                Some(cc) => (
-                    cc.soc,
-                    cc.de_remain,
-                    cc.dt_remain,
-                    charging_curve(cc.soc, cc.r_bar, cc.tau),
-                ),
-                None => (0.0, 0.0, 0.0, 0.0),
-            };
-            out[j] = occ;
-            out[c + j] = soc;
-            out[2 * c + j] = de / 100.0;
-            out[3 * c + j] = dtr / STEPS_PER_EPISODE as f32;
-            out[4 * c + j] = rhat / self.tree.p_max[j];
-            out[5 * c + j] = self.i_drawn[j] / self.tree.i_max[j];
-        }
-        let b = 6 * c;
-        out[b] = self.battery_soc;
-        out[b + 1] = self.i_drawn[c] / self.tree.i_max[c];
-        out[b + 2] = charging_curve(
-            self.battery_soc,
-            self.cfg.battery_p_max_kw,
-            self.cfg.battery_tau,
-        ) / self.tree.p_max[c];
-        let phase = 2.0 * std::f32::consts::PI * self.t as f32 / STEPS_PER_EPISODE as f32;
-        out[b + 3] = phase.sin();
-        out[b + 4] = phase.cos();
-        out[b + 5] = ((self.day % 7) < 5) as i32 as f32;
-        out[b + 6] = self.day as f32 / self.tables.n_days as f32;
-        let idx = self.day * 24 + hour;
-        out[b + 7] = self.tables.price_buy[idx];
-        out[b + 8] = self.tables.price_buy[self.day * 24 + hour_next];
-        out[b + 9] = self.tables.price_sell_grid[idx];
-        out[b + 10] = self.tables.moer[idx];
+        self.inner.observe_lane_into(0, out);
+    }
+
+    /// Estimated deliverable rate right now for an occupied slot (kW).
+    pub fn charge_rate_hat(&self, slot: usize) -> f32 {
+        self.car(slot)
+            .map(|car| charging_curve(car.soc, car.r_bar, car.tau))
+            .unwrap_or(0.0)
     }
 }

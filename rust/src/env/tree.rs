@@ -135,11 +135,18 @@ impl StationTree {
     /// paper's depth-2 trees even with mixed-sign V2G flows). Returns the
     /// pre-projection excess (kW).
     pub fn project_currents(&self, i_drawn: &mut [f32]) -> f32 {
+        let mut leaf_scale = vec![1f32; self.n_ports()];
+        self.project_currents_scratch(i_drawn, &mut leaf_scale)
+    }
+
+    /// Allocation-free variant for the vectorized hot path: `leaf_scale`
+    /// is caller-provided scratch of length `n_ports()`.
+    pub fn project_currents_scratch(&self, i_drawn: &mut [f32], leaf_scale: &mut [f32]) -> f32 {
         const EPS: f32 = 1e-9;
         let p = self.n_ports();
         let mut excess = 0f32;
         for pass in 0..2 {
-            let mut leaf_scale = vec![1f32; p];
+            leaf_scale.iter_mut().for_each(|x| *x = 1.0);
             for n in 0..self.n_nodes() {
                 let mut flow = 0f32;
                 for j in 0..p {

@@ -1,0 +1,598 @@
+//! Native batched environment: B stations stepped in lockstep over flat
+//! structure-of-arrays state.
+//!
+//! This is the Rust-native analogue of the paper's vectorized JAX
+//! environment (and of Jumanji-style batched pure-function envs): all
+//! per-car/per-port/per-env state lives in flat `Vec<f32>`/`Vec<u32>`
+//! lanes of shape `[B, ...]`, one `step_all` call advances every lane, and
+//! large batches are sharded across OS threads with `std::thread::scope`
+//! (no external dependency). Each lane carries its own counter-based
+//! [`CounterRng`], so results are bit-identical for any shard count or
+//! thread schedule.
+//!
+//! Batches may be **heterogeneous**: every lane holds an index into a set
+//! of shared `Arc<ScenarioTables>`, so one batch can mix countries, price
+//! years, traffic levels, and user profiles — multi-scenario training in a
+//! single rollout.
+
+use std::sync::Arc;
+
+use crate::util::rng::CounterRng;
+
+use super::core::{self, LaneRef, LaneView, Scratch, ScenarioTables, StepInfo};
+use super::tree::{StationConfig, StationTree};
+
+/// Don't spawn shard threads below this batch size; the per-lane work is
+/// microseconds and thread dispatch would dominate.
+const PAR_MIN_BATCH: usize = 64;
+
+/// Keep every shard at least this many lanes so scoped-thread spawn cost
+/// (~tens of µs) stays small relative to per-shard stepping work.
+const MIN_LANES_PER_SHARD: usize = 32;
+
+pub struct VectorEnv {
+    pub cfg: StationConfig,
+    pub tree: StationTree,
+    tables: Vec<Arc<ScenarioTables>>,
+    lane_scenario: Vec<u32>, // [B] index into `tables`
+    b: usize,
+    c: usize,
+    p: usize,
+    parallel: bool,
+    /// available_parallelism() cached at construction — the std call is
+    /// documented as expensive and step_all runs once per env step.
+    threads: usize,
+    // per-env lanes [B]
+    t: Vec<u32>,
+    day: Vec<u32>,
+    battery_soc: Vec<f32>,
+    ep_return: Vec<f32>,
+    ep_profit: Vec<f32>,
+    rng: Vec<CounterRng>,
+    // per-charger lanes [B * C]
+    present: Vec<bool>,
+    soc: Vec<f32>,
+    de_remain: Vec<f32>,
+    dt_remain: Vec<f32>,
+    cap: Vec<f32>,
+    r_bar: Vec<f32>,
+    tau: Vec<f32>,
+    sensitive: Vec<bool>,
+    // per-port lanes [B * P]
+    i_drawn: Vec<f32>,
+}
+
+impl VectorEnv {
+    /// Homogeneous batch: B lanes sharing one scenario. Lane j's RNG
+    /// stream is derived as `CounterRng::derive(seed, j)`.
+    pub fn new(
+        cfg: StationConfig,
+        tables: impl Into<Arc<ScenarioTables>>,
+        batch: usize,
+        seed: u64,
+    ) -> VectorEnv {
+        let rngs: Vec<CounterRng> =
+            (0..batch).map(|j| CounterRng::derive(seed, j as u64)).collect();
+        VectorEnv::new_mixed(cfg, vec![tables.into()], vec![0; batch], rngs)
+    }
+
+    /// Heterogeneous batch: lane j runs scenario `lane_scenario[j]`
+    /// (index into `tables`) with its own pre-seeded RNG stream.
+    pub fn with_seeds(
+        cfg: StationConfig,
+        tables: Vec<Arc<ScenarioTables>>,
+        lane_scenario: Vec<usize>,
+        seeds: &[u64],
+    ) -> VectorEnv {
+        assert_eq!(lane_scenario.len(), seeds.len());
+        let rngs: Vec<CounterRng> = seeds.iter().map(|&s| CounterRng::new(s)).collect();
+        VectorEnv::new_mixed(cfg, tables, lane_scenario, rngs)
+    }
+
+    fn new_mixed(
+        cfg: StationConfig,
+        tables: Vec<Arc<ScenarioTables>>,
+        lane_scenario: Vec<usize>,
+        rngs: Vec<CounterRng>,
+    ) -> VectorEnv {
+        assert!(!tables.is_empty(), "need at least one scenario table");
+        assert_eq!(lane_scenario.len(), rngs.len());
+        for &s in &lane_scenario {
+            assert!(s < tables.len(), "lane scenario index {s} out of range");
+        }
+        let b = lane_scenario.len();
+        let tree = StationTree::standard(&cfg);
+        let c = cfg.n_chargers();
+        let p = cfg.n_ports();
+        let mut env = VectorEnv {
+            tree,
+            tables,
+            lane_scenario: lane_scenario.iter().map(|&s| s as u32).collect(),
+            b,
+            c,
+            p,
+            parallel: true,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            t: vec![0; b],
+            day: vec![0; b],
+            battery_soc: vec![cfg.battery_soc0; b],
+            ep_return: vec![0.0; b],
+            ep_profit: vec![0.0; b],
+            rng: rngs,
+            present: vec![false; b * c],
+            soc: vec![0.0; b * c],
+            de_remain: vec![0.0; b * c],
+            dt_remain: vec![0.0; b * c],
+            cap: vec![0.0; b * c],
+            r_bar: vec![0.0; b * c],
+            tau: vec![0.0; b * c],
+            sensitive: vec![false; b * c],
+            i_drawn: vec![0.0; b * p],
+            cfg,
+        };
+        env.reset_all();
+        env
+    }
+
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    pub fn n_ports(&self) -> usize {
+        self.p
+    }
+
+    pub fn n_chargers(&self) -> usize {
+        self.c
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        core::obs_dim(&self.cfg)
+    }
+
+    pub fn action_nvec(&self) -> Vec<usize> {
+        core::action_nvec(&self.cfg)
+    }
+
+    /// Enable/disable thread sharding (on by default; sharding never
+    /// changes results, only wall-clock).
+    pub fn set_parallel(&mut self, on: bool) {
+        self.parallel = on;
+    }
+
+    pub fn tables_for(&self, lane: usize) -> &ScenarioTables {
+        &self.tables[self.lane_scenario[lane] as usize]
+    }
+
+    /// Share lane `lane`'s scenario tables (cheap Arc clone).
+    pub fn tables_arc(&self, lane: usize) -> Arc<ScenarioTables> {
+        Arc::clone(&self.tables[self.lane_scenario[lane] as usize])
+    }
+
+    // -- lane accessors (used by the B=1 ScalarEnv wrapper and tests) ------
+
+    pub fn lane_t(&self, lane: usize) -> usize {
+        self.t[lane] as usize
+    }
+
+    pub fn lane_day(&self, lane: usize) -> usize {
+        self.day[lane] as usize
+    }
+
+    pub fn lane_battery_soc(&self, lane: usize) -> f32 {
+        self.battery_soc[lane]
+    }
+
+    pub fn lane_ep_return(&self, lane: usize) -> f32 {
+        self.ep_return[lane]
+    }
+
+    pub fn lane_ep_profit(&self, lane: usize) -> f32 {
+        self.ep_profit[lane]
+    }
+
+    pub fn lane_i_drawn(&self, lane: usize) -> &[f32] {
+        &self.i_drawn[lane * self.p..(lane + 1) * self.p]
+    }
+
+    /// AoS view of one charger slot (None when unoccupied).
+    pub fn lane_car(&self, lane: usize, slot: usize) -> Option<core::Car> {
+        let k = lane * self.c + slot;
+        if !self.present[k] {
+            return None;
+        }
+        Some(core::Car {
+            soc: self.soc[k],
+            de_remain: self.de_remain[k],
+            dt_remain: self.dt_remain[k],
+            cap: self.cap[k],
+            r_bar: self.r_bar[k],
+            tau: self.tau[k],
+            charge_sensitive: self.sensitive[k],
+        })
+    }
+
+    /// Reset every lane (fresh day draw per lane RNG).
+    pub fn reset_all(&mut self) {
+        for lane in 0..self.b {
+            self.reset_lane_idx(lane);
+        }
+    }
+
+    pub fn reset_lane_idx(&mut self, lane: usize) {
+        let (c, p) = (self.c, self.p);
+        let tables = Arc::clone(&self.tables[self.lane_scenario[lane] as usize]);
+        let mut view = LaneView {
+            t: &mut self.t[lane],
+            day: &mut self.day[lane],
+            battery_soc: &mut self.battery_soc[lane],
+            ep_return: &mut self.ep_return[lane],
+            ep_profit: &mut self.ep_profit[lane],
+            present: &mut self.present[lane * c..(lane + 1) * c],
+            soc: &mut self.soc[lane * c..(lane + 1) * c],
+            de_remain: &mut self.de_remain[lane * c..(lane + 1) * c],
+            dt_remain: &mut self.dt_remain[lane * c..(lane + 1) * c],
+            cap: &mut self.cap[lane * c..(lane + 1) * c],
+            r_bar: &mut self.r_bar[lane * c..(lane + 1) * c],
+            tau: &mut self.tau[lane * c..(lane + 1) * c],
+            sensitive: &mut self.sensitive[lane * c..(lane + 1) * c],
+            i_drawn: &mut self.i_drawn[lane * p..(lane + 1) * p],
+        };
+        core::reset_lane(&mut view, &mut self.rng[lane], &self.cfg, &tables);
+    }
+
+    /// Step every lane. `actions` is `[B * P]` (row-major per lane),
+    /// `infos` receives one [`StepInfo`] per lane. Shard count is chosen
+    /// from `available_parallelism`; results are identical for any count.
+    pub fn step_all(&mut self, actions: &[usize], infos: &mut [StepInfo]) {
+        let shards = if self.parallel && self.b >= PAR_MIN_BATCH {
+            self.threads.min(self.b / MIN_LANES_PER_SHARD).max(1)
+        } else {
+            1
+        };
+        self.step_all_sharded(actions, infos, shards);
+    }
+
+    /// Step with an explicit shard count (exposed so tests can prove
+    /// thread-count independence).
+    pub fn step_all_sharded(&mut self, actions: &[usize], infos: &mut [StepInfo], shards: usize) {
+        assert_eq!(actions.len(), self.b * self.p, "actions must be [B * n_ports]");
+        assert_eq!(infos.len(), self.b, "infos must be [B]");
+        let shards = shards.clamp(1, self.b.max(1));
+        let lanes_per = self.b.div_ceil(shards);
+        let (c, p) = (self.c, self.p);
+        let cfg = &self.cfg;
+        let tree = &self.tree;
+        let tables: &[Arc<ScenarioTables>] = &self.tables;
+
+        if shards == 1 {
+            step_lanes(
+                cfg,
+                tree,
+                tables,
+                &self.lane_scenario,
+                &mut self.t,
+                &mut self.day,
+                &mut self.battery_soc,
+                &mut self.ep_return,
+                &mut self.ep_profit,
+                &mut self.rng,
+                &mut self.present,
+                &mut self.soc,
+                &mut self.de_remain,
+                &mut self.dt_remain,
+                &mut self.cap,
+                &mut self.r_bar,
+                &mut self.tau,
+                &mut self.sensitive,
+                &mut self.i_drawn,
+                actions,
+                infos,
+            );
+            return;
+        }
+
+        // Split every SoA lane into per-shard chunks and step them on
+        // scoped threads. Chunks are disjoint, so no synchronization is
+        // needed; lane RNGs are counter-based, so the schedule is
+        // irrelevant to the results.
+        let mut scen = self.lane_scenario.as_slice();
+        let mut t = self.t.as_mut_slice();
+        let mut day = self.day.as_mut_slice();
+        let mut bsoc = self.battery_soc.as_mut_slice();
+        let mut ep_r = self.ep_return.as_mut_slice();
+        let mut ep_p = self.ep_profit.as_mut_slice();
+        let mut rng = self.rng.as_mut_slice();
+        let mut present = self.present.as_mut_slice();
+        let mut soc = self.soc.as_mut_slice();
+        let mut de = self.de_remain.as_mut_slice();
+        let mut dt = self.dt_remain.as_mut_slice();
+        let mut cap = self.cap.as_mut_slice();
+        let mut r_bar = self.r_bar.as_mut_slice();
+        let mut tau = self.tau.as_mut_slice();
+        let mut sens = self.sensitive.as_mut_slice();
+        let mut i_drawn = self.i_drawn.as_mut_slice();
+        let mut acts = actions;
+        let mut infos = infos;
+
+        std::thread::scope(|scope| {
+            let mut remaining = self.b;
+            while remaining > 0 {
+                let take = lanes_per.min(remaining);
+                remaining -= take;
+
+                macro_rules! split_mut {
+                    ($v:ident, $n:expr) => {{
+                        let (head, rest) = std::mem::take(&mut $v).split_at_mut($n);
+                        $v = rest;
+                        head
+                    }};
+                }
+                macro_rules! split_ref {
+                    ($v:ident, $n:expr) => {{
+                        let (head, rest) = $v.split_at($n);
+                        $v = rest;
+                        head
+                    }};
+                }
+
+                let scen_h = split_ref!(scen, take);
+                let t_h = split_mut!(t, take);
+                let day_h = split_mut!(day, take);
+                let bsoc_h = split_mut!(bsoc, take);
+                let ep_r_h = split_mut!(ep_r, take);
+                let ep_p_h = split_mut!(ep_p, take);
+                let rng_h = split_mut!(rng, take);
+                let present_h = split_mut!(present, take * c);
+                let soc_h = split_mut!(soc, take * c);
+                let de_h = split_mut!(de, take * c);
+                let dt_h = split_mut!(dt, take * c);
+                let cap_h = split_mut!(cap, take * c);
+                let r_bar_h = split_mut!(r_bar, take * c);
+                let tau_h = split_mut!(tau, take * c);
+                let sens_h = split_mut!(sens, take * c);
+                let i_drawn_h = split_mut!(i_drawn, take * p);
+                let acts_h = split_ref!(acts, take * p);
+                let infos_h = split_mut!(infos, take);
+
+                scope.spawn(move || {
+                    step_lanes(
+                        cfg, tree, tables, scen_h, t_h, day_h, bsoc_h, ep_r_h, ep_p_h,
+                        rng_h, present_h, soc_h, de_h, dt_h, cap_h, r_bar_h, tau_h,
+                        sens_h, i_drawn_h, acts_h, infos_h,
+                    );
+                });
+            }
+        });
+    }
+
+    /// Observations for every lane into `out` (`[B * obs_dim]` row-major).
+    pub fn observe_all(&self, out: &mut [f32]) {
+        let d = self.obs_dim();
+        assert_eq!(out.len(), self.b * d, "out must be [B * obs_dim]");
+        for (lane, row) in out.chunks_mut(d).enumerate() {
+            self.observe_lane_into(lane, row);
+        }
+    }
+
+    pub fn observe_lane_into(&self, lane: usize, out: &mut [f32]) {
+        let (c, p) = (self.c, self.p);
+        let view = LaneRef {
+            t: self.t[lane],
+            day: self.day[lane],
+            battery_soc: self.battery_soc[lane],
+            present: &self.present[lane * c..(lane + 1) * c],
+            soc: &self.soc[lane * c..(lane + 1) * c],
+            de_remain: &self.de_remain[lane * c..(lane + 1) * c],
+            dt_remain: &self.dt_remain[lane * c..(lane + 1) * c],
+            r_bar: &self.r_bar[lane * c..(lane + 1) * c],
+            tau: &self.tau[lane * c..(lane + 1) * c],
+            i_drawn: &self.i_drawn[lane * p..(lane + 1) * p],
+        };
+        core::observe_lane(
+            &view,
+            &self.cfg,
+            &self.tree,
+            &self.tables[self.lane_scenario[lane] as usize],
+            out,
+        );
+    }
+}
+
+/// Measure raw `step_all` throughput at batch size `b` with random actions
+/// refreshed every step: one warm pass then one timed pass. Shared by
+/// `benches/table2_throughput` and `chargax bench table2` so the JSON
+/// artifact and the printed table can never use different protocols.
+/// Returns (env-steps/sec, seconds per 100k env steps).
+pub fn measure_step_throughput(tables: Arc<ScenarioTables>, b: usize) -> (f64, f64) {
+    use crate::util::rng::Rng;
+
+    let mut venv = VectorEnv::new(StationConfig::default(), tables, b, 11);
+    let nvec = venv.action_nvec();
+    let p = venv.n_ports();
+    let mut infos = vec![StepInfo::default(); b];
+    let reps = (120_000 / b).clamp(40, 20_000);
+    // Pre-generate every step's actions so the timed region contains only
+    // step_all — serial host-side RNG would otherwise be billed as env
+    // throughput, and it grows with B.
+    let mut arng = Rng::new(17);
+    let all_actions: Vec<usize> = (0..reps * b * p)
+        .map(|k| arng.below(nvec[k % p] as u32) as usize)
+        .collect();
+    let mut pass = |venv: &mut VectorEnv| {
+        for actions in all_actions.chunks_exact(b * p) {
+            venv.step_all(actions, &mut infos);
+        }
+    };
+    pass(&mut venv); // warm
+    let t0 = std::time::Instant::now();
+    pass(&mut venv);
+    let el = t0.elapsed().as_secs_f64();
+    let steps = (reps * b) as f64;
+    (steps / el, el * 100_000.0 / steps)
+}
+
+/// Step a contiguous block of lanes (one shard's work).
+#[allow(clippy::too_many_arguments)]
+fn step_lanes(
+    cfg: &StationConfig,
+    tree: &StationTree,
+    tables: &[Arc<ScenarioTables>],
+    lane_scenario: &[u32],
+    t: &mut [u32],
+    day: &mut [u32],
+    battery_soc: &mut [f32],
+    ep_return: &mut [f32],
+    ep_profit: &mut [f32],
+    rng: &mut [CounterRng],
+    present: &mut [bool],
+    soc: &mut [f32],
+    de_remain: &mut [f32],
+    dt_remain: &mut [f32],
+    cap: &mut [f32],
+    r_bar: &mut [f32],
+    tau: &mut [f32],
+    sensitive: &mut [bool],
+    i_drawn: &mut [f32],
+    actions: &[usize],
+    infos: &mut [StepInfo],
+) {
+    let c = cfg.n_chargers();
+    let p = cfg.n_ports();
+    let mut scratch = Scratch::new(p);
+    for lane in 0..t.len() {
+        let mut view = LaneView {
+            t: &mut t[lane],
+            day: &mut day[lane],
+            battery_soc: &mut battery_soc[lane],
+            ep_return: &mut ep_return[lane],
+            ep_profit: &mut ep_profit[lane],
+            present: &mut present[lane * c..(lane + 1) * c],
+            soc: &mut soc[lane * c..(lane + 1) * c],
+            de_remain: &mut de_remain[lane * c..(lane + 1) * c],
+            dt_remain: &mut dt_remain[lane * c..(lane + 1) * c],
+            cap: &mut cap[lane * c..(lane + 1) * c],
+            r_bar: &mut r_bar[lane * c..(lane + 1) * c],
+            tau: &mut tau[lane * c..(lane + 1) * c],
+            sensitive: &mut sensitive[lane * c..(lane + 1) * c],
+            i_drawn: &mut i_drawn[lane * p..(lane + 1) * p],
+        };
+        infos[lane] = core::step_lane(
+            &mut view,
+            &mut rng[lane],
+            cfg,
+            tree,
+            &tables[lane_scenario[lane] as usize],
+            &actions[lane * p..(lane + 1) * p],
+            &mut scratch,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mixed_env(b: usize) -> VectorEnv {
+        let tables = vec![
+            Arc::new(ScenarioTables::synthetic(0.8)),
+            Arc::new(ScenarioTables::synthetic(2.0)),
+        ];
+        let scen: Vec<usize> = (0..b).map(|j| j % 2).collect();
+        let seeds: Vec<u64> = (0..b as u64).map(|j| 1000 + j * 7).collect();
+        VectorEnv::with_seeds(StationConfig::default(), tables, scen, &seeds)
+    }
+
+    fn random_actions(rng: &mut Rng, env: &VectorEnv) -> Vec<usize> {
+        let nvec = env.action_nvec();
+        (0..env.batch())
+            .flat_map(|_| nvec.iter().map(|&n| rng.below(n as u32) as usize).collect::<Vec<_>>())
+            .collect()
+    }
+
+    #[test]
+    fn shard_count_does_not_change_results() {
+        let mut rng = Rng::new(42);
+        let mut envs: Vec<VectorEnv> = (0..3).map(|_| mixed_env(8)).collect();
+        let mut infos = vec![StepInfo::default(); 8];
+        for step in 0..100 {
+            let actions = random_actions(&mut rng, &envs[0]);
+            let mut rewards = Vec::new();
+            for (i, env) in envs.iter_mut().enumerate() {
+                env.step_all_sharded(&actions, &mut infos, [1, 3, 8][i]);
+                rewards.push(infos.iter().map(|x| x.reward).collect::<Vec<_>>());
+            }
+            assert_eq!(rewards[0], rewards[1], "1 vs 3 shards diverged at step {step}");
+            assert_eq!(rewards[0], rewards[2], "1 vs 8 shards diverged at step {step}");
+        }
+        let obs_len = envs[0].batch() * envs[0].obs_dim();
+        let mut o1 = vec![0f32; obs_len];
+        let mut o3 = vec![0f32; obs_len];
+        envs[0].observe_all(&mut o1);
+        envs[1].observe_all(&mut o3);
+        assert_eq!(o1, o3);
+    }
+
+    #[test]
+    fn mixed_batch_invariants_hold() {
+        let mut env = mixed_env(16);
+        let mut rng = Rng::new(7);
+        let mut infos = vec![StepInfo::default(); 16];
+        for _ in 0..300 {
+            let actions = random_actions(&mut rng, &env);
+            env.step_all(&actions, &mut infos);
+            for (lane, info) in infos.iter().enumerate() {
+                assert!(info.reward.is_finite());
+                assert!((0.0..=1.0).contains(&env.lane_battery_soc(lane)));
+                for slot in 0..env.n_chargers() {
+                    if let Some(car) = env.lane_car(lane, slot) {
+                        assert!((0.0..=1.0).contains(&car.soc));
+                        assert!(car.cap > 0.0);
+                    }
+                }
+            }
+        }
+        // high-traffic lanes (odd) should have seen more arrivals on
+        // average than low-traffic lanes (even) — scenario heterogeneity
+        // is actually wired through.
+        let mut env2 = mixed_env(32);
+        let mut arrived = vec![0f32; 32];
+        let mut infos = vec![StepInfo::default(); 32];
+        for _ in 0..288 {
+            let actions = random_actions(&mut rng, &env2);
+            env2.step_all(&actions, &mut infos);
+            for (lane, info) in infos.iter().enumerate() {
+                arrived[lane] += info.arrived;
+            }
+        }
+        let low: f32 = arrived.iter().step_by(2).sum();
+        let high: f32 = arrived.iter().skip(1).step_by(2).sum();
+        assert!(high > low, "traffic heterogeneity not visible: low {low} high {high}");
+    }
+
+    #[test]
+    fn episode_boundary_resets_all_lanes() {
+        let mut env = VectorEnv::new(
+            StationConfig::default(),
+            ScenarioTables::synthetic(1.0),
+            4,
+            9,
+        );
+        let mut infos = vec![StepInfo::default(); 4];
+        let actions = vec![0usize; 4 * env.n_ports()];
+        for i in 1..=core::STEPS_PER_EPISODE {
+            env.step_all(&actions, &mut infos);
+            let all_done = infos.iter().all(|x| x.done);
+            if i == core::STEPS_PER_EPISODE {
+                assert!(all_done);
+                for lane in 0..4 {
+                    assert_eq!(env.lane_t(lane), 0);
+                    assert_eq!(env.lane_ep_return(lane), 0.0);
+                }
+            } else {
+                assert!(!all_done);
+            }
+        }
+    }
+}

@@ -6,6 +6,7 @@
 //! Results print as the paper's rows/series and also land in runs/*.csv.
 
 use std::fmt::Write as _;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -57,60 +58,44 @@ fn setup() -> Result<(Manifest, DataStore, Engine)> {
 // ---------------------------------------------------------------------------
 
 fn table2(cfg: &RunConfig) -> Result<()> {
-    let (manifest, store, engine) = setup()?;
     let sc = &cfg.scenario;
     const TARGET: f64 = 100_000.0;
 
     println!("Table 2 — seconds to complete 100k environment steps");
-    println!("(Chargax = this repo's AOT fast path; scalar-gym = pure-Rust per-step CPU");
-    println!(" simulator; python-gym = per-step numpy simulator; see DESIGN.md §Substitutions)\n");
-    let mut rows: Vec<(String, f64, Option<f64>, Option<f64>)> = Vec::new();
+    println!("(Chargax = this repo's AOT fast path; native-vector = SoA batched Rust env;");
+    println!(" scalar-gym = per-step CPU simulator; python-gym = per-step numpy simulator)\n");
 
-    // -- Chargax rows --------------------------------------------------------
-    // Prefer the CPU-fast kernel routing ("-ref": jnp oracles, XLA-fused)
-    // over interpret-mode Pallas; see EXPERIMENTS.md §Perf.
-    let pick = |key: &str, fallback: &str| -> anyhow::Result<&chargax::runtime::manifest::Variant> {
-        manifest.variant(key).or_else(|_| manifest.variant(fallback))
-    };
-    {
-        let v16 = pick("mix10dc6ac-ref_e16", "mix10dc6ac_e16")?;
-        let rr = RandomRollout::new(&engine, v16, &store, sc)?;
-        rr.run(0)?; // warm (compile already cached by ::new; first run warms)
-        let chunk = (v16.meta.random_rollout_steps * v16.meta.num_envs) as f64;
-        let calls = (TARGET / chunk).ceil() as usize;
-        let t0 = Instant::now();
-        for s in 0..calls {
-            rr.run(s as u32 + 1)?;
-        }
-        let el = t0.elapsed().as_secs_f64();
-        let per_100k = el * TARGET / (chunk * calls as f64);
-        rows.push(("Random".into(), per_100k, None, None));
-        println!("  chargax random: {calls} calls x {chunk} steps -> {:.2}s/100k", per_100k);
+    // Scenario tables: built once from artifacts when available, otherwise
+    // synthesized — shared across every env below via Arc.
+    let store = DataStore::load(&artifacts_dir().join("data")).ok();
+    if store.is_none() {
+        println!("  (artifacts/data not exported; scalar/native rows use synthetic tables)");
     }
-    for (label, vkey, fb) in [
-        ("PPO (1)", "mix10dc6ac-ref_e1", "mix10dc6ac_e1"),
-        ("PPO (16)", "mix10dc6ac-ref_e16", "mix10dc6ac_e16"),
-    ] {
-        let v = pick(vkey, fb)?;
-        let mut session =
-            chargax::coordinator::session::TrainSession::new(&engine, v, &store, sc, 0)?;
-        session.step()?; // warm
-        session.reset(0)?;
-        let iters = (TARGET / v.meta.batch_size as f64).ceil() as usize;
-        let t0 = Instant::now();
-        for _ in 0..iters {
-            session.step()?;
+    let tables: Arc<ScenarioTables> = Arc::new(match &store {
+        Some(s) => ScenarioTables::build(s, sc)?,
+        None => ScenarioTables::synthetic_for(sc),
+    });
+
+    // (name, chargax_s, scalar_s, python_s, native_s) per 100k steps.
+    let mut rows: Vec<(String, Option<f64>, Option<f64>, Option<f64>, Option<f64>)> = vec![
+        ("Random".into(), None, None, None, None),
+        ("PPO (1)".into(), None, None, None, None),
+        ("PPO (16)".into(), None, None, None, None),
+    ];
+
+    // -- Chargax PJRT rows (need artifacts + a real PJRT runtime) -----------
+    match table2_pjrt_rows(sc, TARGET, store.as_ref()) {
+        Ok(vals) => {
+            for (row, v) in rows.iter_mut().zip(vals) {
+                row.1 = Some(v);
+            }
         }
-        let el = t0.elapsed().as_secs_f64();
-        let per_100k = el * TARGET / (v.meta.batch_size as f64 * iters as f64);
-        rows.push((label.into(), per_100k, None, None));
-        println!("  chargax {label}: {iters} iters -> {:.2}s/100k", per_100k);
+        Err(e) => println!("  (chargax PJRT rows skipped: {e:#})"),
     }
 
     // -- Rust scalar-gym rows ------------------------------------------------
-    let mk_tables = || ScenarioTables::build(&store, sc).expect("tables");
     {
-        let mut env = ScalarEnv::new(StationConfig::default(), mk_tables(), 7);
+        let mut env = ScalarEnv::new(StationConfig::default(), Arc::clone(&tables), 7);
         let mut pol = RandomPolicy { rng: Rng::new(3) };
         let n = 100_000;
         let t0 = Instant::now();
@@ -120,7 +105,7 @@ fn table2(cfg: &RunConfig) -> Result<()> {
     }
     for (row, envs) in [(1usize, 1usize), (2, 16)] {
         let params = PpoParams { num_envs: envs, ..Default::default() };
-        let mut tr = PpoTrainer::new(params, StationConfig::default(), mk_tables, 7);
+        let mut tr = PpoTrainer::new(params, StationConfig::default(), Arc::clone(&tables), 7);
         tr.iteration(); // warm caches
         let measure_steps = 24_000.max(tr.cfg.num_envs * tr.cfg.rollout_steps);
         let iters = measure_steps / (tr.cfg.num_envs * tr.cfg.rollout_steps);
@@ -133,6 +118,27 @@ fn table2(cfg: &RunConfig) -> Result<()> {
         rows[row].2 = Some(el * TARGET / steps);
     }
 
+    // -- Native-vector rows: SoA batched env, random actions ----------------
+    println!("\n  native-vector sweep (random actions, thread-sharded step_all):");
+    let scalar_random = rows[0].2;
+    for &b in &[1usize, 16, 256, 1024] {
+        let (steps_per_sec, s_per_100k) =
+            chargax::env::vector::measure_step_throughput(Arc::clone(&tables), b);
+        let vs = scalar_random
+            .map(|s| format!("  ({:.1}x vs scalar B=1)", s / s_per_100k))
+            .unwrap_or_default();
+        println!(
+            "    B={b:<5} {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k{vs}"
+        );
+        rows.push((
+            format!("native-vector (B={b})"),
+            None,
+            None,
+            None,
+            Some(s_per_100k),
+        ));
+    }
+
     // -- Python gym rows (optional subprocess) -------------------------------
     for (row, mode) in [(0usize, "random"), (1, "ppo1"), (2, "ppo16")] {
         match python_gym_bench(mode) {
@@ -141,28 +147,87 @@ fn table2(cfg: &RunConfig) -> Result<()> {
         }
     }
 
-    println!("\n{:<10} {:>14} {:>18} {:>12} {:>18} {:>12}", "", "Chargax (s)", "scalar-gym (s)", "speedup", "python-gym (s)", "speedup");
-    let mut csv = String::from("row,chargax_s,scalar_gym_s,python_gym_s\n");
-    for (name, ours, scalar, py) in &rows {
-        let fmt_col = |x: &Option<f64>| {
-            x.map(|v| format!("{v:>18.2}")).unwrap_or_else(|| format!("{:>18}", "-"))
-        };
-        let fmt_speedup = |x: &Option<f64>| {
-            x.map(|v| format!("{:>11.1}x", v / ours)).unwrap_or_else(|| format!("{:>12}", "-"))
-        };
+    println!(
+        "\n{:<22} {:>18} {:>18} {:>18} {:>18}",
+        "", "Chargax (s)", "scalar-gym (s)", "python-gym (s)", "native-vector (s)"
+    );
+    let mut csv = String::from("row,chargax_s,scalar_gym_s,python_gym_s,native_vector_s\n");
+    let fmt_col = |x: &Option<f64>| {
+        x.map(|v| format!("{v:>18.3}")).unwrap_or_else(|| format!("{:>18}", "-"))
+    };
+    for (name, ours, scalar, py, native) in &rows {
         println!(
-            "{name:<10} {ours:>14.2} {} {} {} {}",
-            fmt_col(scalar), fmt_speedup(scalar), fmt_col(py), fmt_speedup(py)
+            "{name:<22} {} {} {} {}",
+            fmt_col(ours),
+            fmt_col(scalar),
+            fmt_col(py),
+            fmt_col(native)
         );
+        let cell = |x: &Option<f64>| x.map(|v| v.to_string()).unwrap_or_default();
         writeln!(
-            csv, "{name},{ours},{},{}",
-            scalar.map(|v| v.to_string()).unwrap_or_default(),
-            py.map(|v| v.to_string()).unwrap_or_default()
-        ).ok();
+            csv,
+            "{name},{},{},{},{}",
+            cell(ours),
+            cell(scalar),
+            cell(py),
+            cell(native)
+        )
+        .ok();
     }
     std::fs::write("runs/table2.csv", csv).context("writing runs/table2.csv")?;
     println!("\nwrote runs/table2.csv");
     Ok(())
+}
+
+/// The original Chargax AOT rows (Random / PPO(1) / PPO(16)); errors out
+/// cleanly when artifacts or the PJRT runtime are unavailable. Takes the
+/// caller's already-loaded DataStore so the data stack isn't parsed twice.
+fn table2_pjrt_rows(sc: &Scenario, target: f64, store: Option<&DataStore>) -> Result<[f64; 3]> {
+    let store = store.context("artifacts/data not exported")?;
+    let manifest = Manifest::load(&artifacts_dir())?;
+    let engine = Engine::cpu()?;
+    // Prefer the CPU-fast kernel routing ("-ref": jnp oracles, XLA-fused)
+    // over interpret-mode Pallas; see EXPERIMENTS.md §Perf.
+    let pick = |key: &str, fallback: &str| -> anyhow::Result<&chargax::runtime::manifest::Variant> {
+        manifest.variant(key).or_else(|_| manifest.variant(fallback))
+    };
+    let mut out = [0f64; 3];
+    {
+        let v16 = pick("mix10dc6ac-ref_e16", "mix10dc6ac_e16")?;
+        let rr = RandomRollout::new(&engine, v16, &store, sc)?;
+        rr.run(0)?; // warm (compile already cached by ::new; first run warms)
+        let chunk = (v16.meta.random_rollout_steps * v16.meta.num_envs) as f64;
+        let calls = (target / chunk).ceil() as usize;
+        let t0 = Instant::now();
+        for s in 0..calls {
+            rr.run(s as u32 + 1)?;
+        }
+        let el = t0.elapsed().as_secs_f64();
+        out[0] = el * target / (chunk * calls as f64);
+        println!("  chargax random: {calls} calls x {chunk} steps -> {:.2}s/100k", out[0]);
+    }
+    for (i, (label, vkey, fb)) in [
+        ("PPO (1)", "mix10dc6ac-ref_e1", "mix10dc6ac_e1"),
+        ("PPO (16)", "mix10dc6ac-ref_e16", "mix10dc6ac_e16"),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let v = pick(vkey, fb)?;
+        let mut session =
+            chargax::coordinator::session::TrainSession::new(&engine, v, &store, sc, 0)?;
+        session.step()?; // warm
+        session.reset(0)?;
+        let iters = (target / v.meta.batch_size as f64).ceil() as usize;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            session.step()?;
+        }
+        let el = t0.elapsed().as_secs_f64();
+        out[i + 1] = el * target / (v.meta.batch_size as f64 * iters as f64);
+        println!("  chargax {label}: {iters} iters -> {:.2}s/100k", out[i + 1]);
+    }
+    Ok(out)
 }
 
 fn python_gym_bench(mode: &str) -> Result<f64> {

@@ -9,7 +9,8 @@
 //! * [`runtime`] — manifest + PJRT engine + tensor/literal bridge,
 //! * [`coordinator`] — train/eval sessions and the training driver,
 //! * [`data`] — exogenous tables (prices, cars, arrivals, profiles),
-//! * [`env`] — pure-Rust scalar reference simulator (CPU-gym comparator),
+//! * [`env`] — pure-Rust simulators over one shared transition core: the
+//!   SoA batched `VectorEnv` fast path + the per-step `ScalarEnv` comparator,
 //! * [`baselines`] — pure-Rust PPO + heuristic policies (CPU comparators),
 //! * [`config`] — experiment configuration,
 //! * [`util`] — in-tree JSON / RNG / bench-stat / property-test substrates.

@@ -89,6 +89,9 @@ fn parse_flags(args: &[String]) -> Result<(Option<String>, Vec<(String, String)>
 }
 
 fn cmd_train(cfg: &RunConfig) -> Result<()> {
+    if cfg.backend == "native" {
+        return cmd_train_native(cfg);
+    }
     let manifest = Manifest::load(&artifacts_dir())?;
     let variant = manifest.variant(&cfg.variant)?;
     let store = DataStore::load(&artifacts_dir().join("data"))?;
@@ -129,6 +132,63 @@ fn cmd_train(cfg: &RunConfig) -> Result<()> {
         "eval (net, {} seeds): {}",
         evals.len(),
         mean.fmt_fields(&["ep_reward", "ep_profit", "ep_missing_kwh", "ep_overtime_steps"])
+    );
+    Ok(())
+}
+
+/// `chargax train --backend native`: pure-Rust VectorEnv PPO. Needs no
+/// AOT artifacts or PJRT runtime; falls back to synthetic scenario tables
+/// when `artifacts/data` has not been exported.
+fn cmd_train_native(cfg: &RunConfig) -> Result<()> {
+    use chargax::baselines::ppo::PpoParams;
+    use chargax::env::tree::StationConfig;
+
+    let store = DataStore::load(&artifacts_dir().join("data")).ok();
+    if store.is_none() {
+        eprintln!("note: artifacts/data not found; using synthetic scenario tables");
+    }
+    let params = PpoParams { num_envs: cfg.num_envs, ..Default::default() };
+    eprintln!(
+        "training native-vector backend ({} envs x {} rollout steps) scenario={} {} {}/{} traffic={}",
+        params.num_envs,
+        params.rollout_steps,
+        cfg.scenario.scenario,
+        cfg.scenario.region,
+        cfg.scenario.country,
+        cfg.scenario.year,
+        cfg.scenario.traffic,
+    );
+    let opts = trainer::TrainOptions {
+        seed: cfg.seed,
+        total_env_steps: cfg.total_env_steps,
+        ..Default::default()
+    };
+    let out = trainer::train_native(
+        store.as_ref(),
+        &cfg.scenario,
+        StationConfig::default(),
+        params,
+        &opts,
+    )?;
+    eprintln!(
+        "trained {} env steps in {:.2}s ({:.0} steps/s)",
+        out.env_steps,
+        out.wallclock_s,
+        out.env_steps as f64 / out.wallclock_s
+    );
+    let mut tr = out.trainer;
+    let evals: Vec<(f32, f32)> = (0..cfg.eval_seeds as u64)
+        .map(|s| tr.eval_episode(1000 + s))
+        .collect();
+    let n = evals.len().max(1) as f32;
+    let (r, p): (f32, f32) = evals
+        .iter()
+        .fold((0.0, 0.0), |(ar, ap), (r, p)| (ar + r, ap + p));
+    println!(
+        "eval (greedy net, {} seeds): ep_reward={:.3} ep_profit={:.3}",
+        evals.len(),
+        r / n,
+        p / n
     );
     Ok(())
 }
@@ -216,7 +276,8 @@ fn print_usage() {
 USAGE: chargax <command> [--config file.json] [--key value ...]
 
 COMMANDS:
-  train            train PPO on the AOT fast path
+  train            train PPO (--backend pjrt: AOT fast path;
+                   --backend native: pure-Rust VectorEnv, no artifacts)
   eval             evaluate max/random baseline policies
   bench <id>       regenerate a paper table/figure:
                    table2 | fig4a | fig4bc | fig5 | fig6to8 | fig9to11 | perf
@@ -225,7 +286,7 @@ COMMANDS:
   cross-check      scalar-vs-JAX transition equivalence
   help             this text
 
-KEYS: variant scenario region country year traffic p_sell beta seed n_seeds
-      steps eval_seeds paper_scale out alpha_<penalty>"
+KEYS: variant backend num_envs scenario region country year traffic p_sell
+      beta seed n_seeds steps eval_seeds paper_scale out alpha_<penalty>"
     );
 }

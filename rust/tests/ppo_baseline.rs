@@ -30,7 +30,7 @@ fn ppo_iteration_produces_finite_stats() {
         update_epochs: 2,
         ..Default::default()
     };
-    let mut tr = PpoTrainer::new(params, StationConfig::default(), tables, 3);
+    let mut tr = PpoTrainer::new(params, StationConfig::default(), tables(), 3);
     let s = tr.iteration();
     assert!(s.mean_reward.is_finite());
     assert!(s.total_loss.is_finite());
@@ -51,7 +51,7 @@ fn ppo_learns_on_fixed_price_world() {
         lr: 1e-3,
         ..Default::default()
     };
-    let mut tr = PpoTrainer::new(params, StationConfig::default(), tables, 5);
+    let mut tr = PpoTrainer::new(params, StationConfig::default(), tables(), 5);
     let rewards: Vec<f32> = (0..40).map(|_| tr.iteration().mean_reward).collect();
     let head: f32 = rewards[..5].iter().sum::<f32>() / 5.0;
     let tail: f32 = rewards[35..].iter().sum::<f32>() / 5.0;
@@ -70,7 +70,7 @@ fn ppo_entropy_decreases_as_policy_sharpens() {
         ent_coef: 0.0,
         ..Default::default()
     };
-    let mut tr = PpoTrainer::new(params, StationConfig::default(), tables, 6);
+    let mut tr = PpoTrainer::new(params, StationConfig::default(), tables(), 6);
     let e0 = tr.iteration().entropy;
     let mut e_last = e0;
     for _ in 0..10 {
@@ -88,7 +88,7 @@ fn greedy_eval_runs_full_episode() {
         update_epochs: 1,
         ..Default::default()
     };
-    let mut tr = PpoTrainer::new(params, StationConfig::default(), tables, 7);
+    let mut tr = PpoTrainer::new(params, StationConfig::default(), tables(), 7);
     tr.iteration();
     let (r, p) = tr.eval_episode(99);
     assert!(r.is_finite() && p.is_finite());

@@ -9,24 +9,7 @@ use chargax::util::rng::Rng;
 
 /// Synthetic tables (no artifacts needed): flat prices, constant arrivals.
 fn test_tables(traffic: f32) -> ScenarioTables {
-    ScenarioTables {
-        price_buy: vec![0.10; 365 * 24],
-        price_sell_grid: vec![0.09; 365 * 24],
-        moer: vec![0.3; 365 * 24],
-        arrival_rate: vec![3.0; 24],
-        car_table: vec![
-            60.0, 11.0, 120.0, 0.6, // model 0
-            90.0, 11.0, 200.0, 0.5, // model 1
-            40.0, 7.0, 50.0, 0.7, // model 2
-        ],
-        car_weights: vec![0.5, 0.3, 0.2],
-        user_profile: vec![1.5, 0.6, 2.5, 3.0, 0.8, 0.65],
-        n_days: 365,
-        alpha: [0.0; 7],
-        beta: 0.1,
-        p_sell: 0.75,
-        traffic,
-    }
+    ScenarioTables::synthetic(traffic)
 }
 
 #[test]
@@ -40,8 +23,9 @@ fn occupancy_and_soc_invariants_under_random_policy() {
             pol.act(&env, &mut action);
             let info = env.step(&action);
             assert!(info.reward.is_finite());
-            assert!((0.0..=1.0).contains(&env.battery_soc));
-            for car in env.cars.iter().flatten() {
+            assert!((0.0..=1.0).contains(&env.battery_soc()));
+            for slot in 0..env.cfg().n_chargers() {
+                let Some(car) = env.car(slot) else { continue };
                 assert!((0.0..=1.0).contains(&car.soc), "car soc {}", car.soc);
                 assert!(car.cap > 0.0);
             }
@@ -66,7 +50,7 @@ fn node_constraints_hold_under_max_policy() {
                 let mut flow = 0f32;
                 for j in 0..tree.n_ports() {
                     if tree.membership[n][j] {
-                        flow += tree.volt[j] * env.i_drawn[j] / 1000.0;
+                        flow += tree.volt[j] * env.i_drawn()[j] / 1000.0;
                     }
                 }
                 assert!(
@@ -90,8 +74,8 @@ fn episodes_reset_exactly_at_boundary() {
         if info.done {
             dones += 1;
             assert_eq!(i % STEPS_PER_EPISODE, 0, "done off-boundary at {i}");
-            assert_eq!(env.t, 0);
-            assert!(env.cars.iter().all(|c| c.is_none()));
+            assert_eq!(env.t(), 0);
+            assert!((0..env.cfg().n_chargers()).all(|j| !env.occupied(j)));
         }
     }
     assert_eq!(dones, 2);
@@ -146,7 +130,7 @@ fn no_arrivals_when_traffic_zero() {
         let info = env.step(&action);
         assert_eq!(info.arrived, 0.0);
     }
-    assert!(env.cars.iter().all(|c| c.is_none()));
+    assert!((0..env.cfg().n_chargers()).all(|j| !env.occupied(j)));
 }
 
 #[test]

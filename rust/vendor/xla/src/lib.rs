@@ -1,0 +1,258 @@
+//! API-compatible stub of the `xla` PJRT bindings.
+//!
+//! The offline build image carries no native XLA/PJRT libraries, so this
+//! crate provides the exact surface the coordinator uses — `Literal` is a
+//! real host-side container (build/reshape/read back works), while anything
+//! that would need a device runtime (`PjRtClient::cpu`, compilation,
+//! execution, HLO parsing) returns a descriptive error. The coordinator
+//! degrades gracefully: the native-vector fast path and all CPU comparators
+//! run without PJRT, and swapping this path dependency for the real
+//! bindings re-enables the AOT fast path with no source changes.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: PJRT/XLA runtime unavailable (in-tree stub build; point the `xla` \
+         path dependency at the real bindings to enable the AOT fast path)"
+    ))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+    U64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    U64(Vec<u64>),
+    Tuple(Vec<Literal>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+            Data::U64(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    fn ty(&self) -> Option<ElementType> {
+        match self {
+            Data::F32(_) => Some(ElementType::F32),
+            Data::I32(_) => Some(ElementType::S32),
+            Data::U32(_) => Some(ElementType::U32),
+            Data::U64(_) => Some(ElementType::U64),
+            Data::Tuple(_) => None,
+        }
+    }
+}
+
+/// Host-side literal: flat typed data + dims. Fully functional.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+/// Element types a `Literal` can hold.
+pub trait NativeType: Clone + Sized {
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+macro_rules! native {
+    ($t:ty, $variant:ident) => {
+        impl NativeType for $t {
+            fn wrap(v: Vec<Self>) -> Data {
+                Data::$variant(v)
+            }
+            fn unwrap(d: &Data) -> Option<Vec<Self>> {
+                match d {
+                    Data::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(i32, I32);
+native!(u32, U32);
+native!(u64, U64);
+
+impl Literal {
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            data: T::wrap(v.to_vec()),
+        }
+    }
+
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            dims: vec![parts.len() as i64],
+            data: Data::Tuple(parts),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product::<i64>().max(1);
+        if want as usize != self.data.len().max(1) {
+            return Err(XlaError(format!(
+                "reshape to {dims:?} wants {want} elements, literal has {}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn shape(&self) -> Result<ArrayShape> {
+        self.array_shape()
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.data.ty() {
+            Some(ty) => Ok(ArrayShape { dims: self.dims.clone(), ty }),
+            None => Err(XlaError("tuple literal has no array shape".into())),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| XlaError("literal element type mismatch in to_vec".into()))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(parts) => Ok(parts),
+            _ => Err(XlaError("literal is not a tuple".into())),
+        }
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("HloModuleProto::from_text_file({path})")))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        let s = r.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2u32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::vec1(&[0f32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn runtime_paths_fail_descriptively() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("stub"));
+        assert!(HloModuleProto::from_text_file("/nope.hlo").is_err());
+    }
+}
