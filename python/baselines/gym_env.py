@@ -291,7 +291,14 @@ class GymChargingEnv:
         out[b + 6] = self.day / self.tables["n_days"]
         idx = self._price_idx()
         out[b + 7] = self.tables["price_buy"][idx]
-        out[b + 8] = self.tables["price_buy"][self.day * 24 + min(self._hour() + 1, 23)]
+        # Next-hour price wraps at midnight to hour 0 of the next day (mod
+        # the table length), matching the JAX env and rust env/core.rs.
+        h = self._hour()
+        if h == 23:
+            next_idx = ((self.day + 1) % self.tables["n_days"]) * 24
+        else:
+            next_idx = self.day * 24 + h + 1
+        out[b + 8] = self.tables["price_buy"][next_idx]
         out[b + 9] = self.tables["price_sell_grid"][idx]
         out[b + 10] = self.tables["moer"][idx]
         return out

@@ -203,7 +203,10 @@ class ChargaxEnv:
         c = st.n_chargers
         steps_per_hour = int(round(1.0 / st.dt_hours))
         hour = jnp.clip(state.t // steps_per_hour, 0, 23)
-        hour_next = jnp.clip(hour + 1, 0, 23)
+        # Next-hour price wraps at midnight: hour 23 observes hour 0 of the
+        # next day (mod the table length), matching rust env/core.rs.
+        day_next = jnp.where(hour == 23, (state.day + 1) % st.n_days, state.day)
+        hour_next = jnp.where(hour == 23, 0, hour + 1)
 
         per_port = jnp.concatenate(
             [
@@ -238,7 +241,7 @@ class ChargaxEnv:
         price_feat = jnp.stack(
             [
                 exog.price_buy[state.day, hour],
-                exog.price_buy[state.day, hour_next],
+                exog.price_buy[day_next, hour_next],
                 exog.price_sell_grid[state.day, hour],
                 exog.moer[state.day, hour],
             ],

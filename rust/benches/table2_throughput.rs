@@ -3,11 +3,18 @@
 //! uses util::stats' warmup+samples harness. The full paper table with
 //! the python comparator is `chargax bench table2`.)
 //!
-//! Always runs the native rows (scalar-gym comparators + the SoA
-//! `VectorEnv` batch sweep B ∈ {1, 16, 256, 1024}); the PJRT rows run only
-//! when AOT artifacts and a real PJRT runtime are present. Writes the
+//! Always runs the native rows: scalar-gym comparators plus the SoA
+//! `VectorEnv` batch sweep B ∈ {1, 16, 256, 1024, 4096} on three
+//! runtimes — the persistent worker pool (`native-vector`, the default),
+//! the per-call scoped-thread fallback (`native-scoped`), and the fused
+//! rollout entry point (`native-rollout`). The PJRT rows run only when
+//! AOT artifacts and a real PJRT runtime are present. Writes the
 //! machine-readable perf trajectory to `BENCH_table2.json` at the repo
 //! root so the numbers are tracked across PRs.
+//!
+//! `cargo bench --bench table2_throughput -- --smoke` runs a reduced
+//! sweep (B ∈ {1, 64}, small step budget) — the CI regression-visibility
+//! job.
 
 use std::sync::Arc;
 
@@ -17,6 +24,7 @@ use chargax::coordinator::session::{RandomRollout, TrainSession};
 use chargax::data::{DataStore, Scenario};
 use chargax::env::scalar::{ScalarEnv, ScenarioTables};
 use chargax::env::tree::StationConfig;
+use chargax::env::vector::{self, StepPath, NATIVE_SWEEP_B};
 use chargax::runtime::engine::{artifacts_dir, Engine};
 use chargax::runtime::manifest::Manifest;
 use chargax::util::json::{self, Json};
@@ -40,6 +48,10 @@ fn row(name: &str, batch: usize, steps: f64, seconds: f64) -> BenchRow {
 }
 
 fn main() {
+    // `--smoke`: reduced sweep for per-PR CI regression visibility.
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (sweep_b, budget): (&[usize], usize) =
+        if smoke { (&[1, 64], 12_000) } else { (NATIVE_SWEEP_B, 120_000) };
     let sc = Scenario::default();
     let dir = artifacts_dir();
     let store = DataStore::load(&dir.join("data")).ok();
@@ -99,26 +111,49 @@ fn main() {
         rows.push(row(&format!("scalar-gym PPO ({envs})"), envs, per_iter, s.mean_s));
     }
 
-    // -- Native-vector sweep: SoA batched env, random actions ----------------
-    println!("\nnative-vector sweep (SoA step_all, thread-sharded, random actions):");
+    // -- Native sweep: SoA batched env, random actions, three runtimes ------
+    // pool (persistent workers, the default step_all path), scoped
+    // (per-call thread spawn, the fallback/oracle), and the fused rollout.
     let scalar_b1 = rows
         .iter()
         .find(|r| r.name == "scalar-gym random")
         .map(|r| r.steps_per_sec);
     let mut b1024_speedup = None;
-    for &b in &[1usize, 16, 256, 1024] {
-        let r = native_vector_row(Arc::clone(&tables), b);
-        let vs = scalar_b1
-            .map(|s| format!("  ({:.1}x vs scalar-gym B=1)", r.steps_per_sec / s))
-            .unwrap_or_default();
-        println!(
-            "  B={b:<5} {:>12.0} steps/s  {:>8.3} s/100k{vs}",
-            r.steps_per_sec, r.s_per_100k
-        );
-        if b == 1024 {
-            b1024_speedup = scalar_b1.map(|s| r.steps_per_sec / s);
+    let mut pool_vs_scoped: Vec<(usize, f64, f64)> = Vec::new();
+    for path in [StepPath::Pool, StepPath::Scoped, StepPath::Rollout] {
+        println!("\n{} sweep (random actions):", path.label());
+        for &b in sweep_b {
+            let (steps_per_sec, s_per_100k) =
+                vector::measure_throughput(Arc::clone(&tables), b, 0, path, budget);
+            let vs = scalar_b1
+                .map(|s| format!("  ({:.1}x vs scalar-gym B=1)", steps_per_sec / s))
+                .unwrap_or_default();
+            println!("  B={b:<5} {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k{vs}");
+            if path == StepPath::Pool && b == 1024 {
+                b1024_speedup = scalar_b1.map(|s| steps_per_sec / s);
+            }
+            match path {
+                StepPath::Pool => pool_vs_scoped.push((b, steps_per_sec, 0.0)),
+                StepPath::Scoped => {
+                    if let Some(e) = pool_vs_scoped.iter_mut().find(|e| e.0 == b) {
+                        e.2 = steps_per_sec;
+                    }
+                }
+                StepPath::Rollout => {}
+            }
+            rows.push(BenchRow {
+                name: format!("{} (B={b})", path.label()),
+                batch: b,
+                steps_per_sec,
+                s_per_100k,
+            });
         }
-        rows.push(r);
+    }
+    println!("\npool vs scoped-thread dispatch (steps/s):");
+    for (b, pool, scoped) in &pool_vs_scoped {
+        if *scoped > 0.0 {
+            println!("  B={b:<5} pool {pool:>12.0}  scoped {scoped:>12.0}  ({:.2}x)", pool / scoped);
+        }
     }
     if let Some(x) = b1024_speedup {
         println!("\nnative-vector B=1024 vs scalar-gym B=1: {x:.1}x steps/sec");
@@ -139,6 +174,7 @@ fn main() {
     let mut top = vec![
         ("bench", Json::Str("table2_throughput".into())),
         ("unit", Json::Str("env_steps".into())),
+        ("smoke", Json::Bool(smoke)),
         ("rows", Json::Arr(json_rows)),
     ];
     if let Some(x) = b1024_speedup {
@@ -155,18 +191,6 @@ fn main() {
             Ok(()) => println!("wrote BENCH_table2.json (cwd)"),
             Err(e) => eprintln!("could not write BENCH_table2.json: {e}"),
         },
-    }
-}
-
-/// Raw `VectorEnv::step_all` throughput at batch size `b` (shared
-/// measurement protocol: `vector::measure_step_throughput`).
-fn native_vector_row(tables: Arc<ScenarioTables>, b: usize) -> BenchRow {
-    let (steps_per_sec, s_per_100k) = chargax::env::vector::measure_step_throughput(tables, b);
-    BenchRow {
-        name: format!("native-vector (B={b})"),
-        batch: b,
-        steps_per_sec,
-        s_per_100k,
     }
 }
 

@@ -1,16 +1,18 @@
 //! Pure-Rust PPO — the "SB3 on CPU" comparator for Table 2. Same algorithm
 //! and hyperparameters as the fused JAX PPO (Table 3): GAE, minibatched
-//! clipped-surrogate epochs, Adam, global grad-norm clip. Rollouts step all
-//! environments through one [`VectorEnv::step_all`] call per time step
-//! (SoA lanes, thread-sharded) instead of a per-env host loop; scenario
+//! clipped-surrogate epochs, Adam, global grad-norm clip. Rollouts run
+//! through the fused [`VectorEnv::rollout`] entry point: the policy
+//! closure samples actions from the observation row the env just wrote,
+//! and the env (sharded on the persistent worker pool) writes next-step
+//! observations, rewards, dones, and profits directly into the PPO
+//! buffers — no separate observe pass, no per-step copies. Scenario
 //! tables are shared across lanes via `Arc`.
 
 use std::sync::Arc;
 
-use crate::env::core::StepInfo;
 use crate::env::scalar::{ScalarEnv, ScenarioTables};
 use crate::env::tree::StationConfig;
-use crate::env::vector::VectorEnv;
+use crate::env::vector::{RolloutBuffers, VectorEnv};
 use crate::util::rng::Rng;
 
 use super::mlp::{Grads, Mlp};
@@ -30,6 +32,9 @@ pub struct PpoParams {
     pub n_minibatches: usize,
     pub update_epochs: usize,
     pub hidden: usize,
+    /// Worker-pool width for rollouts (`--threads`); 0 = auto
+    /// (`available_parallelism`).
+    pub threads: usize,
 }
 
 impl Default for PpoParams {
@@ -48,6 +53,7 @@ impl Default for PpoParams {
             n_minibatches: 4,
             update_epochs: 4,
             hidden: 128,
+            threads: 0,
         }
     }
 }
@@ -228,7 +234,10 @@ pub struct PpoTrainer {
     pub adam: Adam,
     pub rng: Rng,
     pub obs_dim: usize,
-    last_obs: Vec<f32>, // [E, obs_dim]
+    /// Per-lane running episode return (mirrors each lane's `ep_return`;
+    /// used to report completed-episode returns without querying the env
+    /// inside the fused rollout).
+    running_return: Vec<f32>,
     pub env_steps: usize,
 }
 
@@ -245,19 +254,19 @@ impl PpoTrainer {
         let seeds: Vec<u64> = (0..cfg.num_envs)
             .map(|i| seed ^ (i as u64 * 7919 + 13))
             .collect();
-        let venv = VectorEnv::with_seeds(
+        let mut venv = VectorEnv::with_seeds(
             station,
             vec![tables.into()],
             vec![0; cfg.num_envs],
             &seeds,
         );
+        venv.set_threads(cfg.threads);
         let obs_dim = venv.obs_dim();
         let heads = Heads::new(venv.action_nvec());
         let mlp = Mlp::new(&mut rng, obs_dim, cfg.hidden, heads.n_logits);
         let adam = Adam::new(&mlp);
-        let mut last_obs = vec![0f32; cfg.num_envs * obs_dim];
-        venv.observe_all(&mut last_obs);
         PpoTrainer {
+            running_return: vec![0.0; cfg.num_envs],
             cfg,
             venv,
             mlp,
@@ -265,7 +274,6 @@ impl PpoTrainer {
             adam,
             rng,
             obs_dim,
-            last_obs,
             env_steps: 0,
         }
     }
@@ -276,52 +284,61 @@ impl PpoTrainer {
         let t_len = self.cfg.rollout_steps;
         let n_ports = self.heads.nvec.len();
         let bsz = e * t_len;
+        let d = self.obs_dim;
 
-        let mut obs_buf = vec![0f32; bsz * self.obs_dim];
+        // obs has one extra row: row t_len is the bootstrap observation.
+        let mut obs_buf = vec![0f32; (t_len + 1) * e * d];
         let mut act_buf = vec![0usize; bsz * n_ports];
         let mut logp_buf = vec![0f32; bsz];
         let mut val_buf = vec![0f32; bsz];
         let mut rew_buf = vec![0f32; bsz];
         let mut done_buf = vec![0f32; bsz];
-        let mut profit_sum = 0f64;
-        let mut comp_returns: Vec<f32> = Vec::new();
+        let mut profit_buf = vec![0f32; bsz];
 
         // ---- rollout ------------------------------------------------------
-        // Sample every lane's action on the host, then advance all E envs
-        // with one SoA step_all call (thread-sharded inside VectorEnv).
-        let mut actions = vec![0usize; e * n_ports];
-        let mut infos = vec![StepInfo::default(); e];
-        let mut prev_returns = vec![0f32; e];
-        for t in 0..t_len {
-            let cache = self.mlp.forward(&self.last_obs);
-            obs_buf[t * e * self.obs_dim..(t + 1) * e * self.obs_dim]
-                .copy_from_slice(&self.last_obs);
-            for j in 0..e {
-                let idx = t * e + j;
-                let lg = &cache.logits[j * self.heads.n_logits..(j + 1) * self.heads.n_logits];
-                logp_buf[idx] = self.heads.sample(
-                    &mut self.rng,
-                    lg,
-                    &mut actions[j * n_ports..(j + 1) * n_ports],
-                );
-                val_buf[idx] = cache.value[j];
-                prev_returns[j] = self.venv.lane_ep_return(j);
-            }
-            act_buf[t * e * n_ports..(t + 1) * e * n_ports].copy_from_slice(&actions);
-            self.venv.step_all(&actions, &mut infos);
-            for (j, info) in infos.iter().enumerate() {
-                let idx = t * e + j;
-                if info.done {
-                    comp_returns.push(prev_returns[j] + info.reward);
+        // One fused pass: the policy closure samples every lane's action
+        // from the observation row the env just wrote; the env advances
+        // all lanes on the persistent worker pool and writes obs, rewards,
+        // dones, and profits directly into the PPO buffers above.
+        {
+            let PpoTrainer { venv, mlp, heads, rng, .. } = self;
+            let n_logits = heads.n_logits;
+            let mut bufs = RolloutBuffers {
+                obs: &mut obs_buf,
+                rewards: &mut rew_buf,
+                dones: &mut done_buf,
+                profits: &mut profit_buf,
+            };
+            venv.rollout(t_len, &mut bufs, |t, obs_t, actions| {
+                let cache = mlp.forward(obs_t);
+                for j in 0..e {
+                    let idx = t * e + j;
+                    let lg = &cache.logits[j * n_logits..(j + 1) * n_logits];
+                    logp_buf[idx] =
+                        heads.sample(rng, lg, &mut actions[j * n_ports..(j + 1) * n_ports]);
+                    val_buf[idx] = cache.value[j];
                 }
-                rew_buf[idx] = info.reward;
-                done_buf[idx] = info.done as i32 as f32;
-                profit_sum += info.profit as f64;
-            }
-            self.venv.observe_all(&mut self.last_obs);
+                act_buf[t * e * n_ports..(t + 1) * e * n_ports].copy_from_slice(actions);
+            });
         }
         self.env_steps += bsz;
-        let last_cache = self.mlp.forward(&self.last_obs);
+
+        // Episode accounting from the filled buffers (off the hot loop).
+        let mut profit_sum = 0f64;
+        let mut comp_returns: Vec<f32> = Vec::new();
+        for t in 0..t_len {
+            for j in 0..e {
+                let idx = t * e + j;
+                profit_sum += profit_buf[idx] as f64;
+                self.running_return[j] += rew_buf[idx];
+                if done_buf[idx] > 0.5 {
+                    comp_returns.push(self.running_return[j]);
+                    self.running_return[j] = 0.0;
+                }
+            }
+        }
+
+        let last_cache = self.mlp.forward(&obs_buf[t_len * e * d..]);
         let (adv, targets) = gae(
             &rew_buf, &val_buf, &done_buf, &last_cache.value, e,
             self.cfg.gamma, self.cfg.gae_lambda,

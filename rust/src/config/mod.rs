@@ -21,6 +21,9 @@ pub struct RunConfig {
     pub n_seeds: usize,
     /// Parallel envs for the native backend (PJRT variants bake their own).
     pub num_envs: usize,
+    /// Worker-pool width for native rollouts (`--threads`); 0 = auto
+    /// (`available_parallelism`).
+    pub num_threads: usize,
     pub total_env_steps: usize,
     pub eval_seeds: usize,
     pub paper_scale: bool,
@@ -36,6 +39,7 @@ impl Default for RunConfig {
             seed: 0,
             n_seeds: 3,
             num_envs: 12,
+            num_threads: 0,
             total_env_steps: 200_000,
             eval_seeds: 8,
             paper_scale: false,
@@ -86,6 +90,7 @@ impl RunConfig {
                 other => return Err(anyhow!("unknown backend '{other}' (pjrt | native)")),
             },
             "num_envs" | "envs" => self.num_envs = val.parse()?,
+            "num_threads" | "threads" => self.num_threads = val.parse()?,
             "scenario" => self.scenario.scenario = val.to_string(),
             "region" => self.scenario.region = val.to_string(),
             "country" => self.scenario.country = val.to_string(),
@@ -127,8 +132,10 @@ mod tests {
         assert!(cfg.set("bogus", "1").is_err());
         cfg.set("backend", "native").unwrap();
         cfg.set("num_envs", "64").unwrap();
+        cfg.set("threads", "4").unwrap();
         assert_eq!(cfg.backend, "native");
         assert_eq!(cfg.num_envs, 64);
+        assert_eq!(cfg.num_threads, 4);
         assert!(cfg.set("backend", "tpu").is_err());
     }
 

@@ -208,7 +208,11 @@ pub fn reset_lane(
     *lane.day = rng.below(tables.n_days as u32);
     lane.present.iter_mut().for_each(|x| *x = false);
     lane.i_drawn.iter_mut().for_each(|x| *x = 0.0);
-    *lane.battery_soc = cfg.battery_soc0;
+    *lane.battery_soc = if cfg.battery_capacity_kwh > 0.0 {
+        cfg.battery_soc0
+    } else {
+        0.0 // battery-less station: pin the (unused) SoC lane to empty
+    };
     *lane.ep_return = 0.0;
     *lane.ep_profit = 0.0;
 }
@@ -260,29 +264,12 @@ pub fn step_lane(
     let excess = tree.project_currents_scratch(i_new, &mut scratch.leaf_scale);
     lane.i_drawn.copy_from_slice(i_new);
 
-    // (ii) charge.
-    let mut de_net = 0f32;
-    let mut grid_cars = 0f32;
-    for j in 0..c {
-        if !lane.present[j] {
-            continue;
-        }
-        let p_kw = tree.volt[j] * lane.i_drawn[j] / 1000.0;
-        let mut e = p_kw * DT_HOURS;
-        e = e
-            .min((1.0 - lane.soc[j]) * lane.cap[j])
-            .max(-lane.soc[j] * lane.cap[j]);
-        lane.soc[j] = (lane.soc[j] + e / lane.cap[j].max(1e-9)).clamp(0.0, 1.0);
-        lane.de_remain[j] -= e;
-        lane.dt_remain[j] -= 1.0;
-        de_net += e;
-        grid_cars += if e > 0.0 {
-            e / tree.eta_port[j]
-        } else {
-            e * tree.eta_port[j]
-        };
-    }
-    let e_bat = {
+    // (ii) charge. Car-side discharge is accumulated here, at charge
+    // time, so a car that departs later in this same step still incurs
+    // the degradation penalty for its final-step discharge (reading
+    // `i_drawn` after departures would see zeroed currents).
+    let (de_net, grid_cars, car_discharge) = charge_cars(lane, tree, c);
+    let e_bat = if cfg.battery_capacity_kwh > 0.0 {
         let p_kw = tree.volt[c] * lane.i_drawn[c] / 1000.0;
         let mut e = p_kw * DT_HOURS;
         e = e
@@ -290,6 +277,11 @@ pub fn step_lane(
             .max(-*lane.battery_soc * cfg.battery_capacity_kwh);
         *lane.battery_soc = (*lane.battery_soc + e / cfg.battery_capacity_kwh).clamp(0.0, 1.0);
         e
+    } else {
+        // Battery-less station (capacity 0): no energy flows, and the SoC
+        // update is skipped — dividing by capacity would turn it NaN and
+        // poison every later observation.
+        0.0
     };
     let de_grid_net = grid_cars + e_bat;
     *lane.t += 1;
@@ -299,7 +291,6 @@ pub fn step_lane(
     let mut overtime = 0f32;
     let mut early = 0f32;
     let mut departed = 0f32;
-    let mut car_discharge = 0f32;
     for j in 0..c {
         if !lane.present[j] {
             continue;
@@ -319,15 +310,6 @@ pub fn step_lane(
             departed += 1.0;
             lane.present[j] = false;
             lane.i_drawn[j] = 0.0;
-        }
-    }
-    // degradation: any car-side discharge this step (computed after
-    // departures clear lanes; cars only charge unless V2G, so this is
-    // battery-dominated).
-    for j in 0..c {
-        let p_kw = tree.volt[j] * lane.i_drawn[j] / 1000.0;
-        if p_kw < 0.0 {
-            car_discharge += -p_kw * DT_HOURS;
         }
     }
 
@@ -398,6 +380,43 @@ pub fn step_lane(
     info
 }
 
+/// Transition loop (ii): apply each present car's allocated current for
+/// one step. Returns `(net energy into cars kWh, grid-side car energy
+/// kWh, car-side discharge kWh)`. Discharge (negative current, V2G-style)
+/// is accounted here — before departures clear lanes — so cars leaving
+/// this step still incur the degradation penalty for their final
+/// discharge.
+fn charge_cars(lane: &mut LaneView<'_>, tree: &StationTree, c: usize) -> (f32, f32, f32) {
+    let mut de_net = 0f32;
+    let mut grid_cars = 0f32;
+    let mut car_discharge = 0f32;
+    for j in 0..c {
+        if !lane.present[j] {
+            continue;
+        }
+        let p_kw = tree.volt[j] * lane.i_drawn[j] / 1000.0;
+        let mut e = p_kw * DT_HOURS;
+        e = e
+            .min((1.0 - lane.soc[j]) * lane.cap[j])
+            .max(-lane.soc[j] * lane.cap[j]);
+        if e < 0.0 {
+            // Degradation counts the SoC-clamped energy actually delivered
+            // (same basis as the battery-side `(-e_bat).max(0)` term).
+            car_discharge += -e;
+        }
+        lane.soc[j] = (lane.soc[j] + e / lane.cap[j].max(1e-9)).clamp(0.0, 1.0);
+        lane.de_remain[j] -= e;
+        lane.dt_remain[j] -= 1.0;
+        de_net += e;
+        grid_cars += if e > 0.0 {
+            e / tree.eta_port[j]
+        } else {
+            e * tree.eta_port[j]
+        };
+    }
+    (de_net, grid_cars, car_discharge)
+}
+
 /// Draw a car for `slot` (paper A.1 arrival model). Consumes exactly one
 /// categorical, one normal, one kumaraswamy, and one uniform draw.
 pub fn sample_car(
@@ -441,7 +460,6 @@ pub fn observe_lane(
     let c = cfg.n_chargers();
     debug_assert_eq!(out.len(), obs_dim(cfg));
     let h = hour(lane.t);
-    let hour_next = (h + 1).min(23);
     for j in 0..c {
         let occ = lane.present[j] as i32 as f32;
         let (soc, de, dtr, rhat) = if lane.present[j] {
@@ -463,9 +481,11 @@ pub fn observe_lane(
     }
     let b = 6 * c;
     out[b] = lane.battery_soc;
-    out[b + 1] = lane.i_drawn[c] / tree.i_max[c];
-    out[b + 2] =
-        charging_curve(lane.battery_soc, cfg.battery_p_max_kw, cfg.battery_tau) / tree.p_max[c];
+    // battery normalizers are guarded: a battery-less station has
+    // i_max = p_max = 0 at the battery port and must observe 0, not 0/0.
+    out[b + 1] = lane.i_drawn[c] / tree.i_max[c].max(1e-9);
+    out[b + 2] = charging_curve(lane.battery_soc, cfg.battery_p_max_kw, cfg.battery_tau)
+        / tree.p_max[c].max(1e-9);
     let phase = 2.0 * std::f32::consts::PI * lane.t as f32 / STEPS_PER_EPISODE as f32;
     out[b + 3] = phase.sin();
     out[b + 4] = phase.cos();
@@ -473,7 +493,160 @@ pub fn observe_lane(
     out[b + 6] = lane.day as f32 / tables.n_days as f32;
     let idx = lane.day as usize * 24 + h;
     out[b + 7] = tables.price_buy[idx];
-    out[b + 8] = tables.price_buy[lane.day as usize * 24 + hour_next];
+    // Next-hour price: the last hour of the day wraps to hour 0 of the
+    // next day (mod the table length) — clamping to hour 23 would show the
+    // current price as "next" for the whole final hour.
+    let idx_next = if h == 23 {
+        ((lane.day as usize + 1) % tables.n_days) * 24
+    } else {
+        idx + 1
+    };
+    out[b + 8] = tables.price_buy[idx_next];
     out[b + 9] = tables.price_sell_grid[idx];
     out[b + 10] = tables.moer[idx];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::tree::StationConfig;
+
+    /// Flat per-lane state backing a hand-built [`LaneView`].
+    struct LaneState {
+        t: u32,
+        day: u32,
+        battery_soc: f32,
+        ep_return: f32,
+        ep_profit: f32,
+        present: Vec<bool>,
+        soc: Vec<f32>,
+        de_remain: Vec<f32>,
+        dt_remain: Vec<f32>,
+        cap: Vec<f32>,
+        r_bar: Vec<f32>,
+        tau: Vec<f32>,
+        sensitive: Vec<bool>,
+        i_drawn: Vec<f32>,
+    }
+
+    impl LaneState {
+        fn empty(cfg: &StationConfig) -> LaneState {
+            let (c, p) = (cfg.n_chargers(), cfg.n_ports());
+            LaneState {
+                t: 0,
+                day: 0,
+                battery_soc: cfg.battery_soc0,
+                ep_return: 0.0,
+                ep_profit: 0.0,
+                present: vec![false; c],
+                soc: vec![0.0; c],
+                de_remain: vec![0.0; c],
+                dt_remain: vec![0.0; c],
+                cap: vec![60.0; c],
+                r_bar: vec![50.0; c],
+                tau: vec![0.8; c],
+                sensitive: vec![false; c],
+                i_drawn: vec![0.0; p],
+            }
+        }
+
+        fn view(&mut self) -> LaneView<'_> {
+            LaneView {
+                t: &mut self.t,
+                day: &mut self.day,
+                battery_soc: &mut self.battery_soc,
+                ep_return: &mut self.ep_return,
+                ep_profit: &mut self.ep_profit,
+                present: &mut self.present,
+                soc: &mut self.soc,
+                de_remain: &mut self.de_remain,
+                dt_remain: &mut self.dt_remain,
+                cap: &mut self.cap,
+                r_bar: &mut self.r_bar,
+                tau: &mut self.tau,
+                sensitive: &mut self.sensitive,
+                i_drawn: &mut self.i_drawn,
+            }
+        }
+    }
+
+    /// Regression for the degradation-accounting bug: discharge must be
+    /// accumulated at charge time (loop ii), so a car that departs in the
+    /// same step — its `i_drawn` zeroed by the departure pass — is still
+    /// penalized for its final-step discharge.
+    #[test]
+    fn departing_car_final_step_discharge_is_counted() {
+        let cfg = StationConfig::default();
+        let tree = StationTree::standard(&cfg);
+        let c = cfg.n_chargers();
+        let mut st = LaneState::empty(&cfg);
+        st.present[0] = true;
+        st.soc[0] = 0.5;
+        st.dt_remain[0] = 1.0; // departs after this step (time-sensitive)
+        st.i_drawn[0] = -25.0; // V2G-style discharge: -10 kW at 400 V
+        let (de_net, grid_cars, car_discharge) = charge_cars(&mut st.view(), &tree, c);
+        let expect_kwh = 400.0 * 25.0 / 1000.0 * DT_HOURS;
+        assert!(
+            (car_discharge - expect_kwh).abs() < 1e-6,
+            "discharge {car_discharge} != {expect_kwh}"
+        );
+        assert!(de_net < 0.0);
+        assert!(grid_cars < 0.0, "discharged energy flows back to the grid");
+        assert!(st.soc[0] < 0.5);
+        // ...and the charge loop already decremented the stay clock, so
+        // the departure pass will clear this lane right after.
+        assert!(st.dt_remain[0] <= 0.0);
+    }
+
+    #[test]
+    fn charging_cars_incur_no_discharge_penalty() {
+        let cfg = StationConfig::default();
+        let tree = StationTree::standard(&cfg);
+        let c = cfg.n_chargers();
+        let mut st = LaneState::empty(&cfg);
+        st.present[0] = true;
+        st.soc[0] = 0.3;
+        st.dt_remain[0] = 10.0;
+        st.i_drawn[0] = 100.0; // charging
+        let (de_net, _grid, car_discharge) = charge_cars(&mut st.view(), &tree, c);
+        assert_eq!(car_discharge, 0.0);
+        assert!(de_net > 0.0);
+    }
+
+    /// Regression for the next-hour price clamp: at hour 23 the "next
+    /// price" must be hour 0 of the next day (mod n_days), not hour 23
+    /// again.
+    #[test]
+    fn next_hour_price_wraps_at_day_boundary() {
+        let cfg = StationConfig::default();
+        let tree = StationTree::standard(&cfg);
+        let mut tables = ScenarioTables::synthetic(1.0);
+        tables.n_days = 2;
+        tables.price_buy = (0..48).map(|k| 0.01 * k as f32).collect();
+        let mut st = LaneState::empty(&cfg);
+        st.day = 1; // last day: next day wraps to day 0
+        st.t = (23 * STEPS_PER_HOUR) as u32; // hour 23
+        let mut out = vec![0f32; obs_dim(&cfg)];
+        observe_lane(
+            &LaneRef {
+                t: st.t,
+                day: st.day,
+                battery_soc: st.battery_soc,
+                present: &st.present,
+                soc: &st.soc,
+                de_remain: &st.de_remain,
+                dt_remain: &st.dt_remain,
+                r_bar: &st.r_bar,
+                tau: &st.tau,
+                i_drawn: &st.i_drawn,
+            },
+            &cfg,
+            &tree,
+            &tables,
+            &mut out,
+        );
+        let b = 6 * cfg.n_chargers();
+        assert_eq!(out[b + 7], tables.price_buy[47], "current price: day 1 hour 23");
+        assert_eq!(out[b + 8], tables.price_buy[0], "next price: day 0 hour 0");
+    }
 }

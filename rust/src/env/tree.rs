@@ -62,6 +62,42 @@ impl StationConfig {
     pub fn n_ports(&self) -> usize {
         self.n_chargers() + 1
     }
+
+    /// Physical-consistency checks, run by every env constructor. A
+    /// battery-less station is expressed as `battery_capacity_kwh == 0`
+    /// **and** `battery_p_max_kw == 0`; a real battery port (positive
+    /// power rating) must have positive capacity — the SoC update divides
+    /// by it, and capacity 0 would turn `battery_soc` into NaN and poison
+    /// every later observation.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::bail;
+        if self.n_chargers() == 0 {
+            bail!("station must have at least one charger (n_dc + n_ac == 0)");
+        }
+        if !self.battery_capacity_kwh.is_finite()
+            || !self.battery_p_max_kw.is_finite()
+            || self.battery_capacity_kwh < 0.0
+            || self.battery_p_max_kw < 0.0
+        {
+            bail!(
+                "battery_capacity_kwh ({}) and battery_p_max_kw ({}) must be finite and >= 0",
+                self.battery_capacity_kwh,
+                self.battery_p_max_kw
+            );
+        }
+        if self.battery_p_max_kw > 0.0 && self.battery_capacity_kwh <= 0.0 {
+            bail!(
+                "battery_capacity_kwh must be > 0 for a real battery port \
+                 (battery_p_max_kw = {} kW); set battery_p_max_kw = 0 for a \
+                 battery-less station",
+                self.battery_p_max_kw
+            );
+        }
+        if self.battery_voltage <= 0.0 {
+            bail!("battery_voltage must be > 0 (got {})", self.battery_voltage);
+        }
+        Ok(())
+    }
 }
 
 /// Flattened tree (membership matrix + per-port electrical data).
@@ -230,6 +266,32 @@ mod tests {
         let excess = t.project_currents(&mut i);
         assert_eq!(excess, 0.0);
         assert_eq!(i, before);
+    }
+
+    #[test]
+    fn validate_rejects_powered_battery_without_capacity() {
+        let ok = StationConfig::default();
+        assert!(ok.validate().is_ok());
+        // battery-less variant: both zero is legal.
+        let batteryless = StationConfig {
+            battery_capacity_kwh: 0.0,
+            battery_p_max_kw: 0.0,
+            ..StationConfig::default()
+        };
+        assert!(batteryless.validate().is_ok());
+        // a real battery port with zero capacity is a config error.
+        let bad = StationConfig {
+            battery_capacity_kwh: 0.0,
+            ..StationConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        let negative = StationConfig {
+            battery_capacity_kwh: -5.0,
+            ..StationConfig::default()
+        };
+        assert!(negative.validate().is_err());
+        let no_chargers = StationConfig { n_dc: 0, n_ac: 0, ..StationConfig::default() };
+        assert!(no_chargers.validate().is_err());
     }
 
     #[test]

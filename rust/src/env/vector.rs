@@ -5,29 +5,39 @@
 //! environment (and of Jumanji-style batched pure-function envs): all
 //! per-car/per-port/per-env state lives in flat `Vec<f32>`/`Vec<u32>`
 //! lanes of shape `[B, ...]`, one `step_all` call advances every lane, and
-//! large batches are sharded across OS threads with `std::thread::scope`
-//! (no external dependency). Each lane carries its own counter-based
-//! [`CounterRng`], so results are bit-identical for any shard count or
-//! thread schedule.
+//! large batches are sharded across a **persistent worker pool**
+//! ([`crate::runtime::pool::WorkerPool`]) — long-lived shard-pinned
+//! threads parked between calls, so per-step dispatch is a condvar wake
+//! instead of an OS thread spawn. A scoped-thread fallback
+//! ([`VectorEnv::step_all_sharded`]) is kept as the cross-check oracle.
+//! Each lane carries its own counter-based [`CounterRng`], so results are
+//! bit-identical for any shard count, runtime, or thread schedule.
 //!
 //! Batches may be **heterogeneous**: every lane holds an index into a set
 //! of shared `Arc<ScenarioTables>`, so one batch can mix countries, price
 //! years, traffic levels, and user profiles — multi-scenario training in a
 //! single rollout.
+//!
+//! For training, [`VectorEnv::rollout`] fuses the whole
+//! act → step → observe loop: each shard steps its lanes and immediately
+//! writes next-step observations, rewards, dones, and profits straight
+//! into caller-provided PPO buffers (time-major), removing the serial
+//! observe pass and the per-step obs copy.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
+use crate::runtime::pool::WorkerPool;
 use crate::util::rng::CounterRng;
 
 use super::core::{self, LaneRef, LaneView, Scratch, ScenarioTables, StepInfo};
 use super::tree::{StationConfig, StationTree};
 
-/// Don't spawn shard threads below this batch size; the per-lane work is
-/// microseconds and thread dispatch would dominate.
+/// Don't shard below this batch size; the per-lane work is microseconds
+/// and even a condvar wake would dominate.
 const PAR_MIN_BATCH: usize = 64;
 
-/// Keep every shard at least this many lanes so scoped-thread spawn cost
-/// (~tens of µs) stays small relative to per-shard stepping work.
+/// Keep every shard at least this many lanes so wakeup/park overhead
+/// stays small relative to per-shard stepping work.
 const MIN_LANES_PER_SHARD: usize = 32;
 
 pub struct VectorEnv {
@@ -39,9 +49,13 @@ pub struct VectorEnv {
     c: usize,
     p: usize,
     parallel: bool,
-    /// available_parallelism() cached at construction — the std call is
-    /// documented as expensive and step_all runs once per env step.
+    /// Shard-count ceiling; defaults to available_parallelism() (cached at
+    /// construction — the std call is documented as expensive) and is
+    /// overridable via [`VectorEnv::set_threads`] (`--threads`).
     threads: usize,
+    /// Persistent worker pool, built lazily on the first sharded step and
+    /// reused for every subsequent `step_all`/`rollout` call.
+    pool: Option<Arc<WorkerPool>>,
     // per-env lanes [B]
     t: Vec<u32>,
     day: Vec<u32>,
@@ -60,6 +74,16 @@ pub struct VectorEnv {
     sensitive: Vec<bool>,
     // per-port lanes [B * P]
     i_drawn: Vec<f32>,
+}
+
+/// Caller-provided PPO rollout buffers (time-major). `obs` holds one extra
+/// row: row `t` is the observation *before* step `t`, row `n_steps` is the
+/// bootstrap observation after the final step.
+pub struct RolloutBuffers<'a> {
+    pub obs: &'a mut [f32],     // [(T + 1) * B * obs_dim]
+    pub rewards: &'a mut [f32], // [T * B]
+    pub dones: &'a mut [f32],   // [T * B] (1.0 = episode ended this step)
+    pub profits: &'a mut [f32], // [T * B]
 }
 
 impl VectorEnv {
@@ -95,6 +119,9 @@ impl VectorEnv {
         lane_scenario: Vec<usize>,
         rngs: Vec<CounterRng>,
     ) -> VectorEnv {
+        if let Err(e) = cfg.validate() {
+            panic!("invalid StationConfig: {e}");
+        }
         assert!(!tables.is_empty(), "need at least one scenario table");
         assert_eq!(lane_scenario.len(), rngs.len());
         for &s in &lane_scenario {
@@ -113,6 +140,7 @@ impl VectorEnv {
             p,
             parallel: true,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            pool: None,
             t: vec![0; b],
             day: vec![0; b],
             battery_soc: vec![cfg.battery_soc0; b],
@@ -158,6 +186,25 @@ impl VectorEnv {
     /// changes results, only wall-clock).
     pub fn set_parallel(&mut self, on: bool) {
         self.parallel = on;
+    }
+
+    /// Cap the shard/worker count (`--threads`). `0` restores the
+    /// `available_parallelism()` default. Rebuilds the worker pool lazily
+    /// on the next sharded call.
+    pub fn set_threads(&mut self, threads: usize) {
+        let t = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        if t != self.threads {
+            self.threads = t;
+            self.pool = None;
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     pub fn tables_for(&self, lane: usize) -> &ScenarioTables {
@@ -241,129 +288,105 @@ impl VectorEnv {
         core::reset_lane(&mut view, &mut self.rng[lane], &self.cfg, &tables);
     }
 
-    /// Step every lane. `actions` is `[B * P]` (row-major per lane),
-    /// `infos` receives one [`StepInfo`] per lane. Shard count is chosen
-    /// from `available_parallelism`; results are identical for any count.
-    pub fn step_all(&mut self, actions: &[usize], infos: &mut [StepInfo]) {
-        let shards = if self.parallel && self.b >= PAR_MIN_BATCH {
+    /// Shard count `step_all`/`rollout` will use for the current batch.
+    fn auto_shards(&self) -> usize {
+        if self.parallel && self.b >= PAR_MIN_BATCH {
             self.threads.min(self.b / MIN_LANES_PER_SHARD).max(1)
         } else {
             1
-        };
-        self.step_all_sharded(actions, infos, shards);
+        }
     }
 
-    /// Step with an explicit shard count (exposed so tests can prove
-    /// thread-count independence).
-    pub fn step_all_sharded(&mut self, actions: &[usize], infos: &mut [StepInfo], shards: usize) {
-        assert_eq!(actions.len(), self.b * self.p, "actions must be [B * n_ports]");
-        assert_eq!(infos.len(), self.b, "infos must be [B]");
-        let shards = shards.clamp(1, self.b.max(1));
-        let lanes_per = self.b.div_ceil(shards);
-        let (c, p) = (self.c, self.p);
-        let cfg = &self.cfg;
-        let tree = &self.tree;
-        let tables: &[Arc<ScenarioTables>] = &self.tables;
+    /// The persistent pool, sized to the shard demand actually seen (not
+    /// to `threads`): a 64-core host stepping B=256 uses 8 shards, and a
+    /// 64-wide pool would notify_all-wake 56 workers per step just to
+    /// re-park them. Grown (rebuilt) if a later call needs more shards;
+    /// `shards` is already capped by `self.threads` at every call site.
+    fn ensure_pool(&mut self, shards: usize) -> Arc<WorkerPool> {
+        let need = shards.max(1);
+        let rebuild = match &self.pool {
+            Some(p) => p.max_shards() < need,
+            None => true,
+        };
+        if rebuild {
+            self.pool = Some(Arc::new(WorkerPool::new(need)));
+        }
+        Arc::clone(self.pool.as_ref().expect("pool just built"))
+    }
 
-        if shards == 1 {
-            step_lanes(
-                cfg,
-                tree,
-                tables,
-                &self.lane_scenario,
-                &mut self.t,
-                &mut self.day,
-                &mut self.battery_soc,
-                &mut self.ep_return,
-                &mut self.ep_profit,
-                &mut self.rng,
-                &mut self.present,
-                &mut self.soc,
-                &mut self.de_remain,
-                &mut self.dt_remain,
-                &mut self.cap,
-                &mut self.r_bar,
-                &mut self.tau,
-                &mut self.sensitive,
-                &mut self.i_drawn,
-                actions,
-                infos,
-            );
+    /// Step every lane. `actions` is `[B * P]` (row-major per lane),
+    /// `infos` receives one [`StepInfo`] per lane. Sharded over the
+    /// persistent worker pool; results are identical for any shard count.
+    pub fn step_all(&mut self, actions: &[usize], infos: &mut [StepInfo]) {
+        let shards = self.auto_shards();
+        self.step_all_pooled(actions, infos, shards);
+    }
+
+    /// Pool-backed step with an explicit shard count (clamped to the pool
+    /// width). Exposed so tests can pin shard counts on the persistent
+    /// runtime.
+    pub fn step_all_pooled(&mut self, actions: &[usize], infos: &mut [StepInfo], shards: usize) {
+        let shards = shards.clamp(1, self.b.max(1)).min(self.threads.max(1));
+        let pool = if shards > 1 { Some(self.ensure_pool(shards)) } else { None };
+        let mut tasks = self.shard_tasks(actions, infos, None, shards);
+        run_shard_tasks(pool.as_deref(), &mut tasks);
+    }
+
+    /// Scoped-thread fallback with an explicit shard count: spawns (and
+    /// joins) `shards` threads for this one call. Kept as the cross-check
+    /// oracle for the pool runtime and for environments where persistent
+    /// threads are undesirable; bit-identical to `step_all_pooled` at the
+    /// same shard count.
+    pub fn step_all_sharded(&mut self, actions: &[usize], infos: &mut [StepInfo], shards: usize) {
+        let shards = shards.clamp(1, self.b.max(1));
+        let mut tasks = self.shard_tasks(actions, infos, None, shards);
+        if tasks.len() <= 1 {
+            for task in tasks.iter_mut() {
+                task.run();
+            }
             return;
         }
-
-        // Split every SoA lane into per-shard chunks and step them on
-        // scoped threads. Chunks are disjoint, so no synchronization is
-        // needed; lane RNGs are counter-based, so the schedule is
-        // irrelevant to the results.
-        let mut scen = self.lane_scenario.as_slice();
-        let mut t = self.t.as_mut_slice();
-        let mut day = self.day.as_mut_slice();
-        let mut bsoc = self.battery_soc.as_mut_slice();
-        let mut ep_r = self.ep_return.as_mut_slice();
-        let mut ep_p = self.ep_profit.as_mut_slice();
-        let mut rng = self.rng.as_mut_slice();
-        let mut present = self.present.as_mut_slice();
-        let mut soc = self.soc.as_mut_slice();
-        let mut de = self.de_remain.as_mut_slice();
-        let mut dt = self.dt_remain.as_mut_slice();
-        let mut cap = self.cap.as_mut_slice();
-        let mut r_bar = self.r_bar.as_mut_slice();
-        let mut tau = self.tau.as_mut_slice();
-        let mut sens = self.sensitive.as_mut_slice();
-        let mut i_drawn = self.i_drawn.as_mut_slice();
-        let mut acts = actions;
-        let mut infos = infos;
-
         std::thread::scope(|scope| {
-            let mut remaining = self.b;
-            while remaining > 0 {
-                let take = lanes_per.min(remaining);
-                remaining -= take;
-
-                macro_rules! split_mut {
-                    ($v:ident, $n:expr) => {{
-                        let (head, rest) = std::mem::take(&mut $v).split_at_mut($n);
-                        $v = rest;
-                        head
-                    }};
-                }
-                macro_rules! split_ref {
-                    ($v:ident, $n:expr) => {{
-                        let (head, rest) = $v.split_at($n);
-                        $v = rest;
-                        head
-                    }};
-                }
-
-                let scen_h = split_ref!(scen, take);
-                let t_h = split_mut!(t, take);
-                let day_h = split_mut!(day, take);
-                let bsoc_h = split_mut!(bsoc, take);
-                let ep_r_h = split_mut!(ep_r, take);
-                let ep_p_h = split_mut!(ep_p, take);
-                let rng_h = split_mut!(rng, take);
-                let present_h = split_mut!(present, take * c);
-                let soc_h = split_mut!(soc, take * c);
-                let de_h = split_mut!(de, take * c);
-                let dt_h = split_mut!(dt, take * c);
-                let cap_h = split_mut!(cap, take * c);
-                let r_bar_h = split_mut!(r_bar, take * c);
-                let tau_h = split_mut!(tau, take * c);
-                let sens_h = split_mut!(sens, take * c);
-                let i_drawn_h = split_mut!(i_drawn, take * p);
-                let acts_h = split_ref!(acts, take * p);
-                let infos_h = split_mut!(infos, take);
-
-                scope.spawn(move || {
-                    step_lanes(
-                        cfg, tree, tables, scen_h, t_h, day_h, bsoc_h, ep_r_h, ep_p_h,
-                        rng_h, present_h, soc_h, de_h, dt_h, cap_h, r_bar_h, tau_h,
-                        sens_h, i_drawn_h, acts_h, infos_h,
-                    );
-                });
+            for task in tasks.iter_mut() {
+                scope.spawn(move || task.run());
             }
         });
+    }
+
+    /// Fused rollout: advance all lanes `n_steps` times, writing
+    /// observations, rewards, dones, and profits directly into
+    /// caller-provided PPO buffers in one pass (no separate observe +
+    /// copy). `policy(t, obs_t, actions)` reads the `[B * obs_dim]`
+    /// observation row for step `t` and fills the `[B * P]` action row;
+    /// everything after it runs sharded on the persistent pool, with each
+    /// shard observing its own lanes immediately after stepping them
+    /// (state still cache-hot).
+    pub fn rollout<F>(&mut self, n_steps: usize, bufs: &mut RolloutBuffers<'_>, mut policy: F)
+    where
+        F: FnMut(usize, &[f32], &mut [usize]),
+    {
+        let (b, p, d) = (self.b, self.p, self.obs_dim());
+        assert_eq!(bufs.obs.len(), (n_steps + 1) * b * d, "obs must be [(T+1)*B*obs_dim]");
+        assert_eq!(bufs.rewards.len(), n_steps * b, "rewards must be [T*B]");
+        assert_eq!(bufs.dones.len(), n_steps * b, "dones must be [T*B]");
+        assert_eq!(bufs.profits.len(), n_steps * b, "profits must be [T*B]");
+        let mut actions = vec![0usize; b * p];
+        let mut infos = vec![StepInfo::default(); b];
+        self.observe_all(&mut bufs.obs[..b * d]);
+        let shards = self.auto_shards();
+        let pool = if shards > 1 { Some(self.ensure_pool(shards)) } else { None };
+        for t in 0..n_steps {
+            let (obs_t, obs_next) = bufs.obs[t * b * d..].split_at_mut(b * d);
+            policy(t, obs_t, &mut actions);
+            let out = StepOut {
+                obs: &mut obs_next[..b * d],
+                rewards: &mut bufs.rewards[t * b..(t + 1) * b],
+                dones: &mut bufs.dones[t * b..(t + 1) * b],
+                profits: &mut bufs.profits[t * b..(t + 1) * b],
+            };
+            let mut tasks = self.shard_tasks(&actions, &mut infos, Some(out), shards);
+            run_shard_tasks(pool.as_deref(), &mut tasks);
+        }
     }
 
     /// Observations for every lane into `out` (`[B * obs_dim]` row-major).
@@ -397,96 +420,348 @@ impl VectorEnv {
             out,
         );
     }
+
+    /// Split the SoA state (plus optional per-step output buffers) into
+    /// `shards` disjoint contiguous lane blocks. Chunk boundaries depend
+    /// only on `(B, shards)`, so the pool and the scoped fallback compute
+    /// bit-identical results for the same shard count.
+    fn shard_tasks<'a>(
+        &'a mut self,
+        actions: &'a [usize],
+        infos: &'a mut [StepInfo],
+        out: Option<StepOut<'a>>,
+        shards: usize,
+    ) -> Vec<ShardTask<'a>> {
+        assert_eq!(actions.len(), self.b * self.p, "actions must be [B * n_ports]");
+        assert_eq!(infos.len(), self.b, "infos must be [B]");
+        let shards = shards.clamp(1, self.b.max(1));
+        let lanes_per = self.b.div_ceil(shards);
+        let VectorEnv {
+            ref cfg,
+            ref tree,
+            ref tables,
+            ref lane_scenario,
+            b,
+            c,
+            p,
+            ref mut t,
+            ref mut day,
+            ref mut battery_soc,
+            ref mut ep_return,
+            ref mut ep_profit,
+            ref mut rng,
+            ref mut present,
+            ref mut soc,
+            ref mut de_remain,
+            ref mut dt_remain,
+            ref mut cap,
+            ref mut r_bar,
+            ref mut tau,
+            ref mut sensitive,
+            ref mut i_drawn,
+            ..
+        } = *self;
+        let d = core::obs_dim(cfg);
+
+        let mut scen = lane_scenario.as_slice();
+        let mut t = t.as_mut_slice();
+        let mut day = day.as_mut_slice();
+        let mut bsoc = battery_soc.as_mut_slice();
+        let mut ep_r = ep_return.as_mut_slice();
+        let mut ep_p = ep_profit.as_mut_slice();
+        let mut rng = rng.as_mut_slice();
+        let mut present = present.as_mut_slice();
+        let mut soc = soc.as_mut_slice();
+        let mut de = de_remain.as_mut_slice();
+        let mut dt = dt_remain.as_mut_slice();
+        let mut cap = cap.as_mut_slice();
+        let mut r_bar = r_bar.as_mut_slice();
+        let mut tau = tau.as_mut_slice();
+        let mut sens = sensitive.as_mut_slice();
+        let mut i_drawn = i_drawn.as_mut_slice();
+        let mut acts = actions;
+        let mut infos = infos;
+        let mut out = out;
+
+        let mut tasks = Vec::with_capacity(shards);
+        let mut remaining = b;
+        while remaining > 0 {
+            let take = lanes_per.min(remaining);
+            remaining -= take;
+
+            macro_rules! split_mut {
+                ($v:ident, $n:expr) => {{
+                    let (head, rest) = std::mem::take(&mut $v).split_at_mut($n);
+                    $v = rest;
+                    head
+                }};
+            }
+            macro_rules! split_ref {
+                ($v:ident, $n:expr) => {{
+                    let (head, rest) = $v.split_at($n);
+                    $v = rest;
+                    head
+                }};
+            }
+
+            let out_h = out.take().map(|o| {
+                let (obs_h, obs_r) = o.obs.split_at_mut(take * d);
+                let (rew_h, rew_r) = o.rewards.split_at_mut(take);
+                let (done_h, done_r) = o.dones.split_at_mut(take);
+                let (prof_h, prof_r) = o.profits.split_at_mut(take);
+                out = Some(StepOut { obs: obs_r, rewards: rew_r, dones: done_r, profits: prof_r });
+                StepOut { obs: obs_h, rewards: rew_h, dones: done_h, profits: prof_h }
+            });
+
+            tasks.push(ShardTask {
+                cfg,
+                tree,
+                tables,
+                scen: split_ref!(scen, take),
+                t: split_mut!(t, take),
+                day: split_mut!(day, take),
+                battery_soc: split_mut!(bsoc, take),
+                ep_return: split_mut!(ep_r, take),
+                ep_profit: split_mut!(ep_p, take),
+                rng: split_mut!(rng, take),
+                present: split_mut!(present, take * c),
+                soc: split_mut!(soc, take * c),
+                de_remain: split_mut!(de, take * c),
+                dt_remain: split_mut!(dt, take * c),
+                cap: split_mut!(cap, take * c),
+                r_bar: split_mut!(r_bar, take * c),
+                tau: split_mut!(tau, take * c),
+                sensitive: split_mut!(sens, take * c),
+                i_drawn: split_mut!(i_drawn, take * p),
+                actions: split_ref!(acts, take * p),
+                infos: split_mut!(infos, take),
+                out: out_h,
+            });
+        }
+        tasks
+    }
 }
 
-/// Measure raw `step_all` throughput at batch size `b` with random actions
+/// Per-step output slices for one shard's lanes (fused rollout only).
+struct StepOut<'a> {
+    obs: &'a mut [f32],
+    rewards: &'a mut [f32],
+    dones: &'a mut [f32],
+    profits: &'a mut [f32],
+}
+
+/// One shard's work item: a contiguous block of lanes plus everything
+/// needed to step (and, in rollout mode, observe) them.
+struct ShardTask<'a> {
+    cfg: &'a StationConfig,
+    tree: &'a StationTree,
+    tables: &'a [Arc<ScenarioTables>],
+    scen: &'a [u32],
+    t: &'a mut [u32],
+    day: &'a mut [u32],
+    battery_soc: &'a mut [f32],
+    ep_return: &'a mut [f32],
+    ep_profit: &'a mut [f32],
+    rng: &'a mut [CounterRng],
+    present: &'a mut [bool],
+    soc: &'a mut [f32],
+    de_remain: &'a mut [f32],
+    dt_remain: &'a mut [f32],
+    cap: &'a mut [f32],
+    r_bar: &'a mut [f32],
+    tau: &'a mut [f32],
+    sensitive: &'a mut [bool],
+    i_drawn: &'a mut [f32],
+    actions: &'a [usize],
+    infos: &'a mut [StepInfo],
+    out: Option<StepOut<'a>>,
+}
+
+impl ShardTask<'_> {
+    /// Step (and in rollout mode observe) every lane in this shard.
+    fn run(&mut self) {
+        let c = self.cfg.n_chargers();
+        let p = self.cfg.n_ports();
+        let d = core::obs_dim(self.cfg);
+        let mut scratch = Scratch::new(p);
+        for lane in 0..self.t.len() {
+            let mut view = LaneView {
+                t: &mut self.t[lane],
+                day: &mut self.day[lane],
+                battery_soc: &mut self.battery_soc[lane],
+                ep_return: &mut self.ep_return[lane],
+                ep_profit: &mut self.ep_profit[lane],
+                present: &mut self.present[lane * c..(lane + 1) * c],
+                soc: &mut self.soc[lane * c..(lane + 1) * c],
+                de_remain: &mut self.de_remain[lane * c..(lane + 1) * c],
+                dt_remain: &mut self.dt_remain[lane * c..(lane + 1) * c],
+                cap: &mut self.cap[lane * c..(lane + 1) * c],
+                r_bar: &mut self.r_bar[lane * c..(lane + 1) * c],
+                tau: &mut self.tau[lane * c..(lane + 1) * c],
+                sensitive: &mut self.sensitive[lane * c..(lane + 1) * c],
+                i_drawn: &mut self.i_drawn[lane * p..(lane + 1) * p],
+            };
+            let tables = &self.tables[self.scen[lane] as usize];
+            let info = core::step_lane(
+                &mut view,
+                &mut self.rng[lane],
+                self.cfg,
+                self.tree,
+                tables,
+                &self.actions[lane * p..(lane + 1) * p],
+                &mut scratch,
+            );
+            self.infos[lane] = info;
+            if let Some(out) = &mut self.out {
+                out.rewards[lane] = info.reward;
+                out.dones[lane] = info.done as i32 as f32;
+                out.profits[lane] = info.profit;
+                let ref_view = LaneRef {
+                    t: self.t[lane],
+                    day: self.day[lane],
+                    battery_soc: self.battery_soc[lane],
+                    present: &self.present[lane * c..(lane + 1) * c],
+                    soc: &self.soc[lane * c..(lane + 1) * c],
+                    de_remain: &self.de_remain[lane * c..(lane + 1) * c],
+                    dt_remain: &self.dt_remain[lane * c..(lane + 1) * c],
+                    r_bar: &self.r_bar[lane * c..(lane + 1) * c],
+                    tau: &self.tau[lane * c..(lane + 1) * c],
+                    i_drawn: &self.i_drawn[lane * p..(lane + 1) * p],
+                };
+                core::observe_lane(
+                    &ref_view,
+                    self.cfg,
+                    self.tree,
+                    tables,
+                    &mut out.obs[lane * d..(lane + 1) * d],
+                );
+            }
+        }
+    }
+}
+
+/// Dispatch shard tasks on the pool (caller thread runs shard 0) or, when
+/// no pool is supplied or there is a single shard, inline.
+fn run_shard_tasks(pool: Option<&WorkerPool>, tasks: &mut [ShardTask<'_>]) {
+    match pool {
+        Some(pool) if tasks.len() > 1 => {
+            let wrapped: Vec<Mutex<&mut ShardTask<'_>>> =
+                tasks.iter_mut().map(Mutex::new).collect();
+            pool.run(wrapped.len(), |s| wrapped[s].lock().unwrap().run());
+        }
+        _ => {
+            for task in tasks {
+                task.run();
+            }
+        }
+    }
+}
+
+/// Table 2 native batch-size sweep (shared by `chargax bench table2` and
+/// `benches/table2_throughput` so the printed table and the JSON artifact
+/// always cover the same points).
+pub const NATIVE_SWEEP_B: &[usize] = &[1, 16, 256, 1024, 4096];
+
+/// Which execution path a throughput measurement drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepPath {
+    /// Persistent worker-pool `step_all` (the default runtime).
+    Pool,
+    /// Per-call scoped-thread fallback (`step_all_sharded`).
+    Scoped,
+    /// Fused `rollout` writing obs/rewards/dones into PPO-style buffers.
+    Rollout,
+}
+
+impl StepPath {
+    pub fn label(&self) -> &'static str {
+        match self {
+            StepPath::Pool => "native-vector",
+            StepPath::Scoped => "native-scoped",
+            StepPath::Rollout => "native-rollout",
+        }
+    }
+}
+
+/// Measure raw env throughput at batch size `b` with random actions
 /// refreshed every step: one warm pass then one timed pass. Shared by
 /// `benches/table2_throughput` and `chargax bench table2` so the JSON
 /// artifact and the printed table can never use different protocols.
-/// Returns (env-steps/sec, seconds per 100k env steps).
-pub fn measure_step_throughput(tables: Arc<ScenarioTables>, b: usize) -> (f64, f64) {
+/// `threads` caps the shard count (0 = auto); `budget` is the approximate
+/// env-step count per pass. Returns (env-steps/sec, seconds per 100k env
+/// steps).
+pub fn measure_throughput(
+    tables: Arc<ScenarioTables>,
+    b: usize,
+    threads: usize,
+    path: StepPath,
+    budget: usize,
+) -> (f64, f64) {
     use crate::util::rng::Rng;
 
     let mut venv = VectorEnv::new(StationConfig::default(), tables, b, 11);
+    venv.set_threads(threads);
     let nvec = venv.action_nvec();
     let p = venv.n_ports();
-    let mut infos = vec![StepInfo::default(); b];
-    let reps = (120_000 / b).clamp(40, 20_000);
+    let d = venv.obs_dim();
+    let reps = (budget / b.max(1)).clamp(8, 20_000);
     // Pre-generate every step's actions so the timed region contains only
-    // step_all — serial host-side RNG would otherwise be billed as env
-    // throughput, and it grows with B.
+    // the runtime under test — serial host-side RNG would otherwise be
+    // billed as env throughput, and it grows with B.
     let mut arng = Rng::new(17);
-    let all_actions: Vec<usize> = (0..reps * b * p)
-        .map(|k| arng.below(nvec[k % p] as u32) as usize)
-        .collect();
-    let mut pass = |venv: &mut VectorEnv| {
-        for actions in all_actions.chunks_exact(b * p) {
-            venv.step_all(actions, &mut infos);
+    let steps;
+    let mut pass: Box<dyn FnMut(&mut VectorEnv)> = match path {
+        StepPath::Pool | StepPath::Scoped => {
+            let all_actions: Vec<usize> = (0..reps * b * p)
+                .map(|k| arng.below(nvec[k % p] as u32) as usize)
+                .collect();
+            let mut infos = vec![StepInfo::default(); b];
+            steps = (reps * b) as f64;
+            let scoped = path == StepPath::Scoped;
+            Box::new(move |venv: &mut VectorEnv| {
+                for actions in all_actions.chunks_exact(b * p) {
+                    if scoped {
+                        let shards = venv.auto_shards();
+                        venv.step_all_sharded(actions, &mut infos, shards);
+                    } else {
+                        venv.step_all(actions, &mut infos);
+                    }
+                }
+            })
+        }
+        StepPath::Rollout => {
+            // Chunked fused rollouts (bounded T keeps the obs buffer small
+            // at large B) with a "policy" that copies pre-drawn actions.
+            let t_chunk = reps.min(64);
+            let n_chunks = reps.div_ceil(t_chunk);
+            steps = (n_chunks * t_chunk * b) as f64;
+            let all_actions: Vec<usize> = (0..t_chunk * b * p)
+                .map(|k| arng.below(nvec[k % p] as u32) as usize)
+                .collect();
+            let mut obs = vec![0f32; (t_chunk + 1) * b * d];
+            let mut rewards = vec![0f32; t_chunk * b];
+            let mut dones = vec![0f32; t_chunk * b];
+            let mut profits = vec![0f32; t_chunk * b];
+            Box::new(move |venv: &mut VectorEnv| {
+                for _ in 0..n_chunks {
+                    let mut bufs = RolloutBuffers {
+                        obs: &mut obs,
+                        rewards: &mut rewards,
+                        dones: &mut dones,
+                        profits: &mut profits,
+                    };
+                    venv.rollout(t_chunk, &mut bufs, |t, _obs, actions| {
+                        actions.copy_from_slice(&all_actions[t * b * p..(t + 1) * b * p]);
+                    });
+                }
+            })
         }
     };
-    pass(&mut venv); // warm
+    pass(&mut venv); // warm (also builds the pool)
     let t0 = std::time::Instant::now();
     pass(&mut venv);
     let el = t0.elapsed().as_secs_f64();
-    let steps = (reps * b) as f64;
     (steps / el, el * 100_000.0 / steps)
-}
-
-/// Step a contiguous block of lanes (one shard's work).
-#[allow(clippy::too_many_arguments)]
-fn step_lanes(
-    cfg: &StationConfig,
-    tree: &StationTree,
-    tables: &[Arc<ScenarioTables>],
-    lane_scenario: &[u32],
-    t: &mut [u32],
-    day: &mut [u32],
-    battery_soc: &mut [f32],
-    ep_return: &mut [f32],
-    ep_profit: &mut [f32],
-    rng: &mut [CounterRng],
-    present: &mut [bool],
-    soc: &mut [f32],
-    de_remain: &mut [f32],
-    dt_remain: &mut [f32],
-    cap: &mut [f32],
-    r_bar: &mut [f32],
-    tau: &mut [f32],
-    sensitive: &mut [bool],
-    i_drawn: &mut [f32],
-    actions: &[usize],
-    infos: &mut [StepInfo],
-) {
-    let c = cfg.n_chargers();
-    let p = cfg.n_ports();
-    let mut scratch = Scratch::new(p);
-    for lane in 0..t.len() {
-        let mut view = LaneView {
-            t: &mut t[lane],
-            day: &mut day[lane],
-            battery_soc: &mut battery_soc[lane],
-            ep_return: &mut ep_return[lane],
-            ep_profit: &mut ep_profit[lane],
-            present: &mut present[lane * c..(lane + 1) * c],
-            soc: &mut soc[lane * c..(lane + 1) * c],
-            de_remain: &mut de_remain[lane * c..(lane + 1) * c],
-            dt_remain: &mut dt_remain[lane * c..(lane + 1) * c],
-            cap: &mut cap[lane * c..(lane + 1) * c],
-            r_bar: &mut r_bar[lane * c..(lane + 1) * c],
-            tau: &mut tau[lane * c..(lane + 1) * c],
-            sensitive: &mut sensitive[lane * c..(lane + 1) * c],
-            i_drawn: &mut i_drawn[lane * p..(lane + 1) * p],
-        };
-        infos[lane] = core::step_lane(
-            &mut view,
-            &mut rng[lane],
-            cfg,
-            tree,
-            &tables[lane_scenario[lane] as usize],
-            &actions[lane * p..(lane + 1) * p],
-            &mut scratch,
-        );
-    }
 }
 
 #[cfg(test)]
@@ -532,6 +807,32 @@ mod tests {
         envs[0].observe_all(&mut o1);
         envs[1].observe_all(&mut o3);
         assert_eq!(o1, o3);
+    }
+
+    #[test]
+    fn pool_matches_scoped_threads_bit_for_bit() {
+        let mut rng = Rng::new(77);
+        let mut pooled = mixed_env(8);
+        pooled.set_threads(4);
+        let mut scoped = mixed_env(8);
+        let mut pi = vec![StepInfo::default(); 8];
+        let mut si = vec![StepInfo::default(); 8];
+        for step in 0..150 {
+            let actions = random_actions(&mut rng, &pooled);
+            let shards = [1, 2, 3, 4][step % 4];
+            pooled.step_all_pooled(&actions, &mut pi, shards);
+            scoped.step_all_sharded(&actions, &mut si, shards);
+            for lane in 0..8 {
+                assert_eq!(pi[lane].reward, si[lane].reward, "step {step} lane {lane}");
+                assert_eq!(pi[lane].done, si[lane].done, "step {step} lane {lane}");
+            }
+        }
+        let obs_len = pooled.batch() * pooled.obs_dim();
+        let mut po = vec![0f32; obs_len];
+        let mut so = vec![0f32; obs_len];
+        pooled.observe_all(&mut po);
+        scoped.observe_all(&mut so);
+        assert_eq!(po, so);
     }
 
     #[test]
@@ -593,6 +894,61 @@ mod tests {
             } else {
                 assert!(!all_done);
             }
+        }
+    }
+
+    #[test]
+    fn fused_rollout_matches_step_then_observe() {
+        let b = 8;
+        let t_len = 60;
+        let mut rolled = mixed_env(b);
+        rolled.set_threads(3);
+        let mut stepped = mixed_env(b);
+        let p = rolled.n_ports();
+        let d = rolled.obs_dim();
+
+        // Pre-draw one action row per step so both paths see identical
+        // policies.
+        let mut arng = Rng::new(31);
+        let per_step: Vec<Vec<usize>> =
+            (0..t_len).map(|_| random_actions(&mut arng, &rolled)).collect();
+
+        let mut obs = vec![0f32; (t_len + 1) * b * d];
+        let mut rewards = vec![0f32; t_len * b];
+        let mut dones = vec![0f32; t_len * b];
+        let mut profits = vec![0f32; t_len * b];
+        let mut bufs = RolloutBuffers {
+            obs: &mut obs,
+            rewards: &mut rewards,
+            dones: &mut dones,
+            profits: &mut profits,
+        };
+        rolled.rollout(t_len, &mut bufs, |t, _obs, actions| {
+            actions.copy_from_slice(&per_step[t]);
+        });
+
+        let mut infos = vec![StepInfo::default(); b];
+        let mut want_obs = vec![0f32; b * d];
+        stepped.observe_all(&mut want_obs);
+        assert_eq!(&obs[..b * d], want_obs.as_slice(), "row 0");
+        for (t, actions) in per_step.iter().enumerate() {
+            stepped.step_all(actions, &mut infos);
+            for lane in 0..b {
+                assert_eq!(rewards[t * b + lane], infos[lane].reward, "step {t} lane {lane}");
+                assert_eq!(profits[t * b + lane], infos[lane].profit, "step {t} lane {lane}");
+                assert_eq!(
+                    dones[t * b + lane],
+                    infos[lane].done as i32 as f32,
+                    "step {t} lane {lane}"
+                );
+            }
+            stepped.observe_all(&mut want_obs);
+            assert_eq!(
+                &obs[(t + 1) * b * d..(t + 2) * b * d],
+                want_obs.as_slice(),
+                "obs row {}",
+                t + 1
+            );
         }
     }
 }

@@ -20,6 +20,7 @@ use chargax::coordinator::trainer::{self, TrainOptions};
 use chargax::data::{DataStore, Scenario};
 use chargax::env::scalar::{ScalarEnv, ScenarioTables};
 use chargax::env::tree::StationConfig;
+use chargax::env::vector::{self, StepPath, NATIVE_SWEEP_B};
 use chargax::runtime::engine::{artifacts_dir, Engine};
 use chargax::runtime::manifest::Manifest;
 use chargax::util::rng::Rng;
@@ -118,25 +119,34 @@ fn table2(cfg: &RunConfig) -> Result<()> {
         rows[row].2 = Some(el * TARGET / steps);
     }
 
-    // -- Native-vector rows: SoA batched env, random actions ----------------
-    println!("\n  native-vector sweep (random actions, thread-sharded step_all):");
+    // -- Native rows: SoA batched env, random actions, three runtimes -------
+    // (pool = persistent workers, the default; scoped = per-call thread
+    // spawn fallback; rollout = fused act/step/observe into PPO buffers)
     let scalar_random = rows[0].2;
-    for &b in &[1usize, 16, 256, 1024] {
-        let (steps_per_sec, s_per_100k) =
-            chargax::env::vector::measure_step_throughput(Arc::clone(&tables), b);
-        let vs = scalar_random
-            .map(|s| format!("  ({:.1}x vs scalar B=1)", s / s_per_100k))
-            .unwrap_or_default();
-        println!(
-            "    B={b:<5} {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k{vs}"
-        );
-        rows.push((
-            format!("native-vector (B={b})"),
-            None,
-            None,
-            None,
-            Some(s_per_100k),
-        ));
+    for path in [StepPath::Pool, StepPath::Scoped, StepPath::Rollout] {
+        println!("\n  {} sweep (random actions, threads={}):", path.label(), cfg.num_threads);
+        for &b in NATIVE_SWEEP_B {
+            let (steps_per_sec, s_per_100k) = vector::measure_throughput(
+                Arc::clone(&tables),
+                b,
+                cfg.num_threads,
+                path,
+                120_000,
+            );
+            let vs = scalar_random
+                .map(|s| format!("  ({:.1}x vs scalar B=1)", s / s_per_100k))
+                .unwrap_or_default();
+            println!(
+                "    B={b:<5} {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k{vs}"
+            );
+            rows.push((
+                format!("{} (B={b})", path.label()),
+                None,
+                None,
+                None,
+                Some(s_per_100k),
+            ));
+        }
     }
 
     // -- Python gym rows (optional subprocess) -------------------------------

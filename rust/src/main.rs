@@ -147,11 +147,16 @@ fn cmd_train_native(cfg: &RunConfig) -> Result<()> {
     if store.is_none() {
         eprintln!("note: artifacts/data not found; using synthetic scenario tables");
     }
-    let params = PpoParams { num_envs: cfg.num_envs, ..Default::default() };
+    let params = PpoParams {
+        num_envs: cfg.num_envs,
+        threads: cfg.num_threads,
+        ..Default::default()
+    };
     eprintln!(
-        "training native-vector backend ({} envs x {} rollout steps) scenario={} {} {}/{} traffic={}",
+        "training native-vector backend ({} envs x {} rollout steps, threads={}) scenario={} {} {}/{} traffic={}",
         params.num_envs,
         params.rollout_steps,
+        if params.threads == 0 { "auto".to_string() } else { params.threads.to_string() },
         cfg.scenario.scenario,
         cfg.scenario.region,
         cfg.scenario.country,
@@ -286,7 +291,11 @@ COMMANDS:
   cross-check      scalar-vs-JAX transition equivalence
   help             this text
 
-KEYS: variant backend num_envs scenario region country year traffic p_sell
-      beta seed n_seeds steps eval_seeds paper_scale out alpha_<penalty>"
+KEYS: variant backend num_envs threads scenario region country year traffic
+      p_sell beta seed n_seeds steps eval_seeds paper_scale out
+      alpha_<penalty>
+
+  --threads N caps the persistent worker pool driving native rollouts
+  (0 = all cores); see README §Rollout runtime."
     );
 }

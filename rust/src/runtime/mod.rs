@@ -1,7 +1,12 @@
-//! PJRT runtime: manifest-driven loading and execution of the HLO-text
-//! artifacts produced by `python/compile/aot.py`.
-//! Adapted from /opt/xla-example/load_hlo/.
+//! Execution runtimes.
+//!
+//! * [`engine`]/[`manifest`]/[`tensor`] — the PJRT runtime: manifest-driven
+//!   loading and execution of the HLO-text artifacts produced by
+//!   `python/compile/aot.py` (adapted from /opt/xla-example/load_hlo/).
+//! * [`pool`] — the persistent worker-pool rollout runtime that drives the
+//!   native `VectorEnv` fast path (no per-step thread spawning).
 
 pub mod engine;
 pub mod manifest;
+pub mod pool;
 pub mod tensor;

@@ -1,0 +1,338 @@
+//! Persistent worker-pool rollout runtime.
+//!
+//! [`super::super::env::vector::VectorEnv`] originally sharded every
+//! `step_all` call across freshly spawned scoped OS threads. Thread
+//! creation costs tens of microseconds, so at small-to-medium batch sizes
+//! dispatch — not simulation — dominated wall-clock, exactly the overhead
+//! the paper's on-device rollouts avoid. This module replaces per-step
+//! spawning with a pool of long-lived, shard-pinned workers:
+//!
+//! * Workers are spawned once and **parked on a condvar** between calls.
+//! * Each call publishes a job under a mutex, bumps an **epoch counter**,
+//!   and wakes the pool; worker `w` runs shard `w + 1` while the caller
+//!   thread runs shard `0` (no idle caller core, one fewer wakeup).
+//! * The caller blocks until every participating shard has checked in, so
+//!   borrowed state handed to the job provably outlives its use — that
+//!   containment is what makes the single lifetime-erasing `transmute`
+//!   below sound.
+//!
+//! The job is a plain `Fn(usize) + Sync` closure over the shard index;
+//! callers keep full control of how state is split (see
+//! `VectorEnv::shard_tasks`). Results are bit-identical to the scoped
+//! fallback for the same shard count because the pool changes *where* a
+//! shard runs, never *what* it computes.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased reference to the caller's job closure. Only alive between
+/// job publication and the last shard check-in; `run` does not return
+/// until then.
+#[derive(Clone, Copy)]
+struct Job(&'static (dyn Fn(usize) + Sync));
+
+struct State {
+    /// Bumped once per dispatched job; workers detect work by comparing
+    /// against the last epoch they served (state-based, no lost wakeups).
+    epoch: u64,
+    job: Option<Job>,
+    /// Shards in the current job (caller runs shard 0, workers 1..shards).
+    shards: usize,
+    /// Worker-run shards that have not finished yet.
+    remaining: usize,
+    /// Worker shards that panicked during the current job (caught so the
+    /// worker survives and still checks in; re-raised on the caller).
+    panics: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// The caller parks here until `remaining == 0`.
+    done: Condvar,
+}
+
+/// A pool of `threads - 1` persistent workers supporting up to `threads`
+/// concurrent shards (the calling thread is shard 0). Construction is the
+/// only time OS threads are created; `run` is wake + park.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Serializes `run` calls: the epoch/job-slot protocol supports one
+    /// in-flight job, so concurrent callers (e.g. one pool shared by
+    /// several envs) queue here instead of corrupting each other's
+    /// `remaining` counts.
+    dispatch: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Pool sized for `threads` total execution lanes (clamped to >= 1).
+    /// `threads == 1` spawns no workers; `run` then executes inline.
+    pub fn new(threads: usize) -> WorkerPool {
+        let workers = threads.max(1) - 1;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                shards: 0,
+                remaining: 0,
+                panics: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("chargax-pool-{w}"))
+                    .spawn(move || worker_loop(w, &shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { shared, dispatch: Mutex::new(()), handles }
+    }
+
+    /// Maximum shard count `run` accepts (workers + the caller thread).
+    pub fn max_shards(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Execute `f(shard)` for every shard in `0..shards`, blocking until
+    /// all complete. Shard 0 runs on the calling thread. `shards` must be
+    /// `<= max_shards()`; shard indices are stable, so a caller splitting
+    /// state into `shards` disjoint chunks gets exactly one visitor per
+    /// chunk.
+    pub fn run<F: Fn(usize) + Sync>(&self, shards: usize, f: F) {
+        assert!(
+            shards <= self.max_shards(),
+            "pool of {} lanes cannot run {shards} shards",
+            self.max_shards()
+        );
+        if shards <= 1 {
+            if shards == 1 {
+                f(0);
+            }
+            return;
+        }
+        // One job in flight at a time; a second caller blocks here until
+        // the current job fully drains (tolerate poisoning — WaitGuard has
+        // already restored protocol state on any panicking path).
+        let _dispatch = self.dispatch.lock().unwrap_or_else(|e| e.into_inner());
+        // SAFETY: the erased reference is only reachable through
+        // `State.job`, workers only call it between this publication and
+        // their check-in, and control cannot leave this function — by
+        // return OR by unwind (`WaitGuard`) — until `remaining == 0`,
+        // i.e. after every participating worker has checked in. Workers
+        // catch their shard's panics, so check-in always happens, and
+        // `_dispatch` above keeps a second caller from republishing the
+        // job slot while this one is in flight.
+        let job: &(dyn Fn(usize) + Sync) = &f;
+        let job: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(job) };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(Job(job));
+            st.shards = shards;
+            st.remaining = shards - 1;
+            st.panics = 0;
+            self.shared.work.notify_all();
+        }
+        /// Blocks until every worker shard has checked in, then clears the
+        /// job — runs on normal exit AND when shard 0 panics below, so the
+        /// erased closure provably outlives all worker access.
+        struct WaitGuard<'a>(&'a Shared);
+        impl Drop for WaitGuard<'_> {
+            fn drop(&mut self) {
+                let mut st = self.0.state.lock().unwrap();
+                while st.remaining > 0 {
+                    st = self.0.done.wait(st).unwrap();
+                }
+                st.job = None;
+            }
+        }
+        {
+            let _guard = WaitGuard(&self.shared);
+            f(0);
+        }
+        let panics = self.shared.state.lock().unwrap().panics;
+        if panics > 0 {
+            panic!("{panics} worker shard(s) panicked during a pool job (see stderr)");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(w: usize, shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let (job, shards) = {
+            let mut st = shared.state.lock().unwrap();
+            while !st.shutdown && st.epoch == seen {
+                st = shared.work.wait(st).unwrap();
+            }
+            if st.shutdown {
+                return;
+            }
+            seen = st.epoch;
+            match st.job {
+                Some(job) => (job, st.shards),
+                // Stale wake: this worker did not participate in `seen`'s
+                // job and only woke after the caller already cleared it.
+                // (Participants always observe their epoch's job — the
+                // caller cannot clear it until they check in.)
+                None => continue,
+            }
+        };
+        let mine = w + 1; // caller thread owns shard 0
+        if mine < shards {
+            // Catch shard panics so this worker always checks in (a lost
+            // decrement would hang the caller on `done` forever) and stays
+            // alive for future jobs; the caller re-raises after the job.
+            // The default panic hook has already printed the message.
+            let result =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.0)(mine)));
+            let mut st = shared.state.lock().unwrap();
+            if result.is_err() {
+                st.panics += 1;
+            }
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                shared.done.notify_one();
+            }
+        }
+    }
+}
+
+// SAFETY: `Job` holds a shared reference to a `Sync` closure; sending the
+// reference across threads is exactly what `Sync` licenses.
+unsafe impl Send for Job {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_shard_runs_exactly_once() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.max_shards(), 4);
+        for shards in 1..=4usize {
+            let hits: Vec<AtomicUsize> = (0..shards).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(shards, |s| {
+                hits[s].fetch_add(1, Ordering::SeqCst);
+            });
+            for (s, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "shard {s} of {shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_jobs() {
+        let pool = WorkerPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..500 {
+            pool.run(3, |_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 1500);
+    }
+
+    #[test]
+    fn mutates_disjoint_caller_state() {
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0u64; 1024];
+        let chunks: Vec<Mutex<&mut [u64]>> =
+            data.chunks_mut(256).map(Mutex::new).collect();
+        pool.run(chunks.len(), |s| {
+            for x in chunks[s].lock().unwrap().iter_mut() {
+                *x = s as u64 + 1;
+            }
+        });
+        drop(chunks);
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, (i / 256) as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn concurrent_callers_are_serialized() {
+        let pool = Arc::new(WorkerPool::new(3));
+        let total = Arc::new(AtomicUsize::new(0));
+        let joins: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        pool.run(3, |_| {
+                            total.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 1200);
+    }
+
+    #[test]
+    fn shard_panics_propagate_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        // Worker-shard panic: must not hang the caller, must re-raise.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, |s| {
+                if s == 1 {
+                    panic!("worker shard boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must propagate to the caller");
+        // Caller-shard panic: guard must wait for workers, then unwind.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, |s| {
+                if s == 0 {
+                    panic!("caller shard boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // The pool is still fully functional afterwards.
+        let hits = AtomicUsize::new(0);
+        pool.run(2, |_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.max_shards(), 1);
+        let hit = AtomicUsize::new(0);
+        pool.run(1, |s| {
+            assert_eq!(s, 0);
+            hit.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,229 @@
+//! Persistent worker-pool runtime equivalence + transition-core bugfix
+//! regressions (day-boundary price wrap, zero-capacity battery, full
+//! episode NaN/SoC invariants).
+
+use std::sync::Arc;
+
+use chargax::env::scalar::{ScalarEnv, ScenarioTables, StepInfo, STEPS_PER_EPISODE};
+use chargax::env::tree::StationConfig;
+use chargax::env::vector::{RolloutBuffers, VectorEnv};
+use chargax::util::prop::Prop;
+use chargax::util::rng::Rng;
+
+fn random_actions(rng: &mut Rng, env: &VectorEnv) -> Vec<usize> {
+    let nvec = env.action_nvec();
+    (0..env.batch())
+        .flat_map(|_| nvec.iter().map(|&n| rng.below(n as u32) as usize).collect::<Vec<_>>())
+        .collect()
+}
+
+/// A battery-less station (capacity 0 AND power 0 — the only legal way to
+/// express "no battery", enforced by `StationConfig::validate`).
+fn batteryless() -> StationConfig {
+    StationConfig {
+        battery_capacity_kwh: 0.0,
+        battery_p_max_kw: 0.0,
+        ..StationConfig::default()
+    }
+}
+
+/// The pool runtime must match the scoped-thread oracle bit-for-bit per
+/// lane, across a mix of batch sizes and shard counts.
+#[test]
+fn pool_matches_scoped_oracle_at_mixed_batch_sizes() {
+    for &b in &[1usize, 3, 64, 130] {
+        let tables = Arc::new(ScenarioTables::synthetic(1.5));
+        let mut pooled = VectorEnv::new(StationConfig::default(), Arc::clone(&tables), b, 42);
+        pooled.set_threads(4);
+        let mut scoped = VectorEnv::new(StationConfig::default(), Arc::clone(&tables), b, 42);
+        let mut arng = Rng::new(b as u64 + 1);
+        let mut pi = vec![StepInfo::default(); b];
+        let mut si = vec![StepInfo::default(); b];
+        for step in 0..60 {
+            let actions = random_actions(&mut arng, &pooled);
+            let shards = [1usize, 2, 3, 4][step % 4].min(b);
+            pooled.step_all_pooled(&actions, &mut pi, shards);
+            scoped.step_all_sharded(&actions, &mut si, shards);
+            for lane in 0..b {
+                assert_eq!(
+                    pi[lane].reward, si[lane].reward,
+                    "B={b} step {step} lane {lane}: pool diverged from scoped oracle"
+                );
+                assert_eq!(pi[lane].profit, si[lane].profit, "B={b} step {step} lane {lane}");
+                assert_eq!(pi[lane].arrived, si[lane].arrived, "B={b} step {step} lane {lane}");
+                assert_eq!(pi[lane].done, si[lane].done, "B={b} step {step} lane {lane}");
+            }
+        }
+        let d = pooled.obs_dim();
+        let mut po = vec![0f32; b * d];
+        let mut so = vec![0f32; b * d];
+        pooled.observe_all(&mut po);
+        scoped.observe_all(&mut so);
+        assert_eq!(po, so, "B={b}: observations diverged");
+    }
+}
+
+/// Property: a full 288-step episode under random actions never produces
+/// a NaN observation or an out-of-[0,1] SoC (car or battery) — for the
+/// default station and for the battery-less (capacity 0) variant that
+/// used to NaN-poison `battery_soc`.
+#[test]
+fn full_episode_soc_and_obs_stay_finite_and_bounded() {
+    for cfg in [StationConfig::default(), batteryless()] {
+        Prop::new(4).check("episode-soc-obs-invariants", |rng| {
+            let b = 4usize;
+            let seed = rng.next_u64();
+            let mut env =
+                VectorEnv::new(cfg.clone(), ScenarioTables::synthetic(1.5), b, seed);
+            let mut arng = Rng::new(seed ^ 0xA5A5);
+            let d = env.obs_dim();
+            let mut infos = vec![StepInfo::default(); b];
+            let mut obs = vec![0f32; b * d];
+            for step in 0..STEPS_PER_EPISODE {
+                let actions = random_actions(&mut arng, &env);
+                env.step_all(&actions, &mut infos);
+                env.observe_all(&mut obs);
+                for (k, &x) in obs.iter().enumerate() {
+                    assert!(x.is_finite(), "obs[{k}] = {x} at step {step}");
+                }
+                for lane in 0..b {
+                    assert!(infos[lane].reward.is_finite(), "reward NaN at step {step}");
+                    let bs = env.lane_battery_soc(lane);
+                    assert!(
+                        (0.0..=1.0).contains(&bs),
+                        "battery_soc {bs} out of [0,1] at step {step}"
+                    );
+                    for slot in 0..env.n_chargers() {
+                        if let Some(car) = env.lane_car(lane, slot) {
+                            assert!(
+                                (0.0..=1.0).contains(&car.soc),
+                                "car soc {} out of [0,1] at step {step}",
+                                car.soc
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
+}
+
+/// Regression: in the last hour of the day the observed "next-hour price"
+/// must wrap to hour 0 of the next day (mod n_days), not repeat hour 23.
+#[test]
+fn next_hour_price_observation_wraps_at_midnight() {
+    let price = |h: usize| 0.10f32 + 0.01 * h as f32;
+    let mut tables = ScenarioTables::synthetic(0.0); // traffic 0: deterministic
+    tables.n_days = 1; // the drawn day is always 0; "next day" wraps to 0
+    tables.price_buy = (0..24).map(price).collect();
+    let cfg = StationConfig::default();
+    let c = cfg.n_chargers();
+    let mut env = ScalarEnv::new(cfg, tables, 17);
+    let mut obs = vec![0f32; env.obs_dim()];
+    let action = vec![0usize; env.n_ports()];
+    let b = 6 * c;
+
+    // hour 0: next price is hour 1 of the same day.
+    env.observe(&mut obs);
+    assert_eq!(obs[b + 7], price(0), "current price at hour 0");
+    assert_eq!(obs[b + 8], price(1), "next price at hour 0");
+
+    // step into the last hour of the day (t in 276..288 -> hour 23).
+    for _ in 0..276 {
+        env.step(&action);
+    }
+    assert_eq!(env.t(), 276);
+    env.observe(&mut obs);
+    assert_eq!(obs[b + 7], price(23), "current price at hour 23");
+    assert_eq!(
+        obs[b + 8],
+        price(0),
+        "next price at hour 23 must be hour 0 of the next day, not hour 23 again"
+    );
+}
+
+/// A "real" battery port (positive power) with zero capacity is a config
+/// error caught at construction instead of NaN at runtime.
+#[test]
+#[should_panic(expected = "invalid StationConfig")]
+fn powered_battery_with_zero_capacity_is_rejected() {
+    let bad = StationConfig { battery_capacity_kwh: 0.0, ..StationConfig::default() };
+    let _ = VectorEnv::new(bad, ScenarioTables::synthetic(1.0), 1, 0);
+}
+
+/// The battery-less station keeps its (unused) battery SoC pinned at 0 and
+/// never moves grid energy through the battery port.
+#[test]
+fn batteryless_station_runs_a_full_episode() {
+    let mut env = VectorEnv::new(batteryless(), ScenarioTables::synthetic(1.0), 2, 9);
+    let mut arng = Rng::new(10);
+    let mut infos = vec![StepInfo::default(); 2];
+    for _ in 0..STEPS_PER_EPISODE {
+        let actions = random_actions(&mut arng, &env);
+        env.step_all(&actions, &mut infos);
+        for lane in 0..2 {
+            assert_eq!(env.lane_battery_soc(lane), 0.0);
+            let p = env.n_ports();
+            assert_eq!(env.lane_i_drawn(lane)[p - 1], 0.0, "battery port must stay idle");
+        }
+    }
+}
+
+/// The fused rollout fills PPO buffers identically to the step-then-observe
+/// loop it replaces, across an episode boundary. B = 128 with a 4-wide
+/// pool so the rollout's *sharded* path (auto_shards > 1) is exercised
+/// regardless of the host's core count.
+#[test]
+fn fused_rollout_buffers_match_manual_loop_across_episode_boundary() {
+    let b = 128usize;
+    let t_len = STEPS_PER_EPISODE + 10; // cross the reset
+    let tables = Arc::new(ScenarioTables::synthetic(1.2));
+    let mut rolled = VectorEnv::new(StationConfig::default(), Arc::clone(&tables), b, 77);
+    rolled.set_threads(4);
+    let mut stepped = VectorEnv::new(StationConfig::default(), Arc::clone(&tables), b, 77);
+    stepped.set_threads(4);
+    let p = rolled.n_ports();
+    let d = rolled.obs_dim();
+
+    let mut arng = Rng::new(5);
+    let per_step: Vec<Vec<usize>> =
+        (0..t_len).map(|_| random_actions(&mut arng, &rolled)).collect();
+
+    let mut obs = vec![0f32; (t_len + 1) * b * d];
+    let mut rewards = vec![0f32; t_len * b];
+    let mut dones = vec![0f32; t_len * b];
+    let mut profits = vec![0f32; t_len * b];
+    {
+        let mut bufs = RolloutBuffers {
+            obs: &mut obs,
+            rewards: &mut rewards,
+            dones: &mut dones,
+            profits: &mut profits,
+        };
+        rolled.rollout(t_len, &mut bufs, |t, _obs, actions| {
+            actions.copy_from_slice(&per_step[t]);
+        });
+    }
+    assert_eq!(p, per_step[0].len() / b);
+
+    let mut infos = vec![StepInfo::default(); b];
+    let mut want = vec![0f32; b * d];
+    let mut saw_done = false;
+    stepped.observe_all(&mut want);
+    assert_eq!(&obs[..b * d], want.as_slice());
+    for (t, actions) in per_step.iter().enumerate() {
+        stepped.step_all(actions, &mut infos);
+        for lane in 0..b {
+            assert_eq!(rewards[t * b + lane], infos[lane].reward, "t={t} lane {lane}");
+            assert_eq!(
+                dones[t * b + lane],
+                infos[lane].done as i32 as f32,
+                "t={t} lane {lane}"
+            );
+            saw_done |= infos[lane].done;
+        }
+        stepped.observe_all(&mut want);
+        assert_eq!(&obs[(t + 1) * b * d..(t + 2) * b * d], want.as_slice(), "obs row {}", t + 1);
+    }
+    assert!(saw_done, "rollout must have crossed an episode boundary");
+}
