@@ -81,9 +81,20 @@ class Battery:
 class GymChargingEnv:
     """Gym-like EV charging station (per-step CPU loop)."""
 
-    def __init__(self, tables: dict, n_dc: int = 10, n_ac: int = 6, seed: int = 0):
+    def __init__(
+        self,
+        tables: dict,
+        n_dc: int = 10,
+        n_ac: int = 6,
+        seed: int = 0,
+        v2g: bool = False,
+    ):
         self.rng = np.random.default_rng(seed)
         self.tables = tables
+        # V2G: car ports use the battery's symmetric signed ladder
+        # (N_LEVELS_BATTERY levels over [-1, 1]) instead of the unipolar
+        # charge-only ladder; mirrors rust env/core.rs step_lane.
+        self.v2g = v2g
         self.evses: List[Evse] = [
             Evse(voltage=400.0, i_max=375.0, eta=0.95, is_dc=True) for _ in range(n_dc)
         ] + [
@@ -111,7 +122,8 @@ class GymChargingEnv:
         return 6 * len(self.evses) + 3 + 4 + 4
 
     def action_nvec(self) -> List[int]:
-        return [N_LEVELS] * len(self.evses) + [N_LEVELS_BATTERY]
+        car_levels = N_LEVELS_BATTERY if self.v2g else N_LEVELS
+        return [car_levels] * len(self.evses) + [N_LEVELS_BATTERY]
 
     def reset(self):
         self.t = 0
@@ -140,11 +152,17 @@ class GymChargingEnv:
             if e.car is None:
                 e.i_drawn = 0.0
                 continue
-            frac = action[j] / (N_LEVELS - 1)
-            p_target = frac * e.p_max
             r_ch = charging_curve(e.car.soc, e.car.r_bar, e.car.tau)
-            head = (1.0 - e.car.soc) * e.car.cap / DT_HOURS
-            p_kw = max(min(p_target, r_ch, head), 0.0)
+            head_up = (1.0 - e.car.soc) * e.car.cap / DT_HOURS
+            if self.v2g:
+                frac = action[j] / ((N_LEVELS_BATTERY - 1) / 2.0) - 1.0
+                p_target = frac * e.p_max
+                r_dis = discharging_curve(e.car.soc, e.car.r_bar, e.car.tau)
+                head_dn = e.car.soc * e.car.cap / DT_HOURS
+                p_kw = max(min(p_target, r_ch, head_up), -min(r_dis, head_dn))
+            else:
+                frac = action[j] / (N_LEVELS - 1)
+                p_kw = max(min(frac * e.p_max, r_ch, head_up), 0.0)
             e.i_drawn = p_kw * 1000.0 / e.voltage
         b = self.battery
         frac = action[-1] / ((N_LEVELS_BATTERY - 1) / 2.0) - 1.0
@@ -157,15 +175,21 @@ class GymChargingEnv:
 
         excess = self._project_constraints()
 
-        # (ii) charge
+        # (ii) charge. Car-side discharge is accumulated here, at charge
+        # time, so a car departing this same step still incurs the
+        # degradation penalty for its final-step discharge (matches rust
+        # env/core.rs charge_cars).
         de_net = 0.0
         grid_cars = 0.0
+        car_discharge = 0.0
         for e in self.evses:
             if e.car is None:
                 continue
             p_kw = e.voltage * e.i_drawn / 1000.0
             en = p_kw * DT_HOURS
             en = max(min(en, (1.0 - e.car.soc) * e.car.cap), -e.car.soc * e.car.cap)
+            if en < 0.0:
+                car_discharge += -en
             e.car.soc = min(max(e.car.soc + en / max(e.car.cap, 1e-9), 0.0), 1.0)
             e.car.de_remain -= en
             e.car.dt_remain -= 1.0
@@ -213,7 +237,7 @@ class GymChargingEnv:
             overtime - tb["beta"] * early,
             tb["moer"][idx] * de_grid_net,
             rejected,
-            max(-e_bat, 0.0),
+            max(-e_bat, 0.0) + car_discharge,
             abs(de_net),
         ]
         reward = profit - float(np.dot(tb["alpha"], pens))

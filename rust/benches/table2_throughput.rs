@@ -25,6 +25,7 @@ use chargax::data::{DataStore, Scenario};
 use chargax::env::scalar::{ScalarEnv, ScenarioTables};
 use chargax::env::tree::StationConfig;
 use chargax::env::vector::{self, StepPath, NATIVE_SWEEP_B};
+use chargax::fleet::{measure_fleet_throughput, FleetSpec};
 use chargax::runtime::engine::{artifacts_dir, Engine};
 use chargax::runtime::manifest::Manifest;
 use chargax::util::json::{self, Json};
@@ -48,10 +49,12 @@ fn row(name: &str, batch: usize, steps: f64, seconds: f64) -> BenchRow {
 }
 
 fn main() {
-    // `--smoke`: reduced sweep for per-PR CI regression visibility.
+    // `--smoke`: reduced sweep for per-PR CI regression visibility. B=256
+    // stays in the smoke sweep — it is the row scripts/bench_ratchet.py
+    // gates on.
     let smoke = std::env::args().any(|a| a == "--smoke");
     let (sweep_b, budget): (&[usize], usize) =
-        if smoke { (&[1, 64], 12_000) } else { (NATIVE_SWEEP_B, 120_000) };
+        if smoke { (&[1, 64, 256], 12_000) } else { (NATIVE_SWEEP_B, 120_000) };
     let sc = Scenario::default();
     let dir = artifacts_dir();
     let store = DataStore::load(&dir.join("data")).ok();
@@ -159,6 +162,40 @@ fn main() {
         println!("\nnative-vector B=1024 vs scalar-gym B=1: {x:.1}x steps/sec");
     }
 
+    // -- Fleet sweep: heterogeneous station families on one pool ------------
+    // The demo grid's three structurally different families (mixed AC/DC,
+    // DC-fast V2G, battery-less AC) rolled out fused on a single worker
+    // pool; rows land in BENCH_fleet.json so the perf trajectory covers
+    // the multi-env path from its first PR.
+    let fleet_scales: &[usize] = if smoke { &[1, 4] } else { &[1, 4, 16] };
+    let mut fleet_rows: Vec<Json> = Vec::new();
+    println!("\nfleet-rollout sweep (demo grid: 3 station families incl. V2G):");
+    for &scale in fleet_scales {
+        match measure_fleet_throughput(&FleetSpec::demo(7, scale), store.as_ref(), 0, budget) {
+            Ok((steps_per_sec, s_per_100k, lanes, families)) => {
+                println!(
+                    "  L={lanes:<5} ({families} families) {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k"
+                );
+                fleet_rows.push(json::obj(vec![
+                    ("variant", Json::Str(format!("fleet-rollout (L={lanes})"))),
+                    ("batch", Json::Num(lanes as f64)),
+                    ("families", Json::Num(families as f64)),
+                    ("steps_per_sec", Json::Num(steps_per_sec)),
+                    ("s_per_100k", Json::Num(s_per_100k)),
+                ]));
+            }
+            Err(e) => println!("  scale {scale} skipped: {e:#}"),
+        }
+    }
+    let fleet_payload = json::obj(vec![
+        ("bench", Json::Str("fleet_throughput".into())),
+        ("unit", Json::Str("env_steps".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", Json::Arr(fleet_rows)),
+    ])
+    .to_string();
+    write_bench_json("BENCH_fleet.json", &fleet_payload);
+
     // -- BENCH_table2.json: perf trajectory across PRs -----------------------
     let json_rows: Vec<Json> = rows
         .iter()
@@ -180,16 +217,20 @@ fn main() {
     if let Some(x) = b1024_speedup {
         top.push(("speedup_native_b1024_vs_scalar_b1", Json::Num(x)));
     }
-    // Prefer the source checkout root (so the artifact is tracked next to
-    // the repo); fall back to the current directory when the binary runs
-    // from a moved/copied tree.
     let payload = json::obj(top).to_string();
-    let repo_root = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_table2.json");
-    match std::fs::write(repo_root, &payload) {
+    write_bench_json("BENCH_table2.json", &payload);
+}
+
+/// Write a bench artifact, preferring the source checkout root (so it is
+/// tracked next to the repo); fall back to the current directory when the
+/// binary runs from a moved/copied tree.
+fn write_bench_json(name: &str, payload: &str) {
+    let repo_root = format!("{}/../{name}", env!("CARGO_MANIFEST_DIR"));
+    match std::fs::write(&repo_root, payload) {
         Ok(()) => println!("wrote {repo_root}"),
-        Err(_) => match std::fs::write("BENCH_table2.json", &payload) {
-            Ok(()) => println!("wrote BENCH_table2.json (cwd)"),
-            Err(e) => eprintln!("could not write BENCH_table2.json: {e}"),
+        Err(_) => match std::fs::write(name, payload) {
+            Ok(()) => println!("wrote {name} (cwd)"),
+            Err(e) => eprintln!("could not write {name}: {e}"),
         },
     }
 }

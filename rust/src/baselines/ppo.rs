@@ -225,159 +225,115 @@ pub struct TrainStats {
     pub completed_return_mean: f32,
 }
 
-/// The CPU PPO trainer (comparator).
-pub struct PpoTrainer {
-    pub cfg: PpoParams,
-    pub venv: VectorEnv,
+/// One policy/value learner: MLP + categorical heads + Adam state over a
+/// fixed (obs_dim, action_nvec) interface. This is the per-station-family
+/// unit — [`PpoTrainer`] owns exactly one, the fleet trainer
+/// ([`crate::fleet::rollout::FleetPpoTrainer`]) owns one per family, and
+/// both drive the identical sample/update math through it.
+pub struct Learner {
     pub mlp: Mlp,
     pub heads: Heads,
     pub adam: Adam,
-    pub rng: Rng,
     pub obs_dim: usize,
-    /// Per-lane running episode return (mirrors each lane's `ep_return`;
-    /// used to report completed-episode returns without querying the env
-    /// inside the fused rollout).
-    running_return: Vec<f32>,
-    pub env_steps: usize,
 }
 
-impl PpoTrainer {
-    /// `tables` is built once and shared across all `num_envs` lanes (and
-    /// later greedy-eval envs) via `Arc` — no per-env table rebuild/clone.
-    pub fn new(
-        cfg: PpoParams,
-        station: StationConfig,
-        tables: impl Into<Arc<ScenarioTables>>,
-        seed: u64,
-    ) -> PpoTrainer {
-        let mut rng = Rng::new(seed);
-        let seeds: Vec<u64> = (0..cfg.num_envs)
-            .map(|i| seed ^ (i as u64 * 7919 + 13))
-            .collect();
-        let mut venv = VectorEnv::with_seeds(
-            station,
-            vec![tables.into()],
-            vec![0; cfg.num_envs],
-            &seeds,
-        );
-        venv.set_threads(cfg.threads);
-        let obs_dim = venv.obs_dim();
-        let heads = Heads::new(venv.action_nvec());
-        let mlp = Mlp::new(&mut rng, obs_dim, cfg.hidden, heads.n_logits);
+impl Learner {
+    pub fn new(rng: &mut Rng, obs_dim: usize, hidden: usize, nvec: Vec<usize>) -> Learner {
+        let heads = Heads::new(nvec);
+        let mlp = Mlp::new(rng, obs_dim, hidden, heads.n_logits);
         let adam = Adam::new(&mlp);
-        PpoTrainer {
-            running_return: vec![0.0; cfg.num_envs],
-            cfg,
-            venv,
-            mlp,
-            heads,
-            adam,
-            rng,
-            obs_dim,
-            env_steps: 0,
+        Learner { mlp, heads, adam, obs_dim }
+    }
+
+    pub fn n_ports(&self) -> usize {
+        self.heads.nvec.len()
+    }
+
+    /// Sample one time-row for `b` lanes: forward `obs_t` (`[b * obs_dim]`),
+    /// fill `actions` (`[b * n_ports]`), `logp` (`[b]`), and `val` (`[b]`).
+    pub fn sample_row(
+        &mut self,
+        rng: &mut Rng,
+        obs_t: &[f32],
+        actions: &mut [usize],
+        logp: &mut [f32],
+        val: &mut [f32],
+    ) {
+        let b = logp.len();
+        let n_ports = self.n_ports();
+        let nl = self.heads.n_logits;
+        debug_assert_eq!(obs_t.len(), b * self.obs_dim);
+        debug_assert_eq!(actions.len(), b * n_ports);
+        debug_assert_eq!(val.len(), b);
+        let cache = self.mlp.forward(obs_t);
+        for j in 0..b {
+            let lg = &cache.logits[j * nl..(j + 1) * nl];
+            logp[j] = self.heads.sample(rng, lg, &mut actions[j * n_ports..(j + 1) * n_ports]);
+            val[j] = cache.value[j];
         }
     }
 
-    /// One PPO iteration (rollout + update). Mirrors ppo.py::train_iter.
-    pub fn iteration(&mut self) -> TrainStats {
-        let e = self.cfg.num_envs;
-        let t_len = self.cfg.rollout_steps;
-        let n_ports = self.heads.nvec.len();
-        let bsz = e * t_len;
+    /// Greedy (argmax-per-head) action for a single observation row.
+    pub fn greedy_action(&self, obs: &[f32], action: &mut [usize]) {
+        let cache = self.mlp.forward(obs);
+        for (h, (&ofs, &n)) in self.heads.offsets.iter().zip(&self.heads.nvec).enumerate() {
+            let lg = &cache.logits[ofs..ofs + n];
+            action[h] = lg
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+        }
+    }
+
+    /// Full PPO update over filled rollout buffers (bootstrap forward +
+    /// GAE + minibatched clipped-surrogate epochs). Returns
+    /// `(mean total loss, mean entropy)` over all minibatch updates.
+    #[allow(clippy::too_many_arguments)]
+    pub fn update(
+        &mut self,
+        hp: &PpoParams,
+        rng: &mut Rng,
+        n_envs: usize,
+        t_len: usize,
+        obs_buf: &[f32],
+        act_buf: &[usize],
+        logp_buf: &[f32],
+        val_buf: &[f32],
+        rew_buf: &[f32],
+        done_buf: &[f32],
+    ) -> (f32, f32) {
+        let bsz = n_envs * t_len;
         let d = self.obs_dim;
-
-        // obs has one extra row: row t_len is the bootstrap observation.
-        let mut obs_buf = vec![0f32; (t_len + 1) * e * d];
-        let mut act_buf = vec![0usize; bsz * n_ports];
-        let mut logp_buf = vec![0f32; bsz];
-        let mut val_buf = vec![0f32; bsz];
-        let mut rew_buf = vec![0f32; bsz];
-        let mut done_buf = vec![0f32; bsz];
-        let mut profit_buf = vec![0f32; bsz];
-
-        // ---- rollout ------------------------------------------------------
-        // One fused pass: the policy closure samples every lane's action
-        // from the observation row the env just wrote; the env advances
-        // all lanes on the persistent worker pool and writes obs, rewards,
-        // dones, and profits directly into the PPO buffers above.
-        {
-            let PpoTrainer { venv, mlp, heads, rng, .. } = self;
-            let n_logits = heads.n_logits;
-            let mut bufs = RolloutBuffers {
-                obs: &mut obs_buf,
-                rewards: &mut rew_buf,
-                dones: &mut done_buf,
-                profits: &mut profit_buf,
-            };
-            venv.rollout(t_len, &mut bufs, |t, obs_t, actions| {
-                let cache = mlp.forward(obs_t);
-                for j in 0..e {
-                    let idx = t * e + j;
-                    let lg = &cache.logits[j * n_logits..(j + 1) * n_logits];
-                    logp_buf[idx] =
-                        heads.sample(rng, lg, &mut actions[j * n_ports..(j + 1) * n_ports]);
-                    val_buf[idx] = cache.value[j];
-                }
-                act_buf[t * e * n_ports..(t + 1) * e * n_ports].copy_from_slice(actions);
-            });
-        }
-        self.env_steps += bsz;
-
-        // Episode accounting from the filled buffers (off the hot loop).
-        let mut profit_sum = 0f64;
-        let mut comp_returns: Vec<f32> = Vec::new();
-        for t in 0..t_len {
-            for j in 0..e {
-                let idx = t * e + j;
-                profit_sum += profit_buf[idx] as f64;
-                self.running_return[j] += rew_buf[idx];
-                if done_buf[idx] > 0.5 {
-                    comp_returns.push(self.running_return[j]);
-                    self.running_return[j] = 0.0;
-                }
-            }
-        }
-
-        let last_cache = self.mlp.forward(&obs_buf[t_len * e * d..]);
+        let last_cache = self.mlp.forward(&obs_buf[t_len * n_envs * d..]);
         let (adv, targets) = gae(
-            &rew_buf, &val_buf, &done_buf, &last_cache.value, e,
-            self.cfg.gamma, self.cfg.gae_lambda,
+            rew_buf, val_buf, done_buf, &last_cache.value, n_envs, hp.gamma, hp.gae_lambda,
         );
-
-        // ---- update -------------------------------------------------------
-        let mb = bsz / self.cfg.n_minibatches;
+        let mb = bsz / hp.n_minibatches;
         let mut total_loss_acc = 0f64;
         let mut ent_acc = 0f64;
         let mut n_upd = 0usize;
-        for _ in 0..self.cfg.update_epochs {
-            let perm = self.rng.permutation(bsz);
-            for mbi in 0..self.cfg.n_minibatches {
+        for _ in 0..hp.update_epochs {
+            let perm = rng.permutation(bsz);
+            for mbi in 0..hp.n_minibatches {
                 let idxs = &perm[mbi * mb..(mbi + 1) * mb];
                 let (loss, ent) = self.minibatch_update(
-                    idxs, &obs_buf, &act_buf, &logp_buf, &val_buf, &adv, &targets,
+                    hp, idxs, obs_buf, act_buf, logp_buf, val_buf, &adv, &targets,
                 );
                 total_loss_acc += loss as f64;
                 ent_acc += ent as f64;
                 n_upd += 1;
             }
         }
-
-        TrainStats {
-            mean_reward: rew_buf.iter().sum::<f32>() / bsz as f32,
-            mean_profit: (profit_sum / bsz as f64) as f32,
-            total_loss: (total_loss_acc / n_upd as f64) as f32,
-            entropy: (ent_acc / n_upd as f64) as f32,
-            completed_return_mean: if comp_returns.is_empty() {
-                0.0
-            } else {
-                comp_returns.iter().sum::<f32>() / comp_returns.len() as f32
-            },
-        }
+        let n = n_upd.max(1) as f64;
+        ((total_loss_acc / n) as f32, (ent_acc / n) as f32)
     }
 
     #[allow(clippy::too_many_arguments)]
     fn minibatch_update(
         &mut self,
+        hp: &PpoParams,
         idxs: &[usize],
         obs_buf: &[f32],
         act_buf: &[usize],
@@ -416,14 +372,14 @@ impl PpoTrainer {
             let (logp, ent) = self.heads.logp_entropy(lg, act, &mut dlp, &mut dent);
             let a_n = (adv[i] - mean) / std;
             let ratio = (logp - logp_buf[i]).exp();
-            let clipped = ratio.clamp(1.0 - self.cfg.clip_eps, 1.0 + self.cfg.clip_eps);
+            let clipped = ratio.clamp(1.0 - hp.clip_eps, 1.0 + hp.clip_eps);
             let pg1 = ratio * a_n;
             let pg2 = clipped * a_n;
             // d(-min(pg1,pg2))/dlogp
             let dpg_dlogp = if pg1 <= pg2 {
                 -ratio * a_n // d(-ratio*a)/dlogp = -a*ratio
-            } else if (ratio < 1.0 - self.cfg.clip_eps && a_n < 0.0)
-                || (ratio > 1.0 + self.cfg.clip_eps && a_n > 0.0)
+            } else if (ratio < 1.0 - hp.clip_eps && a_n < 0.0)
+                || (ratio > 1.0 + hp.clip_eps && a_n > 0.0)
             {
                 0.0 // clipped branch, constant
             } else {
@@ -434,33 +390,156 @@ impl PpoTrainer {
             // value loss (clipped)
             let v = cache.value[r];
             let v_old = val_buf[i];
-            let v_clip = v_old + (v - v_old).clamp(-self.cfg.vf_clip, self.cfg.vf_clip);
+            let v_clip = v_old + (v - v_old).clamp(-hp.vf_clip, hp.vf_clip);
             let e1 = (v - targets[i]) * (v - targets[i]);
             let e2 = (v_clip - targets[i]) * (v_clip - targets[i]);
-            loss_acc += 0.5 * self.cfg.vf_coef * e1.max(e2);
+            loss_acc += 0.5 * hp.vf_coef * e1.max(e2);
             let dv = if e1 >= e2 {
                 v - targets[i]
-            } else if (v - v_old).abs() < self.cfg.vf_clip {
+            } else if (v - v_old).abs() < hp.vf_clip {
                 v_clip - targets[i]
             } else {
                 0.0
             };
-            dvalue[r] = self.cfg.vf_coef * dv / b as f32;
+            dvalue[r] = hp.vf_coef * dv / b as f32;
             for k in 0..nl {
                 dlogits[r * nl + k] = (dpg_dlogp * dlp[k]
-                    - self.cfg.ent_coef * dent[k])
+                    - hp.ent_coef * dent[k])
                     / b as f32;
             }
-            loss_acc -= self.cfg.ent_coef * ent;
+            loss_acc -= hp.ent_coef * ent;
         }
         let mut grads = self.mlp.zero_grads();
         self.mlp.backward(&cache, &dlogits, &dvalue, &mut grads);
         let norm = grads.global_norm();
-        if norm > self.cfg.max_grad_norm {
-            grads.scale(self.cfg.max_grad_norm / norm);
+        if norm > hp.max_grad_norm {
+            grads.scale(hp.max_grad_norm / norm);
         }
-        self.adam.update(&mut self.mlp, &mut grads, self.cfg.lr);
+        self.adam.update(&mut self.mlp, &mut grads, hp.lr);
         (loss_acc / b as f32, ent_acc / b as f32)
+    }
+}
+
+/// The CPU PPO trainer (comparator): one [`Learner`] over one
+/// [`VectorEnv`] batch.
+pub struct PpoTrainer {
+    pub cfg: PpoParams,
+    pub venv: VectorEnv,
+    pub learner: Learner,
+    pub rng: Rng,
+    /// Per-lane running episode return (mirrors each lane's `ep_return`;
+    /// used to report completed-episode returns without querying the env
+    /// inside the fused rollout).
+    running_return: Vec<f32>,
+    pub env_steps: usize,
+}
+
+impl PpoTrainer {
+    /// `tables` is built once and shared across all `num_envs` lanes (and
+    /// later greedy-eval envs) via `Arc` — no per-env table rebuild/clone.
+    pub fn new(
+        cfg: PpoParams,
+        station: StationConfig,
+        tables: impl Into<Arc<ScenarioTables>>,
+        seed: u64,
+    ) -> PpoTrainer {
+        let mut rng = Rng::new(seed);
+        let seeds: Vec<u64> = (0..cfg.num_envs)
+            .map(|i| seed ^ (i as u64 * 7919 + 13))
+            .collect();
+        let mut venv = VectorEnv::with_seeds(
+            station,
+            vec![tables.into()],
+            vec![0; cfg.num_envs],
+            &seeds,
+        );
+        venv.set_threads(cfg.threads);
+        let learner = Learner::new(&mut rng, venv.obs_dim(), cfg.hidden, venv.action_nvec());
+        PpoTrainer {
+            running_return: vec![0.0; cfg.num_envs],
+            cfg,
+            venv,
+            learner,
+            rng,
+            env_steps: 0,
+        }
+    }
+
+    /// One PPO iteration (rollout + update). Mirrors ppo.py::train_iter.
+    pub fn iteration(&mut self) -> TrainStats {
+        let e = self.cfg.num_envs;
+        let t_len = self.cfg.rollout_steps;
+        let n_ports = self.learner.n_ports();
+        let bsz = e * t_len;
+        let d = self.learner.obs_dim;
+
+        // obs has one extra row: row t_len is the bootstrap observation.
+        let mut obs_buf = vec![0f32; (t_len + 1) * e * d];
+        let mut act_buf = vec![0usize; bsz * n_ports];
+        let mut logp_buf = vec![0f32; bsz];
+        let mut val_buf = vec![0f32; bsz];
+        let mut rew_buf = vec![0f32; bsz];
+        let mut done_buf = vec![0f32; bsz];
+        let mut profit_buf = vec![0f32; bsz];
+
+        // ---- rollout ------------------------------------------------------
+        // One fused pass: the policy closure samples every lane's action
+        // from the observation row the env just wrote; the env advances
+        // all lanes on the persistent worker pool and writes obs, rewards,
+        // dones, and profits directly into the PPO buffers above.
+        {
+            let PpoTrainer { venv, learner, rng, .. } = self;
+            let mut bufs = RolloutBuffers {
+                obs: &mut obs_buf,
+                rewards: &mut rew_buf,
+                dones: &mut done_buf,
+                profits: &mut profit_buf,
+            };
+            venv.rollout(t_len, &mut bufs, |t, obs_t, actions| {
+                learner.sample_row(
+                    rng,
+                    obs_t,
+                    actions,
+                    &mut logp_buf[t * e..(t + 1) * e],
+                    &mut val_buf[t * e..(t + 1) * e],
+                );
+                act_buf[t * e * n_ports..(t + 1) * e * n_ports].copy_from_slice(actions);
+            });
+        }
+        self.env_steps += bsz;
+
+        // Episode accounting from the filled buffers (off the hot loop).
+        let mut profit_sum = 0f64;
+        let mut comp_returns: Vec<f32> = Vec::new();
+        for t in 0..t_len {
+            for j in 0..e {
+                let idx = t * e + j;
+                profit_sum += profit_buf[idx] as f64;
+                self.running_return[j] += rew_buf[idx];
+                if done_buf[idx] > 0.5 {
+                    comp_returns.push(self.running_return[j]);
+                    self.running_return[j] = 0.0;
+                }
+            }
+        }
+
+        // ---- update -------------------------------------------------------
+        let (total_loss, entropy) = self.learner.update(
+            &self.cfg, &mut self.rng, e, t_len,
+            &obs_buf, &act_buf, &logp_buf, &val_buf, &rew_buf, &done_buf,
+        );
+
+        TrainStats {
+            mean_reward: rew_buf.iter().sum::<f32>() / bsz as f32,
+            mean_profit: (profit_sum / bsz as f64) as f32,
+            total_loss,
+            entropy,
+            completed_return_mean: if comp_returns.is_empty() {
+                0.0
+            } else {
+                comp_returns.iter().sum::<f32>() / comp_returns.len() as f32
+            },
+        }
     }
 
     /// Greedy evaluation for one full episode; returns total reward/profit.
@@ -468,22 +547,13 @@ impl PpoTrainer {
     pub fn eval_episode(&mut self, seed: u64) -> (f32, f32) {
         let mut env =
             ScalarEnv::new(self.venv.cfg.clone(), self.venv.tables_arc(0), seed);
-        let mut obs = vec![0f32; self.obs_dim];
-        let mut action = vec![0usize; self.heads.nvec.len()];
+        let mut obs = vec![0f32; self.learner.obs_dim];
+        let mut action = vec![0usize; self.learner.n_ports()];
         let mut tot_r = 0f32;
         let mut tot_p = 0f32;
         for _ in 0..crate::env::scalar::STEPS_PER_EPISODE {
             env.observe(&mut obs);
-            let cache = self.mlp.forward(&obs);
-            for (h, (&ofs, &n)) in self.heads.offsets.iter().zip(&self.heads.nvec).enumerate() {
-                let lg = &cache.logits[ofs..ofs + n];
-                action[h] = lg
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap();
-            }
+            self.learner.greedy_action(&obs, &mut action);
             let info = env.step(&action);
             tot_r += info.reward;
             tot_p += info.profit;

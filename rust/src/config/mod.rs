@@ -28,6 +28,10 @@ pub struct RunConfig {
     pub eval_seeds: usize,
     pub paper_scale: bool,
     pub out_path: Option<String>,
+    /// Fleet scenario-grid spec for the native backend (`--fleet`):
+    /// a JSON file path (README §Scenario fleets & V2G) or the literal
+    /// `demo` for the built-in three-family demo fleet.
+    pub fleet_spec: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -44,6 +48,7 @@ impl Default for RunConfig {
             eval_seeds: 8,
             paper_scale: false,
             out_path: None,
+            fleet_spec: None,
         }
     }
 }
@@ -104,6 +109,7 @@ impl RunConfig {
             "eval_seeds" => self.eval_seeds = val.parse()?,
             "paper_scale" => self.paper_scale = val.parse()?,
             "out" => self.out_path = Some(val.to_string()),
+            "fleet" => self.fleet_spec = Some(val.to_string()),
             k if k.starts_with("alpha_") => {
                 let name = &k["alpha_".len()..];
                 self.scenario = self.scenario.clone().with_alpha(name, val.parse()?)?;
@@ -133,9 +139,11 @@ mod tests {
         cfg.set("backend", "native").unwrap();
         cfg.set("num_envs", "64").unwrap();
         cfg.set("threads", "4").unwrap();
+        cfg.set("fleet", "configs/fleet_demo.json").unwrap();
         assert_eq!(cfg.backend, "native");
         assert_eq!(cfg.num_envs, 64);
         assert_eq!(cfg.num_threads, 4);
+        assert_eq!(cfg.fleet_spec.as_deref(), Some("configs/fleet_demo.json"));
         assert!(cfg.set("backend", "tpu").is_err());
     }
 

@@ -20,6 +20,9 @@ pub const DT_HOURS: f32 = 1.0 / 12.0;
 pub const STEPS_PER_HOUR: usize = 12;
 pub const N_LEVELS: usize = 11;
 pub const N_LEVELS_BATTERY: usize = 21;
+/// V2G car ports reuse the battery's symmetric signed ladder: level
+/// `(L-1)/2` is idle, 0 is -100% (full discharge), `L-1` is +100%.
+pub const N_LEVELS_V2G: usize = N_LEVELS_BATTERY;
 pub const MAX_ARRIVALS: usize = 6;
 pub const FIXED_COST_PER_STEP: f32 = 0.25;
 
@@ -188,7 +191,8 @@ pub fn obs_dim(cfg: &StationConfig) -> usize {
 }
 
 pub fn action_nvec(cfg: &StationConfig) -> Vec<usize> {
-    let mut v = vec![N_LEVELS; cfg.n_chargers()];
+    let car_levels = if cfg.v2g { N_LEVELS_V2G } else { N_LEVELS };
+    let mut v = vec![car_levels; cfg.n_chargers()];
     v.push(N_LEVELS_BATTERY);
     v
 }
@@ -236,17 +240,28 @@ pub fn step_lane(
     let moer = tables.moer[price_idx];
 
     // (i) apply actions: level -> fraction -> clamped signed current.
+    // Charge-only stations map levels to [0, 1] of the port maximum; V2G
+    // stations use the battery's symmetric ladder ([-1, 1]), with the
+    // discharge side limited by the flipped curve and the drain headroom.
     let i_new = &mut scratch.i_new;
     for j in 0..c {
         if !lane.present[j] {
             i_new[j] = 0.0;
             continue;
         }
-        let frac = action[j] as f32 / (N_LEVELS - 1) as f32;
-        let p_target = frac * tree.p_max[j];
         let r_ch = charging_curve(lane.soc[j], lane.r_bar[j], lane.tau[j]);
         let head_up = (1.0 - lane.soc[j]) * lane.cap[j] / DT_HOURS;
-        let p_kw = p_target.min(r_ch).min(head_up).max(0.0);
+        let p_kw = if cfg.v2g {
+            let half = (N_LEVELS_V2G - 1) as f32 / 2.0;
+            let frac = action[j] as f32 / half - 1.0;
+            let p_target = frac * tree.p_max[j];
+            let r_dis = discharging_curve(lane.soc[j], lane.r_bar[j], lane.tau[j]);
+            let head_dn = lane.soc[j] * lane.cap[j] / DT_HOURS;
+            p_target.clamp(-r_dis.min(head_dn), r_ch.min(head_up))
+        } else {
+            let frac = action[j] as f32 / (N_LEVELS - 1) as f32;
+            (frac * tree.p_max[j]).min(r_ch).min(head_up).max(0.0)
+        };
         i_new[j] = p_kw * 1000.0 / tree.volt[j];
     }
     {
@@ -611,6 +626,59 @@ mod tests {
         let (de_net, _grid, car_discharge) = charge_cars(&mut st.view(), &tree, c);
         assert_eq!(car_discharge, 0.0);
         assert!(de_net > 0.0);
+    }
+
+    /// V2G action mapping: the mid level idles, level 0 discharges, the
+    /// top level charges — and a charge-only config ignores the flag's
+    /// ladder entirely (level 0 = idle).
+    #[test]
+    fn v2g_ladder_is_signed_and_symmetric() {
+        let cfg = StationConfig { v2g: true, ..StationConfig::default() };
+        let tree = StationTree::standard(&cfg);
+        let tables = ScenarioTables::synthetic(0.0); // no arrivals
+        let mut rng = crate::util::rng::CounterRng::new(1);
+        let mut scratch = Scratch::new(cfg.n_ports());
+        let c = cfg.n_chargers();
+        let idle_bat = (N_LEVELS_BATTERY - 1) / 2;
+        let park = |st: &mut LaneState| {
+            st.present[0] = true;
+            st.soc[0] = 0.5;
+            st.de_remain[0] = 30.0;
+            st.dt_remain[0] = 1000.0;
+        };
+        for (level, sign) in [
+            ((N_LEVELS_V2G - 1) / 2, 0.0f32),
+            (0, -1.0),
+            (N_LEVELS_V2G - 1, 1.0),
+        ] {
+            let mut st = LaneState::empty(&cfg);
+            park(&mut st);
+            let mut action = vec![0usize; cfg.n_ports()];
+            action[0] = level;
+            action[c] = idle_bat;
+            let info = step_lane(
+                &mut st.view(),
+                &mut rng,
+                &cfg,
+                &tree,
+                &tables,
+                &action,
+                &mut scratch,
+            );
+            if sign == 0.0 {
+                assert_eq!(info.energy_to_cars_kwh, 0.0, "mid level must idle");
+            } else {
+                assert!(
+                    info.energy_to_cars_kwh * sign > 0.0,
+                    "level {level}: energy {} has wrong sign",
+                    info.energy_to_cars_kwh
+                );
+            }
+        }
+        assert_eq!(action_nvec(&cfg), vec![N_LEVELS_V2G; c + 1]);
+        let plain = StationConfig::default();
+        assert_eq!(action_nvec(&plain)[0], N_LEVELS);
+        assert_eq!(*action_nvec(&plain).last().unwrap(), N_LEVELS_BATTERY);
     }
 
     /// Regression for the next-hour price clamp: at hour 23 the "next

@@ -19,7 +19,11 @@ pub const DC_CHARGER: ChargerSpec = ChargerSpec { voltage: 400.0, i_max: 375.0 }
 pub const AC_CHARGER: ChargerSpec = ChargerSpec { voltage: 230.0, i_max: 50.0 }; // 11.5 kW
 
 /// Static station config (paper Table 3 defaults; matches python config.py).
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` lets the fleet catalog group lanes into station families:
+/// every config field changes either the electrical tree or the action
+/// semantics, so "equal config" is exactly "same obs/action space".
+#[derive(Debug, Clone, PartialEq)]
 pub struct StationConfig {
     pub n_dc: usize,
     pub n_ac: usize,
@@ -33,6 +37,13 @@ pub struct StationConfig {
     pub battery_voltage: f32,
     pub battery_tau: f32,
     pub battery_soc0: f32,
+    /// V2G: car ports use the battery's symmetric signed ladder
+    /// ([`super::core::N_LEVELS_V2G`] levels spanning -100%..+100% of the
+    /// port maximum) instead of the unipolar charge-only ladder, so the
+    /// policy can discharge parked cars into the station/grid. The
+    /// transition core (`charge_cars`) and the reward path already account
+    /// car-side discharge; this flag only changes the action mapping.
+    pub v2g: bool,
 }
 
 impl Default for StationConfig {
@@ -50,6 +61,7 @@ impl Default for StationConfig {
             battery_voltage: 400.0,
             battery_tau: 0.8,
             battery_soc0: 0.5,
+            v2g: false,
         }
     }
 }

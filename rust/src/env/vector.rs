@@ -33,12 +33,13 @@ use super::core::{self, LaneRef, LaneView, Scratch, ScenarioTables, StepInfo};
 use super::tree::{StationConfig, StationTree};
 
 /// Don't shard below this batch size; the per-lane work is microseconds
-/// and even a condvar wake would dominate.
-const PAR_MIN_BATCH: usize = 64;
+/// and even a condvar wake would dominate. (Shared with the fleet
+/// scheduler, which plans shards across several envs at once.)
+pub(crate) const PAR_MIN_BATCH: usize = 64;
 
 /// Keep every shard at least this many lanes so wakeup/park overhead
 /// stays small relative to per-shard stepping work.
-const MIN_LANES_PER_SHARD: usize = 32;
+pub(crate) const MIN_LANES_PER_SHARD: usize = 32;
 
 pub struct VectorEnv {
     pub cfg: StationConfig,
@@ -424,8 +425,9 @@ impl VectorEnv {
     /// Split the SoA state (plus optional per-step output buffers) into
     /// `shards` disjoint contiguous lane blocks. Chunk boundaries depend
     /// only on `(B, shards)`, so the pool and the scoped fallback compute
-    /// bit-identical results for the same shard count.
-    fn shard_tasks<'a>(
+    /// bit-identical results for the same shard count. `pub(crate)` so the
+    /// fleet scheduler can pool tasks from several envs into one dispatch.
+    pub(crate) fn shard_tasks<'a>(
         &'a mut self,
         actions: &'a [usize],
         infos: &'a mut [StepInfo],
@@ -543,16 +545,16 @@ impl VectorEnv {
 }
 
 /// Per-step output slices for one shard's lanes (fused rollout only).
-struct StepOut<'a> {
-    obs: &'a mut [f32],
-    rewards: &'a mut [f32],
-    dones: &'a mut [f32],
-    profits: &'a mut [f32],
+pub(crate) struct StepOut<'a> {
+    pub(crate) obs: &'a mut [f32],
+    pub(crate) rewards: &'a mut [f32],
+    pub(crate) dones: &'a mut [f32],
+    pub(crate) profits: &'a mut [f32],
 }
 
 /// One shard's work item: a contiguous block of lanes plus everything
 /// needed to step (and, in rollout mode, observe) them.
-struct ShardTask<'a> {
+pub(crate) struct ShardTask<'a> {
     cfg: &'a StationConfig,
     tree: &'a StationTree,
     tables: &'a [Arc<ScenarioTables>],
@@ -579,7 +581,7 @@ struct ShardTask<'a> {
 
 impl ShardTask<'_> {
     /// Step (and in rollout mode observe) every lane in this shard.
-    fn run(&mut self) {
+    pub(crate) fn run(&mut self) {
         let c = self.cfg.n_chargers();
         let p = self.cfg.n_ports();
         let d = core::obs_dim(self.cfg);
@@ -641,7 +643,9 @@ impl ShardTask<'_> {
 }
 
 /// Dispatch shard tasks on the pool (caller thread runs shard 0) or, when
-/// no pool is supplied or there is a single shard, inline.
+/// no pool is supplied or there is a single shard, inline. (The fleet
+/// scheduler has its own dispatcher — `fleet::rollout::run_fleet_tasks` —
+/// which additionally strides tasks when they outnumber pool lanes.)
 fn run_shard_tasks(pool: Option<&WorkerPool>, tasks: &mut [ShardTask<'_>]) {
     match pool {
         Some(pool) if tasks.len() > 1 => {

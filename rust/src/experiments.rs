@@ -41,8 +41,9 @@ pub fn run(id: &str, cfg: &RunConfig) -> Result<()> {
             "fig9to11",
         ),
         "perf" => perf(cfg),
+        "fleet" => fleet_bench(cfg),
         other => anyhow::bail!(
-            "unknown experiment '{other}' (table2 fig4a fig4bc fig5 fig6to8 fig9to11 perf)"
+            "unknown experiment '{other}' (table2 fig4a fig4bc fig5 fig6to8 fig9to11 perf fleet)"
         ),
     }
 }
@@ -623,6 +624,55 @@ fn perf(cfg: &RunConfig) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// fleet: heterogeneous multi-station throughput on one worker pool.
+// ---------------------------------------------------------------------------
+
+/// `chargax bench fleet` — fused fleet-rollout throughput over the demo
+/// scenario grid (or `--fleet spec.json`) at growing lane counts. The
+/// multi-env analogue of the Table 2 native sweep; the machine-readable
+/// trajectory lands in BENCH_fleet.json via `cargo bench --bench
+/// table2_throughput`.
+fn fleet_bench(cfg: &RunConfig) -> Result<()> {
+    use chargax::fleet::{measure_fleet_throughput, FleetSpec};
+
+    let store = DataStore::load(&artifacts_dir().join("data")).ok();
+    if store.is_none() {
+        println!("  (artifacts/data not exported; using synthetic scenario tables)");
+    }
+    let base = match cfg.fleet_spec.as_deref() {
+        Some("demo") | None => None,
+        Some(path) => Some(FleetSpec::from_json_file(path)?),
+    };
+    println!(
+        "Fleet rollout throughput (heterogeneous station families, one worker pool, threads={})\n",
+        if cfg.num_threads == 0 { "auto".to_string() } else { cfg.num_threads.to_string() },
+    );
+    let mut csv = String::from("scale,total_lanes,families,steps_per_sec,s_per_100k\n");
+    for scale in [1usize, 4, 16] {
+        let spec = match &base {
+            Some(s) => {
+                // Scale a user-provided spec by multiplying lane counts.
+                let mut s = s.clone();
+                for e in &mut s.specs {
+                    e.lanes *= scale;
+                }
+                s
+            }
+            None => FleetSpec::demo(cfg.seed as u64, scale),
+        };
+        let (steps_per_sec, s_per_100k, lanes, families) =
+            measure_fleet_throughput(&spec, store.as_ref(), cfg.num_threads, 120_000)?;
+        println!(
+            "  L={lanes:<5} ({families} families) {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k"
+        );
+        writeln!(csv, "{scale},{lanes},{families},{steps_per_sec},{s_per_100k}").ok();
+    }
+    std::fs::write("runs/fleet.csv", csv).context("writing runs/fleet.csv")?;
+    println!("\nwrote runs/fleet.csv");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // cross-check: scalar vs JAX env_step on deterministic sub-transitions.
 // ---------------------------------------------------------------------------
 
@@ -638,20 +688,27 @@ pub fn cross_check(_variant: &str) -> Result<String> {
     let mut n_ok = 0usize;
     let mut out = String::new();
     for (i, case) in cases.iter().enumerate() {
-        let kind = case.get("kind").and_then(Json::as_str).context("kind")?;
+        let kind = case
+            .get("kind")
+            .and_then(Json::as_str)
+            .with_context(|| format!("case {i}: field 'kind' missing or not a string"))?;
         let ok = match kind {
-            "constraint" => check_constraint(case)?,
-            "charge" => check_charge(case)?,
+            "constraint" => {
+                check_constraint(case).with_context(|| format!("case {i} (constraint)"))?
+            }
+            "charge" => check_charge(case).with_context(|| format!("case {i} (charge)"))?,
             "curve" => {
-                let soc = case.get("soc").and_then(Json::as_f64).unwrap() as f32;
-                let rb = case.get("r_bar").and_then(Json::as_f64).unwrap() as f32;
-                let tau = case.get("tau").and_then(Json::as_f64).unwrap() as f32;
-                let wc = case.get("want_charge").and_then(Json::as_f64).unwrap() as f32;
-                let wd = case.get("want_discharge").and_then(Json::as_f64).unwrap() as f32;
+                let soc = get_f32(case, "soc").with_context(|| format!("case {i} (curve)"))?;
+                let rb = get_f32(case, "r_bar").with_context(|| format!("case {i} (curve)"))?;
+                let tau = get_f32(case, "tau").with_context(|| format!("case {i} (curve)"))?;
+                let wc = get_f32(case, "want_charge")
+                    .with_context(|| format!("case {i} (curve)"))?;
+                let wd = get_f32(case, "want_discharge")
+                    .with_context(|| format!("case {i} (curve)"))?;
                 (charging_curve(soc, rb, tau) - wc).abs() < 1e-3
                     && (discharging_curve(soc, rb, tau) - wd).abs() < 1e-3
             }
-            other => anyhow::bail!("unknown case kind {other}"),
+            other => anyhow::bail!("case {i}: unknown case kind '{other}'"),
         };
         if ok {
             n_ok += 1;
@@ -677,7 +734,14 @@ pub fn cross_check(_variant: &str) -> Result<String> {
 fn get_vec(j: &chargax::util::json::Json, k: &str) -> Result<Vec<f32>> {
     j.get(k)
         .and_then(|x| x.as_f32_flat())
-        .with_context(|| format!("field {k}"))
+        .with_context(|| format!("field '{k}' missing or not a float array"))
+}
+
+fn get_f32(j: &chargax::util::json::Json, k: &str) -> Result<f32> {
+    j.get(k)
+        .and_then(|x| x.as_f64())
+        .map(|x| x as f32)
+        .with_context(|| format!("field '{k}' missing or not a number"))
 }
 
 fn check_constraint(case: &chargax::util::json::Json) -> Result<bool> {
@@ -688,7 +752,7 @@ fn check_constraint(case: &chargax::util::json::Json) -> Result<bool> {
     let lim = get_vec(case, "limits")?;
     let eta = get_vec(case, "eta")?;
     let want_i = get_vec(case, "want_i")?;
-    let want_x = case.get("want_excess").and_then(|x| x.as_f64()).unwrap() as f32;
+    let want_x = get_f32(case, "want_excess")?;
     let p = i.len();
     let n = lim.len();
     let tree = StationTree {
@@ -722,13 +786,21 @@ fn check_charge(case: &chargax::util::json::Json) -> Result<bool> {
     let cap = get_vec(case, "cap")?;
     let rbar = get_vec(case, "r_bar")?;
     let tau = get_vec(case, "tau")?;
-    let dt_hours = case.get("dt_hours").and_then(|x| x.as_f64()).unwrap() as f32;
-    let want = case.get("want").and_then(|x| x.as_arr()).context("want")?;
-    let w_soc = want[0].as_f32_flat().unwrap();
-    let w_de = want[1].as_f32_flat().unwrap();
-    let w_dt = want[2].as_f32_flat().unwrap();
-    let w_rh = want[3].as_f32_flat().unwrap();
-    let w_e = want[4].as_f32_flat().unwrap();
+    let dt_hours = get_f32(case, "dt_hours")?;
+    let want = case
+        .get("want")
+        .and_then(|x| x.as_arr())
+        .context("field 'want' missing or not an array")?;
+    let want_row = |i: usize| -> Result<Vec<f32>> {
+        want.get(i)
+            .and_then(|x| x.as_f32_flat())
+            .with_context(|| format!("field 'want[{i}]' missing or not a float array"))
+    };
+    let w_soc = want_row(0)?;
+    let w_de = want_row(1)?;
+    let w_dt = want_row(2)?;
+    let w_rh = want_row(3)?;
+    let w_e = want_row(4)?;
     for j in 0..i.len() {
         // replicate ref.charge_update_ref per lane
         let p_kw = volt[j] * i[j] / 1000.0 * present[j];

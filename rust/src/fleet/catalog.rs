@@ -1,0 +1,552 @@
+//! Scenario catalog: a declarative grid of charging-station scenarios
+//! with deterministic seeded expansion into per-lane assignments.
+//!
+//! A [`ScenarioSpec`] names the grid axes the paper varies — country ×
+//! price-year × traffic × user-profile — plus a station layout and a
+//! `v2g` flag, and how many env lanes to allocate to the entry. A
+//! [`FleetSpec`] bundles several entries; [`expand`] turns it into
+//! per-family lane plans: lanes with the same `StationConfig` (hence the
+//! same obs/action space) land in one family, the cell order inside each
+//! entry is shuffled with a seeded [`CounterRng`] and lanes round-robin
+//! over it, and every scenario's tables are built once through the
+//! [`TableCache`] — lanes sharing a scenario share one
+//! `Arc<ScenarioTables>` instead of each caller hand-building per-lane
+//! table vectors.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::{DataStore, Scenario};
+use crate::env::core::ScenarioTables;
+use crate::env::tree::StationConfig;
+use crate::util::json::Json;
+use crate::util::rng::CounterRng;
+
+/// Station-layout axis of the grid: the electrical shape of one family.
+/// Everything not listed here keeps the paper's Table 3 defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StationLayout {
+    pub n_dc: usize,
+    pub n_ac: usize,
+    pub battery_capacity_kwh: f32,
+    pub battery_p_max_kw: f32,
+}
+
+impl Default for StationLayout {
+    fn default() -> Self {
+        let d = StationConfig::default();
+        StationLayout {
+            n_dc: d.n_dc,
+            n_ac: d.n_ac,
+            battery_capacity_kwh: d.battery_capacity_kwh,
+            battery_p_max_kw: d.battery_p_max_kw,
+        }
+    }
+}
+
+impl StationLayout {
+    /// Concrete station config for this layout (+ the entry's V2G flag).
+    pub fn station_config(&self, v2g: bool) -> StationConfig {
+        StationConfig {
+            n_dc: self.n_dc,
+            n_ac: self.n_ac,
+            battery_capacity_kwh: self.battery_capacity_kwh,
+            battery_p_max_kw: self.battery_p_max_kw,
+            v2g,
+            ..StationConfig::default()
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<StationLayout> {
+        let d = StationLayout::default();
+        let num = |key: &str, dflt: f32| -> Result<f32> {
+            match j.get(key) {
+                None => Ok(dflt),
+                Some(v) => v
+                    .as_f64()
+                    .map(|x| x as f32)
+                    .ok_or_else(|| anyhow!("layout field \"{key}\" must be a number")),
+            }
+        };
+        let count = |key: &str, dflt: usize| -> Result<usize> {
+            match j.get(key) {
+                None => Ok(dflt),
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("layout field \"{key}\" must be a count")),
+            }
+        };
+        Ok(StationLayout {
+            n_dc: count("n_dc", d.n_dc)?,
+            n_ac: count("n_ac", d.n_ac)?,
+            battery_capacity_kwh: num("battery_capacity_kwh", d.battery_capacity_kwh)?,
+            battery_p_max_kw: num("battery_p_max_kw", d.battery_p_max_kw)?,
+        })
+    }
+}
+
+/// One grid entry: `lanes` env lanes spread over the cross product
+/// country × year × traffic × profile, on one station layout, optionally
+/// V2G-enabled.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub lanes: usize,
+    pub countries: Vec<String>,
+    pub years: Vec<u32>,
+    pub traffics: Vec<String>,
+    /// Arrival/user-profile scenario names (the paper's bundled
+    /// scenarios: shopping | work | residential | highway).
+    pub profiles: Vec<String>,
+    /// Car-catalog region used when artifacts are available.
+    pub region: String,
+    pub layout: StationLayout,
+    pub v2g: bool,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        ScenarioSpec {
+            name: "spec".into(),
+            lanes: 4,
+            countries: vec!["NL".into()],
+            years: vec![2021],
+            traffics: vec!["medium".into()],
+            profiles: vec!["shopping".into()],
+            region: "EU".into(),
+            layout: StationLayout::default(),
+            v2g: false,
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// Cross product of the grid axes as fully-specified scenarios.
+    pub fn cells(&self) -> Vec<Scenario> {
+        let mut out = Vec::new();
+        for profile in &self.profiles {
+            for country in &self.countries {
+                for &year in &self.years {
+                    for traffic in &self.traffics {
+                        out.push(Scenario {
+                            scenario: profile.clone(),
+                            region: self.region.clone(),
+                            country: country.clone(),
+                            year,
+                            traffic: traffic.clone(),
+                            ..Scenario::default()
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn from_json(j: &Json) -> Result<ScenarioSpec> {
+        let d = ScenarioSpec::default();
+        let str_list = |key: &str, dflt: Vec<String>| -> Result<Vec<String>> {
+            match j.get(key) {
+                None => Ok(dflt),
+                Some(v) => v
+                    .as_str_vec()
+                    .ok_or_else(|| anyhow!("\"{key}\" must be an array of strings")),
+            }
+        };
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("fleet entry needs a \"name\""))?;
+        let lanes = j
+            .get("lanes")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("fleet entry '{name}' needs a \"lanes\" count"))?;
+        let years = match j.get("years") {
+            None => d.years,
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| anyhow!("\"years\" must be an array"))?
+                .iter()
+                .map(|y| {
+                    y.as_f64()
+                        .map(|x| x as u32)
+                        .ok_or_else(|| anyhow!("\"years\" entries must be numbers"))
+                })
+                .collect::<Result<_>>()?,
+        };
+        let layout = match j.get("layout") {
+            None => d.layout,
+            Some(l) => StationLayout::from_json(l)
+                .with_context(|| format!("fleet entry '{name}' layout"))?,
+        };
+        Ok(ScenarioSpec {
+            lanes,
+            countries: str_list("countries", d.countries)?,
+            years,
+            traffics: str_list("traffics", d.traffics)?,
+            profiles: str_list("profiles", d.profiles)?,
+            region: j
+                .get("region")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.region)
+                .to_string(),
+            layout,
+            v2g: j.get("v2g").and_then(Json::as_bool).unwrap_or(false),
+            name,
+        })
+    }
+}
+
+/// A whole fleet: several grid entries plus the expansion seed.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub seed: u64,
+    pub specs: Vec<ScenarioSpec>,
+}
+
+impl FleetSpec {
+    /// Built-in demo fleet: three structurally different station families
+    /// — the paper's mixed AC/DC station over a 4-cell scenario grid, a
+    /// DC-fast V2G plaza, and an AC-only battery-less lot. `lanes_scale`
+    /// multiplies every entry's lane count (bench sweeps drive it).
+    pub fn demo(seed: u64, lanes_scale: usize) -> FleetSpec {
+        let k = lanes_scale.max(1);
+        FleetSpec {
+            seed,
+            specs: vec![
+                ScenarioSpec {
+                    name: "mixed-ac-dc".into(),
+                    lanes: 8 * k,
+                    years: vec![2021, 2022],
+                    traffics: vec!["medium".into(), "high".into()],
+                    ..ScenarioSpec::default()
+                },
+                ScenarioSpec {
+                    name: "dc-plaza-v2g".into(),
+                    lanes: 8 * k,
+                    profiles: vec!["work".into()],
+                    layout: StationLayout { n_dc: 8, n_ac: 0, ..StationLayout::default() },
+                    v2g: true,
+                    ..ScenarioSpec::default()
+                },
+                ScenarioSpec {
+                    name: "ac-lot".into(),
+                    lanes: 4 * k,
+                    traffics: vec!["low".into()],
+                    layout: StationLayout {
+                        n_dc: 0,
+                        n_ac: 8,
+                        battery_capacity_kwh: 0.0,
+                        battery_p_max_kw: 0.0,
+                    },
+                    ..ScenarioSpec::default()
+                },
+            ],
+        }
+    }
+
+    pub fn from_json_file(path: &str) -> Result<FleetSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fleet spec {path}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing fleet spec {path}"))?;
+        FleetSpec::from_json(&j).with_context(|| format!("fleet spec {path}"))
+    }
+
+    /// Schema (README §Scenario fleets & V2G):
+    /// `{"seed": N, "fleet": [{"name", "lanes", "countries", "years",
+    /// "traffics", "profiles", "region", "layout": {...}, "v2g"}, ...]}`.
+    pub fn from_json(j: &Json) -> Result<FleetSpec> {
+        let seed = j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let entries = j
+            .get("fleet")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("fleet spec needs a top-level \"fleet\" array"))?;
+        let mut specs = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            specs.push(ScenarioSpec::from_json(e).with_context(|| format!("fleet entry {i}"))?);
+        }
+        Ok(FleetSpec { seed, specs })
+    }
+}
+
+/// Dedup cache: scenarios whose resolved tables would be identical share
+/// one `Arc<ScenarioTables>` — built once, never cloned per lane.
+#[derive(Default)]
+pub struct TableCache {
+    map: BTreeMap<String, Arc<ScenarioTables>>,
+}
+
+impl TableCache {
+    pub fn new() -> TableCache {
+        TableCache::default()
+    }
+
+    /// Cache key: every `Scenario` field that influences table contents
+    /// (float fields keyed by bit pattern, so -0.0 vs 0.0 is the only
+    /// equal-but-distinct case — harmless for a cache).
+    fn key(sc: &Scenario) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{:?}|{}|{}|{}",
+            sc.scenario,
+            sc.region,
+            sc.country,
+            sc.year,
+            sc.traffic,
+            sc.alpha.map(f32::to_bits),
+            sc.beta.to_bits(),
+            sc.p_sell.to_bits(),
+            sc.feed_in_ratio.to_bits(),
+        )
+    }
+
+    pub fn get(&mut self, store: Option<&DataStore>, sc: &Scenario) -> Result<Arc<ScenarioTables>> {
+        let key = Self::key(sc);
+        if let Some(t) = self.map.get(&key) {
+            return Ok(Arc::clone(t));
+        }
+        let tables = match store {
+            Some(s) => {
+                check_scenario_known(s, sc)?;
+                ScenarioTables::build(s, sc).with_context(|| {
+                    format!(
+                        "building tables for scenario {} {} {}/{} traffic={}",
+                        sc.scenario, sc.region, sc.country, sc.year, sc.traffic
+                    )
+                })?
+            }
+            None => ScenarioTables::synthetic_for(sc),
+        };
+        let arc = Arc::new(tables);
+        self.map.insert(key, Arc::clone(&arc));
+        Ok(arc)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Pre-flight the data-store lookups `ScenarioTables::build` performs
+/// with panicking `BTreeMap` indexing, so a typo'd fleet entry fails
+/// with the bad key (and the known ones) named instead of an opaque
+/// `key not found` panic. (Without artifacts, synthetic tables accept
+/// any names.)
+fn check_scenario_known(store: &DataStore, sc: &Scenario) -> Result<()> {
+    if !store.arrival_shapes.contains_key(&sc.scenario)
+        || !store.user_profiles.contains_key(&sc.scenario)
+    {
+        bail!(
+            "unknown profile/scenario '{}' (have {:?})",
+            sc.scenario,
+            store.arrival_shapes.keys().collect::<Vec<_>>()
+        );
+    }
+    if !store.car_weights.contains_key(&sc.region) {
+        bail!(
+            "unknown region '{}' (have {:?})",
+            sc.region,
+            store.car_weights.keys().collect::<Vec<_>>()
+        );
+    }
+    if !store.traffic.contains_key(&sc.traffic) {
+        bail!(
+            "unknown traffic level '{}' (have {:?})",
+            sc.traffic,
+            store.traffic.keys().collect::<Vec<_>>()
+        );
+    }
+    store.price(&sc.country, sc.year).map(|_| ())
+}
+
+/// One station family: every lane whose `StationConfig` (hence obs and
+/// action space) is identical, ready to back one `VectorEnv`.
+pub struct FamilyPlan {
+    pub label: String,
+    pub cfg: StationConfig,
+    pub tables: Vec<Arc<ScenarioTables>>,
+    pub lane_scenario: Vec<usize>,
+    pub seeds: Vec<u64>,
+}
+
+/// Expand a [`FleetSpec`] into per-family lane plans.
+///
+/// Deterministic and seeded: the cell order inside each entry is shuffled
+/// with a `CounterRng` derived from `(fleet.seed, entry index)` and lanes
+/// round-robin over the shuffled order (every cell is visited before any
+/// repeats); per-lane RNG seeds come from one derived seeder stream, so
+/// they are stable regardless of how entries regroup into families.
+pub fn expand(fleet: &FleetSpec, store: Option<&DataStore>) -> Result<Vec<FamilyPlan>> {
+    if fleet.specs.is_empty() {
+        bail!("fleet spec has no scenario entries");
+    }
+    let mut cache = TableCache::new();
+    let mut families: Vec<FamilyPlan> = Vec::new();
+    let mut seeder = CounterRng::derive(fleet.seed, 0xF1EE7);
+    for (s_idx, spec) in fleet.specs.iter().enumerate() {
+        if spec.lanes == 0 {
+            bail!("fleet entry '{}' has zero lanes", spec.name);
+        }
+        let cells = spec.cells();
+        if cells.is_empty() {
+            bail!(
+                "fleet entry '{}' expands to an empty grid \
+                 (check countries/years/traffics/profiles)",
+                spec.name
+            );
+        }
+        let cfg = spec.layout.station_config(spec.v2g);
+        cfg.validate()
+            .with_context(|| format!("fleet entry '{}' layout", spec.name))?;
+        let mut order: Vec<usize> = (0..cells.len()).collect();
+        let mut rng = CounterRng::derive(fleet.seed, s_idx as u64 + 1);
+        for i in (1..order.len()).rev() {
+            let j = rng.below(i as u32 + 1) as usize;
+            order.swap(i, j);
+        }
+        let fam_idx = match families.iter().position(|f| f.cfg == cfg) {
+            Some(i) => {
+                families[i].label.push('+');
+                families[i].label.push_str(&spec.name);
+                i
+            }
+            None => {
+                families.push(FamilyPlan {
+                    label: spec.name.clone(),
+                    cfg: cfg.clone(),
+                    tables: Vec::new(),
+                    lane_scenario: Vec::new(),
+                    seeds: Vec::new(),
+                });
+                families.len() - 1
+            }
+        };
+        let fam = &mut families[fam_idx];
+        for lane in 0..spec.lanes {
+            let sc = &cells[order[lane % cells.len()]];
+            let table = cache
+                .get(store, sc)
+                .with_context(|| format!("fleet entry '{}'", spec.name))?;
+            let t_idx = match fam.tables.iter().position(|t| Arc::ptr_eq(t, &table)) {
+                Some(i) => i,
+                None => {
+                    fam.tables.push(Arc::clone(&table));
+                    fam.tables.len() - 1
+                }
+            };
+            fam.lane_scenario.push(t_idx);
+            fam.seeds.push(seeder.next_u64());
+        }
+    }
+    Ok(families)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_expands_to_three_heterogeneous_families() {
+        let spec = FleetSpec::demo(7, 1);
+        let fams = expand(&spec, None).unwrap();
+        assert_eq!(fams.len(), 3);
+        // Structurally different: distinct obs/action spaces.
+        let dims: Vec<usize> = fams
+            .iter()
+            .map(|f| crate::env::core::obs_dim(&f.cfg))
+            .collect();
+        assert_ne!(dims[0], dims[1]);
+        assert!(fams.iter().any(|f| f.cfg.v2g), "demo must include a V2G family");
+        assert!(
+            fams.iter().any(|f| f.cfg.battery_capacity_kwh == 0.0),
+            "demo must include a battery-less family"
+        );
+        for f in &fams {
+            assert_eq!(f.lane_scenario.len(), f.seeds.len());
+            assert!(!f.tables.is_empty());
+            assert!(f.lane_scenario.iter().all(|&i| i < f.tables.len()));
+        }
+    }
+
+    #[test]
+    fn expansion_is_deterministic_and_seed_sensitive() {
+        let a = expand(&FleetSpec::demo(7, 1), None).unwrap();
+        let b = expand(&FleetSpec::demo(7, 1), None).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.lane_scenario, y.lane_scenario);
+            assert_eq!(x.seeds, y.seeds);
+        }
+        let c = expand(&FleetSpec::demo(8, 1), None).unwrap();
+        assert_ne!(a[0].seeds, c[0].seeds, "different fleet seed, same lane seeds");
+    }
+
+    #[test]
+    fn cache_dedups_repeated_scenarios() {
+        // 8 lanes over a 4-cell grid: exactly 4 tables built, lanes
+        // sharing a cell share the same Arc.
+        let spec = FleetSpec {
+            seed: 3,
+            specs: vec![ScenarioSpec {
+                lanes: 8,
+                years: vec![2021, 2022],
+                traffics: vec!["medium".into(), "high".into()],
+                ..ScenarioSpec::default()
+            }],
+        };
+        let fams = expand(&spec, None).unwrap();
+        assert_eq!(fams.len(), 1);
+        let f = &fams[0];
+        assert_eq!(f.tables.len(), 4, "one shared table per distinct cell");
+        assert_eq!(f.lane_scenario.len(), 8);
+        // Round-robin over the shuffled order: each cell used twice.
+        let mut counts = vec![0usize; f.tables.len()];
+        for &i in &f.lane_scenario {
+            counts[i] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 2), "cells unevenly covered: {counts:?}");
+    }
+
+    #[test]
+    fn same_layout_entries_merge_into_one_family() {
+        let mut a = ScenarioSpec { name: "a".into(), lanes: 3, ..ScenarioSpec::default() };
+        a.traffics = vec!["low".into()];
+        let b = ScenarioSpec { name: "b".into(), lanes: 2, ..ScenarioSpec::default() };
+        let fams = expand(&FleetSpec { seed: 1, specs: vec![a, b] }, None).unwrap();
+        assert_eq!(fams.len(), 1);
+        assert_eq!(fams[0].lane_scenario.len(), 5);
+        assert_eq!(fams[0].label, "a+b");
+    }
+
+    #[test]
+    fn json_round_trip_parses_schema() {
+        let text = r#"{
+            "seed": 11,
+            "fleet": [
+                {"name": "nl", "lanes": 6, "countries": ["NL"],
+                 "years": [2021, 2023], "traffics": ["low", "high"],
+                 "profiles": ["shopping"],
+                 "layout": {"n_dc": 4, "n_ac": 2}, "v2g": true}
+            ]
+        }"#;
+        let spec = FleetSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.seed, 11);
+        assert_eq!(spec.specs.len(), 1);
+        let s = &spec.specs[0];
+        assert_eq!(s.lanes, 6);
+        assert_eq!(s.years, vec![2021, 2023]);
+        assert_eq!(s.layout.n_dc, 4);
+        assert!(s.v2g);
+        assert_eq!(s.cells().len(), 4);
+        // missing required fields error with the entry named
+        let bad = r#"{"fleet": [{"name": "x"}]}"#;
+        let err = FleetSpec::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("lanes"), "{err:#}");
+    }
+}

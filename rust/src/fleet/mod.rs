@@ -1,0 +1,214 @@
+//! Scenario fleet subsystem: heterogeneous multi-station scheduling on
+//! one worker pool.
+//!
+//! The paper's modularity claim is that one simulator covers diverse
+//! real-world station configurations; the runtime below makes that true
+//! at training time. A [`Fleet`] owns N [`VectorEnv`]s with *different*
+//! `StationConfig`s — different charger mixes, battery options, V2G
+//! capability, hence different obs/action dimensions — and drives all of
+//! them concurrently on a **single** persistent
+//! [`WorkerPool`](crate::runtime::pool::WorkerPool) via a
+//! shard → (env, lane-range) map. One fused [`Fleet::rollout`] call (see
+//! [`rollout`]) advances every family and writes each family's
+//! observations/rewards/dones/profits into its own PPO buffers, so a
+//! policy per station family trains in one pass instead of serializing
+//! one pool per env.
+//!
+//! * [`catalog`] — the declarative `ScenarioSpec` grid (country ×
+//!   price-year × traffic × user-profile × layout × v2g), seeded
+//!   expansion, and the `Arc<ScenarioTables>` dedup cache.
+//! * [`rollout`] — the fused cross-env rollout and the per-family PPO
+//!   trainer ([`rollout::FleetPpoTrainer`]).
+//!
+//! Determinism: every lane's `CounterRng` stream depends only on its seed
+//! and draw count, and shard tasks compute the same result wherever they
+//! run — so a fleet rollout is bit-identical to rolling the member envs
+//! out independently, for any thread count (proven in
+//! rust/tests/fleet.rs).
+
+pub mod catalog;
+pub mod rollout;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::data::DataStore;
+use crate::env::vector::{VectorEnv, MIN_LANES_PER_SHARD, PAR_MIN_BATCH};
+use crate::runtime::pool::WorkerPool;
+
+pub use catalog::{expand, FleetSpec, ScenarioSpec, StationLayout, TableCache};
+pub use rollout::{measure_fleet_throughput, FamilyStats, FleetPpoTrainer};
+
+/// N heterogeneous station environments scheduled on one worker pool.
+pub struct Fleet {
+    envs: Vec<VectorEnv>,
+    labels: Vec<String>,
+    /// Shard-count ceiling across the whole fleet (`--threads`; 0 = auto).
+    threads: usize,
+    /// One pool for every env; rebuilt lazily when the plan outgrows it.
+    pool: Option<Arc<WorkerPool>>,
+}
+
+impl Fleet {
+    /// Assemble a fleet from already-built envs (tests and power users);
+    /// most callers go through [`Fleet::from_spec`].
+    pub fn from_envs(envs: Vec<VectorEnv>, labels: Vec<String>) -> Result<Fleet> {
+        if envs.is_empty() {
+            bail!("a fleet needs at least one environment");
+        }
+        if envs.len() != labels.len() {
+            bail!("{} envs but {} labels", envs.len(), labels.len());
+        }
+        Ok(Fleet {
+            envs,
+            labels,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            pool: None,
+        })
+    }
+
+    /// Expand a [`FleetSpec`] (catalog grid) and build one `VectorEnv` per
+    /// station family. `store` is the artifact data stack; `None` falls
+    /// back to synthetic per-scenario tables.
+    pub fn from_spec(spec: &FleetSpec, store: Option<&DataStore>) -> Result<Fleet> {
+        let families = catalog::expand(spec, store)?;
+        let mut envs = Vec::with_capacity(families.len());
+        let mut labels = Vec::with_capacity(families.len());
+        for fam in families {
+            envs.push(VectorEnv::with_seeds(
+                fam.cfg,
+                fam.tables,
+                fam.lane_scenario,
+                &fam.seeds,
+            ));
+            labels.push(fam.label);
+        }
+        Fleet::from_envs(envs, labels)
+    }
+
+    pub fn n_envs(&self) -> usize {
+        self.envs.len()
+    }
+
+    pub fn env(&self, i: usize) -> &VectorEnv {
+        &self.envs[i]
+    }
+
+    pub fn label(&self, i: usize) -> &str {
+        &self.labels[i]
+    }
+
+    pub fn total_lanes(&self) -> usize {
+        self.envs.iter().map(|e| e.batch()).sum()
+    }
+
+    /// Cap the fleet-wide shard/worker budget (`--threads`). `0` restores
+    /// the `available_parallelism()` default. Rebuilds the pool lazily.
+    pub fn set_threads(&mut self, threads: usize) {
+        let t = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        if t != self.threads {
+            self.threads = t;
+            self.pool = None;
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The shard → (env, lane-range) map for the current lane counts:
+    /// `plan[e]` shards for env `e`, each covering a contiguous lane block
+    /// (the per-env split is [`VectorEnv::shard_tasks`]' — boundaries
+    /// depend only on `(B_e, plan[e])`). The thread budget is split
+    /// proportionally to lane counts; every env gets at least one shard,
+    /// and envs below the sharding thresholds stay single-shard so tiny
+    /// families don't pay wakeup overhead. The plan's *total* may exceed
+    /// `threads` when there are more families than threads — concurrency
+    /// is still capped at dispatch time (`rollout::run_fleet_tasks`
+    /// strides tasks over at most `threads` pool lanes).
+    pub(crate) fn plan_shards(&self) -> Vec<usize> {
+        let lanes: Vec<usize> = self.envs.iter().map(|e| e.batch()).collect();
+        let total: usize = lanes.iter().sum::<usize>().max(1);
+        let budget = self.threads.max(1);
+        lanes
+            .iter()
+            .map(|&b| {
+                let cap = if b >= PAR_MIN_BATCH {
+                    (b / MIN_LANES_PER_SHARD).max(1)
+                } else {
+                    1
+                };
+                (budget * b / total).clamp(1, cap)
+            })
+            .collect()
+    }
+
+    /// The fleet-wide pool, grown (rebuilt) if `shards` outruns it.
+    pub(crate) fn ensure_pool(&mut self, shards: usize) -> Arc<WorkerPool> {
+        let need = shards.max(1);
+        let rebuild = match &self.pool {
+            Some(p) => p.max_shards() < need,
+            None => true,
+        };
+        if rebuild {
+            self.pool = Some(Arc::new(WorkerPool::new(need)));
+        }
+        Arc::clone(self.pool.as_ref().expect("pool just built"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::core::ScenarioTables;
+    use crate::env::tree::StationConfig;
+
+    fn tiny_env(b: usize, seed: u64) -> VectorEnv {
+        VectorEnv::new(
+            StationConfig::default(),
+            ScenarioTables::synthetic(1.0),
+            b,
+            seed,
+        )
+    }
+
+    #[test]
+    fn shard_plan_is_proportional_with_floors() {
+        let mut fleet = Fleet::from_envs(
+            vec![tiny_env(256, 1), tiny_env(64, 2), tiny_env(4, 3)],
+            vec!["a".into(), "b".into(), "c".into()],
+        )
+        .unwrap();
+        fleet.set_threads(8);
+        let plan = fleet.plan_shards();
+        assert_eq!(plan.len(), 3);
+        assert!(plan.iter().all(|&s| s >= 1));
+        assert_eq!(plan[2], 1, "sub-threshold env must stay single-shard");
+        assert!(plan[0] >= plan[1], "bigger env gets at least as many shards");
+        // one-thread budget: everything single-shard
+        fleet.set_threads(1);
+        assert_eq!(fleet.plan_shards(), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn from_spec_builds_demo_fleet() {
+        let fleet = Fleet::from_spec(&FleetSpec::demo(5, 1), None).unwrap();
+        assert_eq!(fleet.n_envs(), 3);
+        assert_eq!(fleet.total_lanes(), 20);
+        // Heterogeneous action/obs spaces across families.
+        let d0 = fleet.env(0).obs_dim();
+        let d1 = fleet.env(1).obs_dim();
+        assert_ne!(d0, d1);
+        assert!(fleet.env(1).cfg.v2g);
+        assert_eq!(
+            fleet.env(1).action_nvec()[0],
+            crate::env::core::N_LEVELS_V2G,
+            "V2G family exposes the signed car ladder"
+        );
+    }
+}

@@ -1,0 +1,421 @@
+//! Fused fleet rollout + per-family PPO.
+//!
+//! [`Fleet::rollout`] is the cross-env analogue of
+//! [`VectorEnv::rollout`]: per step it asks the caller's policy for each
+//! family's action row, splits **every** family's lanes into shard tasks
+//! (shard → (env, lane-range) map from [`Fleet::plan_shards`]), and
+//! dispatches all of them in one worker-pool call — heterogeneous
+//! stations advance concurrently instead of one pool per env in series.
+//! Each shard observes its own lanes right after stepping them, writing
+//! straight into that family's [`RolloutBuffers`].
+//!
+//! [`FleetPpoTrainer`] puts a [`Learner`] (policy + value + Adam) on each
+//! family and trains all of them from a single fused rollout per
+//! iteration.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::baselines::ppo::{Learner, PpoParams};
+use crate::data::DataStore;
+use crate::env::core::{StepInfo, STEPS_PER_EPISODE};
+use crate::env::scalar::ScalarEnv;
+use crate::env::vector::{RolloutBuffers, ShardTask, StepOut};
+use crate::runtime::pool::WorkerPool;
+use crate::util::rng::Rng;
+
+use super::{Fleet, FleetSpec};
+
+impl Fleet {
+    /// Advance every family `n_steps` times in lockstep, writing each
+    /// family's observations/rewards/dones/profits into its own
+    /// [`RolloutBuffers`] (`bufs[e]`, laid out exactly as
+    /// [`VectorEnv::rollout`] expects:
+    /// obs `[(T+1) * B_e * obs_dim_e]`, the rest `[T * B_e]`).
+    ///
+    /// `policy(env, t, obs_t, actions)` reads family `env`'s
+    /// `[B_e * obs_dim_e]` observation row for step `t` and fills its
+    /// `[B_e * n_ports_e]` action row; policies run on the caller thread,
+    /// stepping+observing runs sharded across the fleet-wide pool.
+    ///
+    /// Bit-identical to rolling the member envs out independently, for
+    /// any thread count (lane RNG is counter-based; shard placement never
+    /// changes what a lane computes).
+    pub fn rollout<F>(&mut self, n_steps: usize, bufs: &mut [RolloutBuffers<'_>], mut policy: F)
+    where
+        F: FnMut(usize, usize, &[f32], &mut [usize]),
+    {
+        let n = self.n_envs();
+        assert_eq!(bufs.len(), n, "need one RolloutBuffers per fleet env");
+        let dims: Vec<(usize, usize, usize)> = (0..n)
+            .map(|e| {
+                let env = self.env(e);
+                (env.batch(), env.n_ports(), env.obs_dim())
+            })
+            .collect();
+        for (e, (&(b, _, d), buf)) in dims.iter().zip(bufs.iter()).enumerate() {
+            assert_eq!(buf.obs.len(), (n_steps + 1) * b * d, "env {e}: obs must be [(T+1)*B*obs_dim]");
+            assert_eq!(buf.rewards.len(), n_steps * b, "env {e}: rewards must be [T*B]");
+            assert_eq!(buf.dones.len(), n_steps * b, "env {e}: dones must be [T*B]");
+            assert_eq!(buf.profits.len(), n_steps * b, "env {e}: profits must be [T*B]");
+        }
+        let plan = self.plan_shards();
+        let total: usize = plan.iter().sum();
+        // `--threads` is a hard concurrency cap: the pool is sized to it,
+        // and when the fleet has more shard tasks than pool lanes the
+        // dispatcher strides tasks over the lanes instead of widening the
+        // pool. `threads == 1` (or a single task) runs fully inline — no
+        // worker threads at all.
+        let width = total.min(self.threads.max(1));
+        let pool = if width > 1 { Some(self.ensure_pool(width)) } else { None };
+
+        let mut actions: Vec<Vec<usize>> =
+            dims.iter().map(|&(b, p, _)| vec![0usize; b * p]).collect();
+        let mut infos: Vec<Vec<StepInfo>> =
+            dims.iter().map(|&(b, _, _)| vec![StepInfo::default(); b]).collect();
+
+        for ((env, buf), &(b, _, d)) in self.envs.iter().zip(bufs.iter_mut()).zip(&dims) {
+            env.observe_all(&mut buf.obs[..b * d]);
+        }
+        for t in 0..n_steps {
+            // Policies first (serial, caller thread), then one pooled
+            // dispatch covering every family's shard tasks.
+            let mut tasks = Vec::with_capacity(total);
+            for ((((env_idx, env), buf), act), info) in self
+                .envs
+                .iter_mut()
+                .enumerate()
+                .zip(bufs.iter_mut())
+                .zip(actions.iter_mut())
+                .zip(infos.iter_mut())
+            {
+                let (b, _, d) = dims[env_idx];
+                let (obs_t, obs_rest) = buf.obs[t * b * d..].split_at_mut(b * d);
+                policy(env_idx, t, obs_t, act);
+                let out = StepOut {
+                    obs: &mut obs_rest[..b * d],
+                    rewards: &mut buf.rewards[t * b..(t + 1) * b],
+                    dones: &mut buf.dones[t * b..(t + 1) * b],
+                    profits: &mut buf.profits[t * b..(t + 1) * b],
+                };
+                tasks.extend(env.shard_tasks(act, info, Some(out), plan[env_idx]));
+            }
+            run_fleet_tasks(pool.as_deref(), &mut tasks);
+        }
+    }
+}
+
+/// Dispatch one step's shard tasks (from all families) over at most
+/// `pool.max_shards()` concurrent lanes: pool lane `s` runs tasks
+/// `s, s + width, s + 2·width, ...` serially. This is what lets the fleet
+/// honor a `--threads` cap smaller than its task count — the per-env
+/// runtime never queues more shards than threads, so it has no such path.
+/// Without a pool (or with a single task) everything runs inline on the
+/// caller thread. Task-to-lane placement never changes what a task
+/// computes, so results are identical for any width.
+fn run_fleet_tasks(pool: Option<&WorkerPool>, tasks: &mut [ShardTask<'_>]) {
+    match pool {
+        Some(pool) if tasks.len() > 1 && pool.max_shards() > 1 => {
+            let width = pool.max_shards().min(tasks.len());
+            let wrapped: Vec<Mutex<&mut ShardTask<'_>>> =
+                tasks.iter_mut().map(Mutex::new).collect();
+            pool.run(width, |s| {
+                let mut k = s;
+                while k < wrapped.len() {
+                    wrapped[k].lock().unwrap().run();
+                    k += width;
+                }
+            });
+        }
+        _ => {
+            for task in tasks {
+                task.run();
+            }
+        }
+    }
+}
+
+/// Per-family rollout storage for one PPO iteration (env-written half).
+struct EnvBufs {
+    obs: Vec<f32>,
+    rew: Vec<f32>,
+    done: Vec<f32>,
+    profit: Vec<f32>,
+}
+
+impl EnvBufs {
+    fn new(b: usize, d: usize, t_len: usize) -> EnvBufs {
+        EnvBufs {
+            obs: vec![0.0; (t_len + 1) * b * d],
+            rew: vec![0.0; t_len * b],
+            done: vec![0.0; t_len * b],
+            profit: vec![0.0; t_len * b],
+        }
+    }
+
+    fn as_rollout_buffers(&mut self) -> RolloutBuffers<'_> {
+        RolloutBuffers {
+            obs: &mut self.obs,
+            rewards: &mut self.rew,
+            dones: &mut self.done,
+            profits: &mut self.profit,
+        }
+    }
+}
+
+/// Per-iteration training stats for one station family.
+pub struct FamilyStats {
+    pub label: String,
+    pub lanes: usize,
+    pub mean_reward: f32,
+    pub mean_profit: f32,
+    pub total_loss: f32,
+    pub entropy: f32,
+    pub completed_return_mean: f32,
+}
+
+/// PPO over a fleet: one [`Learner`] per station family (families have
+/// different obs/action dims, so weights cannot be shared), all families
+/// rolled out in one fused [`Fleet::rollout`] pass per iteration.
+pub struct FleetPpoTrainer {
+    pub hp: PpoParams,
+    pub fleet: Fleet,
+    pub learners: Vec<Learner>,
+    pub rng: Rng,
+    pub env_steps: usize,
+    /// Per-family, per-lane running episode returns (same accounting as
+    /// `PpoTrainer`).
+    running_return: Vec<Vec<f32>>,
+}
+
+impl FleetPpoTrainer {
+    /// `hp.num_envs` is ignored — the fleet's lane counts come from its
+    /// spec; everything else (lr, rollout length, epochs, ...) is shared
+    /// across families.
+    pub fn new(hp: PpoParams, fleet: Fleet, seed: u64) -> FleetPpoTrainer {
+        let mut rng = Rng::new(seed);
+        let learners: Vec<Learner> = (0..fleet.n_envs())
+            .map(|e| {
+                let env = fleet.env(e);
+                Learner::new(&mut rng, env.obs_dim(), hp.hidden, env.action_nvec())
+            })
+            .collect();
+        let running_return =
+            (0..fleet.n_envs()).map(|e| vec![0.0; fleet.env(e).batch()]).collect();
+        FleetPpoTrainer { hp, fleet, learners, rng, env_steps: 0, running_return }
+    }
+
+    /// Env steps consumed by one `iteration` (all families).
+    pub fn steps_per_iteration(&self) -> usize {
+        self.fleet.total_lanes() * self.hp.rollout_steps
+    }
+
+    /// One fused rollout + one PPO update per family.
+    pub fn iteration(&mut self) -> Vec<FamilyStats> {
+        let t_len = self.hp.rollout_steps;
+        let n = self.fleet.n_envs();
+        let dims: Vec<(usize, usize, usize)> = (0..n)
+            .map(|e| {
+                let env = self.fleet.env(e);
+                (env.batch(), env.n_ports(), env.obs_dim())
+            })
+            .collect();
+        let mut eb: Vec<EnvBufs> =
+            dims.iter().map(|&(b, _, d)| EnvBufs::new(b, d, t_len)).collect();
+        struct PolBufs {
+            act: Vec<usize>,
+            logp: Vec<f32>,
+            val: Vec<f32>,
+        }
+        let mut pb: Vec<PolBufs> = dims
+            .iter()
+            .map(|&(b, p, _)| PolBufs {
+                act: vec![0usize; t_len * b * p],
+                logp: vec![0.0; t_len * b],
+                val: vec![0.0; t_len * b],
+            })
+            .collect();
+
+        {
+            let FleetPpoTrainer { fleet, learners, rng, .. } = self;
+            let mut bufs: Vec<RolloutBuffers<'_>> =
+                eb.iter_mut().map(EnvBufs::as_rollout_buffers).collect();
+            fleet.rollout(t_len, &mut bufs, |e, t, obs_t, actions| {
+                let (b, p, _) = dims[e];
+                let pbe = &mut pb[e];
+                learners[e].sample_row(
+                    rng,
+                    obs_t,
+                    actions,
+                    &mut pbe.logp[t * b..(t + 1) * b],
+                    &mut pbe.val[t * b..(t + 1) * b],
+                );
+                pbe.act[t * b * p..(t + 1) * b * p].copy_from_slice(actions);
+            });
+        }
+        self.env_steps += self.fleet.total_lanes() * t_len;
+
+        let mut out = Vec::with_capacity(n);
+        for e in 0..n {
+            let (b, _, _) = dims[e];
+            let bsz = b * t_len;
+            let mut profit_sum = 0f64;
+            let mut comp: Vec<f32> = Vec::new();
+            for t in 0..t_len {
+                for j in 0..b {
+                    let idx = t * b + j;
+                    profit_sum += eb[e].profit[idx] as f64;
+                    self.running_return[e][j] += eb[e].rew[idx];
+                    if eb[e].done[idx] > 0.5 {
+                        comp.push(self.running_return[e][j]);
+                        self.running_return[e][j] = 0.0;
+                    }
+                }
+            }
+            let (total_loss, entropy) = self.learners[e].update(
+                &self.hp,
+                &mut self.rng,
+                b,
+                t_len,
+                &eb[e].obs,
+                &pb[e].act,
+                &pb[e].logp,
+                &pb[e].val,
+                &eb[e].rew,
+                &eb[e].done,
+            );
+            out.push(FamilyStats {
+                label: self.fleet.label(e).to_string(),
+                lanes: b,
+                mean_reward: eb[e].rew.iter().sum::<f32>() / bsz as f32,
+                mean_profit: (profit_sum / bsz as f64) as f32,
+                total_loss,
+                entropy,
+                completed_return_mean: if comp.is_empty() {
+                    0.0
+                } else {
+                    comp.iter().sum::<f32>() / comp.len() as f32
+                },
+            });
+        }
+        out
+    }
+
+    /// Greedy single-episode eval for family `e`: fresh B=1 scalar env on
+    /// that family's config and lane-0 scenario tables (Arc-shared).
+    pub fn eval_episode(&self, e: usize, seed: u64) -> (f32, f32) {
+        let fam = self.fleet.env(e);
+        let mut env = ScalarEnv::new(fam.cfg.clone(), fam.tables_arc(0), seed);
+        let mut obs = vec![0f32; self.learners[e].obs_dim];
+        let mut action = vec![0usize; self.learners[e].n_ports()];
+        let mut tot_r = 0f32;
+        let mut tot_p = 0f32;
+        for _ in 0..STEPS_PER_EPISODE {
+            env.observe(&mut obs);
+            self.learners[e].greedy_action(&obs, &mut action);
+            let info = env.step(&action);
+            tot_r += info.reward;
+            tot_p += info.profit;
+        }
+        (tot_r, tot_p)
+    }
+}
+
+/// Measure fused fleet-rollout throughput with random actions: one warm
+/// pass then one timed pass over pre-drawn action chunks (same protocol
+/// as [`crate::env::vector::measure_throughput`], so fleet rows in
+/// BENCH_fleet.json are comparable to the single-env sweep). Returns
+/// `(env-steps/sec, seconds per 100k env steps, total lanes, families)`.
+pub fn measure_fleet_throughput(
+    spec: &FleetSpec,
+    store: Option<&DataStore>,
+    threads: usize,
+    budget: usize,
+) -> Result<(f64, f64, usize, usize)> {
+    let mut fleet = Fleet::from_spec(spec, store)?;
+    fleet.set_threads(threads);
+    let n = fleet.n_envs();
+    let total_lanes = fleet.total_lanes();
+    let t_chunk = 64usize;
+    let n_chunks = (budget / (total_lanes * t_chunk).max(1)).clamp(1, 300);
+    let dims: Vec<(usize, usize, usize)> = (0..n)
+        .map(|e| {
+            let env = fleet.env(e);
+            (env.batch(), env.n_ports(), env.obs_dim())
+        })
+        .collect();
+    let mut arng = Rng::new(23);
+    let actions: Vec<Vec<usize>> = (0..n)
+        .map(|e| {
+            let (b, p, _) = dims[e];
+            let nvec = fleet.env(e).action_nvec();
+            (0..t_chunk * b * p)
+                .map(|k| arng.below(nvec[k % p] as u32) as usize)
+                .collect()
+        })
+        .collect();
+    let mut eb: Vec<EnvBufs> =
+        dims.iter().map(|&(b, _, d)| EnvBufs::new(b, d, t_chunk)).collect();
+    let mut pass = |fleet: &mut Fleet, eb: &mut [EnvBufs]| {
+        for _ in 0..n_chunks {
+            let mut bufs: Vec<RolloutBuffers<'_>> =
+                eb.iter_mut().map(EnvBufs::as_rollout_buffers).collect();
+            fleet.rollout(t_chunk, &mut bufs, |e, t, _obs, act| {
+                let (b, p, _) = dims[e];
+                act.copy_from_slice(&actions[e][t * b * p..(t + 1) * b * p]);
+            });
+        }
+    };
+    pass(&mut fleet, &mut eb); // warm (also builds the pool)
+    let t0 = Instant::now();
+    pass(&mut fleet, &mut eb);
+    let el = t0.elapsed().as_secs_f64();
+    let steps = (n_chunks * t_chunk * total_lanes) as f64;
+    Ok((steps / el, el * 100_000.0 / steps, total_lanes, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fused fleet PPO iteration over the demo spec runs end-to-end,
+    /// returns finite per-family stats, and accounts env steps.
+    #[test]
+    fn fleet_ppo_iteration_trains_all_families() {
+        let fleet = Fleet::from_spec(&FleetSpec::demo(9, 1), None).unwrap();
+        let lanes = fleet.total_lanes();
+        let hp = PpoParams {
+            rollout_steps: 24,
+            n_minibatches: 2,
+            update_epochs: 2,
+            hidden: 32,
+            ..Default::default()
+        };
+        let mut tr = FleetPpoTrainer::new(hp, fleet, 5);
+        let stats = tr.iteration();
+        assert_eq!(stats.len(), 3);
+        for s in &stats {
+            assert!(s.mean_reward.is_finite(), "{}: reward", s.label);
+            assert!(s.total_loss.is_finite(), "{}: loss", s.label);
+            assert!(s.entropy > 0.0, "{}: entropy", s.label);
+        }
+        assert_eq!(tr.env_steps, lanes * 24);
+        // Greedy eval runs on every family, including V2G and
+        // battery-less configs.
+        for e in 0..tr.fleet.n_envs() {
+            let (r, p) = tr.eval_episode(e, 123);
+            assert!(r.is_finite() && p.is_finite());
+        }
+    }
+
+    #[test]
+    fn fleet_throughput_probe_runs() {
+        let (sps, s100k, lanes, fams) =
+            measure_fleet_throughput(&FleetSpec::demo(2, 1), None, 2, 2_000).unwrap();
+        assert!(sps > 0.0 && s100k > 0.0);
+        assert_eq!(lanes, 20);
+        assert_eq!(fams, 3);
+    }
+}

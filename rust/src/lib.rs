@@ -11,6 +11,9 @@
 //! * [`data`] — exogenous tables (prices, cars, arrivals, profiles),
 //! * [`env`] — pure-Rust simulators over one shared transition core: the
 //!   SoA batched `VectorEnv` fast path + the per-step `ScalarEnv` comparator,
+//! * [`fleet`] — scenario catalog + heterogeneous multi-station scheduling:
+//!   N different `StationConfig`s (incl. V2G) on one worker pool, with a
+//!   fused cross-env rollout and per-family PPO,
 //! * [`baselines`] — pure-Rust PPO + heuristic policies (CPU comparators),
 //! * [`config`] — experiment configuration,
 //! * [`util`] — in-tree JSON / RNG / bench-stat / property-test substrates.
@@ -20,5 +23,6 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod env;
+pub mod fleet;
 pub mod runtime;
 pub mod util;

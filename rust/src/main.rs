@@ -92,6 +92,9 @@ fn cmd_train(cfg: &RunConfig) -> Result<()> {
     if cfg.backend == "native" {
         return cmd_train_native(cfg);
     }
+    if cfg.fleet_spec.is_some() {
+        bail!("--fleet requires the native backend (add --backend native)");
+    }
     let manifest = Manifest::load(&artifacts_dir())?;
     let variant = manifest.variant(&cfg.variant)?;
     let store = DataStore::load(&artifacts_dir().join("data"))?;
@@ -143,6 +146,9 @@ fn cmd_train_native(cfg: &RunConfig) -> Result<()> {
     use chargax::baselines::ppo::PpoParams;
     use chargax::env::tree::StationConfig;
 
+    if let Some(spec) = &cfg.fleet_spec {
+        return cmd_train_fleet(cfg, spec);
+    }
     let store = DataStore::load(&artifacts_dir().join("data")).ok();
     if store.is_none() {
         eprintln!("note: artifacts/data not found; using synthetic scenario tables");
@@ -195,6 +201,88 @@ fn cmd_train_native(cfg: &RunConfig) -> Result<()> {
         r / n,
         p / n
     );
+    Ok(())
+}
+
+/// `chargax train --backend native --fleet <spec.json | demo>`: expand the
+/// scenario grid into station families, drive every family's `VectorEnv`
+/// on one worker pool via the fused fleet rollout, and train one PPO
+/// policy per family in a single pass per iteration.
+fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str) -> Result<()> {
+    use chargax::baselines::ppo::PpoParams;
+    use chargax::fleet::{Fleet, FleetPpoTrainer, FleetSpec};
+
+    let store = DataStore::load(&artifacts_dir().join("data")).ok();
+    if store.is_none() {
+        eprintln!("note: artifacts/data not found; using synthetic scenario tables");
+    }
+    let spec = if spec_path == "demo" {
+        FleetSpec::demo(cfg.seed as u64, 1)
+    } else {
+        FleetSpec::from_json_file(spec_path)?
+    };
+    let mut fleet = Fleet::from_spec(&spec, store.as_ref())?;
+    fleet.set_threads(cfg.num_threads);
+    eprintln!(
+        "training fleet of {} lanes across {} station families (threads={}):",
+        fleet.total_lanes(),
+        fleet.n_envs(),
+        if cfg.num_threads == 0 { "auto".to_string() } else { cfg.num_threads.to_string() },
+    );
+    for e in 0..fleet.n_envs() {
+        let env = fleet.env(e);
+        eprintln!(
+            "  [{e}] {:<24} lanes={:<4} chargers={:<3} obs_dim={:<4} v2g={}",
+            fleet.label(e),
+            env.batch(),
+            env.n_chargers(),
+            env.obs_dim(),
+            env.cfg.v2g,
+        );
+    }
+    let hp = PpoParams { threads: cfg.num_threads, ..Default::default() };
+    let mut tr = FleetPpoTrainer::new(hp, fleet, cfg.seed as u64);
+    let batch = tr.steps_per_iteration();
+    let iters = cfg.total_env_steps.div_ceil(batch).max(1);
+    let t0 = std::time::Instant::now();
+    for i in 0..iters {
+        let stats = tr.iteration();
+        if i % 5 == 0 || i + 1 == iters {
+            for s in &stats {
+                eprintln!(
+                    "[fleet iter {}/{} steps {}] {:<24} reward={:.3} profit={:.3} loss={:.3} ent={:.3}",
+                    i + 1,
+                    iters,
+                    tr.env_steps,
+                    s.label,
+                    s.mean_reward,
+                    s.mean_profit,
+                    s.total_loss,
+                    s.entropy,
+                );
+            }
+        }
+    }
+    let el = t0.elapsed().as_secs_f64();
+    eprintln!(
+        "trained {} env steps in {el:.2}s ({:.0} steps/s)",
+        tr.env_steps,
+        tr.env_steps as f64 / el
+    );
+    for e in 0..tr.fleet.n_envs() {
+        let evals: Vec<(f32, f32)> =
+            (0..cfg.eval_seeds as u64).map(|s| tr.eval_episode(e, 1000 + s)).collect();
+        let n = evals.len().max(1) as f32;
+        let (r, p): (f32, f32) =
+            evals.iter().fold((0.0, 0.0), |(ar, ap), (r, p)| (ar + r, ap + p));
+        println!(
+            "eval (greedy, {} seeds) {:<24} ep_reward={:.3} ep_profit={:.3}",
+            evals.len(),
+            tr.fleet.label(e),
+            r / n,
+            p / n
+        );
+    }
     Ok(())
 }
 
@@ -282,20 +370,25 @@ USAGE: chargax <command> [--config file.json] [--key value ...]
 
 COMMANDS:
   train            train PPO (--backend pjrt: AOT fast path;
-                   --backend native: pure-Rust VectorEnv, no artifacts)
+                   --backend native: pure-Rust VectorEnv, no artifacts;
+                   --backend native --fleet <spec.json | demo>: scenario
+                   fleet, one policy per station family)
   eval             evaluate max/random baseline policies
   bench <id>       regenerate a paper table/figure:
-                   table2 | fig4a | fig4bc | fig5 | fig6to8 | fig9to11 | perf
+                   table2 | fig4a | fig4bc | fig5 | fig6to8 | fig9to11 |
+                   perf | fleet
   list-profiles    bundled data stack (paper Table 1)
   list-artifacts   AOT variants and programs
   cross-check      scalar-vs-JAX transition equivalence
   help             this text
 
 KEYS: variant backend num_envs threads scenario region country year traffic
-      p_sell beta seed n_seeds steps eval_seeds paper_scale out
+      p_sell beta seed n_seeds steps eval_seeds paper_scale out fleet
       alpha_<penalty>
 
   --threads N caps the persistent worker pool driving native rollouts
-  (0 = all cores); see README §Rollout runtime."
+  (0 = all cores); see README §Rollout runtime.
+  --fleet takes a scenario-grid JSON (README §Scenario fleets & V2G) or
+  the literal `demo` for the built-in three-family fleet."
     );
 }

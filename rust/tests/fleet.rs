@@ -1,0 +1,236 @@
+//! Fleet scheduler determinism + catalog/env integration.
+//!
+//! The headline property: a fused `Fleet::rollout` over heterogeneous
+//! station families (different charger mixes, V2G, battery-less — hence
+//! different obs/action dims) scheduled on ONE worker pool is
+//! bit-identical to rolling the same `VectorEnv`s out independently, for
+//! thread counts {1, 4, max}. Lane RNG is counter-based and shard
+//! placement never changes what a lane computes, so the cross-env
+//! scheduler must be invisible in the results.
+
+use std::sync::Arc;
+
+use chargax::env::scalar::ScenarioTables;
+use chargax::env::tree::StationConfig;
+use chargax::env::vector::{RolloutBuffers, VectorEnv};
+use chargax::fleet::{Fleet, FleetSpec};
+use chargax::util::rng::Rng;
+
+/// Three structurally different station families: the paper's mixed
+/// AC/DC default, a DC-only V2G plaza, and a battery-less AC lot. Batch
+/// sizes straddle the sharding threshold so the big family actually
+/// shards while the small ones stay single-shard.
+fn family_specs() -> Vec<(StationConfig, usize, u64)> {
+    vec![
+        (StationConfig::default(), 64, 1_000),
+        (
+            StationConfig { n_dc: 8, n_ac: 0, v2g: true, ..StationConfig::default() },
+            8,
+            2_000,
+        ),
+        (
+            StationConfig {
+                n_dc: 0,
+                n_ac: 8,
+                battery_capacity_kwh: 0.0,
+                battery_p_max_kw: 0.0,
+                ..StationConfig::default()
+            },
+            5,
+            3_000,
+        ),
+    ]
+}
+
+/// Heterogeneous per-lane scenarios inside each family, same recipe for
+/// fleet and reference builds.
+fn build_env(cfg: &StationConfig, b: usize, seed_base: u64) -> VectorEnv {
+    let tables = vec![
+        Arc::new(ScenarioTables::synthetic(0.8)),
+        Arc::new(ScenarioTables::synthetic(1.8)),
+    ];
+    let scen: Vec<usize> = (0..b).map(|j| j % 2).collect();
+    let seeds: Vec<u64> = (0..b as u64).map(|j| seed_base + j * 31 + 7).collect();
+    VectorEnv::with_seeds(cfg.clone(), tables, scen, &seeds)
+}
+
+struct Bufs {
+    obs: Vec<f32>,
+    rew: Vec<f32>,
+    done: Vec<f32>,
+    profit: Vec<f32>,
+}
+
+fn alloc(env: &VectorEnv, t_len: usize) -> Bufs {
+    let (b, d) = (env.batch(), env.obs_dim());
+    Bufs {
+        obs: vec![0.0; (t_len + 1) * b * d],
+        rew: vec![0.0; t_len * b],
+        done: vec![0.0; t_len * b],
+        profit: vec![0.0; t_len * b],
+    }
+}
+
+#[test]
+fn fleet_rollout_matches_independent_envs_at_every_thread_count() {
+    let t_len = 60;
+    let specs = family_specs();
+
+    // Scripted actions per (env, step), drawn once and replayed verbatim
+    // by every run below.
+    let protos: Vec<VectorEnv> =
+        specs.iter().map(|(c, b, s)| build_env(c, *b, *s)).collect();
+    let mut arng = Rng::new(55);
+    let scripted: Vec<Vec<Vec<usize>>> = protos
+        .iter()
+        .map(|env| {
+            let nvec = env.action_nvec();
+            (0..t_len)
+                .map(|_| {
+                    (0..env.batch())
+                        .flat_map(|_| {
+                            nvec.iter()
+                                .map(|&n| arng.below(n as u32) as usize)
+                                .collect::<Vec<_>>()
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+
+    // Reference: each env rolled out on its own (its private pool).
+    let mut reference: Vec<Bufs> = Vec::new();
+    for (i, (cfg, b, s)) in specs.iter().enumerate() {
+        let mut env = build_env(cfg, *b, *s);
+        let mut bufs = alloc(&env, t_len);
+        let mut rb = RolloutBuffers {
+            obs: &mut bufs.obs,
+            rewards: &mut bufs.rew,
+            dones: &mut bufs.done,
+            profits: &mut bufs.profit,
+        };
+        env.rollout(t_len, &mut rb, |t, _obs, a| a.copy_from_slice(&scripted[i][t]));
+        reference.push(bufs);
+    }
+
+    let max_threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    for threads in [1usize, 4, max_threads] {
+        let envs: Vec<VectorEnv> =
+            specs.iter().map(|(c, b, s)| build_env(c, *b, *s)).collect();
+        let mut fleet = Fleet::from_envs(
+            envs,
+            vec!["mixed".into(), "dc-v2g".into(), "ac-lot".into()],
+        )
+        .unwrap();
+        fleet.set_threads(threads);
+        let mut bufs: Vec<Bufs> =
+            (0..fleet.n_envs()).map(|e| alloc(fleet.env(e), t_len)).collect();
+        {
+            let mut rbs: Vec<RolloutBuffers<'_>> = bufs
+                .iter_mut()
+                .map(|b| RolloutBuffers {
+                    obs: &mut b.obs,
+                    rewards: &mut b.rew,
+                    dones: &mut b.done,
+                    profits: &mut b.profit,
+                })
+                .collect();
+            fleet.rollout(t_len, &mut rbs, |e, t, _obs, a| {
+                a.copy_from_slice(&scripted[e][t]);
+            });
+        }
+        for (e, (got, want)) in bufs.iter().zip(&reference).enumerate() {
+            assert!(
+                got.obs == want.obs,
+                "threads={threads} env {e}: observations diverged from independent rollout"
+            );
+            assert_eq!(got.rew, want.rew, "threads={threads} env {e}: rewards");
+            assert_eq!(got.done, want.done, "threads={threads} env {e}: dones");
+            assert_eq!(got.profit, want.profit, "threads={threads} env {e}: profits");
+        }
+    }
+}
+
+/// The fused fleet rollout crosses episode boundaries correctly for every
+/// family (dones fire at step 288 for all lanes of every config).
+#[test]
+fn fleet_rollout_handles_episode_boundaries() {
+    use chargax::env::scalar::STEPS_PER_EPISODE;
+
+    let specs = family_specs();
+    let envs: Vec<VectorEnv> = specs
+        .iter()
+        .map(|(c, _b, s)| build_env(c, 3, *s))
+        .collect();
+    let mut fleet =
+        Fleet::from_envs(envs, vec!["a".into(), "b".into(), "c".into()]).unwrap();
+    fleet.set_threads(2);
+    let t_len = STEPS_PER_EPISODE + 5;
+    let mut bufs: Vec<Bufs> =
+        (0..fleet.n_envs()).map(|e| alloc(fleet.env(e), t_len)).collect();
+    let nvecs: Vec<Vec<usize>> =
+        (0..fleet.n_envs()).map(|e| fleet.env(e).action_nvec()).collect();
+    {
+        let mut rbs: Vec<RolloutBuffers<'_>> = bufs
+            .iter_mut()
+            .map(|b| RolloutBuffers {
+                obs: &mut b.obs,
+                rewards: &mut b.rew,
+                dones: &mut b.done,
+                profits: &mut b.profit,
+            })
+            .collect();
+        let mut rng = Rng::new(9);
+        fleet.rollout(t_len, &mut rbs, |e, _t, _obs, a| {
+            for (k, x) in a.iter_mut().enumerate() {
+                *x = rng.below(nvecs[e][k % nvecs[e].len()] as u32) as usize;
+            }
+        });
+    }
+    for (e, b) in bufs.iter().enumerate() {
+        let lanes = 3;
+        for t in 0..t_len {
+            for j in 0..lanes {
+                let done = b.done[t * lanes + j];
+                let expect = if t + 1 == STEPS_PER_EPISODE { 1.0 } else { 0.0 };
+                assert_eq!(done, expect, "env {e} lane {j} step {t}");
+                assert!(b.rew[t * lanes + j].is_finite(), "env {e} lane {j} step {t}");
+            }
+        }
+    }
+}
+
+/// End-to-end: spec -> catalog expansion -> fleet -> fused rollout, with
+/// shared tables actually shared (`Arc` dedup) across lanes.
+#[test]
+fn spec_built_fleet_rolls_out_and_shares_tables() {
+    let mut fleet = Fleet::from_spec(&FleetSpec::demo(4, 1), None).unwrap();
+    fleet.set_threads(3);
+    assert_eq!(fleet.n_envs(), 3);
+    // Lanes of the first family cycle over 4 scenario cells: lanes 0 and
+    // 4 share one Arc'd table.
+    let env0 = fleet.env(0);
+    assert!(Arc::ptr_eq(&env0.tables_arc(0), &env0.tables_arc(4)));
+    let t_len = 12;
+    let mut bufs: Vec<Bufs> =
+        (0..fleet.n_envs()).map(|e| alloc(fleet.env(e), t_len)).collect();
+    let nvecs: Vec<Vec<usize>> =
+        (0..fleet.n_envs()).map(|e| fleet.env(e).action_nvec()).collect();
+    let mut rbs: Vec<RolloutBuffers<'_>> = bufs
+        .iter_mut()
+        .map(|b| RolloutBuffers {
+            obs: &mut b.obs,
+            rewards: &mut b.rew,
+            dones: &mut b.done,
+            profits: &mut b.profit,
+        })
+        .collect();
+    let mut rng = Rng::new(2);
+    fleet.rollout(t_len, &mut rbs, |e, _t, _obs, a| {
+        for (k, x) in a.iter_mut().enumerate() {
+            *x = rng.below(nvecs[e][k % nvecs[e].len()] as u32) as usize;
+        }
+    });
+}

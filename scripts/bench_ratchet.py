@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Perf ratchet: compare a fresh BENCH_table2.json against the committed
+BENCH_baseline.json and warn on steps/sec regressions.
+
+The gated row is the native-vector pool path at B=256 (present in both the
+full sweep and the CI `--smoke` sweep). CI runner variance is still being
+characterized, so a regression past the threshold emits a GitHub
+``::warning`` annotation and exits 0 — flip ``--strict`` once the variance
+envelope is known and the ratchet should fail the job instead.
+
+Usage:
+  scripts/bench_ratchet.py [--current BENCH_table2.json]
+                           [--baseline BENCH_baseline.json]
+                           [--batch 256] [--threshold 0.20]
+                           [--strict] [--update]
+
+``--update`` rewrites the baseline from the current file (run it on a
+trusted machine / quiet CI runner and commit the result).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> list[dict]:
+    with open(path) as f:
+        data = json.load(f)
+    rows = data.get("rows", [])
+    if not isinstance(rows, list):
+        raise SystemExit(f"{path}: 'rows' is not a list")
+    return rows
+
+
+def pick_row(rows: list[dict], batch: int) -> dict | None:
+    """The native-vector (pool step_all) row at the gated batch size; falls
+    back to the largest native-vector batch present."""
+    native = [
+        r
+        for r in rows
+        if str(r.get("variant", "")).startswith("native-vector") and "batch" in r
+    ]
+    if not native:
+        return None
+    exact = [r for r in native if int(r["batch"]) == batch]
+    if exact:
+        return exact[0]
+    return max(native, key=lambda r: int(r["batch"]))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="BENCH_table2.json")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--threshold", type=float, default=0.20)
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on regression instead of warning")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from --current and exit")
+    args = ap.parse_args()
+
+    try:
+        cur_rows = load_rows(args.current)
+    except FileNotFoundError:
+        print(f"::warning::bench ratchet: {args.current} not found "
+              "(did the bench job run?)")
+        return 0
+
+    if args.update:
+        cur = pick_row(cur_rows, args.batch)
+        if cur is None:
+            raise SystemExit(f"{args.current} has no native-vector rows to baseline")
+        payload = {
+            "note": (
+                "Perf-ratchet baseline: native-vector steps/sec rows from a "
+                "trusted run of `cargo bench --bench table2_throughput -- "
+                "--smoke`. Refresh with scripts/bench_ratchet.py --update."
+            ),
+            "rows": [r for r in cur_rows
+                     if str(r.get("variant", "")).startswith("native-vector")],
+        }
+        with open(args.baseline, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"baseline updated from {args.current} -> {args.baseline}")
+        return 0
+
+    try:
+        base_rows = load_rows(args.baseline)
+    except FileNotFoundError:
+        print(f"bench ratchet: no baseline at {args.baseline}; nothing to compare")
+        return 0
+
+    base = pick_row(base_rows, args.batch)
+    cur = pick_row(cur_rows, args.batch)
+    if base is None:
+        print("bench ratchet: baseline has no native-vector rows yet — "
+              "populate it with scripts/bench_ratchet.py --update on a "
+              "trusted run and commit BENCH_baseline.json")
+        return 0
+    if cur is None:
+        print(f"::warning::bench ratchet: {args.current} has no native-vector rows")
+        return 0
+    if int(base["batch"]) != int(cur["batch"]):
+        print(f"bench ratchet: batch mismatch (baseline B={base['batch']}, "
+              f"current B={cur['batch']}); skipping comparison")
+        return 0
+
+    b = float(base["steps_per_sec"])
+    c = float(cur["steps_per_sec"])
+    delta = (c - b) / b if b > 0 else 0.0
+    label = f"native-vector B={int(cur['batch'])}"
+    print(f"bench ratchet: {label}: baseline {b:,.0f} steps/s, "
+          f"current {c:,.0f} steps/s ({delta:+.1%})")
+    if delta < -args.threshold:
+        msg = (f"bench ratchet: {label} regressed {-delta:.1%} "
+               f"(threshold {args.threshold:.0%}): "
+               f"{b:,.0f} -> {c:,.0f} steps/s")
+        print(f"::warning::{msg}")
+        return 1 if args.strict else 0
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
