@@ -7,14 +7,18 @@
 //! `VectorEnv` batch sweep B ∈ {1, 16, 256, 1024, 4096} on three
 //! runtimes — the persistent worker pool (`native-vector`, the default),
 //! the per-call scoped-thread fallback (`native-scoped`), and the fused
-//! rollout entry point (`native-rollout`). The PJRT rows run only when
-//! AOT artifacts and a real PJRT runtime are present. Writes the
+//! rollout entry point (`native-rollout`) — and the MLP-policy pair
+//! `policy-serial` / `policy-fused` at B ∈ {256, 1024, 4096} (caller
+//! -thread `sample_row` vs shard-side `rollout_fused`; same net, so the
+//! pair records the shard-parallel policy win). The PJRT rows run only
+//! when AOT artifacts and a real PJRT runtime are present. Writes the
 //! machine-readable perf trajectory to `BENCH_table2.json` at the repo
-//! root so the numbers are tracked across PRs.
+//! root so the numbers are tracked across PRs; the fleet sweep (random +
+//! serial-net + fused-net policies) lands in `BENCH_fleet.json`.
 //!
 //! `cargo bench --bench table2_throughput -- --smoke` runs a reduced
-//! sweep (B ∈ {1, 64}, small step budget) — the CI regression-visibility
-//! job.
+//! sweep (B ∈ {1, 64, 256}, policy rows at B=256 only, small step
+//! budget) — the CI regression-visibility job.
 
 use std::sync::Arc;
 
@@ -25,7 +29,7 @@ use chargax::data::{DataStore, Scenario};
 use chargax::env::scalar::{ScalarEnv, ScenarioTables};
 use chargax::env::tree::StationConfig;
 use chargax::env::vector::{self, StepPath, NATIVE_SWEEP_B};
-use chargax::fleet::{measure_fleet_throughput, FleetSpec};
+use chargax::fleet::{measure_fleet_throughput, FleetBenchPolicy, FleetSpec};
 use chargax::runtime::engine::{artifacts_dir, Engine};
 use chargax::runtime::manifest::Manifest;
 use chargax::util::json::{self, Json};
@@ -142,7 +146,7 @@ fn main() {
                         e.2 = steps_per_sec;
                     }
                 }
-                StepPath::Rollout => {}
+                _ => {}
             }
             rows.push(BenchRow {
                 name: format!("{} (B={b})", path.label()),
@@ -162,6 +166,46 @@ fn main() {
         println!("\nnative-vector B=1024 vs scalar-gym B=1: {x:.1}x steps/sec");
     }
 
+    // -- Policy rows: real MLP forwards, serial vs fused ---------------------
+    // Same net and buffers on both paths; the pair isolates where the
+    // policy forward runs (caller thread vs inside the shard tasks). The
+    // B=256 policy-fused row stays in the smoke sweep — it is the second
+    // row scripts/bench_ratchet.py gates on.
+    let policy_b: &[usize] = if smoke { &[256] } else { &[256, 1024, 4096] };
+    let mut serial_vs_fused: Vec<(usize, f64, f64)> = Vec::new();
+    for path in [StepPath::PolicySerial, StepPath::PolicyFused] {
+        println!("\n{} sweep (MLP policy):", path.label());
+        for &b in policy_b {
+            let (steps_per_sec, s_per_100k) =
+                vector::measure_throughput(Arc::clone(&tables), b, 0, path, budget);
+            println!("  B={b:<5} {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k");
+            match path {
+                StepPath::PolicySerial => serial_vs_fused.push((b, steps_per_sec, 0.0)),
+                StepPath::PolicyFused => {
+                    if let Some(e) = serial_vs_fused.iter_mut().find(|e| e.0 == b) {
+                        e.2 = steps_per_sec;
+                    }
+                }
+                _ => {}
+            }
+            rows.push(BenchRow {
+                name: format!("{} (B={b})", path.label()),
+                batch: b,
+                steps_per_sec,
+                s_per_100k,
+            });
+        }
+    }
+    println!("\nserial-policy vs fused-policy rollout (steps/s):");
+    for (b, serial, fused) in &serial_vs_fused {
+        if *fused > 0.0 && *serial > 0.0 {
+            println!(
+                "  B={b:<5} serial {serial:>12.0}  fused {fused:>12.0}  ({:.2}x)",
+                fused / serial
+            );
+        }
+    }
+
     // -- Fleet sweep: heterogeneous station families on one pool ------------
     // The demo grid's three structurally different families (mixed AC/DC,
     // DC-fast V2G, battery-less AC) rolled out fused on a single worker
@@ -169,22 +213,35 @@ fn main() {
     // the multi-env path from its first PR.
     let fleet_scales: &[usize] = if smoke { &[1, 4] } else { &[1, 4, 16] };
     let mut fleet_rows: Vec<Json> = Vec::new();
-    println!("\nfleet-rollout sweep (demo grid: 3 station families incl. V2G):");
-    for &scale in fleet_scales {
-        match measure_fleet_throughput(&FleetSpec::demo(7, scale), store.as_ref(), 0, budget) {
-            Ok((steps_per_sec, s_per_100k, lanes, families)) => {
-                println!(
-                    "  L={lanes:<5} ({families} families) {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k"
-                );
-                fleet_rows.push(json::obj(vec![
-                    ("variant", Json::Str(format!("fleet-rollout (L={lanes})"))),
-                    ("batch", Json::Num(lanes as f64)),
-                    ("families", Json::Num(families as f64)),
-                    ("steps_per_sec", Json::Num(steps_per_sec)),
-                    ("s_per_100k", Json::Num(s_per_100k)),
-                ]));
+    for policy in
+        [FleetBenchPolicy::Random, FleetBenchPolicy::SerialNet, FleetBenchPolicy::FusedNet]
+    {
+        println!(
+            "\n{} sweep (demo grid: 3 station families incl. V2G):",
+            policy.label()
+        );
+        for &scale in fleet_scales {
+            match measure_fleet_throughput(
+                &FleetSpec::demo(7, scale),
+                store.as_ref(),
+                0,
+                budget,
+                policy,
+            ) {
+                Ok((steps_per_sec, s_per_100k, lanes, families)) => {
+                    println!(
+                        "  L={lanes:<5} ({families} families) {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k"
+                    );
+                    fleet_rows.push(json::obj(vec![
+                        ("variant", Json::Str(format!("{} (L={lanes})", policy.label()))),
+                        ("batch", Json::Num(lanes as f64)),
+                        ("families", Json::Num(families as f64)),
+                        ("steps_per_sec", Json::Num(steps_per_sec)),
+                        ("s_per_100k", Json::Num(s_per_100k)),
+                    ]));
+                }
+                Err(e) => println!("  {} scale {scale} skipped: {e:#}", policy.label()),
             }
-            Err(e) => println!("  scale {scale} skipped: {e:#}"),
         }
     }
     let fleet_payload = json::obj(vec![

@@ -43,6 +43,19 @@ pub struct Cache {
     pub value: Vec<f32>,  // [B]
 }
 
+/// Reusable single-row forward scratch: hidden activations + logits for
+/// exactly one observation row. Pool shards each own one and reuse it for
+/// every (lane, step) they forward, so the fused rollout's policy path
+/// does no per-step allocation (unlike [`Mlp::forward`], which builds a
+/// fresh [`Cache`] per call for backprop).
+#[derive(Debug, Clone)]
+pub struct MlpScratch {
+    pub h1: Vec<f32>,
+    pub h2: Vec<f32>,
+    pub logits: Vec<f32>,
+    pub value: f32,
+}
+
 impl Mlp {
     pub fn new(rng: &mut Rng, obs_dim: usize, hidden: usize, n_logits: usize) -> Mlp {
         // He-ish scaled normal init (orthogonal init is overkill here; the
@@ -99,6 +112,34 @@ impl Mlp {
             value[i] = v;
         }
         Cache { batch: b, obs: obs.to_vec(), h1, h2, logits, value }
+    }
+
+    /// Scratch sized for this network's single-row forward.
+    pub fn make_scratch(&self) -> MlpScratch {
+        MlpScratch {
+            h1: vec![0.0; self.hidden],
+            h2: vec![0.0; self.hidden],
+            logits: vec![0.0; self.n_logits],
+            value: 0.0,
+        }
+    }
+
+    /// Single-row forward into caller-owned scratch: `&self` (weights are
+    /// read-only, so many shards may call it concurrently) and zero
+    /// allocation. Bit-identical to the corresponding row of the batched
+    /// [`Mlp::forward`] — same accumulation order per row.
+    pub fn forward_row(&self, obs: &[f32], s: &mut MlpScratch) {
+        debug_assert_eq!(obs.len(), self.obs_dim);
+        matmul_bias(obs, &self.w1, &self.b1, 1, self.obs_dim, self.hidden, &mut s.h1);
+        s.h1.iter_mut().for_each(|x| *x = x.tanh());
+        matmul_bias(&s.h1, &self.w2, &self.b2, 1, self.hidden, self.hidden, &mut s.h2);
+        s.h2.iter_mut().for_each(|x| *x = x.tanh());
+        matmul_bias(&s.h2, &self.wpi, &self.bpi, 1, self.hidden, self.n_logits, &mut s.logits);
+        let mut v = self.bv[0];
+        for k in 0..self.hidden {
+            v += s.h2[k] * self.wv[k];
+        }
+        s.value = v;
     }
 
     /// Backprop from (dlogits [B, n_logits], dvalue [B]) into grads.
@@ -275,6 +316,27 @@ mod tests {
                 (fd - an).abs() < 2e-2 * (1.0 + fd.abs()),
                 "param {pi}[{wi}]: fd {fd} vs analytic {an}"
             );
+        }
+    }
+
+    /// The scratch-buffer single-row forward must match the batched
+    /// forward bit-for-bit (the fused-rollout invariance tests depend on
+    /// shard-side forwards agreeing with the batched reference exactly).
+    #[test]
+    fn forward_row_matches_batched_forward_bitwise() {
+        let mut rng = Rng::new(21);
+        let (od, h, nl, b) = (6, 16, 9, 5);
+        let mlp = Mlp::new(&mut rng, od, h, nl);
+        let obs: Vec<f32> = (0..b * od).map(|_| rng.normal()).collect();
+        let cache = mlp.forward(&obs);
+        let mut s = mlp.make_scratch();
+        for i in 0..b {
+            // Dirty the scratch to prove each forward fully overwrites it.
+            s.h1.iter_mut().for_each(|x| *x = f32::NAN);
+            s.logits.iter_mut().for_each(|x| *x = f32::NAN);
+            mlp.forward_row(&obs[i * od..(i + 1) * od], &mut s);
+            assert_eq!(s.logits, cache.logits[i * nl..(i + 1) * nl], "row {i} logits");
+            assert_eq!(s.value, cache.value[i], "row {i} value");
         }
     }
 

@@ -1,21 +1,22 @@
 //! Pure-Rust PPO — the "SB3 on CPU" comparator for Table 2. Same algorithm
 //! and hyperparameters as the fused JAX PPO (Table 3): GAE, minibatched
 //! clipped-surrogate epochs, Adam, global grad-norm clip. Rollouts run
-//! through the fused [`VectorEnv::rollout`] entry point: the policy
-//! closure samples actions from the observation row the env just wrote,
-//! and the env (sharded on the persistent worker pool) writes next-step
-//! observations, rewards, dones, and profits directly into the PPO
-//! buffers — no separate observe pass, no per-step copies. Scenario
-//! tables are shared across lanes via `Arc`.
+//! through the fused [`VectorEnv::rollout_fused`] entry point: each pool
+//! shard forwards + samples the policy for its own lanes (shared-read
+//! weights, per-shard scratch, per-(lane, t) counter RNG) and the env
+//! writes next-step observations, rewards, dones, and profits directly
+//! into the PPO buffers — no separate observe pass, no per-step copies,
+//! no serial caller-thread policy forward. Scenario tables are shared
+//! across lanes via `Arc`.
 
 use std::sync::Arc;
 
 use crate::env::scalar::{ScalarEnv, ScenarioTables};
 use crate::env::tree::StationConfig;
-use crate::env::vector::{RolloutBuffers, VectorEnv};
-use crate::util::rng::Rng;
+use crate::env::vector::{PolicyRollout, RolloutBuffers, VectorEnv};
+use crate::util::rng::{CounterRng, Rng, Uniform01};
 
-use super::mlp::{Grads, Mlp};
+use super::mlp::{Grads, Mlp, MlpScratch};
 
 #[derive(Debug, Clone)]
 pub struct PpoParams {
@@ -122,13 +123,16 @@ impl Heads {
     }
 
     /// Sample all heads for one row of logits; returns (action, logp).
-    pub fn sample(&self, rng: &mut Rng, logits: &[f32], action: &mut [usize]) -> f32 {
+    /// Generic over the draw source so the same code runs off the
+    /// trainer's stateful [`Rng`] and the fused rollout's per-(lane, t)
+    /// [`CounterRng`] streams.
+    pub fn sample<R: Uniform01>(&self, rng: &mut R, logits: &[f32], action: &mut [usize]) -> f32 {
         let mut logp = 0f32;
         for (h, (&ofs, &n)) in self.offsets.iter().zip(&self.nvec).enumerate() {
             let lg = &logits[ofs..ofs + n];
             let lse = log_sum_exp(lg);
             // Gumbel-max is what jax uses; inverse-CDF is equivalent.
-            let mut x = rng.f32();
+            let mut x = rng.u01();
             let mut pick = n - 1;
             for (i, &l) in lg.iter().enumerate() {
                 let p = (l - lse).exp();
@@ -142,6 +146,22 @@ impl Heads {
             logp += lg[pick] - lse;
         }
         logp
+    }
+
+    /// Greedy (argmax-per-head) decode of one logit row. NaN-safe via
+    /// `total_cmp`: a NaN logit can win its head's argmax (NaN sorts above
+    /// +inf) but can never panic the comparator the way
+    /// `partial_cmp().unwrap()` did.
+    pub fn greedy(&self, logits: &[f32], action: &mut [usize]) {
+        for (h, (&ofs, &n)) in self.offsets.iter().zip(&self.nvec).enumerate() {
+            let lg = &logits[ofs..ofs + n];
+            action[h] = lg
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+        }
     }
 
     /// Joint log-prob + entropy of a stored action; also fills dlogits with
@@ -183,6 +203,17 @@ impl Heads {
         }
         (logp, ent)
     }
+}
+
+/// Near-equal minibatch boundaries covering EVERY sample: chunk `i` is
+/// `[i*bsz/n, (i+1)*bsz/n)`, so sizes differ by at most one and the chunks
+/// partition `0..bsz` exactly. The old `bsz / n` truncating split silently
+/// dropped `bsz % n` samples from every epoch whenever the batch didn't
+/// divide evenly (e.g. the fleet trainer's `n_minibatches: 2` with an odd
+/// `B*T`).
+pub fn minibatch_bounds(bsz: usize, n_minibatches: usize) -> Vec<(usize, usize)> {
+    let n = n_minibatches.max(1);
+    (0..n).map(|i| (i * bsz / n, (i + 1) * bsz / n)).collect()
 }
 
 fn log_sum_exp(x: &[f32]) -> f32 {
@@ -249,10 +280,18 @@ impl Learner {
         self.heads.nvec.len()
     }
 
+    /// Scratch for the shared-read single-row forwards below (one per
+    /// pool shard; reused across every (lane, step) that shard handles).
+    pub fn make_scratch(&self) -> MlpScratch {
+        self.mlp.make_scratch()
+    }
+
     /// Sample one time-row for `b` lanes: forward `obs_t` (`[b * obs_dim]`),
     /// fill `actions` (`[b * n_ports]`), `logp` (`[b]`), and `val` (`[b]`).
+    /// This is the serial-policy path (single caller-thread RNG); the
+    /// fused rollouts use [`Learner::sample_lane`] instead.
     pub fn sample_row(
-        &mut self,
+        &self,
         rng: &mut Rng,
         obs_t: &[f32],
         actions: &mut [usize],
@@ -273,18 +312,43 @@ impl Learner {
         }
     }
 
+    /// Fused-rollout sampling for ONE lane at step `t`: `&self` (weights
+    /// shared read-only across shards), caller-owned scratch (no
+    /// allocation), and a [`CounterRng`] stream derived from
+    /// `(seed, lane, t)` — the sampled action is a pure function of the
+    /// weights, the observation, and those three coordinates, so shard
+    /// placement and thread count can never change it. Returns
+    /// `(joint logp, value)`.
+    pub fn sample_lane(
+        &self,
+        t: usize,
+        lane: usize,
+        seed: u64,
+        obs: &[f32],
+        action: &mut [usize],
+        scratch: &mut MlpScratch,
+    ) -> (f32, f32) {
+        self.mlp.forward_row(obs, scratch);
+        let mut rng = CounterRng::derive2(seed, lane as u64, t as u64);
+        let logp = self.heads.sample(&mut rng, &scratch.logits, action);
+        (logp, scratch.value)
+    }
+
+    /// Greedy (argmax-per-head) decode for one lane — the fused/eval
+    /// counterpart of [`Learner::sample_lane`] (`&self`, zero allocation).
+    /// Returns the value estimate.
+    pub fn greedy_lane(&self, obs: &[f32], action: &mut [usize], scratch: &mut MlpScratch) -> f32 {
+        self.mlp.forward_row(obs, scratch);
+        self.heads.greedy(&scratch.logits, action);
+        scratch.value
+    }
+
     /// Greedy (argmax-per-head) action for a single observation row.
+    /// Convenience wrapper over [`Learner::greedy_lane`] for callers
+    /// without a long-lived scratch; allocates one scratch per call.
     pub fn greedy_action(&self, obs: &[f32], action: &mut [usize]) {
-        let cache = self.mlp.forward(obs);
-        for (h, (&ofs, &n)) in self.heads.offsets.iter().zip(&self.heads.nvec).enumerate() {
-            let lg = &cache.logits[ofs..ofs + n];
-            action[h] = lg
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap();
-        }
+        let mut scratch = self.make_scratch();
+        self.greedy_lane(obs, action, &mut scratch);
     }
 
     /// Full PPO update over filled rollout buffers (bootstrap forward +
@@ -310,14 +374,17 @@ impl Learner {
         let (adv, targets) = gae(
             rew_buf, val_buf, done_buf, &last_cache.value, n_envs, hp.gamma, hp.gae_lambda,
         );
-        let mb = bsz / hp.n_minibatches;
+        let bounds = minibatch_bounds(bsz, hp.n_minibatches);
         let mut total_loss_acc = 0f64;
         let mut ent_acc = 0f64;
         let mut n_upd = 0usize;
         for _ in 0..hp.update_epochs {
             let perm = rng.permutation(bsz);
-            for mbi in 0..hp.n_minibatches {
-                let idxs = &perm[mbi * mb..(mbi + 1) * mb];
+            for &(lo, hi) in &bounds {
+                if lo == hi {
+                    continue; // n_minibatches > bsz: some chunks are empty
+                }
+                let idxs = &perm[lo..hi];
                 let (loss, ent) = self.minibatch_update(
                     hp, idxs, obs_buf, act_buf, logp_buf, val_buf, &adv, &targets,
                 );
@@ -483,28 +550,27 @@ impl PpoTrainer {
         let mut profit_buf = vec![0f32; bsz];
 
         // ---- rollout ------------------------------------------------------
-        // One fused pass: the policy closure samples every lane's action
-        // from the observation row the env just wrote; the env advances
-        // all lanes on the persistent worker pool and writes obs, rewards,
-        // dones, and profits directly into the PPO buffers above.
+        // One fused pass: each pool shard forwards + samples its own
+        // lanes' policies inside the same dispatch that steps them (no
+        // serial caller-thread forward), writing actions/logp/values and
+        // obs/rewards/dones/profits directly into the PPO buffers above.
+        // A fresh per-iteration sampling seed keys the per-(lane, t)
+        // counter streams.
         {
             let PpoTrainer { venv, learner, rng, .. } = self;
+            let policy_seed = rng.next_u64();
             let mut bufs = RolloutBuffers {
                 obs: &mut obs_buf,
                 rewards: &mut rew_buf,
                 dones: &mut done_buf,
                 profits: &mut profit_buf,
             };
-            venv.rollout(t_len, &mut bufs, |t, obs_t, actions| {
-                learner.sample_row(
-                    rng,
-                    obs_t,
-                    actions,
-                    &mut logp_buf[t * e..(t + 1) * e],
-                    &mut val_buf[t * e..(t + 1) * e],
-                );
-                act_buf[t * e * n_ports..(t + 1) * e * n_ports].copy_from_slice(actions);
-            });
+            let mut pol = PolicyRollout {
+                actions: &mut act_buf,
+                logp: &mut logp_buf,
+                values: &mut val_buf,
+            };
+            venv.rollout_fused(t_len, &mut bufs, &mut pol, learner, policy_seed, false);
         }
         self.env_steps += bsz;
 
@@ -549,11 +615,12 @@ impl PpoTrainer {
             ScalarEnv::new(self.venv.cfg.clone(), self.venv.tables_arc(0), seed);
         let mut obs = vec![0f32; self.learner.obs_dim];
         let mut action = vec![0usize; self.learner.n_ports()];
+        let mut scratch = self.learner.make_scratch();
         let mut tot_r = 0f32;
         let mut tot_p = 0f32;
         for _ in 0..crate::env::scalar::STEPS_PER_EPISODE {
             env.observe(&mut obs);
-            self.learner.greedy_action(&obs, &mut action);
+            self.learner.greedy_lane(&obs, &mut action, &mut scratch);
             let info = env.step(&action);
             tot_r += info.reward;
             tot_p += info.profit;
@@ -582,6 +649,97 @@ mod tests {
         let (adv, _) = gae(&[1.0, 1.0], &[0.0, 0.0], &[1.0, 0.0], &[9.0], 1, 0.9, 0.8);
         // t=0 terminal: delta = r - v = 1, no bootstrap, no propagation.
         assert!((adv[0] - 1.0).abs() < 1e-6);
+    }
+
+    /// Regression (ISSUE 4): greedy decode must not panic on NaN logits.
+    /// `partial_cmp().unwrap()` blew up the whole eval on the first NaN;
+    /// `total_cmp` keeps it total (NaN can win the argmax, never panic).
+    #[test]
+    fn greedy_decode_survives_nan_logits() {
+        let heads = Heads::new(vec![3, 2]);
+        let logits = vec![0.1, f32::NAN, 0.3, 0.5, 0.2];
+        let mut action = vec![0usize; 2];
+        heads.greedy(&logits, &mut action); // must not panic
+        assert!(action[0] < 3 && action[1] < 2);
+        // Clean rows still pick the true per-head argmax.
+        let clean = vec![0.1, 0.9, 0.3, 0.2, 0.5];
+        heads.greedy(&clean, &mut action);
+        assert_eq!(action, vec![1, 1]);
+    }
+
+    /// Regression (ISSUE 4): minibatch chunks must partition 0..bsz — the
+    /// old truncating `bsz / n` split dropped `bsz % n` samples per epoch.
+    #[test]
+    fn minibatch_bounds_cover_every_sample_once() {
+        // (480, 2) is the live fleet-demo shape; (481, 2) the odd trigger.
+        for (bsz, n) in [(7usize, 2usize), (480, 2), (481, 2), (10, 3), (5, 8), (1, 1)] {
+            let bounds = minibatch_bounds(bsz, n);
+            assert_eq!(bounds.len(), n);
+            let mut seen = vec![false; bsz];
+            for &(lo, hi) in &bounds {
+                assert!(lo <= hi && hi <= bsz, "bsz={bsz} n={n}: bad chunk {lo}..{hi}");
+                for i in lo..hi {
+                    assert!(!seen[i], "bsz={bsz} n={n}: index {i} visited twice");
+                    seen[i] = true;
+                }
+            }
+            assert!(seen.iter().all(|&x| x), "bsz={bsz} n={n}: samples dropped");
+            let sizes: Vec<usize> = bounds.iter().map(|&(lo, hi)| hi - lo).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1, "bsz={bsz} n={n}: uneven chunks {sizes:?}");
+        }
+    }
+
+    /// Every permuted index lands in exactly one minibatch per epoch —
+    /// the composition `permutation + minibatch_bounds` the update uses.
+    #[test]
+    fn update_epoch_visits_every_sample_once() {
+        let (bsz, n) = (21usize, 2usize); // odd bsz, the fleet's n_minibatches
+        let mut rng = Rng::new(13);
+        let perm = rng.permutation(bsz);
+        let mut seen = vec![0usize; bsz];
+        for (lo, hi) in minibatch_bounds(bsz, n) {
+            for &i in &perm[lo..hi] {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "coverage: {seen:?}");
+    }
+
+    /// Fused per-(lane, t) sampling is a pure function of
+    /// (weights, obs, seed, lane, t): repeated calls agree bitwise, and it
+    /// matches a hand-rolled forward_row + derive2 + Heads::sample.
+    #[test]
+    fn sample_lane_is_deterministic_and_matches_components() {
+        let mut rng = Rng::new(3);
+        let learner = Learner::new(&mut rng, 5, 16, vec![4, 3]);
+        let obs: Vec<f32> = (0..5).map(|_| rng.normal()).collect();
+        let mut a1 = vec![0usize; 2];
+        let mut a2 = vec![0usize; 2];
+        let mut s1 = learner.make_scratch();
+        let mut s2 = learner.make_scratch();
+        let (lp1, v1) = learner.sample_lane(7, 3, 99, &obs, &mut a1, &mut s1);
+        let (lp2, v2) = learner.sample_lane(7, 3, 99, &obs, &mut a2, &mut s2);
+        assert_eq!((a1.clone(), lp1, v1), (a2, lp2, v2));
+        // Hand-rolled equivalent.
+        let mut s3 = learner.make_scratch();
+        learner.mlp.forward_row(&obs, &mut s3);
+        let mut crng = CounterRng::derive2(99, 3, 7);
+        let mut a3 = vec![0usize; 2];
+        let lp3 = learner.heads.sample(&mut crng, &s3.logits, &mut a3);
+        assert_eq!(a1, a3);
+        assert_eq!(lp1, lp3);
+        assert_eq!(v1, s3.value);
+        // Different (lane, t) moves the stream for at least some steps.
+        let streams: Vec<Vec<usize>> = (0..16)
+            .map(|t| {
+                let mut a = vec![0usize; 2];
+                let mut s = learner.make_scratch();
+                learner.sample_lane(t, 0, 99, &obs, &mut a, &mut s);
+                a
+            })
+            .collect();
+        assert!(streams.windows(2).any(|w| w[0] != w[1]), "t never changed the sample");
     }
 
     #[test]

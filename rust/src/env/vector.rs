@@ -22,10 +22,16 @@
 //! act → step → observe loop: each shard steps its lanes and immediately
 //! writes next-step observations, rewards, dones, and profits straight
 //! into caller-provided PPO buffers (time-major), removing the serial
-//! observe pass and the per-step obs copy.
+//! observe pass and the per-step obs copy. [`VectorEnv::rollout_fused`]
+//! goes one further and moves the policy forward itself into the shard
+//! tasks: each shard samples its own lanes' MLP actions (shared-read
+//! weights, per-shard scratch, per-(lane, t) counter RNG) before
+//! stepping them, so nothing about a rollout is serial in B.
 
 use std::sync::{Arc, Mutex};
 
+use crate::baselines::mlp::MlpScratch;
+use crate::baselines::ppo::Learner;
 use crate::runtime::pool::WorkerPool;
 use crate::util::rng::CounterRng;
 
@@ -85,6 +91,16 @@ pub struct RolloutBuffers<'a> {
     pub rewards: &'a mut [f32], // [T * B]
     pub dones: &'a mut [f32],   // [T * B] (1.0 = episode ended this step)
     pub profits: &'a mut [f32], // [T * B]
+}
+
+/// Caller-provided policy-side rollout buffers (time-major), filled by
+/// the fused-policy rollouts ([`VectorEnv::rollout_fused`] and
+/// `Fleet::rollout_fused`): sampled actions, per-lane joint log-probs,
+/// and value estimates. `logp` is 0 in greedy mode.
+pub struct PolicyRollout<'a> {
+    pub actions: &'a mut [usize], // [T * B * n_ports]
+    pub logp: &'a mut [f32],      // [T * B]
+    pub values: &'a mut [f32],    // [T * B]
 }
 
 impl VectorEnv {
@@ -217,6 +233,31 @@ impl VectorEnv {
         Arc::clone(&self.tables[self.lane_scenario[lane] as usize])
     }
 
+    /// Number of distinct scenario cells (tables) behind this batch.
+    pub fn n_scenarios(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Scenario tables by cell index (cheap Arc clone).
+    pub fn scenario_tables(&self, idx: usize) -> Arc<ScenarioTables> {
+        Arc::clone(&self.tables[idx])
+    }
+
+    /// Which scenario cell lane `lane` runs.
+    pub fn lane_scenario_idx(&self, lane: usize) -> usize {
+        self.lane_scenario[lane] as usize
+    }
+
+    /// How many lanes run each scenario cell (indexed like
+    /// [`VectorEnv::scenario_tables`]).
+    pub fn scenario_lane_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.tables.len()];
+        for &s in &self.lane_scenario {
+            counts[s as usize] += 1;
+        }
+        counts
+    }
+
     // -- lane accessors (used by the B=1 ScalarEnv wrapper and tests) ------
 
     pub fn lane_t(&self, lane: usize) -> usize {
@@ -329,7 +370,7 @@ impl VectorEnv {
     pub fn step_all_pooled(&mut self, actions: &[usize], infos: &mut [StepInfo], shards: usize) {
         let shards = shards.clamp(1, self.b.max(1)).min(self.threads.max(1));
         let pool = if shards > 1 { Some(self.ensure_pool(shards)) } else { None };
-        let mut tasks = self.shard_tasks(actions, infos, None, shards);
+        let mut tasks = self.shard_tasks(StepActs::Given(actions), infos, None, shards);
         run_shard_tasks(pool.as_deref(), &mut tasks);
     }
 
@@ -340,7 +381,7 @@ impl VectorEnv {
     /// same shard count.
     pub fn step_all_sharded(&mut self, actions: &[usize], infos: &mut [StepInfo], shards: usize) {
         let shards = shards.clamp(1, self.b.max(1));
-        let mut tasks = self.shard_tasks(actions, infos, None, shards);
+        let mut tasks = self.shard_tasks(StepActs::Given(actions), infos, None, shards);
         if tasks.len() <= 1 {
             for task in tasks.iter_mut() {
                 task.run();
@@ -385,7 +426,75 @@ impl VectorEnv {
                 dones: &mut bufs.dones[t * b..(t + 1) * b],
                 profits: &mut bufs.profits[t * b..(t + 1) * b],
             };
-            let mut tasks = self.shard_tasks(&actions, &mut infos, Some(out), shards);
+            let acts = StepActs::Given(actions.as_slice());
+            let mut tasks = self.shard_tasks(acts, &mut infos, Some(out), shards);
+            run_shard_tasks(pool.as_deref(), &mut tasks);
+        }
+    }
+
+    /// Fused rollout with the policy forward INSIDE the shard tasks: per
+    /// step, each pool shard forwards + samples actions for its own lanes
+    /// (shared-read weights, per-shard scratch, per-(lane, t) counter RNG
+    /// keyed on `policy_seed`) and then steps + observes them in the same
+    /// dispatch — no serial caller-thread policy pass. Sampled actions,
+    /// log-probs, and value estimates land in `pol` (time-major, like the
+    /// env-side buffers in `bufs`). `greedy` switches every head to
+    /// argmax decode (eval mode; `pol.logp` is left 0).
+    ///
+    /// Determinism: a lane's action at step `t` is a pure function of
+    /// `(weights, obs, policy_seed, lane, t)`, and its obs stream of its
+    /// own counter RNG — so the whole rollout is bit-identical for ANY
+    /// thread count or shard placement. The sampled stream intentionally
+    /// differs from the serial-policy [`VectorEnv::rollout`] closure path
+    /// (one shared RNG walked in lane order cannot be shard-invariant).
+    pub fn rollout_fused(
+        &mut self,
+        n_steps: usize,
+        bufs: &mut RolloutBuffers<'_>,
+        pol: &mut PolicyRollout<'_>,
+        learner: &Learner,
+        policy_seed: u64,
+        greedy: bool,
+    ) {
+        let (b, p, d) = (self.b, self.p, self.obs_dim());
+        assert_eq!(bufs.obs.len(), (n_steps + 1) * b * d, "obs must be [(T+1)*B*obs_dim]");
+        assert_eq!(bufs.rewards.len(), n_steps * b, "rewards must be [T*B]");
+        assert_eq!(bufs.dones.len(), n_steps * b, "dones must be [T*B]");
+        assert_eq!(bufs.profits.len(), n_steps * b, "profits must be [T*B]");
+        assert_eq!(pol.actions.len(), n_steps * b * p, "actions must be [T*B*n_ports]");
+        assert_eq!(pol.logp.len(), n_steps * b, "logp must be [T*B]");
+        assert_eq!(pol.values.len(), n_steps * b, "values must be [T*B]");
+        assert_eq!(learner.obs_dim, d, "learner obs_dim does not match env");
+        assert_eq!(learner.n_ports(), p, "learner n_ports does not match env");
+        let shards = self.auto_shards();
+        let pool = if shards > 1 { Some(self.ensure_pool(shards)) } else { None };
+        // One forward scratch per shard, allocated once and reused for
+        // every (lane, step) that shard handles.
+        let mut scratch: Vec<MlpScratch> =
+            (0..shards).map(|_| learner.make_scratch()).collect();
+        let mut infos = vec![StepInfo::default(); b];
+        self.observe_all(&mut bufs.obs[..b * d]);
+        for t in 0..n_steps {
+            let (obs_t, obs_next) = bufs.obs[t * b * d..].split_at_mut(b * d);
+            let fused = FusedStep {
+                learner,
+                seed: policy_seed,
+                t,
+                greedy,
+                obs_t: &*obs_t,
+                actions: &mut pol.actions[t * b * p..(t + 1) * b * p],
+                logp: &mut pol.logp[t * b..(t + 1) * b],
+                values: &mut pol.values[t * b..(t + 1) * b],
+                scratch: &mut scratch,
+            };
+            let out = StepOut {
+                obs: &mut obs_next[..b * d],
+                rewards: &mut bufs.rewards[t * b..(t + 1) * b],
+                dones: &mut bufs.dones[t * b..(t + 1) * b],
+                profits: &mut bufs.profits[t * b..(t + 1) * b],
+            };
+            let mut tasks =
+                self.shard_tasks(StepActs::Fused(fused), &mut infos, Some(out), shards);
             run_shard_tasks(pool.as_deref(), &mut tasks);
         }
     }
@@ -427,17 +536,37 @@ impl VectorEnv {
     /// only on `(B, shards)`, so the pool and the scoped fallback compute
     /// bit-identical results for the same shard count. `pub(crate)` so the
     /// fleet scheduler can pool tasks from several envs into one dispatch.
+    /// In fused mode ([`StepActs::Fused`]) each task additionally gets its
+    /// lanes' policy-input obs row, output slices, and one scratch buffer,
+    /// so the shard can run its own policy forwards before stepping.
     pub(crate) fn shard_tasks<'a>(
         &'a mut self,
-        actions: &'a [usize],
+        mut acts: StepActs<'a>,
         infos: &'a mut [StepInfo],
         out: Option<StepOut<'a>>,
         shards: usize,
     ) -> Vec<ShardTask<'a>> {
-        assert_eq!(actions.len(), self.b * self.p, "actions must be [B * n_ports]");
         assert_eq!(infos.len(), self.b, "infos must be [B]");
         let shards = shards.clamp(1, self.b.max(1));
         let lanes_per = self.b.div_ceil(shards);
+        match &acts {
+            StepActs::Given(a) => {
+                assert_eq!(a.len(), self.b * self.p, "actions must be [B * n_ports]");
+            }
+            StepActs::Fused(f) => {
+                let d = core::obs_dim(&self.cfg);
+                assert_eq!(f.obs_t.len(), self.b * d, "fused obs_t must be [B * obs_dim]");
+                assert_eq!(f.actions.len(), self.b * self.p, "fused actions must be [B * n_ports]");
+                assert_eq!(f.logp.len(), self.b, "fused logp must be [B]");
+                assert_eq!(f.values.len(), self.b, "fused values must be [B]");
+                let n_tasks = self.b.div_ceil(lanes_per);
+                assert!(
+                    f.scratch.len() >= n_tasks,
+                    "fused rollout needs one scratch per shard task ({} < {n_tasks})",
+                    f.scratch.len()
+                );
+            }
+        }
         let VectorEnv {
             ref cfg,
             ref tree,
@@ -481,11 +610,11 @@ impl VectorEnv {
         let mut tau = tau.as_mut_slice();
         let mut sens = sensitive.as_mut_slice();
         let mut i_drawn = i_drawn.as_mut_slice();
-        let mut acts = actions;
         let mut infos = infos;
         let mut out = out;
 
         let mut tasks = Vec::with_capacity(shards);
+        let mut lane0 = 0usize;
         let mut remaining = b;
         while remaining > 0 {
             let take = lanes_per.min(remaining);
@@ -515,6 +644,43 @@ impl VectorEnv {
                 StepOut { obs: obs_h, rewards: rew_h, dones: done_h, profits: prof_h }
             });
 
+            // This shard's slice of the action source (and, in fused mode,
+            // of the policy input/output buffers + one scratch).
+            let task_acts = match &mut acts {
+                StepActs::Given(a) => {
+                    let (head, rest) = a.split_at(take * p);
+                    *a = rest;
+                    ShardActs::Given(head)
+                }
+                StepActs::Fused(f) => {
+                    let (obs_h, obs_r) = f.obs_t.split_at(take * d);
+                    f.obs_t = obs_r;
+                    let (act_h, act_r) =
+                        std::mem::take(&mut f.actions).split_at_mut(take * p);
+                    f.actions = act_r;
+                    let (logp_h, logp_r) = std::mem::take(&mut f.logp).split_at_mut(take);
+                    f.logp = logp_r;
+                    let (val_h, val_r) = std::mem::take(&mut f.values).split_at_mut(take);
+                    f.values = val_r;
+                    let (scr_h, scr_r) = std::mem::take(&mut f.scratch)
+                        .split_first_mut()
+                        .expect("one scratch per shard task");
+                    f.scratch = scr_r;
+                    ShardActs::Fused(FusedShard {
+                        learner: f.learner,
+                        seed: f.seed,
+                        t: f.t,
+                        lane0,
+                        greedy: f.greedy,
+                        obs_t: obs_h,
+                        actions: act_h,
+                        logp: logp_h,
+                        values: val_h,
+                        scratch: scr_h,
+                    })
+                }
+            };
+
             tasks.push(ShardTask {
                 cfg,
                 tree,
@@ -535,10 +701,11 @@ impl VectorEnv {
                 tau: split_mut!(tau, take * c),
                 sensitive: split_mut!(sens, take * c),
                 i_drawn: split_mut!(i_drawn, take * p),
-                actions: split_ref!(acts, take * p),
+                acts: task_acts,
                 infos: split_mut!(infos, take),
                 out: out_h,
             });
+            lane0 += take;
         }
         tasks
     }
@@ -552,8 +719,57 @@ pub(crate) struct StepOut<'a> {
     pub(crate) profits: &'a mut [f32],
 }
 
+/// Whole-env action source for one step: caller-supplied rows (serial
+/// policy or scripted actions) or a fused policy the shards evaluate
+/// themselves. `shard_tasks` splits either variant into per-shard blocks.
+pub(crate) enum StepActs<'a> {
+    Given(&'a [usize]),
+    Fused(FusedStep<'a>),
+}
+
+/// Env-wide fused-policy inputs/outputs for one step (see
+/// [`VectorEnv::rollout_fused`]): the learner (shared read-only), the
+/// policy seed, the step index, the full `[B * obs_dim]` observation row
+/// the policy reads, the full-width output rows it fills, and one forward
+/// scratch per shard task.
+pub(crate) struct FusedStep<'a> {
+    pub(crate) learner: &'a Learner,
+    pub(crate) seed: u64,
+    pub(crate) t: usize,
+    pub(crate) greedy: bool,
+    pub(crate) obs_t: &'a [f32],
+    pub(crate) actions: &'a mut [usize],
+    pub(crate) logp: &'a mut [f32],
+    pub(crate) values: &'a mut [f32],
+    pub(crate) scratch: &'a mut [MlpScratch],
+}
+
+/// One shard's slice of [`StepActs`]: either its lanes' pre-filled action
+/// rows, or the fused-policy block it must evaluate before stepping.
+pub(crate) enum ShardActs<'a> {
+    Given(&'a [usize]),
+    Fused(FusedShard<'a>),
+}
+
+/// One shard's fused-policy work: forward + sample `[lane0, lane0 + n)`
+/// of the owning env using the shard's own scratch. `lane0` is the
+/// env-local offset of this shard's first lane, so per-(lane, t) RNG
+/// streams are global to the env, not the shard.
+pub(crate) struct FusedShard<'a> {
+    learner: &'a Learner,
+    seed: u64,
+    t: usize,
+    lane0: usize,
+    greedy: bool,
+    obs_t: &'a [f32],
+    actions: &'a mut [usize],
+    logp: &'a mut [f32],
+    values: &'a mut [f32],
+    scratch: &'a mut MlpScratch,
+}
+
 /// One shard's work item: a contiguous block of lanes plus everything
-/// needed to step (and, in rollout mode, observe) them.
+/// needed to act (fused mode), step, and (in rollout mode) observe them.
 pub(crate) struct ShardTask<'a> {
     cfg: &'a StationConfig,
     tree: &'a StationTree,
@@ -574,17 +790,41 @@ pub(crate) struct ShardTask<'a> {
     tau: &'a mut [f32],
     sensitive: &'a mut [bool],
     i_drawn: &'a mut [f32],
-    actions: &'a [usize],
+    acts: ShardActs<'a>,
     infos: &'a mut [StepInfo],
     out: Option<StepOut<'a>>,
 }
 
 impl ShardTask<'_> {
-    /// Step (and in rollout mode observe) every lane in this shard.
+    /// Act (fused mode), step, and (in rollout mode) observe every lane in
+    /// this shard.
     pub(crate) fn run(&mut self) {
         let c = self.cfg.n_chargers();
         let p = self.cfg.n_ports();
         let d = core::obs_dim(self.cfg);
+        // Fused mode: forward + sample this shard's lanes before stepping
+        // them — policy inference runs inside the same dispatch, on the
+        // same worker, with per-(lane, t) counter RNG so shard placement
+        // can never change a lane's action stream.
+        if let ShardActs::Fused(f) = &mut self.acts {
+            for lane in 0..f.logp.len() {
+                let obs = &f.obs_t[lane * d..(lane + 1) * d];
+                let row = &mut f.actions[lane * p..(lane + 1) * p];
+                if f.greedy {
+                    f.logp[lane] = 0.0;
+                    f.values[lane] = f.learner.greedy_lane(obs, row, f.scratch);
+                } else {
+                    let (lp, v) =
+                        f.learner.sample_lane(f.t, f.lane0 + lane, f.seed, obs, row, f.scratch);
+                    f.logp[lane] = lp;
+                    f.values[lane] = v;
+                }
+            }
+        }
+        let actions: &[usize] = match &self.acts {
+            ShardActs::Given(a) => *a,
+            ShardActs::Fused(f) => &*f.actions,
+        };
         let mut scratch = Scratch::new(p);
         for lane in 0..self.t.len() {
             let mut view = LaneView {
@@ -610,7 +850,7 @@ impl ShardTask<'_> {
                 self.cfg,
                 self.tree,
                 tables,
-                &self.actions[lane * p..(lane + 1) * p],
+                &actions[lane * p..(lane + 1) * p],
                 &mut scratch,
             );
             self.infos[lane] = info;
@@ -673,8 +913,15 @@ pub enum StepPath {
     Pool,
     /// Per-call scoped-thread fallback (`step_all_sharded`).
     Scoped,
-    /// Fused `rollout` writing obs/rewards/dones into PPO-style buffers.
+    /// Fused `rollout` writing obs/rewards/dones into PPO-style buffers
+    /// (trivial copy policy — measures the env runtime alone).
     Rollout,
+    /// Fused rollout with a REAL MLP policy sampled serially on the
+    /// caller thread (the pre-fused training path, kept as comparator).
+    PolicySerial,
+    /// Fused rollout with the same MLP policy forwarded + sampled inside
+    /// the shard tasks (`rollout_fused`, the default training path).
+    PolicyFused,
 }
 
 impl StepPath {
@@ -683,9 +930,16 @@ impl StepPath {
             StepPath::Pool => "native-vector",
             StepPath::Scoped => "native-scoped",
             StepPath::Rollout => "native-rollout",
+            StepPath::PolicySerial => "policy-serial",
+            StepPath::PolicyFused => "policy-fused",
         }
     }
 }
+
+/// Hidden width of the throughput-bench policy net: large enough that the
+/// forward dominates a lane-step (so serial-vs-fused is a real contrast),
+/// small enough for the CI smoke sweep.
+pub const BENCH_POLICY_HIDDEN: usize = 64;
 
 /// Measure raw env throughput at batch size `b` with random actions
 /// refreshed every step: one warm pass then one timed pass. Shared by
@@ -757,6 +1011,63 @@ pub fn measure_throughput(
                     venv.rollout(t_chunk, &mut bufs, |t, _obs, actions| {
                         actions.copy_from_slice(&all_actions[t * b * p..(t + 1) * b * p]);
                     });
+                }
+            })
+        }
+        StepPath::PolicySerial | StepPath::PolicyFused => {
+            // Real MLP policy over chunked rollouts: serial samples on the
+            // caller thread via `sample_row` (the pre-fused path), fused
+            // forwards + samples inside the shard tasks. Identical nets
+            // and buffer shapes, so the row pair isolates where the
+            // policy forward runs.
+            let t_chunk = reps.min(64);
+            let n_chunks = reps.div_ceil(t_chunk);
+            steps = (n_chunks * t_chunk * b) as f64;
+            let mut lrng = Rng::new(41);
+            let learner = Learner::new(&mut lrng, d, BENCH_POLICY_HIDDEN, nvec.clone());
+            let mut obs = vec![0f32; (t_chunk + 1) * b * d];
+            let mut rewards = vec![0f32; t_chunk * b];
+            let mut dones = vec![0f32; t_chunk * b];
+            let mut profits = vec![0f32; t_chunk * b];
+            let mut act = vec![0usize; t_chunk * b * p];
+            let mut logp = vec![0f32; t_chunk * b];
+            let mut values = vec![0f32; t_chunk * b];
+            let fused = path == StepPath::PolicyFused;
+            let mut srng = Rng::new(91);
+            Box::new(move |venv: &mut VectorEnv| {
+                for chunk in 0..n_chunks {
+                    let mut bufs = RolloutBuffers {
+                        obs: &mut obs,
+                        rewards: &mut rewards,
+                        dones: &mut dones,
+                        profits: &mut profits,
+                    };
+                    if fused {
+                        let mut pol = PolicyRollout {
+                            actions: &mut act,
+                            logp: &mut logp,
+                            values: &mut values,
+                        };
+                        venv.rollout_fused(
+                            t_chunk, &mut bufs, &mut pol, &learner, chunk as u64, false,
+                        );
+                    } else {
+                        let learner = &learner;
+                        let srng = &mut srng;
+                        let logp = &mut logp;
+                        let values = &mut values;
+                        let act = &mut act;
+                        venv.rollout(t_chunk, &mut bufs, |t, obs_t, actions| {
+                            learner.sample_row(
+                                srng,
+                                obs_t,
+                                actions,
+                                &mut logp[t * b..(t + 1) * b],
+                                &mut values[t * b..(t + 1) * b],
+                            );
+                            act[t * b * p..(t + 1) * b * p].copy_from_slice(actions);
+                        });
+                    }
                 }
             })
         }

@@ -150,6 +150,32 @@ fn table2(cfg: &RunConfig) -> Result<()> {
         }
     }
 
+    // -- Policy rows: real MLP forwards, serial caller thread vs fused ------
+    // inside the shard tasks (the serial/fused pair isolates where the
+    // policy forward runs; same net, same buffers).
+    for path in [StepPath::PolicySerial, StepPath::PolicyFused] {
+        println!("\n  {} sweep (MLP policy, threads={}):", path.label(), cfg.num_threads);
+        for &b in &[256usize, 1024, 4096] {
+            let (steps_per_sec, s_per_100k) = vector::measure_throughput(
+                Arc::clone(&tables),
+                b,
+                cfg.num_threads,
+                path,
+                120_000,
+            );
+            println!(
+                "    B={b:<5} {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k"
+            );
+            rows.push((
+                format!("{} (B={b})", path.label()),
+                None,
+                None,
+                None,
+                Some(s_per_100k),
+            ));
+        }
+    }
+
     // -- Python gym rows (optional subprocess) -------------------------------
     for (row, mode) in [(0usize, "random"), (1, "ppo1"), (2, "ppo16")] {
         match python_gym_bench(mode) {
@@ -633,7 +659,7 @@ fn perf(cfg: &RunConfig) -> Result<()> {
 /// trajectory lands in BENCH_fleet.json via `cargo bench --bench
 /// table2_throughput`.
 fn fleet_bench(cfg: &RunConfig) -> Result<()> {
-    use chargax::fleet::{measure_fleet_throughput, FleetSpec};
+    use chargax::fleet::{measure_fleet_throughput, FleetBenchPolicy, FleetSpec};
 
     let store = DataStore::load(&artifacts_dir().join("data")).ok();
     if store.is_none() {
@@ -647,25 +673,36 @@ fn fleet_bench(cfg: &RunConfig) -> Result<()> {
         "Fleet rollout throughput (heterogeneous station families, one worker pool, threads={})\n",
         if cfg.num_threads == 0 { "auto".to_string() } else { cfg.num_threads.to_string() },
     );
-    let mut csv = String::from("scale,total_lanes,families,steps_per_sec,s_per_100k\n");
-    for scale in [1usize, 4, 16] {
-        let spec = match &base {
-            Some(s) => {
-                // Scale a user-provided spec by multiplying lane counts.
-                let mut s = s.clone();
-                for e in &mut s.specs {
-                    e.lanes *= scale;
+    let mut csv =
+        String::from("policy,scale,total_lanes,families,steps_per_sec,s_per_100k\n");
+    for policy in
+        [FleetBenchPolicy::Random, FleetBenchPolicy::SerialNet, FleetBenchPolicy::FusedNet]
+    {
+        println!("  {}:", policy.label());
+        for scale in [1usize, 4, 16] {
+            let spec = match &base {
+                Some(s) => {
+                    // Scale a user-provided spec by multiplying lane counts.
+                    let mut s = s.clone();
+                    for e in &mut s.specs {
+                        e.lanes *= scale;
+                    }
+                    s
                 }
-                s
-            }
-            None => FleetSpec::demo(cfg.seed as u64, scale),
-        };
-        let (steps_per_sec, s_per_100k, lanes, families) =
-            measure_fleet_throughput(&spec, store.as_ref(), cfg.num_threads, 120_000)?;
-        println!(
-            "  L={lanes:<5} ({families} families) {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k"
-        );
-        writeln!(csv, "{scale},{lanes},{families},{steps_per_sec},{s_per_100k}").ok();
+                None => FleetSpec::demo(cfg.seed as u64, scale),
+            };
+            let (steps_per_sec, s_per_100k, lanes, families) =
+                measure_fleet_throughput(&spec, store.as_ref(), cfg.num_threads, 120_000, policy)?;
+            println!(
+                "    L={lanes:<5} ({families} families) {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k"
+            );
+            writeln!(
+                csv,
+                "{},{scale},{lanes},{families},{steps_per_sec},{s_per_100k}",
+                policy.label()
+            )
+            .ok();
+        }
     }
     std::fs::write("runs/fleet.csv", csv).context("writing runs/fleet.csv")?;
     println!("\nwrote runs/fleet.csv");

@@ -365,12 +365,20 @@ fn check_scenario_known(store: &DataStore, sc: &Scenario) -> Result<()> {
     store.price(&sc.country, sc.year).map(|_| ())
 }
 
+/// Human-readable name of one scenario cell (profile/country/year/traffic)
+/// — what per-cell eval reporting prints next to each number.
+pub fn cell_name(sc: &Scenario) -> String {
+    format!("{}/{}/{}/{}", sc.scenario, sc.country, sc.year, sc.traffic)
+}
+
 /// One station family: every lane whose `StationConfig` (hence obs and
 /// action space) is identical, ready to back one `VectorEnv`.
+/// `cell_names[i]` names the scenario cell behind `tables[i]`.
 pub struct FamilyPlan {
     pub label: String,
     pub cfg: StationConfig,
     pub tables: Vec<Arc<ScenarioTables>>,
+    pub cell_names: Vec<String>,
     pub lane_scenario: Vec<usize>,
     pub seeds: Vec<u64>,
 }
@@ -421,6 +429,7 @@ pub fn expand(fleet: &FleetSpec, store: Option<&DataStore>) -> Result<Vec<Family
                     label: spec.name.clone(),
                     cfg: cfg.clone(),
                     tables: Vec::new(),
+                    cell_names: Vec::new(),
                     lane_scenario: Vec::new(),
                     seeds: Vec::new(),
                 });
@@ -437,6 +446,7 @@ pub fn expand(fleet: &FleetSpec, store: Option<&DataStore>) -> Result<Vec<Family
                 Some(i) => i,
                 None => {
                     fam.tables.push(Arc::clone(&table));
+                    fam.cell_names.push(cell_name(sc));
                     fam.tables.len() - 1
                 }
             };
@@ -471,6 +481,14 @@ mod tests {
             assert_eq!(f.lane_scenario.len(), f.seeds.len());
             assert!(!f.tables.is_empty());
             assert!(f.lane_scenario.iter().all(|&i| i < f.tables.len()));
+            // One name per distinct cell, all distinct within a family.
+            assert_eq!(f.tables.len(), f.cell_names.len());
+            for (i, a) in f.cell_names.iter().enumerate() {
+                assert!(!a.is_empty());
+                for b in &f.cell_names[i + 1..] {
+                    assert_ne!(a, b, "duplicate cell name in family {}", f.label);
+                }
+            }
         }
     }
 

@@ -38,12 +38,18 @@ use crate::env::vector::{VectorEnv, MIN_LANES_PER_SHARD, PAR_MIN_BATCH};
 use crate::runtime::pool::WorkerPool;
 
 pub use catalog::{expand, FleetSpec, ScenarioSpec, StationLayout, TableCache};
-pub use rollout::{measure_fleet_throughput, FamilyStats, FleetPpoTrainer};
+pub use rollout::{
+    family_policy_seed, measure_fleet_throughput, CellEval, FamilyStats, FleetBenchPolicy,
+    FleetPpoTrainer,
+};
 
 /// N heterogeneous station environments scheduled on one worker pool.
 pub struct Fleet {
     envs: Vec<VectorEnv>,
     labels: Vec<String>,
+    /// Per-env scenario-cell names, indexed like each env's table set
+    /// (`cell_labels[e][cell]`); used by per-cell eval reporting.
+    cell_labels: Vec<Vec<String>>,
     /// Shard-count ceiling across the whole fleet (`--threads`; 0 = auto).
     threads: usize,
     /// One pool for every env; rebuilt lazily when the plan outgrows it.
@@ -52,17 +58,43 @@ pub struct Fleet {
 
 impl Fleet {
     /// Assemble a fleet from already-built envs (tests and power users);
-    /// most callers go through [`Fleet::from_spec`].
+    /// most callers go through [`Fleet::from_spec`]. Scenario cells get
+    /// generic `cell{i}` names (the catalog path names them properly).
     pub fn from_envs(envs: Vec<VectorEnv>, labels: Vec<String>) -> Result<Fleet> {
+        let cell_labels = envs
+            .iter()
+            .map(|e| (0..e.n_scenarios()).map(|i| format!("cell{i}")).collect())
+            .collect();
+        Fleet::from_envs_with_cells(envs, labels, cell_labels)
+    }
+
+    fn from_envs_with_cells(
+        envs: Vec<VectorEnv>,
+        labels: Vec<String>,
+        cell_labels: Vec<Vec<String>>,
+    ) -> Result<Fleet> {
         if envs.is_empty() {
             bail!("a fleet needs at least one environment");
         }
         if envs.len() != labels.len() {
             bail!("{} envs but {} labels", envs.len(), labels.len());
         }
+        if envs.len() != cell_labels.len() {
+            bail!("{} envs but {} cell-label sets", envs.len(), cell_labels.len());
+        }
+        for (e, (env, cells)) in envs.iter().zip(&cell_labels).enumerate() {
+            if env.n_scenarios() != cells.len() {
+                bail!(
+                    "env {e}: {} scenario cells but {} cell labels",
+                    env.n_scenarios(),
+                    cells.len()
+                );
+            }
+        }
         Ok(Fleet {
             envs,
             labels,
+            cell_labels,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             pool: None,
         })
@@ -75,6 +107,7 @@ impl Fleet {
         let families = catalog::expand(spec, store)?;
         let mut envs = Vec::with_capacity(families.len());
         let mut labels = Vec::with_capacity(families.len());
+        let mut cell_labels = Vec::with_capacity(families.len());
         for fam in families {
             envs.push(VectorEnv::with_seeds(
                 fam.cfg,
@@ -83,8 +116,9 @@ impl Fleet {
                 &fam.seeds,
             ));
             labels.push(fam.label);
+            cell_labels.push(fam.cell_names);
         }
-        Fleet::from_envs(envs, labels)
+        Fleet::from_envs_with_cells(envs, labels, cell_labels)
     }
 
     pub fn n_envs(&self) -> usize {
@@ -97,6 +131,12 @@ impl Fleet {
 
     pub fn label(&self, i: usize) -> &str {
         &self.labels[i]
+    }
+
+    /// Name of scenario cell `cell` of family `e` (e.g.
+    /// `shopping/NL/2021/medium`, or `cell0` for hand-built fleets).
+    pub fn cell_label(&self, e: usize, cell: usize) -> &str {
+        &self.cell_labels[e][cell]
     }
 
     pub fn total_lanes(&self) -> usize {

@@ -18,15 +18,26 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::baselines::mlp::MlpScratch;
 use crate::baselines::ppo::{Learner, PpoParams};
 use crate::data::DataStore;
 use crate::env::core::{StepInfo, STEPS_PER_EPISODE};
 use crate::env::scalar::ScalarEnv;
-use crate::env::vector::{RolloutBuffers, ShardTask, StepOut};
+use crate::env::vector::{
+    FusedStep, PolicyRollout, RolloutBuffers, ShardTask, StepActs, StepOut, BENCH_POLICY_HIDDEN,
+};
 use crate::runtime::pool::WorkerPool;
 use crate::util::rng::Rng;
 
 use super::{Fleet, FleetSpec};
+
+/// Per-family policy-sampling seed: mixes the iteration seed with the
+/// family index so families never share per-(lane, t) action-noise
+/// streams (two same-shaped families would otherwise draw identical
+/// noise for matching lane indices).
+pub fn family_policy_seed(base: u64, family: usize) -> u64 {
+    base ^ (family as u64).wrapping_mul(0x9e3779b97f4a7c15)
+}
 
 impl Fleet {
     /// Advance every family `n_steps` times in lockstep, writing each
@@ -100,7 +111,107 @@ impl Fleet {
                     dones: &mut buf.dones[t * b..(t + 1) * b],
                     profits: &mut buf.profits[t * b..(t + 1) * b],
                 };
-                tasks.extend(env.shard_tasks(act, info, Some(out), plan[env_idx]));
+                let acts = StepActs::Given(act.as_slice());
+                tasks.extend(env.shard_tasks(acts, info, Some(out), plan[env_idx]));
+            }
+            run_fleet_tasks(pool.as_deref(), &mut tasks);
+        }
+    }
+
+    /// Fused-policy fleet rollout: the cross-env analogue of
+    /// [`VectorEnv::rollout_fused`]. Per step, ONE pooled dispatch covers
+    /// every family's forward+step shard tasks — each shard forwards +
+    /// samples its own lanes with family `e`'s learner (shared-read
+    /// weights, per-shard scratch, per-(lane, t) counter RNG seeded by
+    /// [`family_policy_seed`]`(policy_seed, e)`), then steps and observes
+    /// them, honoring the `--threads` cap via the same strided dispatcher
+    /// as [`Fleet::rollout`]. No policy work runs serially on the caller.
+    ///
+    /// Bit-identical to calling `rollout_fused` on each member env
+    /// independently with the same learners and per-family seeds, for any
+    /// thread count (proven in rust/tests/fleet.rs).
+    pub fn rollout_fused(
+        &mut self,
+        n_steps: usize,
+        bufs: &mut [RolloutBuffers<'_>],
+        pols: &mut [PolicyRollout<'_>],
+        learners: &[Learner],
+        policy_seed: u64,
+        greedy: bool,
+    ) {
+        let n = self.n_envs();
+        assert_eq!(bufs.len(), n, "need one RolloutBuffers per fleet env");
+        assert_eq!(pols.len(), n, "need one PolicyRollout per fleet env");
+        assert_eq!(learners.len(), n, "need one Learner per fleet env");
+        let dims: Vec<(usize, usize, usize)> = (0..n)
+            .map(|e| {
+                let env = self.env(e);
+                (env.batch(), env.n_ports(), env.obs_dim())
+            })
+            .collect();
+        for (e, (&(b, p, d), (buf, pol))) in
+            dims.iter().zip(bufs.iter().zip(pols.iter())).enumerate()
+        {
+            assert_eq!(buf.obs.len(), (n_steps + 1) * b * d, "env {e}: obs must be [(T+1)*B*obs_dim]");
+            assert_eq!(buf.rewards.len(), n_steps * b, "env {e}: rewards must be [T*B]");
+            assert_eq!(buf.dones.len(), n_steps * b, "env {e}: dones must be [T*B]");
+            assert_eq!(buf.profits.len(), n_steps * b, "env {e}: profits must be [T*B]");
+            assert_eq!(pol.actions.len(), n_steps * b * p, "env {e}: actions must be [T*B*P]");
+            assert_eq!(pol.logp.len(), n_steps * b, "env {e}: logp must be [T*B]");
+            assert_eq!(pol.values.len(), n_steps * b, "env {e}: values must be [T*B]");
+            assert_eq!(learners[e].obs_dim, d, "env {e}: learner obs_dim mismatch");
+            assert_eq!(learners[e].n_ports(), p, "env {e}: learner n_ports mismatch");
+        }
+        let plan = self.plan_shards();
+        let total: usize = plan.iter().sum();
+        let width = total.min(self.threads.max(1));
+        let pool = if width > 1 { Some(self.ensure_pool(width)) } else { None };
+
+        let mut infos: Vec<Vec<StepInfo>> =
+            dims.iter().map(|&(b, _, _)| vec![StepInfo::default(); b]).collect();
+        // One forward scratch per planned shard of each family, allocated
+        // once and reused every step.
+        let mut scratch: Vec<Vec<MlpScratch>> = plan
+            .iter()
+            .zip(learners)
+            .map(|(&s, l)| (0..s.max(1)).map(|_| l.make_scratch()).collect())
+            .collect();
+
+        for ((env, buf), &(b, _, d)) in self.envs.iter().zip(bufs.iter_mut()).zip(&dims) {
+            env.observe_all(&mut buf.obs[..b * d]);
+        }
+        for t in 0..n_steps {
+            let mut tasks = Vec::with_capacity(total);
+            for (((((env_idx, env), buf), pol), info), scr) in self
+                .envs
+                .iter_mut()
+                .enumerate()
+                .zip(bufs.iter_mut())
+                .zip(pols.iter_mut())
+                .zip(infos.iter_mut())
+                .zip(scratch.iter_mut())
+            {
+                let (b, p, d) = dims[env_idx];
+                let (obs_t, obs_rest) = buf.obs[t * b * d..].split_at_mut(b * d);
+                let fused = FusedStep {
+                    learner: &learners[env_idx],
+                    seed: family_policy_seed(policy_seed, env_idx),
+                    t,
+                    greedy,
+                    obs_t: &*obs_t,
+                    actions: &mut pol.actions[t * b * p..(t + 1) * b * p],
+                    logp: &mut pol.logp[t * b..(t + 1) * b],
+                    values: &mut pol.values[t * b..(t + 1) * b],
+                    scratch: scr.as_mut_slice(),
+                };
+                let out = StepOut {
+                    obs: &mut obs_rest[..b * d],
+                    rewards: &mut buf.rewards[t * b..(t + 1) * b],
+                    dones: &mut buf.dones[t * b..(t + 1) * b],
+                    profits: &mut buf.profits[t * b..(t + 1) * b],
+                };
+                let acts = StepActs::Fused(fused);
+                tasks.extend(env.shard_tasks(acts, info, Some(out), plan[env_idx]));
             }
             run_fleet_tasks(pool.as_deref(), &mut tasks);
         }
@@ -239,21 +350,23 @@ impl FleetPpoTrainer {
             .collect();
 
         {
+            // Fused-policy pass: every family's forward+step shard tasks
+            // go out in one pooled dispatch per step; a fresh
+            // per-iteration seed keys the per-(lane, t) counter streams.
             let FleetPpoTrainer { fleet, learners, rng, .. } = self;
+            let policy_seed = rng.next_u64();
             let mut bufs: Vec<RolloutBuffers<'_>> =
                 eb.iter_mut().map(EnvBufs::as_rollout_buffers).collect();
-            fleet.rollout(t_len, &mut bufs, |e, t, obs_t, actions| {
-                let (b, p, _) = dims[e];
-                let pbe = &mut pb[e];
-                learners[e].sample_row(
-                    rng,
-                    obs_t,
-                    actions,
-                    &mut pbe.logp[t * b..(t + 1) * b],
-                    &mut pbe.val[t * b..(t + 1) * b],
-                );
-                pbe.act[t * b * p..(t + 1) * b * p].copy_from_slice(actions);
-            });
+            let mut pols: Vec<PolicyRollout<'_>> = pb
+                .iter_mut()
+                .map(|p| PolicyRollout {
+                    actions: &mut p.act,
+                    logp: &mut p.logp,
+                    values: &mut p.val,
+                })
+                .collect();
+            let ls = learners.as_slice();
+            fleet.rollout_fused(t_len, &mut bufs, &mut pols, ls, policy_seed, false);
         }
         self.env_steps += self.fleet.total_lanes() * t_len;
 
@@ -303,36 +416,104 @@ impl FleetPpoTrainer {
         out
     }
 
-    /// Greedy single-episode eval for family `e`: fresh B=1 scalar env on
-    /// that family's config and lane-0 scenario tables (Arc-shared).
-    pub fn eval_episode(&self, e: usize, seed: u64) -> (f32, f32) {
+    /// Greedy eval of family `e` on EVERY distinct scenario cell its lanes
+    /// train on — one fresh B=1 scalar env per cell (Arc-shared tables),
+    /// one full episode each. Replaces the old lane-0-only eval, which
+    /// always scored the single cell lane 0 happened to draw and so hid
+    /// distribution shift across the rest of the grid. Each entry names
+    /// the cell it came from and how many training lanes run it.
+    pub fn eval_cells(&self, e: usize, seed: u64) -> Vec<CellEval> {
         let fam = self.fleet.env(e);
-        let mut env = ScalarEnv::new(fam.cfg.clone(), fam.tables_arc(0), seed);
-        let mut obs = vec![0f32; self.learners[e].obs_dim];
-        let mut action = vec![0usize; self.learners[e].n_ports()];
-        let mut tot_r = 0f32;
-        let mut tot_p = 0f32;
-        for _ in 0..STEPS_PER_EPISODE {
-            env.observe(&mut obs);
-            self.learners[e].greedy_action(&obs, &mut action);
-            let info = env.step(&action);
-            tot_r += info.reward;
-            tot_p += info.profit;
+        let learner = &self.learners[e];
+        let counts = fam.scenario_lane_counts();
+        let mut scratch = learner.make_scratch();
+        let mut obs = vec![0f32; learner.obs_dim];
+        let mut action = vec![0usize; learner.n_ports()];
+        let mut out = Vec::with_capacity(fam.n_scenarios());
+        for cell in 0..fam.n_scenarios() {
+            // Decorrelate cells without losing seed-level reproducibility.
+            let env_seed = seed ^ ((cell as u64) << 32);
+            let mut env = ScalarEnv::new(fam.cfg.clone(), fam.scenario_tables(cell), env_seed);
+            let mut tot_r = 0f32;
+            let mut tot_p = 0f32;
+            for _ in 0..STEPS_PER_EPISODE {
+                env.observe(&mut obs);
+                learner.greedy_lane(&obs, &mut action, &mut scratch);
+                let info = env.step(&action);
+                tot_r += info.reward;
+                tot_p += info.profit;
+            }
+            out.push(CellEval {
+                family: self.fleet.label(e).to_string(),
+                family_idx: e,
+                cell: self.fleet.cell_label(e, cell).to_string(),
+                cell_idx: cell,
+                lanes: counts[cell],
+                reward: tot_r,
+                profit: tot_p,
+            });
         }
-        (tot_r, tot_p)
+        out
+    }
+
+    /// [`FleetPpoTrainer::eval_cells`] over every family, flattened.
+    pub fn eval_all_cells(&self, seed: u64) -> Vec<CellEval> {
+        (0..self.fleet.n_envs()).flat_map(|e| self.eval_cells(e, seed)).collect()
     }
 }
 
-/// Measure fused fleet-rollout throughput with random actions: one warm
-/// pass then one timed pass over pre-drawn action chunks (same protocol
-/// as [`crate::env::vector::measure_throughput`], so fleet rows in
-/// BENCH_fleet.json are comparable to the single-env sweep). Returns
-/// `(env-steps/sec, seconds per 100k env steps, total lanes, families)`.
+/// One greedy-eval number with its provenance: which station family and
+/// which scenario cell (country × year × traffic × profile) produced it,
+/// plus how many training lanes run that cell.
+#[derive(Debug, Clone)]
+pub struct CellEval {
+    pub family: String,
+    pub family_idx: usize,
+    pub cell: String,
+    pub cell_idx: usize,
+    pub lanes: usize,
+    pub reward: f32,
+    pub profit: f32,
+}
+
+/// Which policy drives a fleet throughput measurement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetBenchPolicy {
+    /// Pre-drawn random actions copied per step (env runtime alone).
+    Random,
+    /// Real per-family MLPs sampled serially on the caller thread via
+    /// `sample_row` inside the [`Fleet::rollout`] closure (the pre-fused
+    /// training path, kept as the comparator).
+    SerialNet,
+    /// The same MLPs forwarded + sampled inside the shard tasks
+    /// ([`Fleet::rollout_fused`], the default training path).
+    FusedNet,
+}
+
+impl FleetBenchPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FleetBenchPolicy::Random => "fleet-rollout",
+            FleetBenchPolicy::SerialNet => "fleet-policy-serial",
+            FleetBenchPolicy::FusedNet => "fleet-policy-fused",
+        }
+    }
+}
+
+/// Measure fused fleet-rollout throughput: one warm pass then one timed
+/// pass over fixed-length chunks (same protocol as
+/// [`crate::env::vector::measure_throughput`], so fleet rows in
+/// BENCH_fleet.json are comparable to the single-env sweep). `policy`
+/// picks random actions or real per-family nets (serial vs fused —
+/// identical nets, so the row pair isolates where the forward runs).
+/// Returns `(env-steps/sec, seconds per 100k env steps, total lanes,
+/// families)`.
 pub fn measure_fleet_throughput(
     spec: &FleetSpec,
     store: Option<&DataStore>,
     threads: usize,
     budget: usize,
+    policy: FleetBenchPolicy,
 ) -> Result<(f64, f64, usize, usize)> {
     let mut fleet = Fleet::from_spec(spec, store)?;
     fleet.set_threads(threads);
@@ -346,31 +527,99 @@ pub fn measure_fleet_throughput(
             (env.batch(), env.n_ports(), env.obs_dim())
         })
         .collect();
+    // Only the chosen policy's inputs are built: random action chunks for
+    // Random, nets + policy buffers for the two net paths (at scale=16
+    // the unused half would be megabytes of dead allocation + RNG work).
     let mut arng = Rng::new(23);
-    let actions: Vec<Vec<usize>> = (0..n)
-        .map(|e| {
-            let (b, p, _) = dims[e];
-            let nvec = fleet.env(e).action_nvec();
-            (0..t_chunk * b * p)
-                .map(|k| arng.below(nvec[k % p] as u32) as usize)
-                .collect()
-        })
-        .collect();
+    let actions: Vec<Vec<usize>> = if policy == FleetBenchPolicy::Random {
+        (0..n)
+            .map(|e| {
+                let (b, p, _) = dims[e];
+                let nvec = fleet.env(e).action_nvec();
+                (0..t_chunk * b * p)
+                    .map(|k| arng.below(nvec[k % p] as u32) as usize)
+                    .collect()
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let learners: Vec<Learner> = if policy == FleetBenchPolicy::Random {
+        Vec::new()
+    } else {
+        (0..n)
+            .map(|e| {
+                let env = fleet.env(e);
+                Learner::new(&mut arng, env.obs_dim(), BENCH_POLICY_HIDDEN, env.action_nvec())
+            })
+            .collect()
+    };
+    struct PolBufs {
+        act: Vec<usize>,
+        logp: Vec<f32>,
+        val: Vec<f32>,
+    }
+    let mut pb: Vec<PolBufs> = if policy == FleetBenchPolicy::Random {
+        Vec::new()
+    } else {
+        dims.iter()
+            .map(|&(b, p, _)| PolBufs {
+                act: vec![0usize; t_chunk * b * p],
+                logp: vec![0.0; t_chunk * b],
+                val: vec![0.0; t_chunk * b],
+            })
+            .collect()
+    };
     let mut eb: Vec<EnvBufs> =
         dims.iter().map(|&(b, _, d)| EnvBufs::new(b, d, t_chunk)).collect();
-    let mut pass = |fleet: &mut Fleet, eb: &mut [EnvBufs]| {
-        for _ in 0..n_chunks {
+    let mut srng = Rng::new(71);
+    let mut pass = |fleet: &mut Fleet, eb: &mut [EnvBufs], pb: &mut [PolBufs]| {
+        for chunk in 0..n_chunks {
             let mut bufs: Vec<RolloutBuffers<'_>> =
                 eb.iter_mut().map(EnvBufs::as_rollout_buffers).collect();
-            fleet.rollout(t_chunk, &mut bufs, |e, t, _obs, act| {
-                let (b, p, _) = dims[e];
-                act.copy_from_slice(&actions[e][t * b * p..(t + 1) * b * p]);
-            });
+            match policy {
+                FleetBenchPolicy::Random => {
+                    fleet.rollout(t_chunk, &mut bufs, |e, t, _obs, act| {
+                        let (b, p, _) = dims[e];
+                        act.copy_from_slice(&actions[e][t * b * p..(t + 1) * b * p]);
+                    });
+                }
+                FleetBenchPolicy::SerialNet => {
+                    let learners = &learners;
+                    let srng = &mut srng;
+                    let pb = &mut *pb;
+                    fleet.rollout(t_chunk, &mut bufs, |e, t, obs_t, act| {
+                        let (b, p, _) = dims[e];
+                        let pbe = &mut pb[e];
+                        learners[e].sample_row(
+                            srng,
+                            obs_t,
+                            act,
+                            &mut pbe.logp[t * b..(t + 1) * b],
+                            &mut pbe.val[t * b..(t + 1) * b],
+                        );
+                        pbe.act[t * b * p..(t + 1) * b * p].copy_from_slice(act);
+                    });
+                }
+                FleetBenchPolicy::FusedNet => {
+                    let mut pols: Vec<PolicyRollout<'_>> = pb
+                        .iter_mut()
+                        .map(|p| PolicyRollout {
+                            actions: &mut p.act,
+                            logp: &mut p.logp,
+                            values: &mut p.val,
+                        })
+                        .collect();
+                    fleet.rollout_fused(
+                        t_chunk, &mut bufs, &mut pols, &learners, chunk as u64, false,
+                    );
+                }
+            }
         }
     };
-    pass(&mut fleet, &mut eb); // warm (also builds the pool)
+    pass(&mut fleet, &mut eb, &mut pb); // warm (also builds the pool)
     let t0 = Instant::now();
-    pass(&mut fleet, &mut eb);
+    pass(&mut fleet, &mut eb, &mut pb);
     let el = t0.elapsed().as_secs_f64();
     let steps = (n_chunks * t_chunk * total_lanes) as f64;
     Ok((steps / el, el * 100_000.0 / steps, total_lanes, n))
@@ -402,20 +651,36 @@ mod tests {
             assert!(s.entropy > 0.0, "{}: entropy", s.label);
         }
         assert_eq!(tr.env_steps, lanes * 24);
-        // Greedy eval runs on every family, including V2G and
-        // battery-less configs.
+        // Greedy eval runs on every family and every scenario cell,
+        // including V2G and battery-less configs, and names each cell.
         for e in 0..tr.fleet.n_envs() {
-            let (r, p) = tr.eval_episode(e, 123);
-            assert!(r.is_finite() && p.is_finite());
+            let evals = tr.eval_cells(e, 123);
+            assert_eq!(evals.len(), tr.fleet.env(e).n_scenarios());
+            let lane_sum: usize = evals.iter().map(|c| c.lanes).sum();
+            assert_eq!(lane_sum, tr.fleet.env(e).batch(), "cell lane counts must cover the batch");
+            for c in &evals {
+                assert!(c.reward.is_finite() && c.profit.is_finite(), "{}/{}", c.family, c.cell);
+                assert!(!c.cell.is_empty());
+                assert!(c.lanes > 0, "{}: cell {} has no training lanes", c.family, c.cell);
+            }
         }
+        // The demo's first family trains on a 4-cell grid — per-cell eval
+        // must surface all of them, not just lane 0's.
+        assert!(tr.fleet.env(0).n_scenarios() > 1);
+        assert_eq!(tr.eval_all_cells(7).len(),
+            (0..tr.fleet.n_envs()).map(|e| tr.fleet.env(e).n_scenarios()).sum::<usize>());
     }
 
     #[test]
     fn fleet_throughput_probe_runs() {
-        let (sps, s100k, lanes, fams) =
-            measure_fleet_throughput(&FleetSpec::demo(2, 1), None, 2, 2_000).unwrap();
-        assert!(sps > 0.0 && s100k > 0.0);
-        assert_eq!(lanes, 20);
-        assert_eq!(fams, 3);
+        for policy in
+            [FleetBenchPolicy::Random, FleetBenchPolicy::SerialNet, FleetBenchPolicy::FusedNet]
+        {
+            let (sps, s100k, lanes, fams) =
+                measure_fleet_throughput(&FleetSpec::demo(2, 1), None, 2, 2_000, policy).unwrap();
+            assert!(sps > 0.0 && s100k > 0.0, "{}", policy.label());
+            assert_eq!(lanes, 20);
+            assert_eq!(fams, 3);
+        }
     }
 }

@@ -269,19 +269,30 @@ fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str) -> Result<()> {
         tr.env_steps,
         tr.env_steps as f64 / el
     );
+    // Greedy eval per (family × scenario cell): every distinct cell a
+    // family trains on gets its own number, with the cell named — so
+    // distribution shift across the grid is visible instead of hidden
+    // behind lane 0's cell.
     for e in 0..tr.fleet.n_envs() {
-        let evals: Vec<(f32, f32)> =
-            (0..cfg.eval_seeds as u64).map(|s| tr.eval_episode(e, 1000 + s)).collect();
-        let n = evals.len().max(1) as f32;
-        let (r, p): (f32, f32) =
-            evals.iter().fold((0.0, 0.0), |(ar, ap), (r, p)| (ar + r, ap + p));
-        println!(
-            "eval (greedy, {} seeds) {:<24} ep_reward={:.3} ep_profit={:.3}",
-            evals.len(),
-            tr.fleet.label(e),
-            r / n,
-            p / n
-        );
+        let per_seed: Vec<Vec<chargax::fleet::CellEval>> =
+            (0..cfg.eval_seeds as u64).map(|s| tr.eval_cells(e, 1000 + s)).collect();
+        if per_seed.is_empty() {
+            continue; // eval_seeds = 0: eval disabled, same as the non-fleet path
+        }
+        let n = per_seed.len() as f32;
+        for ci in 0..per_seed[0].len() {
+            let r = per_seed.iter().map(|v| v[ci].reward).sum::<f32>() / n;
+            let p = per_seed.iter().map(|v| v[ci].profit).sum::<f32>() / n;
+            println!(
+                "eval (greedy, {} seeds) {:<24} cell {:<28} lanes={:<3} ep_reward={:.3} ep_profit={:.3}",
+                per_seed.len(),
+                tr.fleet.label(e),
+                per_seed[0][ci].cell,
+                per_seed[0][ci].lanes,
+                r,
+                p
+            );
+        }
     }
     Ok(())
 }

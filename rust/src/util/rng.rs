@@ -130,6 +130,25 @@ impl Rng {
     }
 }
 
+/// Source of uniform draws in [0, 1): lets samplers (e.g. the PPO
+/// categorical heads) run off either the stateful [`Rng`] or a
+/// counter-based per-(lane, step) [`CounterRng`] stream.
+pub trait Uniform01 {
+    fn u01(&mut self) -> f32;
+}
+
+impl Uniform01 for Rng {
+    fn u01(&mut self) -> f32 {
+        self.f32()
+    }
+}
+
+impl Uniform01 for CounterRng {
+    fn u01(&mut self) -> f32 {
+        self.f32()
+    }
+}
+
 /// SplitMix64 finalizer (also the key-derivation hash for [`CounterRng`]).
 fn splitmix64(mut z: u64) -> u64 {
     z = z.wrapping_add(0x9e3779b97f4a7c15);
@@ -160,6 +179,20 @@ impl CounterRng {
     pub fn derive(seed: u64, lane: u64) -> Self {
         CounterRng {
             key: splitmix64(splitmix64(seed) ^ lane.wrapping_mul(0xd1342543de82ef95)),
+            ctr: 0,
+        }
+    }
+
+    /// Independent child stream keyed by two indices — e.g. (lane, step)
+    /// for fused policy sampling, where a lane's action stream at step t
+    /// must be a pure function of `(seed, lane, t)` so shard placement and
+    /// thread count can never perturb it.
+    pub fn derive2(seed: u64, a: u64, b: u64) -> Self {
+        CounterRng {
+            key: splitmix64(
+                splitmix64(splitmix64(seed) ^ a.wrapping_mul(0xd1342543de82ef95))
+                    ^ b.wrapping_mul(0x2545f4914f6cdd1d),
+            ),
             ctr: 0,
         }
     }
@@ -341,6 +374,25 @@ mod tests {
         let again: Vec<u64> = (0..64).map(|_| b.next_u64()).collect();
         assert_eq!(reference, again);
         assert_ne!(reference[0], CounterRng::new(100).next_u64());
+    }
+
+    #[test]
+    fn derive2_streams_are_deterministic_and_distinct() {
+        let a: Vec<u64> = {
+            let mut r = CounterRng::derive2(9, 3, 17);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = CounterRng::derive2(9, 3, 17);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        // Any coordinate change moves the stream.
+        assert_ne!(a[0], CounterRng::derive2(10, 3, 17).next_u64());
+        assert_ne!(a[0], CounterRng::derive2(9, 4, 17).next_u64());
+        assert_ne!(a[0], CounterRng::derive2(9, 3, 18).next_u64());
+        // (a, b) is not symmetric: lane 3 step 17 != lane 17 step 3.
+        assert_ne!(a[0], CounterRng::derive2(9, 17, 3).next_u64());
     }
 
     #[test]

@@ -234,3 +234,157 @@ fn spec_built_fleet_rolls_out_and_shares_tables() {
         }
     });
 }
+
+/// Per-family learners with deterministic weights (fresh Rng per call, so
+/// fleet and reference builds see identical nets).
+fn build_learners(specs: &[(StationConfig, usize, u64)]) -> Vec<chargax::baselines::ppo::Learner> {
+    use chargax::baselines::ppo::Learner;
+    let mut lrng = Rng::new(17);
+    specs
+        .iter()
+        .map(|(cfg, b, s)| {
+            let env = build_env(cfg, *b, *s);
+            Learner::new(&mut lrng, env.obs_dim(), 32, env.action_nvec())
+        })
+        .collect()
+}
+
+struct PolBufs {
+    act: Vec<usize>,
+    logp: Vec<f32>,
+    val: Vec<f32>,
+}
+
+fn alloc_pol(env: &VectorEnv, t_len: usize) -> PolBufs {
+    let (b, p) = (env.batch(), env.n_ports());
+    PolBufs {
+        act: vec![0usize; t_len * b * p],
+        logp: vec![0.0; t_len * b],
+        val: vec![0.0; t_len * b],
+    }
+}
+
+/// ISSUE 4 tentpole invariance, fleet half: `Fleet::rollout_fused` (every
+/// family's forward+step shard tasks in ONE pooled dispatch per step)
+/// must be bit-identical to rolling each member env out independently via
+/// `VectorEnv::rollout_fused` with the same learners and per-family
+/// seeds, for thread counts {1, 4, max} — env-side AND policy-side
+/// buffers.
+#[test]
+fn fleet_fused_policy_matches_independent_envs_at_every_thread_count() {
+    use chargax::env::vector::PolicyRollout;
+    use chargax::fleet::family_policy_seed;
+
+    let t_len = 60;
+    let base_seed = 0xF00D;
+    let specs = family_specs();
+    let learners = build_learners(&specs);
+
+    // Reference: each env rolled out fused on its own (its private pool),
+    // with the SAME per-family policy seed the fleet path derives.
+    let mut reference: Vec<(Bufs, PolBufs)> = Vec::new();
+    for (e, (cfg, b, s)) in specs.iter().enumerate() {
+        let mut env = build_env(cfg, *b, *s);
+        let mut bufs = alloc(&env, t_len);
+        let mut pb = alloc_pol(&env, t_len);
+        {
+            let mut rb = RolloutBuffers {
+                obs: &mut bufs.obs,
+                rewards: &mut bufs.rew,
+                dones: &mut bufs.done,
+                profits: &mut bufs.profit,
+            };
+            let mut pol = PolicyRollout {
+                actions: &mut pb.act,
+                logp: &mut pb.logp,
+                values: &mut pb.val,
+            };
+            env.rollout_fused(
+                t_len, &mut rb, &mut pol, &learners[e],
+                family_policy_seed(base_seed, e), false,
+            );
+        }
+        reference.push((bufs, pb));
+    }
+
+    let max_threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    for threads in [1usize, 4, max_threads] {
+        let envs: Vec<VectorEnv> =
+            specs.iter().map(|(c, b, s)| build_env(c, *b, *s)).collect();
+        let mut fleet = Fleet::from_envs(
+            envs,
+            vec!["mixed".into(), "dc-v2g".into(), "ac-lot".into()],
+        )
+        .unwrap();
+        fleet.set_threads(threads);
+        let mut bufs: Vec<Bufs> =
+            (0..fleet.n_envs()).map(|e| alloc(fleet.env(e), t_len)).collect();
+        let mut pbs: Vec<PolBufs> =
+            (0..fleet.n_envs()).map(|e| alloc_pol(fleet.env(e), t_len)).collect();
+        {
+            let mut rbs: Vec<RolloutBuffers<'_>> = bufs
+                .iter_mut()
+                .map(|b| RolloutBuffers {
+                    obs: &mut b.obs,
+                    rewards: &mut b.rew,
+                    dones: &mut b.done,
+                    profits: &mut b.profit,
+                })
+                .collect();
+            let mut pols: Vec<PolicyRollout<'_>> = pbs
+                .iter_mut()
+                .map(|p| PolicyRollout {
+                    actions: &mut p.act,
+                    logp: &mut p.logp,
+                    values: &mut p.val,
+                })
+                .collect();
+            fleet.rollout_fused(t_len, &mut rbs, &mut pols, &learners, base_seed, false);
+        }
+        for (e, ((got, gpol), (want, wpol))) in
+            bufs.iter().zip(&pbs).zip(reference.iter().map(|(a, b)| (a, b))).enumerate()
+        {
+            assert_eq!(gpol.act, wpol.act, "threads={threads} env {e}: sampled actions");
+            assert!(
+                got.obs == want.obs,
+                "threads={threads} env {e}: observations diverged from independent rollout"
+            );
+            assert_eq!(got.rew, want.rew, "threads={threads} env {e}: rewards");
+            assert_eq!(got.done, want.done, "threads={threads} env {e}: dones");
+            assert_eq!(got.profit, want.profit, "threads={threads} env {e}: profits");
+            assert_eq!(gpol.logp, wpol.logp, "threads={threads} env {e}: logp");
+            assert_eq!(gpol.val, wpol.val, "threads={threads} env {e}: values");
+        }
+    }
+}
+
+/// Per-cell greedy eval covers every distinct scenario cell of every
+/// family (not just lane 0's), names each cell, and accounts every
+/// training lane to exactly one cell.
+#[test]
+fn fleet_eval_reports_every_scenario_cell() {
+    use chargax::baselines::ppo::PpoParams;
+    use chargax::fleet::{FleetPpoTrainer, FleetSpec};
+
+    let fleet = Fleet::from_spec(&FleetSpec::demo(11, 1), None).unwrap();
+    let hp = PpoParams { hidden: 16, ..Default::default() };
+    let tr = FleetPpoTrainer::new(hp, fleet, 3);
+    // The demo's first family spans a 4-cell grid (2 years x 2 traffics):
+    // the old lane-0-only eval scored exactly one of these.
+    assert_eq!(tr.fleet.env(0).n_scenarios(), 4);
+    for e in 0..tr.fleet.n_envs() {
+        let evals = tr.eval_cells(e, 42);
+        assert_eq!(evals.len(), tr.fleet.env(e).n_scenarios(), "family {e}");
+        let lane_sum: usize = evals.iter().map(|c| c.lanes).sum();
+        assert_eq!(lane_sum, tr.fleet.env(e).batch(), "family {e}: lanes");
+        let mut names: Vec<&str> = evals.iter().map(|c| c.cell.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), evals.len(), "family {e}: duplicate cell names");
+        for c in &evals {
+            assert!(c.reward.is_finite() && c.profit.is_finite(), "{}/{}", c.family, c.cell);
+            assert!(c.cell.contains('/'), "family {e}: cell '{}' not a grid name", c.cell);
+        }
+    }
+}

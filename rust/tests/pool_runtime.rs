@@ -4,9 +4,10 @@
 
 use std::sync::Arc;
 
+use chargax::baselines::ppo::Learner;
 use chargax::env::scalar::{ScalarEnv, ScenarioTables, StepInfo, STEPS_PER_EPISODE};
 use chargax::env::tree::StationConfig;
-use chargax::env::vector::{RolloutBuffers, VectorEnv};
+use chargax::env::vector::{PolicyRollout, RolloutBuffers, VectorEnv};
 use chargax::util::prop::Prop;
 use chargax::util::rng::Rng;
 
@@ -226,4 +227,107 @@ fn fused_rollout_buffers_match_manual_loop_across_episode_boundary() {
         assert_eq!(&obs[(t + 1) * b * d..(t + 2) * b * d], want.as_slice(), "obs row {}", t + 1);
     }
     assert!(saw_done, "rollout must have crossed an episode boundary");
+}
+
+/// Everything one fused-policy rollout produces, for bitwise comparison.
+struct FusedRun {
+    obs: Vec<f32>,
+    rewards: Vec<f32>,
+    dones: Vec<f32>,
+    profits: Vec<f32>,
+    actions: Vec<usize>,
+    logp: Vec<f32>,
+    values: Vec<f32>,
+}
+
+/// One fused-policy rollout on a fresh env/learner pair built from fixed
+/// seeds (so every call sees identical weights and lane streams).
+fn fused_run(threads: usize, greedy: bool, b: usize, t_len: usize) -> FusedRun {
+    let tables = Arc::new(ScenarioTables::synthetic(1.3));
+    let mut env = VectorEnv::new(StationConfig::default(), tables, b, 55);
+    env.set_threads(threads);
+    let (p, d) = (env.n_ports(), env.obs_dim());
+    let mut lrng = Rng::new(7);
+    let learner = Learner::new(&mut lrng, d, 32, env.action_nvec());
+    let mut run = FusedRun {
+        obs: vec![0.0; (t_len + 1) * b * d],
+        rewards: vec![0.0; t_len * b],
+        dones: vec![0.0; t_len * b],
+        profits: vec![0.0; t_len * b],
+        actions: vec![0usize; t_len * b * p],
+        logp: vec![0.0; t_len * b],
+        values: vec![0.0; t_len * b],
+    };
+    let mut bufs = RolloutBuffers {
+        obs: &mut run.obs,
+        rewards: &mut run.rewards,
+        dones: &mut run.dones,
+        profits: &mut run.profits,
+    };
+    let mut pol = PolicyRollout {
+        actions: &mut run.actions,
+        logp: &mut run.logp,
+        values: &mut run.values,
+    };
+    env.rollout_fused(t_len, &mut bufs, &mut pol, &learner, 0xABCD, greedy);
+    run
+}
+
+/// ISSUE 4 tentpole invariance: the fused-policy rollout (policy forward
+/// + sampling INSIDE the shard tasks) must be bit-identical across
+/// `--threads` {1, 4, max}. Per-(lane, t) counter sampling means shard
+/// placement cannot perturb the action stream; B=96 keeps the batch above
+/// the sharding threshold so threads=4/max actually shard.
+#[test]
+fn fused_policy_rollout_is_thread_count_invariant() {
+    let (b, t_len) = (96usize, 40usize);
+    let max_threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    for greedy in [false, true] {
+        let want = fused_run(1, greedy, b, t_len);
+        for threads in [4usize, max_threads] {
+            let got = fused_run(threads, greedy, b, t_len);
+            assert_eq!(got.actions, want.actions, "threads={threads} greedy={greedy}: actions");
+            assert_eq!(got.obs, want.obs, "threads={threads} greedy={greedy}: observations");
+            assert_eq!(got.rewards, want.rewards, "threads={threads} greedy={greedy}: rewards");
+            assert_eq!(got.dones, want.dones, "threads={threads} greedy={greedy}: dones");
+            assert_eq!(got.profits, want.profits, "threads={threads} greedy={greedy}: profits");
+            assert_eq!(got.logp, want.logp, "threads={threads} greedy={greedy}: logp");
+            assert_eq!(got.values, want.values, "threads={threads} greedy={greedy}: values");
+        }
+    }
+}
+
+/// The fused-policy rollout agrees with a manual loop that replays the
+/// recorded actions through `step_all` — the policy moved into the shards
+/// must not change what the env computes.
+#[test]
+fn fused_policy_rollout_matches_replayed_actions() {
+    let (b, t_len) = (8usize, 50usize);
+    let run = fused_run(3, false, b, t_len);
+    let tables = Arc::new(ScenarioTables::synthetic(1.3));
+    let mut env = VectorEnv::new(StationConfig::default(), tables, b, 55);
+    let (p, d) = (env.n_ports(), env.obs_dim());
+    let mut infos = vec![StepInfo::default(); b];
+    let mut want_obs = vec![0f32; b * d];
+    env.observe_all(&mut want_obs);
+    assert_eq!(&run.obs[..b * d], want_obs.as_slice(), "row 0");
+    for t in 0..t_len {
+        env.step_all(&run.actions[t * b * p..(t + 1) * b * p], &mut infos);
+        for lane in 0..b {
+            assert_eq!(run.rewards[t * b + lane], infos[lane].reward, "t={t} lane {lane}");
+            assert_eq!(
+                run.dones[t * b + lane],
+                infos[lane].done as i32 as f32,
+                "t={t} lane {lane}"
+            );
+        }
+        env.observe_all(&mut want_obs);
+        assert_eq!(
+            &run.obs[(t + 1) * b * d..(t + 2) * b * d],
+            want_obs.as_slice(),
+            "obs row {}",
+            t + 1
+        );
+    }
 }

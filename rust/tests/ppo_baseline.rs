@@ -93,3 +93,23 @@ fn greedy_eval_runs_full_episode() {
     let (r, p) = tr.eval_episode(99);
     assert!(r.is_finite() && p.is_finite());
 }
+
+/// Regression (ISSUE 4): an odd B*T with n_minibatches=2 used to silently
+/// drop one sample per epoch (truncating `bsz / n` split). The update must
+/// consume the full batch and stay finite.
+#[test]
+fn ppo_update_handles_odd_batch_sizes() {
+    let params = PpoParams {
+        num_envs: 3,
+        rollout_steps: 7, // bsz = 21, indivisible by 2
+        n_minibatches: 2,
+        update_epochs: 2,
+        hidden: 16,
+        ..Default::default()
+    };
+    let mut tr = PpoTrainer::new(params, StationConfig::default(), tables(), 8);
+    let s = tr.iteration();
+    assert!(s.total_loss.is_finite());
+    assert!(s.entropy > 0.0);
+    assert_eq!(tr.env_steps, 21);
+}

@@ -2,11 +2,13 @@
 """Perf ratchet: compare a fresh BENCH_table2.json against the committed
 BENCH_baseline.json and warn on steps/sec regressions.
 
-The gated row is the native-vector pool path at B=256 (present in both the
-full sweep and the CI `--smoke` sweep). CI runner variance is still being
-characterized, so a regression past the threshold emits a GitHub
-``::warning`` annotation and exits 0 — flip ``--strict`` once the variance
-envelope is known and the ratchet should fail the job instead.
+Two rows are gated, both at B=256 (present in the full sweep and the CI
+``--smoke`` sweep): the ``native-vector`` pool path (raw env runtime) and
+the ``policy-fused`` path (shard-parallel MLP policy + env, the default
+training rollout). CI runner variance is still being characterized, so a
+regression past the threshold emits a GitHub ``::warning`` annotation and
+exits 0 — flip ``--strict`` once the variance envelope is known and the
+ratchet should fail the job instead.
 
 Usage:
   scripts/bench_ratchet.py [--current BENCH_table2.json]
@@ -24,6 +26,10 @@ import argparse
 import json
 import sys
 
+# Variant-name prefixes of the gated rows (and of the rows kept by
+# --update). Each is compared independently at the gated batch size.
+GATED_PREFIXES = ("native-vector", "policy-fused")
+
 
 def load_rows(path: str) -> list[dict]:
     with open(path) as f:
@@ -34,20 +40,53 @@ def load_rows(path: str) -> list[dict]:
     return rows
 
 
-def pick_row(rows: list[dict], batch: int) -> dict | None:
-    """The native-vector (pool step_all) row at the gated batch size; falls
-    back to the largest native-vector batch present."""
-    native = [
+def pick_row(rows: list[dict], prefix: str, batch: int) -> dict | None:
+    """The `prefix` row at the gated batch size; falls back to the largest
+    batch present for that prefix."""
+    matching = [
         r
         for r in rows
-        if str(r.get("variant", "")).startswith("native-vector") and "batch" in r
+        if str(r.get("variant", "")).startswith(prefix) and "batch" in r
     ]
-    if not native:
+    if not matching:
         return None
-    exact = [r for r in native if int(r["batch"]) == batch]
+    exact = [r for r in matching if int(r["batch"]) == batch]
     if exact:
         return exact[0]
-    return max(native, key=lambda r: int(r["batch"]))
+    return max(matching, key=lambda r: int(r["batch"]))
+
+
+def compare_one(prefix: str, base_rows: list[dict], cur_rows: list[dict],
+                batch: int, threshold: float) -> bool:
+    """Compare one gated prefix; returns True when it regressed past the
+    threshold."""
+    base = pick_row(base_rows, prefix, batch)
+    cur = pick_row(cur_rows, prefix, batch)
+    if base is None:
+        print(f"bench ratchet: baseline has no {prefix} rows yet — "
+              "populate it with scripts/bench_ratchet.py --update on a "
+              "trusted run and commit BENCH_baseline.json")
+        return False
+    if cur is None:
+        print(f"::warning::bench ratchet: current run has no {prefix} rows")
+        return False
+    if int(base["batch"]) != int(cur["batch"]):
+        print(f"bench ratchet: {prefix} batch mismatch (baseline "
+              f"B={base['batch']}, current B={cur['batch']}); skipping")
+        return False
+    b = float(base["steps_per_sec"])
+    c = float(cur["steps_per_sec"])
+    delta = (c - b) / b if b > 0 else 0.0
+    label = f"{prefix} B={int(cur['batch'])}"
+    print(f"bench ratchet: {label}: baseline {b:,.0f} steps/s, "
+          f"current {c:,.0f} steps/s ({delta:+.1%})")
+    if delta < -threshold:
+        msg = (f"bench ratchet: {label} regressed {-delta:.1%} "
+               f"(threshold {threshold:.0%}): "
+               f"{b:,.0f} -> {c:,.0f} steps/s")
+        print(f"::warning::{msg}")
+        return True
+    return False
 
 
 def main() -> int:
@@ -70,17 +109,19 @@ def main() -> int:
         return 0
 
     if args.update:
-        cur = pick_row(cur_rows, args.batch)
-        if cur is None:
-            raise SystemExit(f"{args.current} has no native-vector rows to baseline")
+        kept = [r for r in cur_rows
+                if str(r.get("variant", "")).startswith(GATED_PREFIXES)]
+        if not kept:
+            raise SystemExit(
+                f"{args.current} has no {'/'.join(GATED_PREFIXES)} rows to baseline")
         payload = {
             "note": (
-                "Perf-ratchet baseline: native-vector steps/sec rows from a "
-                "trusted run of `cargo bench --bench table2_throughput -- "
-                "--smoke`. Refresh with scripts/bench_ratchet.py --update."
+                "Perf-ratchet baseline: native-vector and policy-fused "
+                "steps/sec rows from a trusted run of `cargo bench --bench "
+                "table2_throughput -- --smoke`. Refresh with "
+                "scripts/bench_ratchet.py --update."
             ),
-            "rows": [r for r in cur_rows
-                     if str(r.get("variant", "")).startswith("native-vector")],
+            "rows": kept,
         }
         with open(args.baseline, "w") as f:
             json.dump(payload, f, indent=2)
@@ -94,33 +135,12 @@ def main() -> int:
         print(f"bench ratchet: no baseline at {args.baseline}; nothing to compare")
         return 0
 
-    base = pick_row(base_rows, args.batch)
-    cur = pick_row(cur_rows, args.batch)
-    if base is None:
-        print("bench ratchet: baseline has no native-vector rows yet — "
-              "populate it with scripts/bench_ratchet.py --update on a "
-              "trusted run and commit BENCH_baseline.json")
-        return 0
-    if cur is None:
-        print(f"::warning::bench ratchet: {args.current} has no native-vector rows")
-        return 0
-    if int(base["batch"]) != int(cur["batch"]):
-        print(f"bench ratchet: batch mismatch (baseline B={base['batch']}, "
-              f"current B={cur['batch']}); skipping comparison")
-        return 0
-
-    b = float(base["steps_per_sec"])
-    c = float(cur["steps_per_sec"])
-    delta = (c - b) / b if b > 0 else 0.0
-    label = f"native-vector B={int(cur['batch'])}"
-    print(f"bench ratchet: {label}: baseline {b:,.0f} steps/s, "
-          f"current {c:,.0f} steps/s ({delta:+.1%})")
-    if delta < -args.threshold:
-        msg = (f"bench ratchet: {label} regressed {-delta:.1%} "
-               f"(threshold {args.threshold:.0%}): "
-               f"{b:,.0f} -> {c:,.0f} steps/s")
-        print(f"::warning::{msg}")
-        return 1 if args.strict else 0
+    regressed = False
+    for prefix in GATED_PREFIXES:
+        regressed |= compare_one(prefix, base_rows, cur_rows,
+                                 args.batch, args.threshold)
+    if regressed and args.strict:
+        return 1
     return 0
 
 
