@@ -10,7 +10,10 @@
 //! rollout entry point (`native-rollout`) — and the MLP-policy pair
 //! `policy-serial` / `policy-fused` at B ∈ {256, 1024, 4096} (caller
 //! -thread `sample_row` vs shard-side `rollout_fused`; same net, so the
-//! pair records the shard-parallel policy win). The PJRT rows run only
+//! pair records the shard-parallel policy win), plus the PPO-update pair
+//! `update-serial` / `update-sharded` at B ∈ {256, 1024} (caller-thread
+//! minibatch backward vs gradient chunks strided over the pool — the
+//! shard-parallel learner win). The PJRT rows run only
 //! when AOT artifacts and a real PJRT runtime are present. Writes the
 //! machine-readable perf trajectory to `BENCH_table2.json` at the repo
 //! root so the numbers are tracked across PRs; the fleet sweep (random +
@@ -23,7 +26,7 @@
 use std::sync::Arc;
 
 use chargax::baselines::policies::{self, RandomPolicy};
-use chargax::baselines::ppo::{PpoParams, PpoTrainer};
+use chargax::baselines::ppo::{self, PpoParams, PpoTrainer};
 use chargax::coordinator::session::{RandomRollout, TrainSession};
 use chargax::data::{DataStore, Scenario};
 use chargax::env::scalar::{ScalarEnv, ScenarioTables};
@@ -49,6 +52,20 @@ fn row(name: &str, batch: usize, steps: f64, seconds: f64) -> BenchRow {
         batch,
         steps_per_sec: steps / seconds,
         s_per_100k: seconds * 100_000.0 / steps,
+    }
+}
+
+/// Record one batch's (base, contrast) speedup pair: the base path pushes
+/// `(b, v, 0.0)`, the contrast path fills slot 2 of the matching batch.
+/// Shared by every paired sweep (pool/scoped, policy serial/fused, update
+/// serial/sharded) so the find-and-fill bookkeeping exists once.
+fn pair_fill(pairs: &mut Vec<(usize, f64, f64)>, b: usize, v: f64, contrast: bool) {
+    if contrast {
+        if let Some(e) = pairs.iter_mut().find(|e| e.0 == b) {
+            e.2 = v;
+        }
+    } else {
+        pairs.push((b, v, 0.0));
     }
 }
 
@@ -140,12 +157,8 @@ fn main() {
                 b1024_speedup = scalar_b1.map(|s| steps_per_sec / s);
             }
             match path {
-                StepPath::Pool => pool_vs_scoped.push((b, steps_per_sec, 0.0)),
-                StepPath::Scoped => {
-                    if let Some(e) = pool_vs_scoped.iter_mut().find(|e| e.0 == b) {
-                        e.2 = steps_per_sec;
-                    }
-                }
+                StepPath::Pool => pair_fill(&mut pool_vs_scoped, b, steps_per_sec, false),
+                StepPath::Scoped => pair_fill(&mut pool_vs_scoped, b, steps_per_sec, true),
                 _ => {}
             }
             rows.push(BenchRow {
@@ -179,15 +192,8 @@ fn main() {
             let (steps_per_sec, s_per_100k) =
                 vector::measure_throughput(Arc::clone(&tables), b, 0, path, budget);
             println!("  B={b:<5} {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k");
-            match path {
-                StepPath::PolicySerial => serial_vs_fused.push((b, steps_per_sec, 0.0)),
-                StepPath::PolicyFused => {
-                    if let Some(e) = serial_vs_fused.iter_mut().find(|e| e.0 == b) {
-                        e.2 = steps_per_sec;
-                    }
-                }
-                _ => {}
-            }
+            let fused = path == StepPath::PolicyFused;
+            pair_fill(&mut serial_vs_fused, b, steps_per_sec, fused);
             rows.push(BenchRow {
                 name: format!("{} (B={b})", path.label()),
                 batch: b,
@@ -202,6 +208,43 @@ fn main() {
             println!(
                 "  B={b:<5} serial {serial:>12.0}  fused {fused:>12.0}  ({:.2}x)",
                 fused / serial
+            );
+        }
+    }
+
+    // -- Update rows: PPO minibatch update, serial vs pool-sharded -----------
+    // Same learner, buffers, and (chunked) math on both rows — the pair
+    // isolates where the minibatch forward/backward runs (caller thread
+    // vs gradient chunks strided over the worker pool). The B=256
+    // update-sharded row stays in the smoke sweep — it is the third row
+    // scripts/bench_ratchet.py gates on. The unit is PPO samples
+    // (B * T * update_epochs per update call), not env steps.
+    let update_b: &[usize] = if smoke { &[256] } else { &[256, 1024] };
+    let mut upd_pairs: Vec<(usize, f64, f64)> = Vec::new();
+    for sharded in [false, true] {
+        let label = if sharded { "update-sharded" } else { "update-serial" };
+        println!("\n{label} sweep (PPO minibatch update):");
+        for &b in update_b {
+            let (samples_per_sec, s_per_100k) =
+                ppo::measure_update_throughput(Arc::clone(&tables), b, 0, sharded, budget);
+            println!(
+                "  B={b:<5} {samples_per_sec:>12.0} samples/s  {s_per_100k:>8.3} s/100k"
+            );
+            pair_fill(&mut upd_pairs, b, samples_per_sec, sharded);
+            rows.push(BenchRow {
+                name: format!("{label} (B={b})"),
+                batch: b,
+                steps_per_sec: samples_per_sec,
+                s_per_100k,
+            });
+        }
+    }
+    println!("\nserial vs sharded PPO update (samples/s):");
+    for (b, serial, sharded) in &upd_pairs {
+        if *serial > 0.0 && *sharded > 0.0 {
+            println!(
+                "  B={b:<5} serial {serial:>12.0}  sharded {sharded:>12.0}  ({:.2}x)",
+                sharded / serial
             );
         }
     }

@@ -43,6 +43,35 @@ pub struct Cache {
     pub value: Vec<f32>,  // [B]
 }
 
+impl Cache {
+    /// An empty cache for [`Mlp::forward_reuse`] callers: fill `obs` +
+    /// `batch`, then forward into it repeatedly without reallocation.
+    pub fn empty() -> Cache {
+        Cache {
+            batch: 0,
+            obs: Vec::new(),
+            h1: Vec::new(),
+            h2: Vec::new(),
+            logits: Vec::new(),
+            value: Vec::new(),
+        }
+    }
+}
+
+/// Reusable backward-pass temporaries (`dh1`/`dh2`), so the sharded PPO
+/// update's per-chunk backprops allocate nothing after warmup.
+#[derive(Default)]
+pub struct BackwardScratch {
+    dh1: Vec<f32>,
+    dh2: Vec<f32>,
+}
+
+impl BackwardScratch {
+    pub fn new() -> BackwardScratch {
+        BackwardScratch::default()
+    }
+}
+
 /// Reusable single-row forward scratch: hidden activations + logits for
 /// exactly one observation row. Pool shards each own one and reuse it for
 /// every (lane, step) they forward, so the fused rollout's policy path
@@ -94,24 +123,39 @@ impl Mlp {
 
     /// Batched forward: obs [B * obs_dim] row-major.
     pub fn forward(&self, obs: &[f32]) -> Cache {
-        let b = obs.len() / self.obs_dim;
-        let mut h1 = vec![0f32; b * self.hidden];
-        matmul_bias(obs, &self.w1, &self.b1, b, self.obs_dim, self.hidden, &mut h1);
-        h1.iter_mut().for_each(|x| *x = x.tanh());
-        let mut h2 = vec![0f32; b * self.hidden];
-        matmul_bias(&h1, &self.w2, &self.b2, b, self.hidden, self.hidden, &mut h2);
-        h2.iter_mut().for_each(|x| *x = x.tanh());
-        let mut logits = vec![0f32; b * self.n_logits];
-        matmul_bias(&h2, &self.wpi, &self.bpi, b, self.hidden, self.n_logits, &mut logits);
-        let mut value = vec![0f32; b];
+        let mut cache = Cache::empty();
+        cache.batch = obs.len() / self.obs_dim;
+        cache.obs = obs.to_vec();
+        self.forward_reuse(&mut cache);
+        cache
+    }
+
+    /// Batched forward reusing caller-owned cache buffers: `cache.obs`
+    /// must already hold the `[batch * obs_dim]` input rows and
+    /// `cache.batch` the row count; the remaining buffers are resized and
+    /// fully overwritten. This is the allocation-free (after warmup) entry
+    /// point the sharded PPO update's chunk passes run on — per-row
+    /// results are bit-identical to [`Mlp::forward`] (it delegates here).
+    pub fn forward_reuse(&self, cache: &mut Cache) {
+        let b = cache.batch;
+        debug_assert_eq!(cache.obs.len(), b * self.obs_dim);
+        cache.h1.resize(b * self.hidden, 0.0);
+        matmul_bias(&cache.obs, &self.w1, &self.b1, b, self.obs_dim, self.hidden, &mut cache.h1);
+        cache.h1.iter_mut().for_each(|x| *x = x.tanh());
+        cache.h2.resize(b * self.hidden, 0.0);
+        matmul_bias(&cache.h1, &self.w2, &self.b2, b, self.hidden, self.hidden, &mut cache.h2);
+        cache.h2.iter_mut().for_each(|x| *x = x.tanh());
+        cache.logits.resize(b * self.n_logits, 0.0);
+        let (h, nl) = (self.hidden, self.n_logits);
+        matmul_bias(&cache.h2, &self.wpi, &self.bpi, b, h, nl, &mut cache.logits);
+        cache.value.resize(b, 0.0);
         for i in 0..b {
             let mut v = self.bv[0];
             for k in 0..self.hidden {
-                v += h2[i * self.hidden + k] * self.wv[k];
+                v += cache.h2[i * self.hidden + k] * self.wv[k];
             }
-            value[i] = v;
+            cache.value[i] = v;
         }
-        Cache { batch: b, obs: obs.to_vec(), h1, h2, logits, value }
     }
 
     /// Scratch sized for this network's single-row forward.
@@ -144,10 +188,26 @@ impl Mlp {
 
     /// Backprop from (dlogits [B, n_logits], dvalue [B]) into grads.
     pub fn backward(&self, cache: &Cache, dlogits: &[f32], dvalue: &[f32], g: &mut Grads) {
+        self.backward_scratch(cache, dlogits, dvalue, g, &mut BackwardScratch::new());
+    }
+
+    /// [`Mlp::backward`] with caller-owned `dh1`/`dh2` temporaries —
+    /// allocation-free after warmup, bit-identical results (the default
+    /// entry point delegates here). Gradients ACCUMULATE into `g` in row
+    /// order; zero it first for a fresh pass.
+    pub fn backward_scratch(
+        &self,
+        cache: &Cache,
+        dlogits: &[f32],
+        dvalue: &[f32],
+        g: &mut Grads,
+        s: &mut BackwardScratch,
+    ) {
         let b = cache.batch;
         let h = self.hidden;
         // dh2 = dlogits @ wpi^T + dvalue * wv^T
-        let mut dh2 = vec![0f32; b * h];
+        s.dh2.resize(b * h, 0.0);
+        let dh2 = &mut s.dh2;
         for i in 0..b {
             for k in 0..h {
                 let mut acc = dvalue[i] * self.wv[k];
@@ -173,7 +233,8 @@ impl Mlp {
             dh2[i] *= 1.0 - cache.h2[i] * cache.h2[i];
         }
         // dh1 = dh2 @ w2^T
-        let mut dh1 = vec![0f32; b * h];
+        s.dh1.resize(b * h, 0.0);
+        let dh1 = &mut s.dh1;
         for i in 0..b {
             for k in 0..h {
                 let mut acc = 0f32;
@@ -192,6 +253,16 @@ impl Mlp {
         }
         accum_matmul_t(&cache.obs, &dh1, b, self.obs_dim, h, &mut g.w1);
         accum_colsum(&dh1, b, h, &mut g.b1);
+    }
+
+    /// The parameter tensors in canonical order (same order as
+    /// [`Mlp::params_mut`] / [`Grads::as_slices`] — the reduction and
+    /// Adam all zip over this order).
+    pub fn params(&self) -> Vec<&Vec<f32>> {
+        vec![
+            &self.w1, &self.b1, &self.w2, &self.b2,
+            &self.wpi, &self.bpi, &self.wv, &self.bv,
+        ]
     }
 
     pub fn params_mut(&mut self) -> Vec<&mut Vec<f32>> {
@@ -215,14 +286,39 @@ impl Grads {
         ]
     }
 
-    pub fn global_norm(&self) -> f32 {
-        let sq: f32 = [
+    pub fn as_slices(&self) -> Vec<&Vec<f32>> {
+        vec![
             &self.w1, &self.b1, &self.w2, &self.b2,
             &self.wpi, &self.bpi, &self.wv, &self.bv,
         ]
-        .iter()
-        .map(|v| v.iter().map(|x| x * x).sum::<f32>())
-        .sum();
+    }
+
+    /// Reset every gradient to zero in place (per-chunk accumulators are
+    /// reused across minibatches instead of reallocated).
+    pub fn zero(&mut self) {
+        for v in self.as_slices_mut() {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    /// `self += other`, element-wise in a fixed (field, index) order — the
+    /// combine step of the sharded update's deterministic gradient
+    /// reduction. Both operands must come from the same network shape.
+    pub fn add_from(&mut self, other: &Grads) {
+        for (a, b) in self.as_slices_mut().into_iter().zip(other.as_slices()) {
+            debug_assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter_mut().zip(b.iter()) {
+                *x += y;
+            }
+        }
+    }
+
+    pub fn global_norm(&self) -> f32 {
+        let sq: f32 = self
+            .as_slices()
+            .iter()
+            .map(|v| v.iter().map(|x| x * x).sum::<f32>())
+            .sum();
         sq.sqrt()
     }
 
@@ -338,6 +434,73 @@ mod tests {
             assert_eq!(s.logits, cache.logits[i * nl..(i + 1) * nl], "row {i} logits");
             assert_eq!(s.value, cache.value[i], "row {i} value");
         }
+    }
+
+    /// `forward_reuse` on a dirty, wrongly-sized cache must produce the
+    /// same bits as a fresh `forward` (the sharded update's chunk passes
+    /// depend on buffer reuse never changing results).
+    #[test]
+    fn forward_reuse_matches_forward_bitwise() {
+        let mut rng = Rng::new(31);
+        let (od, h, nl) = (7, 12, 5);
+        let mlp = Mlp::new(&mut rng, od, h, nl);
+        let mut cache = Cache::empty();
+        for &b in &[4usize, 9, 2] {
+            let obs: Vec<f32> = (0..b * od).map(|_| rng.normal()).collect();
+            let want = mlp.forward(&obs);
+            // Dirty the reusable cache with stale sizes/values.
+            cache.batch = b;
+            cache.obs.clear();
+            cache.obs.extend_from_slice(&obs);
+            cache.h1.iter_mut().for_each(|x| *x = f32::NAN);
+            cache.logits.iter_mut().for_each(|x| *x = f32::NAN);
+            mlp.forward_reuse(&mut cache);
+            assert_eq!(cache.h1, want.h1, "B={b} h1");
+            assert_eq!(cache.h2, want.h2, "B={b} h2");
+            assert_eq!(cache.logits, want.logits, "B={b} logits");
+            assert_eq!(cache.value, want.value, "B={b} value");
+        }
+    }
+
+    /// `backward_scratch` with reused (dirty) temporaries must produce the
+    /// same gradient bits as the allocating `backward`.
+    #[test]
+    fn backward_scratch_matches_backward_bitwise() {
+        let mut rng = Rng::new(57);
+        let (od, h, nl) = (6, 10, 4);
+        let mlp = Mlp::new(&mut rng, od, h, nl);
+        let mut s = BackwardScratch::new();
+        for &b in &[5usize, 11, 3] {
+            let obs: Vec<f32> = (0..b * od).map(|_| rng.normal()).collect();
+            let dlogits: Vec<f32> = (0..b * nl).map(|_| rng.normal()).collect();
+            let dvalue: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+            let cache = mlp.forward(&obs);
+            let mut g_ref = mlp.zero_grads();
+            mlp.backward(&cache, &dlogits, &dvalue, &mut g_ref);
+            let mut g = mlp.zero_grads();
+            mlp.backward_scratch(&cache, &dlogits, &dvalue, &mut g, &mut s);
+            for (a, r) in g.as_slices().into_iter().zip(g_ref.as_slices()) {
+                assert_eq!(a, r, "B={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn grads_zero_and_add_from() {
+        let mut rng = Rng::new(8);
+        let mlp = Mlp::new(&mut rng, 3, 4, 2);
+        let mut a = mlp.zero_grads();
+        let mut b = mlp.zero_grads();
+        a.w1[0] = 1.5;
+        a.bv[0] = -2.0;
+        b.w1[0] = 0.25;
+        b.wpi[3] = 4.0;
+        a.add_from(&b);
+        assert_eq!(a.w1[0], 1.75);
+        assert_eq!(a.wpi[3], 4.0);
+        assert_eq!(a.bv[0], -2.0);
+        a.zero();
+        assert_eq!(a.global_norm(), 0.0);
     }
 
     #[test]

@@ -9,14 +9,15 @@
 //! no serial caller-thread policy forward. Scenario tables are shared
 //! across lanes via `Arc`.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::env::scalar::{ScalarEnv, ScenarioTables};
 use crate::env::tree::StationConfig;
 use crate::env::vector::{PolicyRollout, RolloutBuffers, VectorEnv};
+use crate::runtime::pool::WorkerPool;
 use crate::util::rng::{CounterRng, Rng, Uniform01};
 
-use super::mlp::{Grads, Mlp, MlpScratch};
+use super::mlp::{BackwardScratch, Cache, Grads, Mlp, MlpScratch};
 
 #[derive(Debug, Clone)]
 pub struct PpoParams {
@@ -221,6 +222,392 @@ fn log_sum_exp(x: &[f32]) -> f32 {
     m + x.iter().map(|v| (v - m).exp()).sum::<f32>().ln()
 }
 
+/// Row count of one gradient chunk in the (sharded) PPO update. Every
+/// minibatch is split at fixed `UPDATE_CHUNK_ROWS` boundaries — a function
+/// of the minibatch size alone, NEVER of `--threads` — so the per-chunk
+/// gradient partials and their fixed-order reduction are bit-identical
+/// however many pool lanes the chunks land on.
+pub const UPDATE_CHUNK_ROWS: usize = 64;
+
+/// How many pool lanes a sharded update over `bsz` samples can keep busy:
+/// the largest minibatch's chunk count.
+pub fn update_shard_demand(bsz: usize, n_minibatches: usize) -> usize {
+    minibatch_bounds(bsz, n_minibatches)
+        .iter()
+        .map(|&(lo, hi)| (hi - lo).div_ceil(UPDATE_CHUNK_ROWS))
+        .max()
+        .unwrap_or(1)
+        .max(1)
+}
+
+/// Fixed-order pairwise tree reduction into `parts[0]`: combine
+/// (0,1), (2,3), … then (0,2), (4,6), … and so on. The reduction shape
+/// depends only on `parts.len()` (the chunk count), never on which pool
+/// lane computed which partial — the associativity-safe half of the
+/// sharded update's bitwise-determinism contract. ONE control flow for
+/// every reduced quantity, so gradient and stats reductions can never
+/// drift apart structurally.
+fn tree_reduce<T>(parts: &mut [T], mut combine: impl FnMut(&mut T, &T)) {
+    let n = parts.len();
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            let (a, b) = parts.split_at_mut(i + stride);
+            combine(&mut a[i], &b[0]);
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+}
+
+fn tree_reduce_grads(parts: &mut [Grads]) {
+    tree_reduce(parts, |a, b| a.add_from(b));
+}
+
+/// The same fixed-order tree over per-chunk (loss, entropy) partial sums.
+fn tree_reduce_stats(parts: &mut [(f32, f32)]) {
+    tree_reduce(parts, |a, b| {
+        a.0 += b.0;
+        a.1 += b.1;
+    });
+}
+
+/// One family's filled rollout buffers, borrowed by the (sharded) update.
+/// `obs` carries the extra bootstrap row (`[(T+1) * B * obs_dim]`, like
+/// [`RolloutBuffers::obs`]); the rest are `[T * B]` / `[T * B * n_ports]`.
+pub struct UpdateBatch<'a> {
+    pub n_envs: usize,
+    pub t_len: usize,
+    pub obs: &'a [f32],
+    pub act: &'a [usize],
+    pub logp: &'a [f32],
+    pub val: &'a [f32],
+    pub rew: &'a [f32],
+    pub done: &'a [f32],
+}
+
+/// Per-pool-lane reusable buffers for the update's chunk passes (forward
+/// cache, loss gradients, backward temporaries). Resized on demand, so
+/// one scratch serves chunks from differently-shaped family learners.
+struct UpdateScratch {
+    cache: Cache,
+    dlogits: Vec<f32>,
+    dvalue: Vec<f32>,
+    dlp: Vec<f32>,
+    dent: Vec<f32>,
+    bw: BackwardScratch,
+}
+
+impl UpdateScratch {
+    fn new() -> UpdateScratch {
+        UpdateScratch {
+            cache: Cache::empty(),
+            dlogits: Vec::new(),
+            dvalue: Vec::new(),
+            dlp: Vec::new(),
+            dent: Vec::new(),
+            bw: BackwardScratch::new(),
+        }
+    }
+}
+
+/// One gradient chunk of one family's current minibatch: forward + loss
+/// gradients + backward over `idxs` (at most [`UPDATE_CHUNK_ROWS`] rows),
+/// writing the partial gradient into this chunk's own accumulator. Chunks
+/// share the learner read-only and own disjoint outputs, so any number of
+/// them can run concurrently on pool lanes.
+struct ChunkTask<'a> {
+    learner: &'a Learner,
+    hp: &'a PpoParams,
+    idxs: &'a [usize],
+    /// Full minibatch row count (loss/grad normalizer — NOT the chunk's).
+    mb_len: usize,
+    /// Advantage-normalization stats over the WHOLE minibatch (computed
+    /// once on the caller; identical for every chunk of the minibatch).
+    adv_mean: f32,
+    adv_std: f32,
+    batch: &'a UpdateBatch<'a>,
+    adv: &'a [f32],
+    targets: &'a [f32],
+    grads: &'a mut Grads,
+    /// (loss, entropy) partial sums over this chunk's rows.
+    stats: &'a mut (f32, f32),
+}
+
+impl ChunkTask<'_> {
+    fn run(&mut self, s: &mut UpdateScratch) {
+        let learner = self.learner;
+        let hp = self.hp;
+        let d = learner.obs_dim;
+        let nl = learner.heads.n_logits;
+        let n_ports = learner.heads.nvec.len();
+        let b = self.idxs.len();
+        // Gather this chunk's observation rows straight into the reusable
+        // forward cache.
+        s.cache.batch = b;
+        s.cache.obs.resize(b * d, 0.0);
+        for (r, &i) in self.idxs.iter().enumerate() {
+            s.cache.obs[r * d..(r + 1) * d]
+                .copy_from_slice(&self.batch.obs[i * d..(i + 1) * d]);
+        }
+        learner.mlp.forward_reuse(&mut s.cache);
+        s.dlogits.resize(b * nl, 0.0);
+        s.dvalue.resize(b, 0.0);
+        s.dlp.resize(nl, 0.0);
+        s.dent.resize(nl, 0.0);
+        let mut loss_acc = 0f32;
+        let mut ent_acc = 0f32;
+        for (r, &i) in self.idxs.iter().enumerate() {
+            let lg = &s.cache.logits[r * nl..(r + 1) * nl];
+            let act = &self.batch.act[i * n_ports..(i + 1) * n_ports];
+            s.dlp.iter_mut().for_each(|x| *x = 0.0);
+            s.dent.iter_mut().for_each(|x| *x = 0.0);
+            let (logp, ent) = learner.heads.logp_entropy(lg, act, &mut s.dlp, &mut s.dent);
+            let a_n = (self.adv[i] - self.adv_mean) / self.adv_std;
+            let ratio = (logp - self.batch.logp[i]).exp();
+            let clipped = ratio.clamp(1.0 - hp.clip_eps, 1.0 + hp.clip_eps);
+            let pg1 = ratio * a_n;
+            let pg2 = clipped * a_n;
+            // d(-min(pg1,pg2))/dlogp
+            let dpg_dlogp = if pg1 <= pg2 {
+                -ratio * a_n // d(-ratio*a)/dlogp = -a*ratio
+            } else if (ratio < 1.0 - hp.clip_eps && a_n < 0.0)
+                || (ratio > 1.0 + hp.clip_eps && a_n > 0.0)
+            {
+                0.0 // clipped branch, constant
+            } else {
+                -ratio * a_n
+            };
+            loss_acc += -pg1.min(pg2);
+            ent_acc += ent;
+            // value loss (clipped)
+            let v = s.cache.value[r];
+            let v_old = self.batch.val[i];
+            let v_clip = v_old + (v - v_old).clamp(-hp.vf_clip, hp.vf_clip);
+            let e1 = (v - self.targets[i]) * (v - self.targets[i]);
+            let e2 = (v_clip - self.targets[i]) * (v_clip - self.targets[i]);
+            loss_acc += 0.5 * hp.vf_coef * e1.max(e2);
+            let dv = if e1 >= e2 {
+                v - self.targets[i]
+            } else if (v - v_old).abs() < hp.vf_clip {
+                v_clip - self.targets[i]
+            } else {
+                0.0
+            };
+            s.dvalue[r] = hp.vf_coef * dv / self.mb_len as f32;
+            for k in 0..nl {
+                s.dlogits[r * nl + k] =
+                    (dpg_dlogp * s.dlp[k] - hp.ent_coef * s.dent[k]) / self.mb_len as f32;
+            }
+            loss_acc -= hp.ent_coef * ent;
+        }
+        self.grads.zero();
+        learner.mlp.backward_scratch(
+            &s.cache,
+            &s.dlogits[..b * nl],
+            &s.dvalue[..b],
+            self.grads,
+            &mut s.bw,
+        );
+        *self.stats = (loss_acc, ent_acc);
+    }
+}
+
+/// Dispatch one (epoch, minibatch) round's gradient chunks — from all
+/// families — over the pool, each pool lane reusing its own
+/// [`UpdateScratch`]. Without a pool (or with a single chunk) everything
+/// runs inline on the caller in chunk order; either way every chunk
+/// computes the same bits.
+fn run_chunk_tasks(
+    pool: Option<&WorkerPool>,
+    tasks: &mut [ChunkTask<'_>],
+    scratch: &mut [UpdateScratch],
+) {
+    match pool {
+        Some(pool) if tasks.len() > 1 && pool.max_shards() > 1 => {
+            let wrapped: Vec<Mutex<&mut ChunkTask<'_>>> =
+                tasks.iter_mut().map(Mutex::new).collect();
+            let scr: Vec<Mutex<&mut UpdateScratch>> =
+                scratch.iter_mut().map(Mutex::new).collect();
+            pool.run_strided(wrapped.len(), |lane, k| {
+                let mut guard = scr[lane].lock().unwrap();
+                wrapped[k].lock().unwrap().run(&mut **guard);
+            });
+        }
+        _ => {
+            let (first, _) = scratch.split_first_mut().expect("at least one update scratch");
+            for task in tasks {
+                task.run(first);
+            }
+        }
+    }
+}
+
+/// Shard-parallel PPO update over one or more families at once — the
+/// fleet entry point ([`Learner::update_sharded`] is the single-family
+/// wrapper). Per (epoch, minibatch) round it dispatches EVERY family's
+/// gradient chunks in one pooled call, then reduces + Adam-steps each
+/// family on the caller — so with N families the pool stays busy across
+/// the whole update phase instead of idling between per-family updates.
+///
+/// Determinism contract (tested in rust/tests/ppo_baseline.rs and
+/// rust/tests/fleet.rs):
+/// * chunk boundaries are a pure function of the minibatch partition
+///   ([`UPDATE_CHUNK_ROWS`]), never of `--threads`;
+/// * every chunk's partial gradient is computed with the same math
+///   wherever it runs (shared-read learner, per-lane scratch fully
+///   overwritten per chunk);
+/// * partials are combined by a fixed-order pairwise tree
+///   ([`tree_reduce_grads`]), and Adam runs once per minibatch on the
+///   caller;
+/// * epoch permutations are pre-drawn from `rng` in family-major order —
+///   exactly the order serial per-family `update` calls would draw them.
+///
+/// Hence the result is bit-identical to serial per-family updates and to
+/// itself for ANY pool width (including `pool: None`).
+pub fn update_sharded_many(
+    learners: &mut [Learner],
+    hp: &PpoParams,
+    rng: &mut Rng,
+    pool: Option<&WorkerPool>,
+    batches: &[UpdateBatch<'_>],
+) -> Vec<(f32, f32)> {
+    assert_eq!(learners.len(), batches.len(), "one UpdateBatch per learner");
+    struct Prep {
+        adv: Vec<f32>,
+        targets: Vec<f32>,
+        bounds: Vec<(usize, usize)>,
+        /// One permutation per epoch (pre-drawn, family-major).
+        perms: Vec<Vec<usize>>,
+        chunk_grads: Vec<Grads>,
+        chunk_stats: Vec<(f32, f32)>,
+        loss_acc: f64,
+        ent_acc: f64,
+        n_upd: usize,
+    }
+    let mut preps: Vec<Prep> = learners
+        .iter()
+        .zip(batches)
+        .map(|(l, b)| {
+            let d = l.obs_dim;
+            let bsz = b.n_envs * b.t_len;
+            assert_eq!(b.obs.len(), (b.t_len + 1) * b.n_envs * d, "obs must be [(T+1)*B*d]");
+            let last_cache = l.mlp.forward(&b.obs[b.t_len * b.n_envs * d..]);
+            let (adv, targets) = gae(
+                b.rew, b.val, b.done, &last_cache.value, b.n_envs, hp.gamma, hp.gae_lambda,
+            );
+            let bounds = minibatch_bounds(bsz, hp.n_minibatches);
+            let perms: Vec<Vec<usize>> =
+                (0..hp.update_epochs).map(|_| rng.permutation(bsz)).collect();
+            // One accumulator slot per chunk of the family's largest
+            // minibatch — the same number `update_shard_demand` sizes the
+            // pool for, so dispatch and storage can never disagree.
+            let max_chunks = update_shard_demand(bsz, hp.n_minibatches);
+            Prep {
+                adv,
+                targets,
+                bounds,
+                perms,
+                chunk_grads: (0..max_chunks).map(|_| l.mlp.zero_grads()).collect(),
+                chunk_stats: vec![(0.0, 0.0); max_chunks],
+                loss_acc: 0.0,
+                ent_acc: 0.0,
+                n_upd: 0,
+            }
+        })
+        .collect();
+    let width = pool.map(|p| p.max_shards()).unwrap_or(1).max(1);
+    let mut scratch: Vec<UpdateScratch> = (0..width).map(|_| UpdateScratch::new()).collect();
+    for epoch in 0..hp.update_epochs {
+        for mb in 0..hp.n_minibatches.max(1) {
+            let mut tasks: Vec<ChunkTask<'_>> = Vec::new();
+            for ((learner, batch), prep) in
+                learners.iter().zip(batches).zip(preps.iter_mut())
+            {
+                let Prep { adv, targets, bounds, perms, chunk_grads, chunk_stats, .. } = prep;
+                let (lo, hi) = bounds[mb];
+                if lo == hi {
+                    continue; // n_minibatches > bsz: some chunks are empty
+                }
+                let mb_len = hi - lo;
+                let idxs = &perms[epoch][lo..hi];
+                // Normalize advantages over the minibatch (PureJaxRL
+                // convention) — once, on the caller, shared by all chunks.
+                let adv_mean = idxs.iter().map(|&i| adv[i]).sum::<f32>() / mb_len as f32;
+                let var = idxs
+                    .iter()
+                    .map(|&i| {
+                        let x = adv[i] - adv_mean;
+                        x * x
+                    })
+                    .sum::<f32>()
+                    / mb_len as f32;
+                let adv_std = var.sqrt() + 1e-8;
+                // The zip below would SILENTLY drop chunks if a round ever
+                // produced more than the pre-sized accumulators — keep the
+                // invariant loud instead.
+                assert!(
+                    mb_len.div_ceil(UPDATE_CHUNK_ROWS) <= chunk_grads.len(),
+                    "minibatch {mb}: {} chunks but {} accumulators",
+                    mb_len.div_ceil(UPDATE_CHUNK_ROWS),
+                    chunk_grads.len()
+                );
+                for ((chunk, grads), stats) in idxs
+                    .chunks(UPDATE_CHUNK_ROWS)
+                    .zip(chunk_grads.iter_mut())
+                    .zip(chunk_stats.iter_mut())
+                {
+                    tasks.push(ChunkTask {
+                        learner,
+                        hp,
+                        idxs: chunk,
+                        mb_len,
+                        adv_mean,
+                        adv_std,
+                        batch,
+                        adv,
+                        targets,
+                        grads,
+                        stats,
+                    });
+                }
+            }
+            run_chunk_tasks(pool, &mut tasks, &mut scratch);
+            drop(tasks);
+            // Reduce + clip + Adam per family, caller thread, family order.
+            for (learner, prep) in learners.iter_mut().zip(preps.iter_mut()) {
+                let (lo, hi) = prep.bounds[mb];
+                if lo == hi {
+                    continue;
+                }
+                let mb_len = hi - lo;
+                let n_chunks = mb_len.div_ceil(UPDATE_CHUNK_ROWS);
+                tree_reduce_grads(&mut prep.chunk_grads[..n_chunks]);
+                tree_reduce_stats(&mut prep.chunk_stats[..n_chunks]);
+                let grads = &mut prep.chunk_grads[0];
+                let norm = grads.global_norm();
+                if norm > hp.max_grad_norm {
+                    grads.scale(hp.max_grad_norm / norm);
+                }
+                let Learner { mlp, adam, .. } = learner;
+                adam.update(mlp, grads, hp.lr);
+                let (loss, ent) = prep.chunk_stats[0];
+                prep.loss_acc += (loss / mb_len as f32) as f64;
+                prep.ent_acc += (ent / mb_len as f32) as f64;
+                prep.n_upd += 1;
+            }
+        }
+    }
+    preps
+        .iter()
+        .map(|p| {
+            let n = p.n_upd.max(1) as f64;
+            ((p.loss_acc / n) as f32, (p.ent_acc / n) as f32)
+        })
+        .collect()
+}
+
 /// GAE identical to kernels/ref.py::gae_ref (time-major flat arrays).
 pub fn gae(
     rewards: &[f32],
@@ -354,6 +741,10 @@ impl Learner {
     /// Full PPO update over filled rollout buffers (bootstrap forward +
     /// GAE + minibatched clipped-surrogate epochs). Returns
     /// `(mean total loss, mean entropy)` over all minibatch updates.
+    ///
+    /// This is the serial entry point; it runs the SAME chunked
+    /// formulation as [`Learner::update_sharded`] inline on the caller
+    /// thread, so the two are bit-identical by construction.
     #[allow(clippy::too_many_arguments)]
     pub fn update(
         &mut self,
@@ -368,122 +759,52 @@ impl Learner {
         rew_buf: &[f32],
         done_buf: &[f32],
     ) -> (f32, f32) {
-        let bsz = n_envs * t_len;
-        let d = self.obs_dim;
-        let last_cache = self.mlp.forward(&obs_buf[t_len * n_envs * d..]);
-        let (adv, targets) = gae(
-            rew_buf, val_buf, done_buf, &last_cache.value, n_envs, hp.gamma, hp.gae_lambda,
-        );
-        let bounds = minibatch_bounds(bsz, hp.n_minibatches);
-        let mut total_loss_acc = 0f64;
-        let mut ent_acc = 0f64;
-        let mut n_upd = 0usize;
-        for _ in 0..hp.update_epochs {
-            let perm = rng.permutation(bsz);
-            for &(lo, hi) in &bounds {
-                if lo == hi {
-                    continue; // n_minibatches > bsz: some chunks are empty
-                }
-                let idxs = &perm[lo..hi];
-                let (loss, ent) = self.minibatch_update(
-                    hp, idxs, obs_buf, act_buf, logp_buf, val_buf, &adv, &targets,
-                );
-                total_loss_acc += loss as f64;
-                ent_acc += ent as f64;
-                n_upd += 1;
-            }
-        }
-        let n = n_upd.max(1) as f64;
-        ((total_loss_acc / n) as f32, (ent_acc / n) as f32)
+        self.update_sharded(
+            hp, rng, None, n_envs, t_len, obs_buf, act_buf, logp_buf, val_buf, rew_buf,
+            done_buf,
+        )
     }
 
+    /// [`Learner::update`] with the minibatch forward/backward sharded
+    /// over a [`WorkerPool`]: each minibatch splits into fixed
+    /// [`UPDATE_CHUNK_ROWS`]-row gradient chunks strided across the pool
+    /// lanes (per-lane scratch, per-chunk accumulators), reduced in fixed
+    /// order on the caller, where Adam is applied once. Bit-identical to
+    /// the serial [`Learner::update`] for ANY pool width — see
+    /// [`update_sharded_many`] for the contract (and for updating several
+    /// family learners through one pooled dispatch).
     #[allow(clippy::too_many_arguments)]
-    fn minibatch_update(
+    pub fn update_sharded(
         &mut self,
         hp: &PpoParams,
-        idxs: &[usize],
+        rng: &mut Rng,
+        pool: Option<&WorkerPool>,
+        n_envs: usize,
+        t_len: usize,
         obs_buf: &[f32],
         act_buf: &[usize],
         logp_buf: &[f32],
         val_buf: &[f32],
-        adv: &[f32],
-        targets: &[f32],
+        rew_buf: &[f32],
+        done_buf: &[f32],
     ) -> (f32, f32) {
-        let b = idxs.len();
-        let n_ports = self.heads.nvec.len();
-        let nl = self.heads.n_logits;
-        // gather minibatch
-        let mut obs = vec![0f32; b * self.obs_dim];
-        for (r, &i) in idxs.iter().enumerate() {
-            obs[r * self.obs_dim..(r + 1) * self.obs_dim]
-                .copy_from_slice(&obs_buf[i * self.obs_dim..(i + 1) * self.obs_dim]);
-        }
-        // normalize advantages over the minibatch (PureJaxRL convention).
-        let madv: Vec<f32> = idxs.iter().map(|&i| adv[i]).collect();
-        let mean = madv.iter().sum::<f32>() / b as f32;
-        let var = madv.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / b as f32;
-        let std = var.sqrt() + 1e-8;
-
-        let cache = self.mlp.forward(&obs);
-        let mut dlogits = vec![0f32; b * nl];
-        let mut dvalue = vec![0f32; b];
-        let mut loss_acc = 0f32;
-        let mut ent_acc = 0f32;
-        let mut dlp = vec![0f32; nl];
-        let mut dent = vec![0f32; nl];
-        for (r, &i) in idxs.iter().enumerate() {
-            let lg = &cache.logits[r * nl..(r + 1) * nl];
-            let act = &act_buf[i * n_ports..(i + 1) * n_ports];
-            dlp.iter_mut().for_each(|x| *x = 0.0);
-            dent.iter_mut().for_each(|x| *x = 0.0);
-            let (logp, ent) = self.heads.logp_entropy(lg, act, &mut dlp, &mut dent);
-            let a_n = (adv[i] - mean) / std;
-            let ratio = (logp - logp_buf[i]).exp();
-            let clipped = ratio.clamp(1.0 - hp.clip_eps, 1.0 + hp.clip_eps);
-            let pg1 = ratio * a_n;
-            let pg2 = clipped * a_n;
-            // d(-min(pg1,pg2))/dlogp
-            let dpg_dlogp = if pg1 <= pg2 {
-                -ratio * a_n // d(-ratio*a)/dlogp = -a*ratio
-            } else if (ratio < 1.0 - hp.clip_eps && a_n < 0.0)
-                || (ratio > 1.0 + hp.clip_eps && a_n > 0.0)
-            {
-                0.0 // clipped branch, constant
-            } else {
-                -ratio * a_n
-            };
-            loss_acc += -pg1.min(pg2);
-            ent_acc += ent;
-            // value loss (clipped)
-            let v = cache.value[r];
-            let v_old = val_buf[i];
-            let v_clip = v_old + (v - v_old).clamp(-hp.vf_clip, hp.vf_clip);
-            let e1 = (v - targets[i]) * (v - targets[i]);
-            let e2 = (v_clip - targets[i]) * (v_clip - targets[i]);
-            loss_acc += 0.5 * hp.vf_coef * e1.max(e2);
-            let dv = if e1 >= e2 {
-                v - targets[i]
-            } else if (v - v_old).abs() < hp.vf_clip {
-                v_clip - targets[i]
-            } else {
-                0.0
-            };
-            dvalue[r] = hp.vf_coef * dv / b as f32;
-            for k in 0..nl {
-                dlogits[r * nl + k] = (dpg_dlogp * dlp[k]
-                    - hp.ent_coef * dent[k])
-                    / b as f32;
-            }
-            loss_acc -= hp.ent_coef * ent;
-        }
-        let mut grads = self.mlp.zero_grads();
-        self.mlp.backward(&cache, &dlogits, &dvalue, &mut grads);
-        let norm = grads.global_norm();
-        if norm > hp.max_grad_norm {
-            grads.scale(hp.max_grad_norm / norm);
-        }
-        self.adam.update(&mut self.mlp, &mut grads, hp.lr);
-        (loss_acc / b as f32, ent_acc / b as f32)
+        let batch = UpdateBatch {
+            n_envs,
+            t_len,
+            obs: obs_buf,
+            act: act_buf,
+            logp: logp_buf,
+            val: val_buf,
+            rew: rew_buf,
+            done: done_buf,
+        };
+        update_sharded_many(
+            std::slice::from_mut(self),
+            hp,
+            rng,
+            pool,
+            std::slice::from_ref(&batch),
+        )[0]
     }
 }
 
@@ -590,10 +911,18 @@ impl PpoTrainer {
         }
 
         // ---- update -------------------------------------------------------
-        let (total_loss, entropy) = self.learner.update(
-            &self.cfg, &mut self.rng, e, t_len,
-            &obs_buf, &act_buf, &logp_buf, &val_buf, &rew_buf, &done_buf,
-        );
+        // Sharded over the same persistent pool the rollout ran on
+        // (`--threads` capped); bit-identical to a serial update.
+        let (total_loss, entropy) = {
+            let pool = self
+                .venv
+                .shared_pool(update_shard_demand(bsz, self.cfg.n_minibatches));
+            let PpoTrainer { cfg, learner, rng, .. } = self;
+            learner.update_sharded(
+                cfg, rng, pool.as_deref(), e, t_len,
+                &obs_buf, &act_buf, &logp_buf, &val_buf, &rew_buf, &done_buf,
+            )
+        };
 
         TrainStats {
             mean_reward: rew_buf.iter().sum::<f32>() / bsz as f32,
@@ -629,9 +958,125 @@ impl PpoTrainer {
     }
 }
 
+/// Measure PPO minibatch-update throughput at batch size `b`: fill one
+/// fused rollout's buffers (T = 32, [`BENCH_POLICY_HIDDEN`]-wide net),
+/// then repeatedly run the full update over them — serial on the caller
+/// thread, or sharded over the env's worker pool. One warm pass then one
+/// timed pass (same protocol as
+/// [`crate::env::vector::measure_throughput`]). Returns
+/// `(samples/sec, seconds per 100k samples)`, where one update consumes
+/// `B * T * update_epochs` samples.
+pub fn measure_update_throughput(
+    tables: Arc<ScenarioTables>,
+    b: usize,
+    threads: usize,
+    sharded: bool,
+    budget: usize,
+) -> (f64, f64) {
+    use crate::env::vector::BENCH_POLICY_HIDDEN;
+
+    let t_len = 32usize;
+    let hp = PpoParams {
+        num_envs: b,
+        rollout_steps: t_len,
+        hidden: BENCH_POLICY_HIDDEN,
+        threads,
+        ..Default::default()
+    };
+    let mut venv = VectorEnv::new(StationConfig::default(), tables, b, 13);
+    venv.set_threads(threads);
+    let (d, p) = (venv.obs_dim(), venv.n_ports());
+    let mut rng = Rng::new(29);
+    let mut learner = Learner::new(&mut rng, d, hp.hidden, venv.action_nvec());
+    let bsz = b * t_len;
+    let mut obs_buf = vec![0f32; (t_len + 1) * b * d];
+    let mut rew_buf = vec![0f32; bsz];
+    let mut done_buf = vec![0f32; bsz];
+    let mut profit_buf = vec![0f32; bsz];
+    let mut act_buf = vec![0usize; bsz * p];
+    let mut logp_buf = vec![0f32; bsz];
+    let mut val_buf = vec![0f32; bsz];
+    {
+        let mut bufs = RolloutBuffers {
+            obs: &mut obs_buf,
+            rewards: &mut rew_buf,
+            dones: &mut done_buf,
+            profits: &mut profit_buf,
+        };
+        let mut pol = PolicyRollout {
+            actions: &mut act_buf,
+            logp: &mut logp_buf,
+            values: &mut val_buf,
+        };
+        venv.rollout_fused(t_len, &mut bufs, &mut pol, &learner, 7, false);
+    }
+    let pool = if sharded {
+        venv.shared_pool(update_shard_demand(bsz, hp.n_minibatches))
+    } else {
+        None
+    };
+    let reps = (budget / bsz.max(1)).clamp(2, 500);
+    let samples = (bsz * hp.update_epochs.max(1) * reps) as f64;
+    let mut pass = |learner: &mut Learner, rng: &mut Rng| {
+        for _ in 0..reps {
+            learner.update_sharded(
+                &hp, rng, pool.as_deref(), b, t_len,
+                &obs_buf, &act_buf, &logp_buf, &val_buf, &rew_buf, &done_buf,
+            );
+        }
+    };
+    pass(&mut learner, &mut rng); // warm (pool already built by shared_pool)
+    let t0 = std::time::Instant::now();
+    pass(&mut learner, &mut rng);
+    let el = t0.elapsed().as_secs_f64();
+    (samples / el, el * 100_000.0 / samples)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn update_chunking_demand_matches_minibatch_partition() {
+        // bsz 900 over 4 minibatches: chunks of 225 rows -> 4 chunks each.
+        assert_eq!(update_shard_demand(900, 4), 4);
+        // Tiny batches never demand more than one lane.
+        assert_eq!(update_shard_demand(10, 4), 1);
+        assert_eq!(update_shard_demand(0, 4), 1);
+        // One minibatch of 129 rows -> 3 chunks.
+        assert_eq!(update_shard_demand(129, 1), 3);
+    }
+
+    /// The gradient tree reduction has a FIXED shape: for three partials
+    /// the result is exactly (g0 + g1) + g2 — and it never depends on
+    /// which pool lane produced which partial (they are combined by chunk
+    /// index alone).
+    #[test]
+    fn tree_reduction_order_is_fixed() {
+        let mut rng = Rng::new(3);
+        let mlp = Mlp::new(&mut rng, 2, 3, 2);
+        let mk = |seed: f32| {
+            let mut g = mlp.zero_grads();
+            for (k, v) in g.as_slices_mut().into_iter().enumerate() {
+                for (i, x) in v.iter_mut().enumerate() {
+                    // Values chosen so float addition order is observable.
+                    *x = (seed + k as f32 * 0.1 + i as f32) * 1.000_000_1;
+                }
+            }
+            g
+        };
+        let mut parts = vec![mk(1.0), mk(2.7), mk(-0.3)];
+        let mut want = mk(1.0);
+        want.add_from(&parts[1]);
+        want.add_from(&parts[2]);
+        tree_reduce_grads(&mut parts);
+        for (a, b) in parts[0].as_slices().into_iter().zip(want.as_slices()) {
+            assert_eq!(a, b);
+        }
+        let mut stats = vec![(1.0f32, 2.0f32), (0.5, 0.25), (0.125, -1.0)];
+        tree_reduce_stats(&mut stats);
+        assert_eq!(stats[0], ((1.0 + 0.5) + 0.125, (2.0 + 0.25) + -1.0));
+    }
 
     #[test]
     fn gae_matches_hand_rolled_two_steps() {

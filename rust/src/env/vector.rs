@@ -63,6 +63,12 @@ pub struct VectorEnv {
     /// Persistent worker pool, built lazily on the first sharded step and
     /// reused for every subsequent `step_all`/`rollout` call.
     pool: Option<Arc<WorkerPool>>,
+    /// Separate pool for caller-driven auxiliary compute (the sharded PPO
+    /// update) whose lane demand exceeds the rollout pool's width. Kept
+    /// apart so the update can never grow the rollout pool: `run` wakes
+    /// every pool worker (`notify_all`), so an inflated rollout pool
+    /// would pay spurious wake/park cycles on EVERY step dispatch.
+    aux_pool: Option<Arc<WorkerPool>>,
     // per-env lanes [B]
     t: Vec<u32>,
     day: Vec<u32>,
@@ -158,6 +164,7 @@ impl VectorEnv {
             parallel: true,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             pool: None,
+            aux_pool: None,
             t: vec![0; b],
             day: vec![0; b],
             battery_soc: vec![cfg.battery_soc0; b],
@@ -217,6 +224,7 @@ impl VectorEnv {
         if t != self.threads {
             self.threads = t;
             self.pool = None;
+            self.aux_pool = None;
         }
     }
 
@@ -354,6 +362,24 @@ impl VectorEnv {
             self.pool = Some(Arc::new(WorkerPool::new(need)));
         }
         Arc::clone(self.pool.as_ref().expect("pool just built"))
+    }
+
+    /// A persistent worker pool with at least `width` concurrent lanes
+    /// (hard-capped by `--threads`), or `None` when a single lane
+    /// suffices. This is how the sharded PPO update
+    /// ([`crate::baselines::ppo::Learner::update_sharded`]) runs its
+    /// gradient chunks: on the SAME long-lived workers that drive
+    /// rollouts when the rollout pool is already wide enough, otherwise
+    /// on a separately-grown auxiliary pool — growing the rollout pool
+    /// itself would make every later step dispatch `notify_all`-wake
+    /// workers it has no shards for.
+    pub fn shared_pool(&mut self, width: usize) -> Option<Arc<WorkerPool>> {
+        crate::runtime::pool::aux_or_primary_pool(
+            &self.pool,
+            &mut self.aux_pool,
+            self.threads,
+            width,
+        )
     }
 
     /// Step every lane. `actions` is `[B * P]` (row-major per lane),

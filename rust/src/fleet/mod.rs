@@ -54,6 +54,10 @@ pub struct Fleet {
     threads: usize,
     /// One pool for every env; rebuilt lazily when the plan outgrows it.
     pool: Option<Arc<WorkerPool>>,
+    /// Separate pool for the sharded PPO update when its chunk demand
+    /// exceeds the rollout pool's width (see `VectorEnv::shared_pool` for
+    /// why the rollout pool must not be grown past its shard demand).
+    aux_pool: Option<Arc<WorkerPool>>,
 }
 
 impl Fleet {
@@ -97,6 +101,7 @@ impl Fleet {
             cell_labels,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             pool: None,
+            aux_pool: None,
         })
     }
 
@@ -154,6 +159,7 @@ impl Fleet {
         if t != self.threads {
             self.threads = t;
             self.pool = None;
+            self.aux_pool = None;
         }
     }
 
@@ -199,6 +205,19 @@ impl Fleet {
             self.pool = Some(Arc::new(WorkerPool::new(need)));
         }
         Arc::clone(self.pool.as_ref().expect("pool just built"))
+    }
+
+    /// A pool with at least `width` lanes for the pooled PPO update:
+    /// reuses the rollout pool when it is already wide enough, otherwise
+    /// grows the auxiliary pool — never the rollout pool (its width sets
+    /// how many workers every per-step dispatch wakes).
+    pub(crate) fn update_pool(&mut self, width: usize) -> Option<Arc<WorkerPool>> {
+        crate::runtime::pool::aux_or_primary_pool(
+            &self.pool,
+            &mut self.aux_pool,
+            self.threads,
+            width,
+        )
     }
 }
 

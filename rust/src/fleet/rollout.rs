@@ -19,7 +19,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::baselines::mlp::MlpScratch;
-use crate::baselines::ppo::{Learner, PpoParams};
+use crate::baselines::ppo::{
+    update_shard_demand, update_sharded_many, Learner, PpoParams, UpdateBatch,
+};
 use crate::data::DataStore;
 use crate::env::core::{StepInfo, STEPS_PER_EPISODE};
 use crate::env::scalar::ScalarEnv;
@@ -229,16 +231,9 @@ impl Fleet {
 fn run_fleet_tasks(pool: Option<&WorkerPool>, tasks: &mut [ShardTask<'_>]) {
     match pool {
         Some(pool) if tasks.len() > 1 && pool.max_shards() > 1 => {
-            let width = pool.max_shards().min(tasks.len());
             let wrapped: Vec<Mutex<&mut ShardTask<'_>>> =
                 tasks.iter_mut().map(Mutex::new).collect();
-            pool.run(width, |s| {
-                let mut k = s;
-                while k < wrapped.len() {
-                    wrapped[k].lock().unwrap().run();
-                    k += width;
-                }
-            });
+            pool.run_strided(wrapped.len(), |_, k| wrapped[k].lock().unwrap().run());
         }
         _ => {
             for task in tasks {
@@ -299,6 +294,14 @@ pub struct FleetPpoTrainer {
     /// Per-family, per-lane running episode returns (same accounting as
     /// `PpoTrainer`).
     running_return: Vec<Vec<f32>>,
+    /// The current iteration's greedy-eval seed, drawn from the trainer
+    /// rng once per iteration (and once at construction). Evals used to
+    /// depend entirely on whatever ad-hoc seed each caller invented per
+    /// call, so two evals "of the same iteration" could disagree; routing
+    /// them through this one per-iteration draw makes repeated
+    /// [`FleetPpoTrainer::eval_cells_current`] calls bit-identical until
+    /// the next `iteration()` advances it.
+    eval_seed: u64,
 }
 
 impl FleetPpoTrainer {
@@ -315,7 +318,9 @@ impl FleetPpoTrainer {
             .collect();
         let running_return =
             (0..fleet.n_envs()).map(|e| vec![0.0; fleet.env(e).batch()]).collect();
-        FleetPpoTrainer { hp, fleet, learners, rng, env_steps: 0, running_return }
+        // Drawn AFTER the learners so their init matches older builds.
+        let eval_seed = rng.next_u64();
+        FleetPpoTrainer { hp, fleet, learners, rng, env_steps: 0, running_return, eval_seed }
     }
 
     /// Env steps consumed by one `iteration` (all families).
@@ -370,10 +375,10 @@ impl FleetPpoTrainer {
         }
         self.env_steps += self.fleet.total_lanes() * t_len;
 
-        let mut out = Vec::with_capacity(n);
+        // Episode accounting per family (off the hot loop).
+        let mut acct: Vec<(f64, Vec<f32>)> = Vec::with_capacity(n);
         for e in 0..n {
             let (b, _, _) = dims[e];
-            let bsz = b * t_len;
             let mut profit_sum = 0f64;
             let mut comp: Vec<f32> = Vec::new();
             for t in 0..t_len {
@@ -387,18 +392,43 @@ impl FleetPpoTrainer {
                     }
                 }
             }
-            let (total_loss, entropy) = self.learners[e].update(
-                &self.hp,
-                &mut self.rng,
-                b,
+            acct.push((profit_sum, comp));
+        }
+
+        // One sharded update covering EVERY family: per (epoch,
+        // minibatch) round all families' gradient chunks go out in a
+        // single pooled dispatch (strided over at most `--threads`
+        // lanes), so the pool never idles between families the way
+        // serial per-family updates left it. Bit-identical to those
+        // serial updates for any thread count.
+        let width: usize = dims
+            .iter()
+            .map(|&(b, _, _)| update_shard_demand(b * t_len, self.hp.n_minibatches))
+            .sum();
+        let pool = self.fleet.update_pool(width);
+        let batches: Vec<UpdateBatch<'_>> = (0..n)
+            .map(|e| UpdateBatch {
+                n_envs: dims[e].0,
                 t_len,
-                &eb[e].obs,
-                &pb[e].act,
-                &pb[e].logp,
-                &pb[e].val,
-                &eb[e].rew,
-                &eb[e].done,
-            );
+                obs: &eb[e].obs,
+                act: &pb[e].act,
+                logp: &pb[e].logp,
+                val: &pb[e].val,
+                rew: &eb[e].rew,
+                done: &eb[e].done,
+            })
+            .collect();
+        let upd = {
+            let FleetPpoTrainer { hp, learners, rng, .. } = &mut *self;
+            update_sharded_many(learners, hp, rng, pool.as_deref(), &batches)
+        };
+
+        let mut out = Vec::with_capacity(n);
+        for (e, ((profit_sum, comp), (total_loss, entropy))) in
+            acct.into_iter().zip(upd).enumerate()
+        {
+            let (b, _, _) = dims[e];
+            let bsz = b * t_len;
             out.push(FamilyStats {
                 label: self.fleet.label(e).to_string(),
                 lanes: b,
@@ -413,6 +443,9 @@ impl FleetPpoTrainer {
                 },
             });
         }
+        // Refresh the shared eval seed LAST so the rollout/update rng
+        // stream is untouched and every within-iteration eval repeats.
+        self.eval_seed = self.rng.next_u64();
         out
     }
 
@@ -459,6 +492,26 @@ impl FleetPpoTrainer {
     /// [`FleetPpoTrainer::eval_cells`] over every family, flattened.
     pub fn eval_all_cells(&self, seed: u64) -> Vec<CellEval> {
         (0..self.fleet.n_envs()).flat_map(|e| self.eval_cells(e, seed)).collect()
+    }
+
+    /// The greedy-eval seed for the CURRENT iteration — drawn from the
+    /// trainer rng once per `iteration()`, so eval episodes track the
+    /// training trajectory while staying repeatable within an iteration.
+    pub fn current_eval_seed(&self) -> u64 {
+        self.eval_seed
+    }
+
+    /// [`FleetPpoTrainer::eval_cells`] keyed by the trainer rng's
+    /// per-iteration eval seed: call it as many times as you like between
+    /// two `iteration()` calls and every result is bit-identical
+    /// (regression-tested in rust/tests/fleet.rs).
+    pub fn eval_cells_current(&self, e: usize) -> Vec<CellEval> {
+        self.eval_cells(e, self.eval_seed)
+    }
+
+    /// [`FleetPpoTrainer::eval_cells_current`] over every family.
+    pub fn eval_all_cells_current(&self) -> Vec<CellEval> {
+        self.eval_all_cells(self.eval_seed)
     }
 }
 

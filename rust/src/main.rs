@@ -224,7 +224,8 @@ fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str) -> Result<()> {
     let mut fleet = Fleet::from_spec(&spec, store.as_ref())?;
     fleet.set_threads(cfg.num_threads);
     eprintln!(
-        "training fleet of {} lanes across {} station families (threads={}):",
+        "training fleet of {} lanes across {} station families (threads={}, \
+         rollout + PPO update sharded on one worker pool):",
         fleet.total_lanes(),
         fleet.n_envs(),
         if cfg.num_threads == 0 { "auto".to_string() } else { cfg.num_threads.to_string() },
@@ -272,10 +273,15 @@ fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str) -> Result<()> {
     // Greedy eval per (family × scenario cell): every distinct cell a
     // family trains on gets its own number, with the cell named — so
     // distribution shift across the grid is visible instead of hidden
-    // behind lane 0's cell.
+    // behind lane 0's cell. Seeds come off the trainer rng's
+    // per-iteration eval seed (ISSUE 5): seed 0 is exactly the
+    // reproducible `eval_cells_current` episode, further seeds widen the
+    // average, and re-running the eval block cannot drift.
+    let eval_base = tr.current_eval_seed();
     for e in 0..tr.fleet.n_envs() {
-        let per_seed: Vec<Vec<chargax::fleet::CellEval>> =
-            (0..cfg.eval_seeds as u64).map(|s| tr.eval_cells(e, 1000 + s)).collect();
+        let per_seed: Vec<Vec<chargax::fleet::CellEval>> = (0..cfg.eval_seeds as u64)
+            .map(|s| tr.eval_cells(e, eval_base.wrapping_add(s)))
+            .collect();
         if per_seed.is_empty() {
             continue; // eval_seeds = 0: eval disabled, same as the non-fleet path
         }

@@ -163,6 +163,67 @@ impl WorkerPool {
             panic!("{panics} worker shard(s) panicked during a pool job (see stderr)");
         }
     }
+
+    /// Execute `f(lane, item)` for every `item in 0..n`, striding items
+    /// over at most `max_shards()` concurrent pool lanes: lane `s` runs
+    /// items `s, s + width, s + 2·width, …` in order. This is the shared
+    /// dispatch shape for work lists that can outnumber pool lanes — the
+    /// fleet rollout's per-family shard tasks and the sharded PPO update's
+    /// gradient chunks both go through it. Item-to-lane placement never
+    /// changes what an item computes (each item owns disjoint outputs;
+    /// per-lane state like scratch buffers is fully overwritten per item),
+    /// so results are identical for any pool width. With one lane or
+    /// `n <= 1` everything runs inline on the caller.
+    pub fn run_strided<F: Fn(usize, usize) + Sync>(&self, n: usize, f: F) {
+        let width = self.max_shards().min(n);
+        if width <= 1 {
+            for k in 0..n {
+                f(0, k);
+            }
+            return;
+        }
+        self.run(width, |s| {
+            let mut k = s;
+            while k < n {
+                f(s, k);
+                k += width;
+            }
+        });
+    }
+}
+
+/// Pick a pool with at least `width.min(threads)` lanes for auxiliary
+/// caller-driven compute (the sharded PPO update): reuse `primary` (the
+/// rollout pool) when it is already wide enough, otherwise lazily grow
+/// `aux`. NEVER grows `primary` — its width sets how many workers every
+/// per-step rollout dispatch `notify_all`-wakes, so inflating it would
+/// tax the hot path with spurious wake/park cycles. Returns `None` when
+/// a single lane suffices. One implementation shared by
+/// `VectorEnv::shared_pool` and `Fleet::update_pool`, so the two runtimes
+/// cannot drift.
+pub fn aux_or_primary_pool(
+    primary: &Option<Arc<WorkerPool>>,
+    aux: &mut Option<Arc<WorkerPool>>,
+    threads: usize,
+    width: usize,
+) -> Option<Arc<WorkerPool>> {
+    let w = width.min(threads.max(1));
+    if w <= 1 {
+        return None;
+    }
+    if let Some(p) = primary {
+        if p.max_shards() >= w {
+            return Some(Arc::clone(p));
+        }
+    }
+    let rebuild = match &*aux {
+        Some(p) => p.max_shards() < w,
+        None => true,
+    };
+    if rebuild {
+        *aux = Some(Arc::new(WorkerPool::new(w)));
+    }
+    aux.as_ref().map(Arc::clone)
 }
 
 impl Drop for WorkerPool {
@@ -322,6 +383,31 @@ mod tests {
             hits.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn strided_dispatch_runs_every_item_once_within_width() {
+        let pool = WorkerPool::new(3);
+        // More items than lanes, fewer items than lanes, and n = 0/1.
+        for n in [0usize, 1, 2, 3, 11] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_strided(n, |lane, k| {
+                assert!(lane < pool.max_shards(), "lane {lane} out of range");
+                assert_eq!(k % pool.max_shards().min(n), lane, "stride placement");
+                hits[k].fetch_add(1, Ordering::SeqCst);
+            });
+            for (k, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "item {k} of {n}");
+            }
+        }
+        // A 1-lane pool runs everything inline on lane 0.
+        let inline = WorkerPool::new(1);
+        let hits = AtomicUsize::new(0);
+        inline.run_strided(5, |lane, _| {
+            assert_eq!(lane, 0);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 5);
     }
 
     #[test]

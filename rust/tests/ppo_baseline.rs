@@ -1,8 +1,16 @@
-//! The pure-Rust PPO comparator: learning signal + invariants.
+//! The pure-Rust PPO comparator: learning signal + invariants — and the
+//! ISSUE 5 bitwise-determinism contract of the shard-parallel update
+//! (`update_sharded` == serial `update`, for any pool width, odd or even
+//! minibatch sizes, single learner or a pooled multi-family dispatch).
 
-use chargax::baselines::ppo::{PpoParams, PpoTrainer};
+use chargax::baselines::ppo::{
+    update_sharded_many, Learner, PpoParams, PpoTrainer, UpdateBatch,
+};
 use chargax::env::scalar::ScenarioTables;
 use chargax::env::tree::StationConfig;
+use chargax::env::vector::{PolicyRollout, RolloutBuffers, VectorEnv};
+use chargax::runtime::pool::WorkerPool;
+use chargax::util::rng::Rng;
 
 fn tables() -> ScenarioTables {
     ScenarioTables {
@@ -92,6 +100,162 @@ fn greedy_eval_runs_full_episode() {
     tr.iteration();
     let (r, p) = tr.eval_episode(99);
     assert!(r.is_finite() && p.is_finite());
+}
+
+/// One family's filled rollout buffers (the env-written + policy-written
+/// halves of one fused pass). Kept separate from the `Learner` so tests
+/// can borrow the buffers immutably while updating the learner.
+struct Bufs {
+    n_envs: usize,
+    t_len: usize,
+    obs: Vec<f32>,
+    act: Vec<usize>,
+    logp: Vec<f32>,
+    val: Vec<f32>,
+    rew: Vec<f32>,
+    done: Vec<f32>,
+}
+
+impl Bufs {
+    fn batch(&self) -> UpdateBatch<'_> {
+        UpdateBatch {
+            n_envs: self.n_envs,
+            t_len: self.t_len,
+            obs: &self.obs,
+            act: &self.act,
+            logp: &self.logp,
+            val: &self.val,
+            rew: &self.rew,
+            done: &self.done,
+        }
+    }
+}
+
+/// Deterministic PPO fixture: a learner plus the buffers one fused
+/// rollout fills. Rebuilding with the same arguments yields bit-identical
+/// weights AND buffers, so every execution path under test starts from
+/// exactly the same state.
+fn fixture(cfg: StationConfig, n_envs: usize, t_len: usize, seed: u64) -> (Learner, Bufs) {
+    let mut venv = VectorEnv::new(cfg, tables(), n_envs, seed);
+    let (d, p) = (venv.obs_dim(), venv.n_ports());
+    let mut lrng = Rng::new(seed ^ 0xABCD);
+    let learner = Learner::new(&mut lrng, d, 16, venv.action_nvec());
+    let bsz = n_envs * t_len;
+    let mut b = Bufs {
+        n_envs,
+        t_len,
+        obs: vec![0.0; (t_len + 1) * n_envs * d],
+        act: vec![0; bsz * p],
+        logp: vec![0.0; bsz],
+        val: vec![0.0; bsz],
+        rew: vec![0.0; bsz],
+        done: vec![0.0; bsz],
+    };
+    let mut profits = vec![0f32; bsz];
+    let mut bufs = RolloutBuffers {
+        obs: &mut b.obs,
+        rewards: &mut b.rew,
+        dones: &mut b.done,
+        profits: &mut profits,
+    };
+    let mut pol = PolicyRollout { actions: &mut b.act, logp: &mut b.logp, values: &mut b.val };
+    venv.rollout_fused(t_len, &mut bufs, &mut pol, &learner, seed ^ 7, false);
+    (learner, b)
+}
+
+fn weights(l: &Learner) -> Vec<Vec<f32>> {
+    l.mlp.params().into_iter().cloned().collect()
+}
+
+/// Acceptance gate (ISSUE 5): `update_sharded` is bit-identical to the
+/// serial `update` and invariant across pool widths {1, 4, max}, for both
+/// even (192) and odd (135) batch sizes — two consecutive updates per
+/// path so Adam's moment state is covered too.
+#[test]
+fn update_sharded_is_bit_identical_to_serial_for_any_pool_width() {
+    let hp = PpoParams { n_minibatches: 2, update_epochs: 2, hidden: 16, ..Default::default() };
+    let max_threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    // (even bsz 4*48=192 -> 96-row minibatches; odd bsz 5*27=135 -> 67/68)
+    for (n_envs, t_len) in [(4usize, 48usize), (5, 27)] {
+        // Serial reference: Learner::update (pool-free entry point).
+        let (mut l0, b0) = fixture(StationConfig::default(), n_envs, t_len, 21);
+        let mut rng0 = Rng::new(11);
+        let mut stats0 = Vec::new();
+        for _ in 0..2 {
+            stats0.push(l0.update(
+                &hp, &mut rng0, n_envs, t_len,
+                &b0.obs, &b0.act, &b0.logp, &b0.val, &b0.rew, &b0.done,
+            ));
+        }
+        let w0 = weights(&l0);
+        assert!(stats0.iter().all(|(l, e)| l.is_finite() && e.is_finite()));
+        for threads in [1usize, 4, max_threads] {
+            let (mut l, b) = fixture(StationConfig::default(), n_envs, t_len, 21);
+            let pool = WorkerPool::new(threads);
+            let mut rng = Rng::new(11);
+            let mut stats = Vec::new();
+            for _ in 0..2 {
+                stats.push(l.update_sharded(
+                    &hp, &mut rng, Some(&pool), n_envs, t_len,
+                    &b.obs, &b.act, &b.logp, &b.val, &b.rew, &b.done,
+                ));
+            }
+            assert_eq!(stats, stats0, "bsz {} threads {threads}: stats drifted", n_envs * t_len);
+            for (k, (a, want)) in weights(&l).iter().zip(&w0).enumerate() {
+                assert_eq!(
+                    a, want,
+                    "bsz {} threads {threads}: weight tensor {k} not bit-identical",
+                    n_envs * t_len
+                );
+            }
+        }
+    }
+}
+
+/// The fleet path: one `update_sharded_many` call covering two
+/// differently-shaped family learners is bit-identical to updating each
+/// family serially with `Learner::update` — the pooled dispatch draws the
+/// epoch permutations in the same family-major order the serial calls
+/// consume them, and gradient chunks from BOTH families share one pool.
+#[test]
+fn pooled_multi_family_update_matches_sequential_serial_updates() {
+    let hp = PpoParams { n_minibatches: 2, update_epochs: 2, hidden: 16, ..Default::default() };
+    let small = StationConfig { n_dc: 2, n_ac: 1, ..StationConfig::default() };
+    let build = || {
+        vec![
+            fixture(StationConfig::default(), 3, 24, 33), // even bsz 72
+            fixture(small.clone(), 5, 17, 44),            // odd bsz 85 -> 42/43 split
+        ]
+    };
+    // Serial reference: per-family Learner::update, one shared rng.
+    let mut serial = build();
+    let mut rng_s = Rng::new(9);
+    let mut stats_s = Vec::new();
+    for (learner, b) in serial.iter_mut() {
+        stats_s.push(learner.update(
+            &hp, &mut rng_s, b.n_envs, b.t_len,
+            &b.obs, &b.act, &b.logp, &b.val, &b.rew, &b.done,
+        ));
+    }
+    for threads in [1usize, 4] {
+        let pooled = build();
+        let (mut learners, bufs): (Vec<Learner>, Vec<Bufs>) = pooled.into_iter().unzip();
+        let batches: Vec<UpdateBatch<'_>> = bufs.iter().map(Bufs::batch).collect();
+        let pool = WorkerPool::new(threads);
+        let mut rng_p = Rng::new(9);
+        let stats_p =
+            update_sharded_many(&mut learners, &hp, &mut rng_p, Some(&pool), &batches);
+        assert_eq!(stats_p, stats_s, "threads {threads}: per-family stats drifted");
+        for (e, ((serial_l, _), pooled_l)) in serial.iter().zip(&learners).enumerate() {
+            for (k, (a, want)) in weights(pooled_l).iter().zip(weights(serial_l)).enumerate() {
+                assert_eq!(
+                    a, &want,
+                    "threads {threads} family {e}: weight tensor {k} not bit-identical"
+                );
+            }
+        }
+    }
 }
 
 /// Regression (ISSUE 4): an odd B*T with n_minibatches=2 used to silently

@@ -2,10 +2,13 @@
 """Perf ratchet: compare a fresh BENCH_table2.json against the committed
 BENCH_baseline.json and warn on steps/sec regressions.
 
-Two rows are gated, both at B=256 (present in the full sweep and the CI
-``--smoke`` sweep): the ``native-vector`` pool path (raw env runtime) and
+Three rows are gated, all at B=256 (present in the full sweep and the CI
+``--smoke`` sweep): the ``native-vector`` pool path (raw env runtime),
 the ``policy-fused`` path (shard-parallel MLP policy + env, the default
-training rollout). CI runner variance is still being characterized, so a
+training rollout), and the ``update-sharded`` path (the shard-parallel
+PPO minibatch update; its unit is PPO samples/sec rather than env
+steps/sec, compared like-for-like against its own baseline row). CI
+runner variance is still being characterized, so a
 regression past the threshold emits a GitHub ``::warning`` annotation and
 exits 0 — flip ``--strict`` once the variance envelope is known and the
 ratchet should fail the job instead.
@@ -28,7 +31,8 @@ import sys
 
 # Variant-name prefixes of the gated rows (and of the rows kept by
 # --update). Each is compared independently at the gated batch size.
-GATED_PREFIXES = ("native-vector", "policy-fused")
+# NOTE: "update-serial" must not match, so the prefix includes "-sharded".
+GATED_PREFIXES = ("native-vector", "policy-fused", "update-sharded")
 
 
 def load_rows(path: str) -> list[dict]:
@@ -116,10 +120,10 @@ def main() -> int:
                 f"{args.current} has no {'/'.join(GATED_PREFIXES)} rows to baseline")
         payload = {
             "note": (
-                "Perf-ratchet baseline: native-vector and policy-fused "
-                "steps/sec rows from a trusted run of `cargo bench --bench "
-                "table2_throughput -- --smoke`. Refresh with "
-                "scripts/bench_ratchet.py --update."
+                "Perf-ratchet baseline: native-vector, policy-fused, and "
+                "update-sharded steps/sec rows from a trusted run of "
+                "`cargo bench --bench table2_throughput -- --smoke`. "
+                "Refresh with scripts/bench_ratchet.py --update."
             ),
             "rows": kept,
         }
