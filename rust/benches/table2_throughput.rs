@@ -13,15 +13,18 @@
 //! pair records the shard-parallel policy win), plus the PPO-update pair
 //! `update-serial` / `update-sharded` at B ∈ {256, 1024} (caller-thread
 //! minibatch backward vs gradient chunks strided over the pool — the
-//! shard-parallel learner win). The PJRT rows run only
+//! shard-parallel learner win), plus the kernel-layer pair
+//! `forward-blocked` / `update-blocked` at B ∈ {256, 1024, 4096} (blocked
+//! MLP forward alone vs forward + blocked backward, in MLP rows/sec — the
+//! tiled GEMM layer measured without env overhead). The PJRT rows run only
 //! when AOT artifacts and a real PJRT runtime are present. Writes the
 //! machine-readable perf trajectory to `BENCH_table2.json` at the repo
 //! root so the numbers are tracked across PRs; the fleet sweep (random +
 //! serial-net + fused-net policies) lands in `BENCH_fleet.json`.
 //!
 //! `cargo bench --bench table2_throughput -- --smoke` runs a reduced
-//! sweep (B ∈ {1, 64, 256}, policy rows at B=256 only, small step
-//! budget) — the CI regression-visibility job.
+//! sweep (B ∈ {1, 64, 256}, policy/update/kernel rows at B=256 only,
+//! small step budget) — the CI regression-visibility job.
 
 use std::sync::Arc;
 
@@ -246,6 +249,67 @@ fn main() {
                 "  B={b:<5} serial {serial:>12.0}  sharded {sharded:>12.0}  ({:.2}x)",
                 sharded / serial
             );
+        }
+    }
+
+    // -- Kernel rows: blocked MLP forward / forward+backward -----------------
+    // Direct microbench of the tiled kernel layer (ISSUE 6) over the bench
+    // policy net, same dims as the policy rows: `forward-blocked` runs one
+    // B-row blocked forward per rep, `update-blocked` adds a zeroed-grads
+    // blocked backward — exactly the shape of a PPO update chunk pass. The
+    // unit is MLP rows, not env steps. The B=256 rows stay in the smoke
+    // sweep — they are the kernel rows scripts/bench_ratchet.py gates on.
+    {
+        use chargax::baselines::mlp::{BackwardScratch, Cache};
+        use chargax::baselines::ppo::Learner;
+        use chargax::env::vector::VectorEnv;
+
+        let kernel_b: &[usize] = if smoke { &[256] } else { &[256, 1024, 4096] };
+        let probe = VectorEnv::new(StationConfig::default(), Arc::clone(&tables), 1, 11);
+        let d = probe.obs_dim();
+        let nvec = probe.action_nvec();
+        drop(probe);
+        let mut lrng = Rng::new(41);
+        let learner = Learner::new(&mut lrng, d, vector::BENCH_POLICY_HIDDEN, nvec);
+        let nl = learner.mlp.n_logits;
+        let mut orng = Rng::new(5);
+        for blocked_update in [false, true] {
+            let label = if blocked_update { "update-blocked" } else { "forward-blocked" };
+            println!("\n{label} sweep (kernel-layer MLP):");
+            for &b in kernel_b {
+                let obs: Vec<f32> = (0..b * d).map(|_| orng.normal() * 0.5).collect();
+                let mut cache = Cache::empty();
+                let mut grads = learner.mlp.zero_grads();
+                let mut bw = BackwardScratch::new();
+                let dlogits = vec![0.01f32; b * nl];
+                let dvalue = vec![0.01f32; b];
+                let reps = (budget / b.max(1)).clamp(4, 4_000);
+                let mut pass = || {
+                    for _ in 0..reps {
+                        learner.mlp.forward_reuse(&obs, &mut cache);
+                        if blocked_update {
+                            grads.zero();
+                            learner.mlp.backward_scratch(
+                                &obs, &cache, &dlogits, &dvalue, &mut grads, &mut bw,
+                            );
+                        }
+                    }
+                };
+                pass(); // warm (sizes the cache/scratch buffers)
+                let t0 = std::time::Instant::now();
+                pass();
+                let el = t0.elapsed().as_secs_f64();
+                let total_rows = (reps * b) as f64;
+                let rows_per_sec = total_rows / el;
+                let s_per_100k = el * 100_000.0 / total_rows;
+                println!("  B={b:<5} {rows_per_sec:>12.0} rows/s  {s_per_100k:>8.3} s/100k");
+                rows.push(BenchRow {
+                    name: format!("{label} (B={b})"),
+                    batch: b,
+                    steps_per_sec: rows_per_sec,
+                    s_per_100k,
+                });
+            }
         }
     }
 

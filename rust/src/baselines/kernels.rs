@@ -1,0 +1,440 @@
+//! Cache-blocked, fixed-width-unrolled f32 kernels for the MLP hot paths
+//! (ISSUE 6): GEMM-with-bias, strided dot product (GEMV building block),
+//! outer-product gradient accumulation, and column sums. Plain stable
+//! Rust — the fixed-width inner loops over `[f32; NR]` register tiles are
+//! written so LLVM's autovectorizer turns them into SIMD `mul_add`/`add`
+//! lanes (verified shapes: 8-wide f32 with AVX/FMA under
+//! `-C target-cpu=native`, 4-wide under baseline SSE2).
+//!
+//! # Tile / unroll widths
+//!
+//! * [`NR`] = 8 — the column-tile width of [`gemm_bias`] and the unroll
+//!   width of [`outer_acc`]'s row axis.
+//! * [`MR`] = 4 — rows of `a` processed per register tile in
+//!   [`gemm_bias`] (a 4x8 `f32` accumulator block = 8 SSE / 4 AVX
+//!   registers, leaving room for the `a` broadcasts and `w` loads).
+//! * [`DOT_LANES`] = 8 — the number of striped partial accumulators in
+//!   [`dot8`], combined by a fixed pairwise tree.
+//!
+//! The matrices here are small (hidden <= a few hundred), so "cache
+//! blocking" is the register tiling itself: one `w` row tile is loaded
+//! per `k` step and shared across all `MR` rows, and every operand of a
+//! tile pass fits in L1 for the shapes the MLP uses.
+//!
+//! # Determinism contract
+//!
+//! Per output element, the floating-point accumulation order is a pure
+//! function of the reduction length and the constants above — NEVER of
+//! the row count, how rows are blocked, or `--threads`:
+//!
+//! * [`gemm_bias`] accumulates each `out[i][j]` into a single
+//!   accumulator in ascending-`k` order, whether the row went through
+//!   the 4-row tile, the 1-row remainder, or a different row blocking
+//!   entirely. A B-row GEMM therefore produces bit-identical rows to B
+//!   single-row calls — this is what lets shard tasks forward their
+//!   whole lane range as one block (ISSUE 6) without perturbing the
+//!   serial == sharded bitwise contract.
+//! * [`dot8`] stripes element `k` into partial accumulator `k % 8` and
+//!   combines the 8 partials with a fixed pairwise tree, so its order is
+//!   a function of the input length alone.
+//! * [`outer_acc`] / [`colsum_acc`] accumulate in ascending row order
+//!   per element (the PPO update's fixed 64-row chunking, combined with
+//!   the fixed-order chunk reduction tree in `ppo.rs`, keeps the update
+//!   thread-invariant on top of that).
+//!
+//! All kernels round through [`fmadd`], which compiles to a fused
+//! multiply-add when the build target has one (e.g.
+//! `RUSTFLAGS="-C target-cpu=native"` on x86-64 with FMA) and to
+//! separate multiply+add otherwise — `f32::mul_add` without hardware FMA
+//! lowers to a libm call, which is both slow and needlessly
+//! double-rounded-differently. Numerics may therefore differ ACROSS
+//! build targets, but never across `--threads` within one binary. (This
+//! also intentionally drifts PPO numerics vs the PR 5 scalar loops —
+//! see README "Kernel layer".)
+
+/// Column-tile width of [`gemm_bias`] / unroll width of [`outer_acc`].
+pub const NR: usize = 8;
+/// Row-tile height of [`gemm_bias`].
+pub const MR: usize = 4;
+/// Striped partial-accumulator count of [`dot8`].
+pub const DOT_LANES: usize = 8;
+
+/// `a * b + acc` with one rounding when the build target has hardware
+/// FMA, two otherwise. Every kernel (and the test references) round
+/// through this one function, so kernel-vs-reference equality is exact
+/// on every build target.
+#[inline(always)]
+pub fn fmadd(a: f32, b: f32, acc: f32) -> f32 {
+    #[cfg(target_feature = "fma")]
+    {
+        a.mul_add(b, acc)
+    }
+    #[cfg(not(target_feature = "fma"))]
+    {
+        acc + a * b
+    }
+}
+
+/// `out = a @ w + bias` — `a: [rows, k_dim]`, `w: [k_dim, j_dim]`,
+/// `out: [rows, j_dim]`, all row-major. Register-tiled `MR x NR`; each
+/// `out[i][j]` is one accumulator filled in ascending-`k` order, so any
+/// row blocking of `a` yields bit-identical rows (see module docs).
+pub fn gemm_bias(
+    a: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    rows: usize,
+    k_dim: usize,
+    j_dim: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), rows * k_dim, "gemm_bias: a shape");
+    assert_eq!(w.len(), k_dim * j_dim, "gemm_bias: w shape");
+    assert_eq!(bias.len(), j_dim, "gemm_bias: bias shape");
+    assert_eq!(out.len(), rows * j_dim, "gemm_bias: out shape");
+    let mut i = 0;
+    while i + MR <= rows {
+        gemm_rows::<MR>(
+            &a[i * k_dim..(i + MR) * k_dim],
+            w,
+            bias,
+            k_dim,
+            j_dim,
+            &mut out[i * j_dim..(i + MR) * j_dim],
+        );
+        i += MR;
+    }
+    while i < rows {
+        gemm_rows::<1>(
+            &a[i * k_dim..(i + 1) * k_dim],
+            w,
+            bias,
+            k_dim,
+            j_dim,
+            &mut out[i * j_dim..(i + 1) * j_dim],
+        );
+        i += 1;
+    }
+}
+
+/// `R`-row micro-kernel of [`gemm_bias`]: an `R x NR` accumulator tile
+/// swept over `k`, then a scalar column tail with the identical
+/// per-element order.
+fn gemm_rows<const R: usize>(
+    a: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    k_dim: usize,
+    j_dim: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), R * k_dim);
+    debug_assert_eq!(out.len(), R * j_dim);
+    let j_main = j_dim - j_dim % NR;
+    let mut jt = 0;
+    while jt < j_main {
+        let mut acc = [[0f32; NR]; R];
+        for row in acc.iter_mut() {
+            row.copy_from_slice(&bias[jt..jt + NR]);
+        }
+        for kk in 0..k_dim {
+            let wrow = &w[kk * j_dim + jt..kk * j_dim + jt + NR];
+            for (r, row) in acc.iter_mut().enumerate() {
+                let av = a[r * k_dim + kk];
+                for u in 0..NR {
+                    row[u] = fmadd(av, wrow[u], row[u]);
+                }
+            }
+        }
+        for (r, row) in acc.iter().enumerate() {
+            out[r * j_dim + jt..r * j_dim + jt + NR].copy_from_slice(row);
+        }
+        jt += NR;
+    }
+    for jj in j_main..j_dim {
+        for r in 0..R {
+            let mut acc = bias[jj];
+            for kk in 0..k_dim {
+                acc = fmadd(a[r * k_dim + kk], w[kk * j_dim + jj], acc);
+            }
+            out[r * j_dim + jj] = acc;
+        }
+    }
+}
+
+/// Dot product with [`DOT_LANES`] striped partial accumulators
+/// (element `k` lands in partial `k % DOT_LANES`) combined by a fixed
+/// pairwise tree — the GEMV building block for the value head and the
+/// `d @ W^T` backward projections. Accumulation order is a function of
+/// `a.len()` alone.
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot8: length mismatch");
+    let n = a.len();
+    let main = n - n % DOT_LANES;
+    let mut acc = [0f32; DOT_LANES];
+    let (ah, at) = a.split_at(main);
+    let (bh, bt) = b.split_at(main);
+    for (ac, bc) in ah.chunks_exact(DOT_LANES).zip(bh.chunks_exact(DOT_LANES)) {
+        for u in 0..DOT_LANES {
+            acc[u] = fmadd(ac[u], bc[u], acc[u]);
+        }
+    }
+    for (u, (&av, &bv)) in at.iter().zip(bt).enumerate() {
+        acc[u] = fmadd(av, bv, acc[u]);
+    }
+    let mut stride = DOT_LANES / 2;
+    while stride > 0 {
+        for u in 0..stride {
+            acc[u] += acc[u + stride];
+        }
+        stride /= 2;
+    }
+    acc[0]
+}
+
+/// `gw[k][j] += sum_i a[i][k] * d[i][j]` (ascending `i` per element) —
+/// the weight-gradient outer-product accumulation. `gw: [k_dim, j_dim]`.
+pub fn outer_acc(
+    a: &[f32],
+    d: &[f32],
+    rows: usize,
+    k_dim: usize,
+    j_dim: usize,
+    gw: &mut [f32],
+) {
+    assert_eq!(a.len(), rows * k_dim, "outer_acc: a shape");
+    assert_eq!(d.len(), rows * j_dim, "outer_acc: d shape");
+    assert_eq!(gw.len(), k_dim * j_dim, "outer_acc: gw shape");
+    let j_main = j_dim - j_dim % NR;
+    for i in 0..rows {
+        let arow = &a[i * k_dim..(i + 1) * k_dim];
+        let drow = &d[i * j_dim..(i + 1) * j_dim];
+        for (kk, &av) in arow.iter().enumerate() {
+            // Exact-zero activations (common in the sparse obs layout) are
+            // skipped: with a +0-initialized accumulator, adding `0 * d`
+            // can never flip a bit for finite `d` (proven exactly against
+            // the skip-free reference in the tests below).
+            if av == 0.0 {
+                continue;
+            }
+            let grow = &mut gw[kk * j_dim..(kk + 1) * j_dim];
+            let (gh, gt) = grow.split_at_mut(j_main);
+            let (dh, dt) = drow.split_at(j_main);
+            for (gc, dc) in gh.chunks_exact_mut(NR).zip(dh.chunks_exact(NR)) {
+                for u in 0..NR {
+                    gc[u] = fmadd(av, dc[u], gc[u]);
+                }
+            }
+            for (g, &dv) in gt.iter_mut().zip(dt) {
+                *g = fmadd(av, dv, *g);
+            }
+        }
+    }
+}
+
+/// `gb[j] += sum_i d[i][j]` (ascending `i` per element) — bias-gradient
+/// column sums.
+pub fn colsum_acc(d: &[f32], rows: usize, j_dim: usize, gb: &mut [f32]) {
+    assert_eq!(d.len(), rows * j_dim, "colsum_acc: d shape");
+    assert_eq!(gb.len(), j_dim, "colsum_acc: gb shape");
+    for i in 0..rows {
+        let drow = &d[i * j_dim..(i + 1) * j_dim];
+        for (g, &dv) in gb.iter_mut().zip(drow) {
+            *g += dv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    // ---- scalar references ------------------------------------------------
+    // Naive per-element loops written independently of the blocked kernels
+    // but rounding through the same `fmadd`, so every comparison below is
+    // EXACT (bitwise) on every build target — no tolerance needed.
+
+    fn ref_gemm_bias(
+        a: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        rows: usize,
+        k_dim: usize,
+        j_dim: usize,
+        out: &mut [f32],
+    ) {
+        for i in 0..rows {
+            for j in 0..j_dim {
+                let mut acc = bias[j];
+                for k in 0..k_dim {
+                    acc = fmadd(a[i * k_dim + k], w[k * j_dim + j], acc);
+                }
+                out[i * j_dim + j] = acc;
+            }
+        }
+    }
+
+    /// Index-based re-derivation of the stripe + pairwise-tree order.
+    fn ref_dot8(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = [0f32; DOT_LANES];
+        for k in 0..a.len() {
+            // Stripe k % 8 within the 8-aligned head; the tail restarts at
+            // stripe 0 (identical to dot8's enumerate over the remainder).
+            let main = a.len() - a.len() % DOT_LANES;
+            let u = if k < main { k % DOT_LANES } else { k - main };
+            acc[u] = fmadd(a[k], b[k], acc[u]);
+        }
+        ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]))
+    }
+
+    /// Skip-free outer product: proves `outer_acc`'s zero-skip is a
+    /// bitwise no-op, not just an approximation.
+    fn ref_outer_acc(
+        a: &[f32],
+        d: &[f32],
+        rows: usize,
+        k_dim: usize,
+        j_dim: usize,
+        gw: &mut [f32],
+    ) {
+        for i in 0..rows {
+            for k in 0..k_dim {
+                for j in 0..j_dim {
+                    gw[k * j_dim + j] =
+                        fmadd(a[i * k_dim + k], d[i * j_dim + j], gw[k * j_dim + j]);
+                }
+            }
+        }
+    }
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Shapes chosen to hit every code path: 1-row and 4-row tiles, row
+    /// remainders 1..3, full NR column tiles, and column tails 1..7.
+    const SHAPES: [(usize, usize, usize); 8] = [
+        (1, 1, 1),
+        (3, 5, 7),
+        (4, 8, 8),
+        (5, 8, 9),
+        (7, 13, 16),
+        (8, 16, 23),
+        (9, 6, 1),
+        (13, 24, 40),
+    ];
+
+    #[test]
+    fn gemm_bias_matches_scalar_reference_bitwise() {
+        let mut rng = Rng::new(101);
+        for &(rows, k, j) in &SHAPES {
+            let a = randv(&mut rng, rows * k);
+            let w = randv(&mut rng, k * j);
+            let bias = randv(&mut rng, j);
+            let mut got = vec![f32::NAN; rows * j];
+            let mut want = vec![0f32; rows * j];
+            gemm_bias(&a, &w, &bias, rows, k, j, &mut got);
+            ref_gemm_bias(&a, &w, &bias, rows, k, j, &mut want);
+            assert_eq!(
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "gemm {rows}x{k}x{j}"
+            );
+        }
+    }
+
+    /// The load-bearing invariant behind lane-blocked shard inference: a
+    /// B-row GEMM equals B single-row GEMMs AND any contiguous sub-block,
+    /// bitwise.
+    #[test]
+    fn gemm_bias_is_row_blocking_invariant() {
+        let mut rng = Rng::new(102);
+        let (rows, k, j) = (11usize, 17usize, 12usize);
+        let a = randv(&mut rng, rows * k);
+        let w = randv(&mut rng, k * j);
+        let bias = randv(&mut rng, j);
+        let mut full = vec![0f32; rows * j];
+        gemm_bias(&a, &w, &bias, rows, k, j, &mut full);
+        for i in 0..rows {
+            let mut one = vec![f32::NAN; j];
+            gemm_bias(&a[i * k..(i + 1) * k], &w, &bias, 1, k, j, &mut one);
+            assert_eq!(one, full[i * j..(i + 1) * j], "row {i} vs full batch");
+        }
+        for (lo, hi) in [(0usize, 3usize), (2, 9), (5, 11), (3, 4)] {
+            let mut part = vec![f32::NAN; (hi - lo) * j];
+            gemm_bias(&a[lo * k..hi * k], &w, &bias, hi - lo, k, j, &mut part);
+            assert_eq!(part, full[lo * j..hi * j], "block {lo}..{hi} vs full batch");
+        }
+    }
+
+    #[test]
+    fn dot8_matches_stripe_reference_bitwise_and_f64_closely() {
+        let mut rng = Rng::new(103);
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 64, 100] {
+            let a = randv(&mut rng, n);
+            let b = randv(&mut rng, n);
+            let got = dot8(&a, &b);
+            assert_eq!(got.to_bits(), ref_dot8(&a, &b).to_bits(), "n={n} vs stripe reference");
+            let wide: f64 =
+                a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            assert!(
+                (got as f64 - wide).abs() <= 1e-4 * (1.0 + wide.abs()),
+                "n={n}: dot8 {got} vs f64 {wide}"
+            );
+        }
+    }
+
+    #[test]
+    fn outer_acc_matches_skip_free_reference_bitwise() {
+        let mut rng = Rng::new(104);
+        for &(rows, k, j) in &SHAPES {
+            let mut a = randv(&mut rng, rows * k);
+            // Force exact zeros so the skip path is exercised.
+            for (idx, x) in a.iter_mut().enumerate() {
+                if idx % 3 == 0 {
+                    *x = 0.0;
+                }
+            }
+            let d = randv(&mut rng, rows * j);
+            let mut got = vec![0f32; k * j];
+            let mut want = vec![0f32; k * j];
+            outer_acc(&a, &d, rows, k, j, &mut got);
+            ref_outer_acc(&a, &d, rows, k, j, &mut want);
+            assert_eq!(
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "outer {rows}x{k}x{j}"
+            );
+        }
+    }
+
+    #[test]
+    fn outer_and_colsum_accumulate_instead_of_overwrite() {
+        let a = [1.0f32, 2.0];
+        let d = [3.0f32];
+        let mut gw = vec![10.0f32, 20.0];
+        outer_acc(&a, &d, 1, 2, 1, &mut gw);
+        assert_eq!(gw, vec![13.0, 26.0]);
+        let mut gb = vec![5.0f32];
+        colsum_acc(&d, 1, 1, &mut gb);
+        assert_eq!(gb, vec![8.0]);
+    }
+
+    #[test]
+    fn colsum_matches_naive_reference_bitwise() {
+        let mut rng = Rng::new(105);
+        for &(rows, _, j) in &SHAPES {
+            let d = randv(&mut rng, rows * j);
+            let mut got = vec![0f32; j];
+            colsum_acc(&d, rows, j, &mut got);
+            let mut want = vec![0f32; j];
+            for i in 0..rows {
+                for jj in 0..j {
+                    want[jj] += d[i * j + jj];
+                }
+            }
+            assert_eq!(got, want, "colsum {rows}x{j}");
+        }
+    }
+}

@@ -1,7 +1,15 @@
 //! Dense actor-critic MLP with hand-written backprop — the network for the
 //! pure-Rust PPO comparator (mirrors python/compile/networks.py: tanh torso,
 //! concatenated categorical heads, scalar value head).
+//!
+//! All matrix math runs through the blocked kernel layer in
+//! [`super::kernels`] (ISSUE 6): batched forward, row/block forward, the
+//! value head, and the backward pass share one set of tiled
+//! GEMM/dot/outer-product kernels whose per-element accumulation order is
+//! independent of row blocking — so a B-row batch, a shard's lane block,
+//! and a single row all produce bit-identical outputs per row.
 
+use super::kernels;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -33,23 +41,23 @@ pub struct Grads {
     pub bv: Vec<f32>,
 }
 
-/// Forward-pass activations kept for backprop.
+/// Forward-pass activations kept for backprop. The observation rows are
+/// NOT stored here — forward entry points borrow them and the backward
+/// pass takes the same slice again, so batched inference is copy-free.
 pub struct Cache {
     pub batch: usize,
-    pub obs: Vec<f32>, // [B, obs_dim]
-    pub h1: Vec<f32>,  // [B, hidden] (post-tanh)
-    pub h2: Vec<f32>,  // [B, hidden]
+    pub h1: Vec<f32>,     // [B, hidden] (post-tanh)
+    pub h2: Vec<f32>,     // [B, hidden]
     pub logits: Vec<f32>, // [B, n_logits]
     pub value: Vec<f32>,  // [B]
 }
 
 impl Cache {
-    /// An empty cache for [`Mlp::forward_reuse`] callers: fill `obs` +
-    /// `batch`, then forward into it repeatedly without reallocation.
+    /// An empty cache for [`Mlp::forward_reuse`] callers: forward into it
+    /// repeatedly without reallocation after warmup.
     pub fn empty() -> Cache {
         Cache {
             batch: 0,
-            obs: Vec::new(),
             h1: Vec::new(),
             h2: Vec::new(),
             logits: Vec::new(),
@@ -72,17 +80,20 @@ impl BackwardScratch {
     }
 }
 
-/// Reusable single-row forward scratch: hidden activations + logits for
-/// exactly one observation row. Pool shards each own one and reuse it for
-/// every (lane, step) they forward, so the fused rollout's policy path
-/// does no per-step allocation (unlike [`Mlp::forward`], which builds a
-/// fresh [`Cache`] per call for backprop).
+/// Reusable inference scratch: hidden activations, logits, and values for
+/// a block of observation rows. Pool shards each own one and forward
+/// their whole contiguous lane range as ONE row-block GEMM per step
+/// ([`Mlp::forward_block`]), so the fused rollout's policy path does no
+/// per-step allocation and no per-lane kernel dispatch. `rows` is
+/// whatever the last forward ran; a single-row forward
+/// ([`Mlp::forward_row`]) is just the `rows == 1` case.
 #[derive(Debug, Clone)]
 pub struct MlpScratch {
-    pub h1: Vec<f32>,
-    pub h2: Vec<f32>,
-    pub logits: Vec<f32>,
-    pub value: f32,
+    pub h1: Vec<f32>,     // [rows, hidden]
+    pub h2: Vec<f32>,     // [rows, hidden]
+    pub logits: Vec<f32>, // [rows, n_logits]
+    pub values: Vec<f32>, // [rows]
+    pub rows: usize,
 }
 
 impl Mlp {
@@ -121,82 +132,108 @@ impl Mlp {
         }
     }
 
-    /// Batched forward: obs [B * obs_dim] row-major.
-    pub fn forward(&self, obs: &[f32]) -> Cache {
-        let mut cache = Cache::empty();
-        cache.batch = obs.len() / self.obs_dim;
-        cache.obs = obs.to_vec();
-        self.forward_reuse(&mut cache);
-        cache
-    }
-
-    /// Batched forward reusing caller-owned cache buffers: `cache.obs`
-    /// must already hold the `[batch * obs_dim]` input rows and
-    /// `cache.batch` the row count; the remaining buffers are resized and
-    /// fully overwritten. This is the allocation-free (after warmup) entry
-    /// point the sharded PPO update's chunk passes run on — per-row
-    /// results are bit-identical to [`Mlp::forward`] (it delegates here).
-    pub fn forward_reuse(&self, cache: &mut Cache) {
-        let b = cache.batch;
-        debug_assert_eq!(cache.obs.len(), b * self.obs_dim);
-        cache.h1.resize(b * self.hidden, 0.0);
-        matmul_bias(&cache.obs, &self.w1, &self.b1, b, self.obs_dim, self.hidden, &mut cache.h1);
-        cache.h1.iter_mut().for_each(|x| *x = x.tanh());
-        cache.h2.resize(b * self.hidden, 0.0);
-        matmul_bias(&cache.h1, &self.w2, &self.b2, b, self.hidden, self.hidden, &mut cache.h2);
-        cache.h2.iter_mut().for_each(|x| *x = x.tanh());
-        cache.logits.resize(b * self.n_logits, 0.0);
-        let (h, nl) = (self.hidden, self.n_logits);
-        matmul_bias(&cache.h2, &self.wpi, &self.bpi, b, h, nl, &mut cache.logits);
-        cache.value.resize(b, 0.0);
-        for i in 0..b {
-            let mut v = self.bv[0];
-            for k in 0..self.hidden {
-                v += cache.h2[i * self.hidden + k] * self.wv[k];
-            }
-            cache.value[i] = v;
+    /// The one shared forward pipeline: every public entry point
+    /// ([`Mlp::forward`], [`Mlp::forward_reuse`], [`Mlp::forward_block`],
+    /// [`Mlp::forward_row`]) lands here, so per-row bitwise identity
+    /// between them is structural, not re-proven per call site.
+    fn forward_into(
+        &self,
+        obs: &[f32],
+        rows: usize,
+        h1: &mut Vec<f32>,
+        h2: &mut Vec<f32>,
+        logits: &mut Vec<f32>,
+        values: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(obs.len(), rows * self.obs_dim);
+        h1.resize(rows * self.hidden, 0.0);
+        kernels::gemm_bias(obs, &self.w1, &self.b1, rows, self.obs_dim, self.hidden, h1);
+        h1.iter_mut().for_each(|x| *x = x.tanh());
+        h2.resize(rows * self.hidden, 0.0);
+        kernels::gemm_bias(h1.as_slice(), &self.w2, &self.b2, rows, self.hidden, self.hidden, h2);
+        h2.iter_mut().for_each(|x| *x = x.tanh());
+        logits.resize(rows * self.n_logits, 0.0);
+        kernels::gemm_bias(
+            h2.as_slice(),
+            &self.wpi,
+            &self.bpi,
+            rows,
+            self.hidden,
+            self.n_logits,
+            logits,
+        );
+        values.resize(rows, 0.0);
+        for (i, v) in values.iter_mut().enumerate() {
+            *v = self.bv[0]
+                + kernels::dot8(&h2[i * self.hidden..(i + 1) * self.hidden], &self.wv);
         }
     }
 
-    /// Scratch sized for this network's single-row forward.
+    /// Batched forward: obs `[B * obs_dim]` row-major, borrowed (never
+    /// copied) for the duration of the pass.
+    pub fn forward(&self, obs: &[f32]) -> Cache {
+        let mut cache = Cache::empty();
+        self.forward_reuse(obs, &mut cache);
+        cache
+    }
+
+    /// Batched forward reusing caller-owned cache buffers — the
+    /// allocation-free (after warmup) entry point the sharded PPO update's
+    /// chunk passes run on. The cache buffers are resized and fully
+    /// overwritten; per-row results are bit-identical to every other
+    /// forward entry point (all delegate to one pipeline).
+    pub fn forward_reuse(&self, obs: &[f32], cache: &mut Cache) {
+        let b = obs.len() / self.obs_dim;
+        cache.batch = b;
+        self.forward_into(
+            obs,
+            b,
+            &mut cache.h1,
+            &mut cache.h2,
+            &mut cache.logits,
+            &mut cache.value,
+        );
+    }
+
+    /// Scratch sized for one row of this network; [`Mlp::forward_block`]
+    /// grows it to whatever block size a shard actually runs.
     pub fn make_scratch(&self) -> MlpScratch {
         MlpScratch {
             h1: vec![0.0; self.hidden],
             h2: vec![0.0; self.hidden],
             logits: vec![0.0; self.n_logits],
-            value: 0.0,
+            values: vec![0.0; 1],
+            rows: 1,
         }
     }
 
-    /// Single-row forward into caller-owned scratch: `&self` (weights are
+    /// Row-block forward into caller-owned scratch: `&self` (weights are
     /// read-only, so many shards may call it concurrently) and zero
-    /// allocation. Bit-identical to the corresponding row of the batched
-    /// [`Mlp::forward`] — same accumulation order per row.
+    /// allocation after warmup. One call runs a shard's whole contiguous
+    /// lane range as a single blocked GEMM; row `i` of the result is
+    /// bit-identical to [`Mlp::forward_row`] on row `i` alone (kernel
+    /// accumulation order is independent of row blocking).
+    pub fn forward_block(&self, obs: &[f32], rows: usize, s: &mut MlpScratch) {
+        debug_assert_eq!(obs.len(), rows * self.obs_dim);
+        s.rows = rows;
+        self.forward_into(obs, rows, &mut s.h1, &mut s.h2, &mut s.logits, &mut s.values);
+    }
+
+    /// Single-row forward — [`Mlp::forward_block`] at `rows == 1` (the
+    /// eval / scalar-comparator path).
     pub fn forward_row(&self, obs: &[f32], s: &mut MlpScratch) {
-        debug_assert_eq!(obs.len(), self.obs_dim);
-        matmul_bias(obs, &self.w1, &self.b1, 1, self.obs_dim, self.hidden, &mut s.h1);
-        s.h1.iter_mut().for_each(|x| *x = x.tanh());
-        matmul_bias(&s.h1, &self.w2, &self.b2, 1, self.hidden, self.hidden, &mut s.h2);
-        s.h2.iter_mut().for_each(|x| *x = x.tanh());
-        matmul_bias(&s.h2, &self.wpi, &self.bpi, 1, self.hidden, self.n_logits, &mut s.logits);
-        let mut v = self.bv[0];
-        for k in 0..self.hidden {
-            v += s.h2[k] * self.wv[k];
-        }
-        s.value = v;
+        self.forward_block(obs, 1, s);
     }
 
-    /// Backprop from (dlogits [B, n_logits], dvalue [B]) into grads.
-    pub fn backward(&self, cache: &Cache, dlogits: &[f32], dvalue: &[f32], g: &mut Grads) {
-        self.backward_scratch(cache, dlogits, dvalue, g, &mut BackwardScratch::new());
-    }
-
-    /// [`Mlp::backward`] with caller-owned `dh1`/`dh2` temporaries —
-    /// allocation-free after warmup, bit-identical results (the default
-    /// entry point delegates here). Gradients ACCUMULATE into `g` in row
-    /// order; zero it first for a fresh pass.
+    /// Backprop from (`dlogits [B, n_logits]`, `dvalue [B]`) into grads,
+    /// with caller-owned `dh1`/`dh2` temporaries — allocation-free after
+    /// warmup. `obs` must be the same rows the cache was forwarded from
+    /// (the cache no longer stores a copy). Gradients ACCUMULATE into `g`
+    /// in row order; zero it first for a fresh pass. All projections and
+    /// accumulations run on the blocked kernels.
     pub fn backward_scratch(
         &self,
+        obs: &[f32],
         cache: &Cache,
         dlogits: &[f32],
         dvalue: &[f32],
@@ -205,29 +242,24 @@ impl Mlp {
     ) {
         let b = cache.batch;
         let h = self.hidden;
+        let nl = self.n_logits;
+        debug_assert_eq!(obs.len(), b * self.obs_dim);
         // dh2 = dlogits @ wpi^T + dvalue * wv^T
         s.dh2.resize(b * h, 0.0);
         let dh2 = &mut s.dh2;
         for i in 0..b {
+            let dl = &dlogits[i * nl..(i + 1) * nl];
+            let dv = dvalue[i];
             for k in 0..h {
-                let mut acc = dvalue[i] * self.wv[k];
-                let row = &self.wpi[k * self.n_logits..(k + 1) * self.n_logits];
-                let dl = &dlogits[i * self.n_logits..(i + 1) * self.n_logits];
-                for (w, d) in row.iter().zip(dl) {
-                    acc += w * d;
-                }
-                dh2[i * h + k] = acc;
+                let row = &self.wpi[k * nl..(k + 1) * nl];
+                dh2[i * h + k] = kernels::fmadd(dv, self.wv[k], kernels::dot8(row, dl));
             }
         }
-        // grads of heads
-        accum_matmul_t(&cache.h2, dlogits, b, h, self.n_logits, &mut g.wpi);
-        accum_colsum(dlogits, b, self.n_logits, &mut g.bpi);
-        for i in 0..b {
-            for k in 0..h {
-                g.wv[k] += cache.h2[i * h + k] * dvalue[i];
-            }
-            g.bv[0] += dvalue[i];
-        }
+        // grads of heads (the value head is the j_dim == 1 outer product).
+        kernels::outer_acc(&cache.h2, dlogits, b, h, nl, &mut g.wpi);
+        kernels::colsum_acc(dlogits, b, nl, &mut g.bpi);
+        kernels::outer_acc(&cache.h2, dvalue, b, h, 1, &mut g.wv);
+        kernels::colsum_acc(dvalue, b, 1, &mut g.bv);
         // through tanh of h2
         for i in 0..b * h {
             dh2[i] *= 1.0 - cache.h2[i] * cache.h2[i];
@@ -236,23 +268,18 @@ impl Mlp {
         s.dh1.resize(b * h, 0.0);
         let dh1 = &mut s.dh1;
         for i in 0..b {
+            let dd = &dh2[i * h..(i + 1) * h];
             for k in 0..h {
-                let mut acc = 0f32;
-                let row = &self.w2[k * h..(k + 1) * h];
-                let dd = &dh2[i * h..(i + 1) * h];
-                for (w, d) in row.iter().zip(dd) {
-                    acc += w * d;
-                }
-                dh1[i * h + k] = acc;
+                dh1[i * h + k] = kernels::dot8(&self.w2[k * h..(k + 1) * h], dd);
             }
         }
-        accum_matmul_t(&cache.h1, &dh2, b, h, h, &mut g.w2);
-        accum_colsum(&dh2, b, h, &mut g.b2);
+        kernels::outer_acc(&cache.h1, dh2, b, h, h, &mut g.w2);
+        kernels::colsum_acc(dh2, b, h, &mut g.b2);
         for i in 0..b * h {
             dh1[i] *= 1.0 - cache.h1[i] * cache.h1[i];
         }
-        accum_matmul_t(&cache.obs, &dh1, b, self.obs_dim, h, &mut g.w1);
-        accum_colsum(&dh1, b, h, &mut g.b1);
+        kernels::outer_acc(obs, dh1, b, self.obs_dim, h, &mut g.w1);
+        kernels::colsum_acc(dh1, b, h, &mut g.b1);
     }
 
     /// The parameter tensors in canonical order (same order as
@@ -329,49 +356,6 @@ impl Grads {
     }
 }
 
-/// out[i][j] = sum_k a[i][k] w[k][j] + bias[j]  (a: [B,K], w: [K,J])
-fn matmul_bias(a: &[f32], w: &[f32], bias: &[f32], b: usize, k_dim: usize, j_dim: usize, out: &mut [f32]) {
-    for i in 0..b {
-        let orow = &mut out[i * j_dim..(i + 1) * j_dim];
-        orow.copy_from_slice(bias);
-        let arow = &a[i * k_dim..(i + 1) * k_dim];
-        for (k, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let wrow = &w[k * j_dim..(k + 1) * j_dim];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += av * wv;
-            }
-        }
-    }
-}
-
-/// gw[k][j] += sum_i a[i][k] d[i][j]
-fn accum_matmul_t(a: &[f32], d: &[f32], b: usize, k_dim: usize, j_dim: usize, gw: &mut [f32]) {
-    for i in 0..b {
-        let arow = &a[i * k_dim..(i + 1) * k_dim];
-        let drow = &d[i * j_dim..(i + 1) * j_dim];
-        for (k, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let grow = &mut gw[k * j_dim..(k + 1) * j_dim];
-            for (g, &dv) in grow.iter_mut().zip(drow) {
-                *g += av * dv;
-            }
-        }
-    }
-}
-
-fn accum_colsum(d: &[f32], b: usize, j_dim: usize, gb: &mut [f32]) {
-    for i in 0..b {
-        for j in 0..j_dim {
-            gb[j] += d[i * j_dim + j];
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -393,7 +377,7 @@ mod tests {
         };
         let cache = mlp.forward(&obs);
         let mut g = mlp.zero_grads();
-        mlp.backward(&cache, &cl, &cv, &mut g);
+        mlp.backward_scratch(&obs, &cache, &cl, &cv, &mut g, &mut BackwardScratch::new());
 
         let eps = 1e-3f32;
         // probe a few weights in each matrix
@@ -430,9 +414,41 @@ mod tests {
             // Dirty the scratch to prove each forward fully overwrites it.
             s.h1.iter_mut().for_each(|x| *x = f32::NAN);
             s.logits.iter_mut().for_each(|x| *x = f32::NAN);
+            s.values.iter_mut().for_each(|x| *x = f32::NAN);
             mlp.forward_row(&obs[i * od..(i + 1) * od], &mut s);
+            assert_eq!(s.rows, 1);
             assert_eq!(s.logits, cache.logits[i * nl..(i + 1) * nl], "row {i} logits");
-            assert_eq!(s.value, cache.value[i], "row {i} value");
+            assert_eq!(s.values[0], cache.value[i], "row {i} value");
+        }
+    }
+
+    /// The shard-side lane-block forward (one GEMM over a contiguous row
+    /// range) must match per-row forwards bit-for-bit — the invariant that
+    /// lets shard inference run blocked without perturbing the
+    /// thread-count-invariance contract. Block sizes cover the 4-row tile,
+    /// remainders, and a block larger than the previous call (growth).
+    #[test]
+    fn forward_block_matches_forward_row_bitwise() {
+        let mut rng = Rng::new(22);
+        let (od, h, nl, b) = (7, 12, 5, 11);
+        let mlp = Mlp::new(&mut rng, od, h, nl);
+        let obs: Vec<f32> = (0..b * od).map(|_| rng.normal()).collect();
+        let mut row = mlp.make_scratch();
+        let mut blk = mlp.make_scratch();
+        for (lo, hi) in [(0usize, 4usize), (4, 11), (2, 3), (0, 11)] {
+            let rows = hi - lo;
+            blk.logits.iter_mut().for_each(|x| *x = f32::NAN);
+            mlp.forward_block(&obs[lo * od..hi * od], rows, &mut blk);
+            assert_eq!(blk.rows, rows);
+            for i in 0..rows {
+                mlp.forward_row(&obs[(lo + i) * od..(lo + i + 1) * od], &mut row);
+                assert_eq!(
+                    row.logits,
+                    blk.logits[i * nl..(i + 1) * nl],
+                    "block {lo}..{hi} row {i} logits"
+                );
+                assert_eq!(row.values[0], blk.values[i], "block {lo}..{hi} row {i} value");
+            }
         }
     }
 
@@ -449,12 +465,10 @@ mod tests {
             let obs: Vec<f32> = (0..b * od).map(|_| rng.normal()).collect();
             let want = mlp.forward(&obs);
             // Dirty the reusable cache with stale sizes/values.
-            cache.batch = b;
-            cache.obs.clear();
-            cache.obs.extend_from_slice(&obs);
             cache.h1.iter_mut().for_each(|x| *x = f32::NAN);
             cache.logits.iter_mut().for_each(|x| *x = f32::NAN);
-            mlp.forward_reuse(&mut cache);
+            mlp.forward_reuse(&obs, &mut cache);
+            assert_eq!(cache.batch, b, "B={b} batch");
             assert_eq!(cache.h1, want.h1, "B={b} h1");
             assert_eq!(cache.h2, want.h2, "B={b} h2");
             assert_eq!(cache.logits, want.logits, "B={b} logits");
@@ -462,10 +476,10 @@ mod tests {
         }
     }
 
-    /// `backward_scratch` with reused (dirty) temporaries must produce the
-    /// same gradient bits as the allocating `backward`.
+    /// `backward_scratch` with reused (dirty, wrongly-sized) temporaries
+    /// must produce the same gradient bits as a run on fresh temporaries.
     #[test]
-    fn backward_scratch_matches_backward_bitwise() {
+    fn backward_scratch_reuse_matches_fresh_scratch_bitwise() {
         let mut rng = Rng::new(57);
         let (od, h, nl) = (6, 10, 4);
         let mlp = Mlp::new(&mut rng, od, h, nl);
@@ -476,9 +490,14 @@ mod tests {
             let dvalue: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
             let cache = mlp.forward(&obs);
             let mut g_ref = mlp.zero_grads();
-            mlp.backward(&cache, &dlogits, &dvalue, &mut g_ref);
+            mlp.backward_scratch(
+                &obs, &cache, &dlogits, &dvalue, &mut g_ref, &mut BackwardScratch::new(),
+            );
+            // Dirty the reused temporaries with stale sizes/values.
+            s.dh1.iter_mut().for_each(|x| *x = f32::NAN);
+            s.dh2.iter_mut().for_each(|x| *x = f32::NAN);
             let mut g = mlp.zero_grads();
-            mlp.backward_scratch(&cache, &dlogits, &dvalue, &mut g, &mut s);
+            mlp.backward_scratch(&obs, &cache, &dlogits, &dvalue, &mut g, &mut s);
             for (a, r) in g.as_slices().into_iter().zip(g_ref.as_slices()) {
                 assert_eq!(a, r, "B={b}");
             }

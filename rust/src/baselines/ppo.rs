@@ -287,10 +287,14 @@ pub struct UpdateBatch<'a> {
     pub done: &'a [f32],
 }
 
-/// Per-pool-lane reusable buffers for the update's chunk passes (forward
-/// cache, loss gradients, backward temporaries). Resized on demand, so
-/// one scratch serves chunks from differently-shaped family learners.
+/// Per-pool-lane reusable buffers for the update's chunk passes (gathered
+/// obs rows, forward cache, loss gradients, backward temporaries).
+/// Resized on demand, so one scratch serves chunks from
+/// differently-shaped family learners.
 struct UpdateScratch {
+    /// Permutation-gathered observation rows for the current chunk (the
+    /// forward cache borrows obs instead of storing a copy).
+    obs: Vec<f32>,
     cache: Cache,
     dlogits: Vec<f32>,
     dvalue: Vec<f32>,
@@ -302,6 +306,7 @@ struct UpdateScratch {
 impl UpdateScratch {
     fn new() -> UpdateScratch {
         UpdateScratch {
+            obs: Vec::new(),
             cache: Cache::empty(),
             dlogits: Vec::new(),
             dvalue: Vec::new(),
@@ -343,15 +348,14 @@ impl ChunkTask<'_> {
         let nl = learner.heads.n_logits;
         let n_ports = learner.heads.nvec.len();
         let b = self.idxs.len();
-        // Gather this chunk's observation rows straight into the reusable
-        // forward cache.
-        s.cache.batch = b;
-        s.cache.obs.resize(b * d, 0.0);
+        // Gather this chunk's observation rows into the reusable buffer,
+        // then run ONE blocked forward over the whole chunk (the same
+        // kernels as the rollout's lane-blocked shard inference).
+        s.obs.resize(b * d, 0.0);
         for (r, &i) in self.idxs.iter().enumerate() {
-            s.cache.obs[r * d..(r + 1) * d]
-                .copy_from_slice(&self.batch.obs[i * d..(i + 1) * d]);
+            s.obs[r * d..(r + 1) * d].copy_from_slice(&self.batch.obs[i * d..(i + 1) * d]);
         }
-        learner.mlp.forward_reuse(&mut s.cache);
+        learner.mlp.forward_reuse(&s.obs, &mut s.cache);
         s.dlogits.resize(b * nl, 0.0);
         s.dvalue.resize(b, 0.0);
         s.dlp.resize(nl, 0.0);
@@ -404,6 +408,7 @@ impl ChunkTask<'_> {
         }
         self.grads.zero();
         learner.mlp.backward_scratch(
+            &s.obs,
             &s.cache,
             &s.dlogits[..b * nl],
             &s.dvalue[..b],
@@ -718,7 +723,43 @@ impl Learner {
         self.mlp.forward_row(obs, scratch);
         let mut rng = CounterRng::derive2(seed, lane as u64, t as u64);
         let logp = self.heads.sample(&mut rng, &scratch.logits, action);
-        (logp, scratch.value)
+        (logp, scratch.values[0])
+    }
+
+    /// Lane-blocked fused-rollout sampling (ISSUE 6): forward a shard's
+    /// whole contiguous lane range `[lane0, lane0 + n)` as ONE row-block
+    /// GEMM into the shard's scratch, then sample each row off its own
+    /// `(seed, lane, t)` counter stream. Bit-identical per lane to
+    /// [`Learner::sample_lane`] — the kernels' accumulation order is
+    /// independent of row blocking, and the RNG streams are per-lane by
+    /// construction — so shard boundaries and `--threads` still can't
+    /// perturb anything. Fills `actions [n * n_ports]`, `logp [n]`,
+    /// `values [n]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sample_block(
+        &self,
+        t: usize,
+        lane0: usize,
+        seed: u64,
+        obs: &[f32],
+        actions: &mut [usize],
+        logp: &mut [f32],
+        values: &mut [f32],
+        scratch: &mut MlpScratch,
+    ) {
+        let n = logp.len();
+        let nl = self.heads.n_logits;
+        let p = self.n_ports();
+        debug_assert_eq!(obs.len(), n * self.obs_dim);
+        debug_assert_eq!(actions.len(), n * p);
+        debug_assert_eq!(values.len(), n);
+        self.mlp.forward_block(obs, n, scratch);
+        for i in 0..n {
+            let lg = &scratch.logits[i * nl..(i + 1) * nl];
+            let mut rng = CounterRng::derive2(seed, (lane0 + i) as u64, t as u64);
+            logp[i] = self.heads.sample(&mut rng, lg, &mut actions[i * p..(i + 1) * p]);
+        }
+        values.copy_from_slice(&scratch.values[..n]);
     }
 
     /// Greedy (argmax-per-head) decode for one lane — the fused/eval
@@ -727,7 +768,29 @@ impl Learner {
     pub fn greedy_lane(&self, obs: &[f32], action: &mut [usize], scratch: &mut MlpScratch) -> f32 {
         self.mlp.forward_row(obs, scratch);
         self.heads.greedy(&scratch.logits, action);
-        scratch.value
+        scratch.values[0]
+    }
+
+    /// Lane-blocked greedy decode — [`Learner::sample_block`]'s eval
+    /// counterpart (one blocked forward, per-row argmax, no RNG).
+    pub fn greedy_block(
+        &self,
+        obs: &[f32],
+        actions: &mut [usize],
+        values: &mut [f32],
+        scratch: &mut MlpScratch,
+    ) {
+        let n = values.len();
+        let nl = self.heads.n_logits;
+        let p = self.n_ports();
+        debug_assert_eq!(obs.len(), n * self.obs_dim);
+        debug_assert_eq!(actions.len(), n * p);
+        self.mlp.forward_block(obs, n, scratch);
+        for i in 0..n {
+            let lg = &scratch.logits[i * nl..(i + 1) * nl];
+            self.heads.greedy(lg, &mut actions[i * p..(i + 1) * p]);
+        }
+        values.copy_from_slice(&scratch.values[..n]);
     }
 
     /// Greedy (argmax-per-head) action for a single observation row.
@@ -1174,7 +1237,7 @@ mod tests {
         let lp3 = learner.heads.sample(&mut crng, &s3.logits, &mut a3);
         assert_eq!(a1, a3);
         assert_eq!(lp1, lp3);
-        assert_eq!(v1, s3.value);
+        assert_eq!(v1, s3.values[0]);
         // Different (lane, t) moves the stream for at least some steps.
         let streams: Vec<Vec<usize>> = (0..16)
             .map(|t| {
@@ -1185,6 +1248,44 @@ mod tests {
             })
             .collect();
         assert!(streams.windows(2).any(|w| w[0] != w[1]), "t never changed the sample");
+    }
+
+    /// The lane-blocked shard path (ISSUE 6) must be bit-identical to
+    /// per-lane sampling: one block forward + per-(lane, t) counter
+    /// streams == N row forwards + the same streams, for sample and
+    /// greedy alike — including at a non-zero `lane0` offset.
+    #[test]
+    fn sample_block_matches_per_lane_sampling_bitwise() {
+        let mut rng = Rng::new(17);
+        let (d, n, lane0, t, seed) = (6usize, 9usize, 5usize, 11usize, 0xBEEFu64);
+        let learner = Learner::new(&mut rng, d, 16, vec![4, 3]);
+        let p = learner.n_ports();
+        let obs: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let mut blk = learner.make_scratch();
+        let mut acts_b = vec![0usize; n * p];
+        let mut logp_b = vec![0f32; n];
+        let mut vals_b = vec![0f32; n];
+        learner.sample_block(t, lane0, seed, &obs, &mut acts_b, &mut logp_b, &mut vals_b, &mut blk);
+        let mut row = learner.make_scratch();
+        for i in 0..n {
+            let mut a = vec![0usize; p];
+            let (lp, v) = learner.sample_lane(
+                t, lane0 + i, seed, &obs[i * d..(i + 1) * d], &mut a, &mut row,
+            );
+            assert_eq!(a, acts_b[i * p..(i + 1) * p], "lane {i} actions");
+            assert_eq!(lp, logp_b[i], "lane {i} logp");
+            assert_eq!(v, vals_b[i], "lane {i} value");
+        }
+        // Greedy counterpart.
+        let mut acts_g = vec![0usize; n * p];
+        let mut vals_g = vec![0f32; n];
+        learner.greedy_block(&obs, &mut acts_g, &mut vals_g, &mut blk);
+        for i in 0..n {
+            let mut a = vec![0usize; p];
+            let v = learner.greedy_lane(&obs[i * d..(i + 1) * d], &mut a, &mut row);
+            assert_eq!(a, acts_g[i * p..(i + 1) * p], "lane {i} greedy actions");
+            assert_eq!(v, vals_g[i], "lane {i} greedy value");
+        }
     }
 
     #[test]

@@ -24,6 +24,9 @@ pub struct RunConfig {
     /// Worker-pool width for native rollouts (`--threads`); 0 = auto
     /// (`available_parallelism`).
     pub num_threads: usize,
+    /// Pin pool workers to cores (`--pin_cores true`; Linux only, no-op
+    /// elsewhere). Placement-only: results are bit-identical either way.
+    pub pin_cores: bool,
     pub total_env_steps: usize,
     pub eval_seeds: usize,
     pub paper_scale: bool,
@@ -44,6 +47,7 @@ impl Default for RunConfig {
             n_seeds: 3,
             num_envs: 12,
             num_threads: 0,
+            pin_cores: false,
             total_env_steps: 200_000,
             eval_seeds: 8,
             paper_scale: false,
@@ -96,6 +100,7 @@ impl RunConfig {
             },
             "num_envs" | "envs" => self.num_envs = val.parse()?,
             "num_threads" | "threads" => self.num_threads = val.parse()?,
+            "pin_cores" | "pin-cores" => self.pin_cores = val.parse()?,
             "scenario" => self.scenario.scenario = val.to_string(),
             "region" => self.scenario.region = val.to_string(),
             "country" => self.scenario.country = val.to_string(),
@@ -140,6 +145,12 @@ mod tests {
         cfg.set("num_envs", "64").unwrap();
         cfg.set("threads", "4").unwrap();
         cfg.set("fleet", "configs/fleet_demo.json").unwrap();
+        assert!(!cfg.pin_cores, "pin_cores must default off");
+        cfg.set("pin_cores", "true").unwrap();
+        assert!(cfg.pin_cores);
+        cfg.set("pin-cores", "false").unwrap();
+        assert!(!cfg.pin_cores);
+        assert!(cfg.set("pin_cores", "yes").is_err());
         assert_eq!(cfg.backend, "native");
         assert_eq!(cfg.num_envs, 64);
         assert_eq!(cfg.num_threads, 4);

@@ -830,21 +830,19 @@ impl ShardTask<'_> {
         let d = core::obs_dim(self.cfg);
         // Fused mode: forward + sample this shard's lanes before stepping
         // them — policy inference runs inside the same dispatch, on the
-        // same worker, with per-(lane, t) counter RNG so shard placement
-        // can never change a lane's action stream.
+        // same worker. The shard's whole contiguous lane range goes
+        // through ONE lane-blocked forward (ISSUE 6 kernels) instead of
+        // per-lane rows; the blocked GEMM is bitwise row-blocking
+        // invariant and sampling uses per-(lane, t) counter RNG, so shard
+        // placement still can never change a lane's action stream.
         if let ShardActs::Fused(f) = &mut self.acts {
-            for lane in 0..f.logp.len() {
-                let obs = &f.obs_t[lane * d..(lane + 1) * d];
-                let row = &mut f.actions[lane * p..(lane + 1) * p];
-                if f.greedy {
-                    f.logp[lane] = 0.0;
-                    f.values[lane] = f.learner.greedy_lane(obs, row, f.scratch);
-                } else {
-                    let (lp, v) =
-                        f.learner.sample_lane(f.t, f.lane0 + lane, f.seed, obs, row, f.scratch);
-                    f.logp[lane] = lp;
-                    f.values[lane] = v;
-                }
+            if f.greedy {
+                f.logp.fill(0.0);
+                f.learner.greedy_block(f.obs_t, f.actions, f.values, f.scratch);
+            } else {
+                f.learner.sample_block(
+                    f.t, f.lane0, f.seed, f.obs_t, f.actions, f.logp, f.values, f.scratch,
+                );
             }
         }
         let actions: &[usize] = match &self.acts {

@@ -149,6 +149,8 @@ fn cmd_train_native(cfg: &RunConfig) -> Result<()> {
     if let Some(spec) = &cfg.fleet_spec {
         return cmd_train_fleet(cfg, spec);
     }
+    // Before the first pool spawns: workers read the flag at spawn time.
+    chargax::runtime::pool::set_pin_cores(cfg.pin_cores);
     let store = DataStore::load(&artifacts_dir().join("data")).ok();
     if store.is_none() {
         eprintln!("note: artifacts/data not found; using synthetic scenario tables");
@@ -212,6 +214,7 @@ fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str) -> Result<()> {
     use chargax::baselines::ppo::PpoParams;
     use chargax::fleet::{Fleet, FleetPpoTrainer, FleetSpec};
 
+    chargax::runtime::pool::set_pin_cores(cfg.pin_cores);
     let store = DataStore::load(&artifacts_dir().join("data")).ok();
     if store.is_none() {
         eprintln!("note: artifacts/data not found; using synthetic scenario tables");
@@ -399,12 +402,14 @@ COMMANDS:
   cross-check      scalar-vs-JAX transition equivalence
   help             this text
 
-KEYS: variant backend num_envs threads scenario region country year traffic
-      p_sell beta seed n_seeds steps eval_seeds paper_scale out fleet
-      alpha_<penalty>
+KEYS: variant backend num_envs threads pin_cores scenario region country
+      year traffic p_sell beta seed n_seeds steps eval_seeds paper_scale
+      out fleet alpha_<penalty>
 
   --threads N caps the persistent worker pool driving native rollouts
   (0 = all cores); see README §Rollout runtime.
+  --pin_cores true pins pool workers to cores (Linux only, no-op
+  elsewhere; placement-only, results identical); see README §Kernel layer.
   --fleet takes a scenario-grid JSON (README §Scenario fleets & V2G) or
   the literal `demo` for the built-in three-family fleet."
     );

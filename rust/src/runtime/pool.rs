@@ -22,8 +22,75 @@
 //! fallback for the same shard count because the pool changes *where* a
 //! shard runs, never *what* it computes.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+/// Process-wide opt-in for worker core pinning (`--pin_cores true`).
+/// Read once by each worker at spawn, so set it BEFORE the first pool is
+/// built (main.rs does, right after parsing the run config). Pinning only
+/// constrains where a worker runs — never what it computes — so results
+/// are bit-identical either way.
+static PIN_CORES: AtomicBool = AtomicBool::new(false);
+
+/// Enable/disable core pinning for workers of pools built after this call.
+pub fn set_pin_cores(on: bool) {
+    PIN_CORES.store(on, Ordering::Relaxed);
+}
+
+/// Whether worker core pinning is currently requested.
+pub fn pin_cores_enabled() -> bool {
+    PIN_CORES.load(Ordering::Relaxed)
+}
+
+/// Pin the calling thread to `core` via a raw `sched_setaffinity` syscall
+/// (no libc dependency). Best-effort: failures (cpuset limits, exotic
+/// topologies, core >= 1024) are silently ignored — pinning is a cache /
+/// scheduler-migration optimization, never a correctness requirement.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn pin_current_thread(core: usize) {
+    let mut mask = [0u64; 16]; // cpu_set_t-sized: up to 1024 CPUs
+    if core / 64 >= mask.len() {
+        return;
+    }
+    mask[core / 64] = 1u64 << (core % 64);
+    let size = std::mem::size_of_val(&mask);
+    // pid 0 = the calling thread. x86_64 __NR_sched_setaffinity = 203,
+    // aarch64 = 122.
+    unsafe {
+        #[cfg(target_arch = "x86_64")]
+        {
+            let ret: isize;
+            std::arch::asm!(
+                "syscall",
+                inlateout("rax") 203isize => ret,
+                in("rdi") 0usize,
+                in("rsi") size,
+                in("rdx") mask.as_ptr(),
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack)
+            );
+            let _ = ret;
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            let ret: isize;
+            std::arch::asm!(
+                "svc 0",
+                in("x8") 122usize,
+                inlateout("x0") 0usize => ret,
+                in("x1") size,
+                in("x2") mask.as_ptr(),
+                options(nostack)
+            );
+            let _ = ret;
+        }
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn pin_current_thread(_core: usize) {}
 
 /// Type-erased reference to the caller's job closure. Only alive between
 /// job publication and the last shard check-in; `run` does not return
@@ -240,6 +307,14 @@ impl Drop for WorkerPool {
 }
 
 fn worker_loop(w: usize, shared: &Shared) {
+    // Worker `w` always runs shard `w + 1` (the caller owns shard 0), so
+    // with pinning on it claims core `(w + 1) % ncpus` — a stable
+    // shard-to-core map that keeps each shard's SoA lane block hot in one
+    // core's private cache across steps and stops scheduler migration.
+    if pin_cores_enabled() {
+        let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        pin_current_thread((w + 1) % ncpu);
+    }
     let mut seen = 0u64;
     loop {
         let (job, shards) = {
@@ -408,6 +483,28 @@ mod tests {
             hits.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(hits.load(Ordering::SeqCst), 5);
+    }
+
+    /// Pinned pools must behave identically to unpinned ones (pinning
+    /// only constrains placement). Exercises the flag round trip and a
+    /// full job on a pool whose workers pinned themselves at spawn.
+    #[test]
+    fn pinned_pool_runs_jobs_and_flag_round_trips() {
+        assert!(!pin_cores_enabled(), "pinning must default off");
+        set_pin_cores(true);
+        assert!(pin_cores_enabled());
+        let pool = WorkerPool::new(3);
+        set_pin_cores(false);
+        assert!(!pin_cores_enabled());
+        let hits: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..50 {
+            pool.run(3, |s| {
+                hits[s].fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        for (s, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 50, "shard {s}");
+        }
     }
 
     #[test]

@@ -298,6 +298,28 @@ fn fused_policy_rollout_is_thread_count_invariant() {
     }
 }
 
+/// ISSUE 6 re-proof at B=4096 with the blocked kernels on: the paper's
+/// headline batch size, where shard lane blocks are large enough to hit
+/// every kernel path (full 4-row tiles, 8-wide column tiles, remainders).
+/// Short horizon keeps the buffers small; the invariance claim is the
+/// same — kernel accumulation order depends on fixed tile widths only,
+/// never on `--threads`.
+#[test]
+fn fused_policy_rollout_is_thread_count_invariant_at_b4096() {
+    let (b, t_len) = (4096usize, 3usize);
+    let max_threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let want = fused_run(1, false, b, t_len);
+    for threads in [4usize, max_threads] {
+        let got = fused_run(threads, false, b, t_len);
+        assert_eq!(got.actions, want.actions, "threads={threads}: actions");
+        assert_eq!(got.obs, want.obs, "threads={threads}: observations");
+        assert_eq!(got.rewards, want.rewards, "threads={threads}: rewards");
+        assert_eq!(got.logp, want.logp, "threads={threads}: logp");
+        assert_eq!(got.values, want.values, "threads={threads}: values");
+    }
+}
+
 /// The fused-policy rollout agrees with a manual loop that replays the
 /// recorded actions through `step_all` — the policy moved into the shards
 /// must not change what the env computes.

@@ -213,6 +213,38 @@ fn update_sharded_is_bit_identical_to_serial_for_any_pool_width() {
     }
 }
 
+/// ISSUE 6 re-proof at the paper's headline batch: 512 envs x 8 steps =
+/// 4096 PPO samples, run through the blocked kernel layer (64-row chunks
+/// hit full 4-row/8-column tiles plus remainders). One update per width
+/// keeps the test fast; serial `update` stays the bitwise reference.
+#[test]
+fn update_sharded_is_bit_identical_to_serial_at_b4096() {
+    let hp = PpoParams { n_minibatches: 4, update_epochs: 1, hidden: 16, ..Default::default() };
+    let (n_envs, t_len) = (512usize, 8usize);
+    let max_threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let (mut l0, b0) = fixture(StationConfig::default(), n_envs, t_len, 63);
+    let mut rng0 = Rng::new(29);
+    let stats0 = l0.update(
+        &hp, &mut rng0, n_envs, t_len,
+        &b0.obs, &b0.act, &b0.logp, &b0.val, &b0.rew, &b0.done,
+    );
+    let w0 = weights(&l0);
+    for threads in [1usize, 4, max_threads] {
+        let (mut l, b) = fixture(StationConfig::default(), n_envs, t_len, 63);
+        let pool = WorkerPool::new(threads);
+        let mut rng = Rng::new(29);
+        let stats = l.update_sharded(
+            &hp, &mut rng, Some(&pool), n_envs, t_len,
+            &b.obs, &b.act, &b.logp, &b.val, &b.rew, &b.done,
+        );
+        assert_eq!(stats, stats0, "threads {threads}: stats drifted at bsz 4096");
+        for (k, (a, want)) in weights(&l).iter().zip(&w0).enumerate() {
+            assert_eq!(a, want, "threads {threads}: weight tensor {k} not bit-identical");
+        }
+    }
+}
+
 /// The fleet path: one `update_sharded_many` call covering two
 /// differently-shaped family learners is bit-identical to updating each
 /// family serially with `Learner::update` — the pooled dispatch draws the

@@ -2,12 +2,15 @@
 """Perf ratchet: compare a fresh BENCH_table2.json against the committed
 BENCH_baseline.json and warn on steps/sec regressions.
 
-Three rows are gated, all at B=256 (present in the full sweep and the CI
+Five rows are gated, all at B=256 (present in the full sweep and the CI
 ``--smoke`` sweep): the ``native-vector`` pool path (raw env runtime),
 the ``policy-fused`` path (shard-parallel MLP policy + env, the default
-training rollout), and the ``update-sharded`` path (the shard-parallel
-PPO minibatch update; its unit is PPO samples/sec rather than env
-steps/sec, compared like-for-like against its own baseline row). CI
+training rollout), the ``update-sharded`` path (the shard-parallel PPO
+minibatch update; its unit is PPO samples/sec rather than env steps/sec,
+compared like-for-like against its own baseline row), and the
+kernel-layer pair ``forward-blocked`` / ``update-blocked`` (blocked MLP
+forward, and forward + blocked backward, in MLP rows/sec — the tiled GEMM
+layer measured without env overhead). CI
 runner variance is still being characterized, so a
 regression past the threshold emits a GitHub ``::warning`` annotation and
 exits 0 — flip ``--strict`` once the variance envelope is known and the
@@ -31,8 +34,16 @@ import sys
 
 # Variant-name prefixes of the gated rows (and of the rows kept by
 # --update). Each is compared independently at the gated batch size.
-# NOTE: "update-serial" must not match, so the prefix includes "-sharded".
-GATED_PREFIXES = ("native-vector", "policy-fused", "update-sharded")
+# NOTE: "update-serial" must not match, so the prefix includes "-sharded";
+# likewise "update-blocked" is its own gated prefix and must never be
+# swallowed by a bare "update" prefix.
+GATED_PREFIXES = (
+    "native-vector",
+    "policy-fused",
+    "update-sharded",
+    "forward-blocked",
+    "update-blocked",
+)
 
 
 def load_rows(path: str) -> list[dict]:
@@ -120,8 +131,9 @@ def main() -> int:
                 f"{args.current} has no {'/'.join(GATED_PREFIXES)} rows to baseline")
         payload = {
             "note": (
-                "Perf-ratchet baseline: native-vector, policy-fused, and "
-                "update-sharded steps/sec rows from a trusted run of "
+                "Perf-ratchet baseline: native-vector, policy-fused, "
+                "update-sharded, forward-blocked, and update-blocked "
+                "steps/sec rows from a trusted run of "
                 "`cargo bench --bench table2_throughput -- --smoke`. "
                 "Refresh with scripts/bench_ratchet.py --update."
             ),
