@@ -20,7 +20,10 @@
 //! when AOT artifacts and a real PJRT runtime are present. Writes the
 //! machine-readable perf trajectory to `BENCH_table2.json` at the repo
 //! root so the numbers are tracked across PRs; the fleet sweep (random +
-//! serial-net + fused-net policies) lands in `BENCH_fleet.json`.
+//! serial-net + fused-net policies, plus the shared-trunk
+//! `fleet-generalist` rows at L ∈ {256, 1024}) lands in
+//! `BENCH_fleet.json`, and a tiny generalist train + zero-shot per-cell
+//! eval writes `EVAL_cells.csv` (the CI bench-smoke artifact).
 //!
 //! `cargo bench --bench table2_throughput -- --smoke` runs a reduced
 //! sweep (B ∈ {1, 64, 256}, policy/update/kernel rows at B=256 only,
@@ -35,7 +38,9 @@ use chargax::data::{DataStore, Scenario};
 use chargax::env::scalar::{ScalarEnv, ScenarioTables};
 use chargax::env::tree::StationConfig;
 use chargax::env::vector::{self, StepPath, NATIVE_SWEEP_B};
-use chargax::fleet::{measure_fleet_throughput, FleetBenchPolicy, FleetSpec};
+use chargax::fleet::{
+    measure_fleet_throughput, Fleet, FleetBenchPolicy, FleetPpoTrainer, FleetSpec,
+};
 use chargax::runtime::engine::{artifacts_dir, Engine};
 use chargax::runtime::manifest::Manifest;
 use chargax::util::json::{self, Json};
@@ -351,6 +356,47 @@ fn main() {
             }
         }
     }
+    // Generalist rows: ONE shared-trunk net across all three families,
+    // measured at fixed fleet-wide lane totals (the ratchet gates the
+    // L=256 row). `demo_total` splits lanes 2:2:1 across the families so
+    // the totals land exactly on the gated batch sizes.
+    let gen_lanes: &[usize] = if smoke { &[256] } else { &[256, 1024] };
+    println!(
+        "\n{} sweep (one shared trunk, 3 family heads):",
+        FleetBenchPolicy::GeneralistNet.label()
+    );
+    for &total in gen_lanes {
+        match measure_fleet_throughput(
+            &FleetSpec::demo_total(7, total),
+            store.as_ref(),
+            0,
+            budget,
+            FleetBenchPolicy::GeneralistNet,
+        ) {
+            Ok((steps_per_sec, s_per_100k, lanes, families)) => {
+                println!(
+                    "  L={lanes:<5} ({families} families) {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k"
+                );
+                fleet_rows.push(json::obj(vec![
+                    (
+                        "variant",
+                        Json::Str(format!(
+                            "{} (L={lanes})",
+                            FleetBenchPolicy::GeneralistNet.label()
+                        )),
+                    ),
+                    ("batch", Json::Num(lanes as f64)),
+                    ("families", Json::Num(families as f64)),
+                    ("steps_per_sec", Json::Num(steps_per_sec)),
+                    ("s_per_100k", Json::Num(s_per_100k)),
+                ]));
+            }
+            Err(e) => println!(
+                "  {} L={total} skipped: {e:#}",
+                FleetBenchPolicy::GeneralistNet.label()
+            ),
+        }
+    }
     let fleet_payload = json::obj(vec![
         ("bench", Json::Str("fleet_throughput".into())),
         ("unit", Json::Str("env_steps".into())),
@@ -359,6 +405,42 @@ fn main() {
     ])
     .to_string();
     write_bench_json("BENCH_fleet.json", &fleet_payload);
+
+    // -- EVAL_cells.csv: per-cell eval on the paper's profit metric ----------
+    // A tiny generalist train over the demo grid with one cell held out,
+    // then per-cell greedy eval — trained cells AND the zero-shot holdout
+    // row, comparable on episodes/reward/profit. CI's bench-smoke job
+    // uploads this file as an artifact.
+    {
+        let mut spec = FleetSpec::demo(7, 1);
+        spec.holdout = vec!["shopping/NL/2022/high".to_string()];
+        match Fleet::from_spec(&spec, store.as_ref()) {
+            Ok(fleet) => {
+                let hp = PpoParams {
+                    rollout_steps: 24,
+                    n_minibatches: 2,
+                    update_epochs: 2,
+                    hidden: 32,
+                    ..Default::default()
+                };
+                let mut tr = FleetPpoTrainer::new_generalist(hp, fleet, 7);
+                let iters = if smoke { 2 } else { 5 };
+                for _ in 0..iters {
+                    tr.iteration();
+                }
+                let mut csv =
+                    String::from("family,cell,holdout,lanes,episodes,ep_reward,ep_profit\n");
+                for c in tr.eval_all_cells_current() {
+                    csv.push_str(&format!(
+                        "{},{},{},{},{},{:.6},{:.6}\n",
+                        c.family, c.cell, c.holdout, c.lanes, c.episodes, c.reward, c.profit
+                    ));
+                }
+                write_bench_json("EVAL_cells.csv", &csv);
+            }
+            Err(e) => eprintln!("per-cell eval CSV skipped: {e:#}"),
+        }
+    }
 
     // -- BENCH_table2.json: perf trajectory across PRs -----------------------
     let json_rows: Vec<Json> = rows

@@ -1,0 +1,1089 @@
+//! Generalist shared-trunk policy across the scenario grid (ISSUE 7).
+//!
+//! One network serves every station family: a shared tanh trunk consumes
+//! observation rows padded to the grid-wide max obs dim plus a per-family
+//! one-hot block, per-family categorical action heads project the shared
+//! hidden state onto each family's own `action_nvec`, and a single shared
+//! value head scores every row. The per-family [`Learner`] path stays as
+//! the oracle; [`PolicyRef`] lets the fused rollout dispatch either
+//! through the same shard tasks.
+//!
+//! All math runs on the same blocked kernel layer as [`super::mlp::Mlp`]
+//! (per-element accumulation order independent of row blocking), action
+//! sampling keys off the same per-(lane, t) [`CounterRng`] streams, and
+//! the cross-family PPO update reduces its gradient chunks through the
+//! same fixed-order pairwise tree — so the serial==sharded bitwise
+//! contract holds for the generalist at any `--threads`, exactly as it
+//! does per family.
+
+use std::sync::Mutex;
+
+use crate::runtime::pool::WorkerPool;
+use crate::util::rng::{CounterRng, Rng};
+
+use super::kernels;
+use super::mlp::MlpScratch;
+use super::ppo::{
+    gae, minibatch_bounds, ppo_row_grads, tree_reduce, tree_reduce_stats, update_shard_demand,
+    Adam, Heads, Learner, PpoParams, UpdateBatch, UPDATE_CHUNK_ROWS,
+};
+
+/// One family's action head: its own obs dim (for staging/validation) and
+/// its own logit projection off the shared trunk.
+pub struct FamilyHead {
+    pub obs_dim: usize,
+    pub heads: Heads,
+    /// `[hidden][n_logits]`, row-major like [`super::mlp::Mlp::wpi`].
+    pub wpi: Vec<f32>,
+    pub bpi: Vec<f32>,
+}
+
+/// Shared trunk + per-family heads + shared value head + Adam state.
+///
+/// Input layout per row (`in_dim = pad_obs + n_families` columns):
+/// `[obs (family obs_dim) | zero padding to pad_obs | family one-hot]`.
+/// Family indexing is the catalog's deterministic expansion order, so the
+/// one-hot block and the head list can never disagree.
+pub struct GeneralistLearner {
+    pub hidden: usize,
+    /// Grid-wide max family obs dim (the padded obs block width).
+    pub pad_obs: usize,
+    /// Trunk input width: `pad_obs + families.len()`.
+    pub in_dim: usize,
+    // trunk (row-major [in][out], like Mlp)
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+    // shared value head
+    pub wv: Vec<f32>,
+    pub bv: Vec<f32>,
+    pub families: Vec<FamilyHead>,
+    pub adam: Adam,
+}
+
+/// Gradients, same canonical layout as [`GeneralistLearner::params`]:
+/// `[w1, b1, w2, b2, wv, bv, wpi_0, bpi_0, wpi_1, bpi_1, …]`.
+pub struct GenGrads {
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub bv: Vec<f32>,
+    pub wpi: Vec<Vec<f32>>,
+    pub bpi: Vec<Vec<f32>>,
+}
+
+impl GenGrads {
+    pub fn as_slices(&self) -> Vec<&Vec<f32>> {
+        let mut v = vec![&self.w1, &self.b1, &self.w2, &self.b2, &self.wv, &self.bv];
+        for (w, b) in self.wpi.iter().zip(&self.bpi) {
+            v.push(w);
+            v.push(b);
+        }
+        v
+    }
+
+    pub fn as_slices_mut(&mut self) -> Vec<&mut Vec<f32>> {
+        let mut v = vec![
+            &mut self.w1, &mut self.b1, &mut self.w2, &mut self.b2,
+            &mut self.wv, &mut self.bv,
+        ];
+        for (w, b) in self.wpi.iter_mut().zip(self.bpi.iter_mut()) {
+            v.push(w);
+            v.push(b);
+        }
+        v
+    }
+
+    pub fn zero(&mut self) {
+        for v in self.as_slices_mut() {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    /// `self += other` in a fixed (field, index) order — the combine step
+    /// of the cross-family gradient tree reduction.
+    pub fn add_from(&mut self, other: &GenGrads) {
+        for (a, b) in self.as_slices_mut().into_iter().zip(other.as_slices()) {
+            debug_assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter_mut().zip(b.iter()) {
+                *x += y;
+            }
+        }
+    }
+
+    pub fn global_norm(&self) -> f32 {
+        let sq: f32 = self
+            .as_slices()
+            .iter()
+            .map(|v| v.iter().map(|x| x * x).sum::<f32>())
+            .sum();
+        sq.sqrt()
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in self.as_slices_mut() {
+            v.iter_mut().for_each(|x| *x *= s);
+        }
+    }
+}
+
+impl GeneralistLearner {
+    /// Build the generalist over `specs` — one `(obs_dim, action_nvec)`
+    /// per family in deterministic (catalog expansion) order. Same init
+    /// recipe and scales as [`super::mlp::Mlp::new`]; draw order is fixed
+    /// (trunk, then each family head in order, then the value head), so a
+    /// given `rng` state always yields the same weights.
+    pub fn new(
+        rng: &mut Rng,
+        pad_obs: usize,
+        hidden: usize,
+        specs: &[(usize, Vec<usize>)],
+    ) -> GeneralistLearner {
+        assert!(!specs.is_empty(), "generalist needs at least one family");
+        for &(d, _) in specs {
+            assert!(d <= pad_obs, "family obs_dim {d} exceeds pad_obs {pad_obs}");
+        }
+        let in_dim = pad_obs + specs.len();
+        let init = |rng: &mut Rng, rows: usize, cols: usize, scale: f32| -> Vec<f32> {
+            let s = scale / (rows as f32).sqrt();
+            (0..rows * cols).map(|_| rng.normal() * s).collect()
+        };
+        let w1 = init(rng, in_dim, hidden, 1.4);
+        let w2 = init(rng, hidden, hidden, 1.4);
+        let families: Vec<FamilyHead> = specs
+            .iter()
+            .map(|(d, nvec)| {
+                let heads = Heads::new(nvec.clone());
+                let wpi = init(rng, hidden, heads.n_logits, 0.01);
+                let bpi = vec![0.0; heads.n_logits];
+                FamilyHead { obs_dim: *d, heads, wpi, bpi }
+            })
+            .collect();
+        let wv = init(rng, hidden, 1, 1.0);
+        let mut sizes = vec![w1.len(), hidden, w2.len(), hidden, wv.len(), 1];
+        for fh in &families {
+            sizes.push(fh.wpi.len());
+            sizes.push(fh.bpi.len());
+        }
+        GeneralistLearner {
+            hidden,
+            pad_obs,
+            in_dim,
+            w1,
+            b1: vec![0.0; hidden],
+            w2,
+            b2: vec![0.0; hidden],
+            wv,
+            bv: vec![0.0; 1],
+            families,
+            adam: Adam::from_sizes(&sizes),
+        }
+    }
+
+    pub fn n_families(&self) -> usize {
+        self.families.len()
+    }
+
+    pub fn obs_dim(&self, f: usize) -> usize {
+        self.families[f].obs_dim
+    }
+
+    pub fn n_ports(&self, f: usize) -> usize {
+        self.families[f].heads.nvec.len()
+    }
+
+    pub fn n_logits(&self, f: usize) -> usize {
+        self.families[f].heads.n_logits
+    }
+
+    /// The parameter tensors in canonical order (see [`GenGrads`]).
+    pub fn params(&self) -> Vec<&Vec<f32>> {
+        let mut v = vec![&self.w1, &self.b1, &self.w2, &self.b2, &self.wv, &self.bv];
+        for fh in &self.families {
+            v.push(&fh.wpi);
+            v.push(&fh.bpi);
+        }
+        v
+    }
+
+    pub fn zero_grads(&self) -> GenGrads {
+        GenGrads {
+            w1: vec![0.0; self.w1.len()],
+            b1: vec![0.0; self.b1.len()],
+            w2: vec![0.0; self.w2.len()],
+            b2: vec![0.0; self.b2.len()],
+            wv: vec![0.0; self.wv.len()],
+            bv: vec![0.0; self.bv.len()],
+            wpi: self.families.iter().map(|fh| vec![0.0; fh.wpi.len()]).collect(),
+            bpi: self.families.iter().map(|fh| vec![0.0; fh.bpi.len()]).collect(),
+        }
+    }
+
+    /// One clipped-gradient Adam step over the canonical parameter order.
+    pub fn apply_grads(&mut self, grads: &GenGrads, lr: f32) {
+        let GeneralistLearner { w1, b1, w2, b2, wv, bv, families, adam, .. } = self;
+        let mut params: Vec<&mut Vec<f32>> = vec![w1, b1, w2, b2, wv, bv];
+        for fh in families.iter_mut() {
+            params.push(&mut fh.wpi);
+            params.push(&mut fh.bpi);
+        }
+        adam.step(params, &grads.as_slices(), lr);
+    }
+
+    /// Scratch sized for one row; [`GeneralistLearner::forward_block`]
+    /// grows it to whatever block a shard actually runs. The `pad` buffer
+    /// stages the padded input rows.
+    pub fn make_scratch(&self) -> MlpScratch {
+        let max_nl = self.families.iter().map(|fh| fh.heads.n_logits).max().unwrap_or(1);
+        MlpScratch {
+            h1: vec![0.0; self.hidden],
+            h2: vec![0.0; self.hidden],
+            logits: vec![0.0; max_nl],
+            values: vec![0.0; 1],
+            rows: 1,
+            pad: vec![0.0; self.in_dim],
+        }
+    }
+
+    /// Stage `rows` family-`f` observation rows into padded trunk-input
+    /// rows: obs block, zero padding, family one-hot. Fully overwrites
+    /// `pad` (zero fill first), so reuse across families is safe.
+    pub fn stage_rows(&self, f: usize, obs: &[f32], rows: usize, pad: &mut Vec<f32>) {
+        let d = self.families[f].obs_dim;
+        let k = self.in_dim;
+        debug_assert_eq!(obs.len(), rows * d);
+        pad.resize(rows * k, 0.0);
+        pad.fill(0.0);
+        for r in 0..rows {
+            pad[r * k..r * k + d].copy_from_slice(&obs[r * d..(r + 1) * d]);
+            pad[r * k + self.pad_obs + f] = 1.0;
+        }
+    }
+
+    /// Trunk + family-`f` head forward over already-staged padded rows —
+    /// the same blocked-kernel pipeline as [`super::mlp::Mlp`], so row `i`
+    /// of a block is bit-identical to the `rows == 1` forward of row `i`.
+    fn forward_padded(
+        &self,
+        f: usize,
+        pad: &[f32],
+        rows: usize,
+        h1: &mut Vec<f32>,
+        h2: &mut Vec<f32>,
+        logits: &mut Vec<f32>,
+        values: &mut Vec<f32>,
+    ) {
+        let fh = &self.families[f];
+        let h = self.hidden;
+        let nl = fh.heads.n_logits;
+        debug_assert_eq!(pad.len(), rows * self.in_dim);
+        h1.resize(rows * h, 0.0);
+        kernels::gemm_bias(pad, &self.w1, &self.b1, rows, self.in_dim, h, h1);
+        h1.iter_mut().for_each(|x| *x = x.tanh());
+        h2.resize(rows * h, 0.0);
+        kernels::gemm_bias(h1.as_slice(), &self.w2, &self.b2, rows, h, h, h2);
+        h2.iter_mut().for_each(|x| *x = x.tanh());
+        logits.resize(rows * nl, 0.0);
+        kernels::gemm_bias(h2.as_slice(), &fh.wpi, &fh.bpi, rows, h, nl, logits);
+        values.resize(rows, 0.0);
+        for (i, v) in values.iter_mut().enumerate() {
+            *v = self.bv[0] + kernels::dot8(&h2[i * h..(i + 1) * h], &self.wv);
+        }
+    }
+
+    /// Stage + forward a block of family-`f` obs rows into `s` (logits and
+    /// values; `s.pad` keeps the staged rows). Shard-side entry point —
+    /// `&self`, caller-owned scratch, zero allocation after warmup.
+    pub fn forward_block(&self, f: usize, obs: &[f32], rows: usize, s: &mut MlpScratch) {
+        let MlpScratch { h1, h2, logits, values, rows: srows, pad } = s;
+        self.stage_rows(f, obs, rows, pad);
+        *srows = rows;
+        self.forward_padded(f, pad, rows, h1, h2, logits, values);
+    }
+
+    /// Lane-blocked fused-rollout sampling — the generalist counterpart of
+    /// [`Learner::sample_block`]: one staged block forward through the
+    /// shared trunk, then each row sampled off its own `(seed, lane, t)`
+    /// counter stream. Identical stream derivation, so switching policy
+    /// never perturbs the env-side action RNG layout.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sample_block(
+        &self,
+        f: usize,
+        t: usize,
+        lane0: usize,
+        seed: u64,
+        obs: &[f32],
+        actions: &mut [usize],
+        logp: &mut [f32],
+        values: &mut [f32],
+        scratch: &mut MlpScratch,
+    ) {
+        let n = logp.len();
+        let fh = &self.families[f];
+        let nl = fh.heads.n_logits;
+        let p = fh.heads.nvec.len();
+        debug_assert_eq!(obs.len(), n * fh.obs_dim);
+        debug_assert_eq!(actions.len(), n * p);
+        debug_assert_eq!(values.len(), n);
+        self.forward_block(f, obs, n, scratch);
+        for i in 0..n {
+            let lg = &scratch.logits[i * nl..(i + 1) * nl];
+            let mut rng = CounterRng::derive2(seed, (lane0 + i) as u64, t as u64);
+            logp[i] = fh.heads.sample(&mut rng, lg, &mut actions[i * p..(i + 1) * p]);
+        }
+        values.copy_from_slice(&scratch.values[..n]);
+    }
+
+    /// Lane-blocked greedy decode — [`Learner::greedy_block`]'s generalist
+    /// counterpart (one staged block forward, per-row argmax, no RNG).
+    pub fn greedy_block(
+        &self,
+        f: usize,
+        obs: &[f32],
+        actions: &mut [usize],
+        values: &mut [f32],
+        scratch: &mut MlpScratch,
+    ) {
+        let n = values.len();
+        let fh = &self.families[f];
+        let nl = fh.heads.n_logits;
+        let p = fh.heads.nvec.len();
+        debug_assert_eq!(obs.len(), n * fh.obs_dim);
+        debug_assert_eq!(actions.len(), n * p);
+        self.forward_block(f, obs, n, scratch);
+        for i in 0..n {
+            let lg = &scratch.logits[i * nl..(i + 1) * nl];
+            fh.heads.greedy(lg, &mut actions[i * p..(i + 1) * p]);
+        }
+        values.copy_from_slice(&scratch.values[..n]);
+    }
+
+    /// Greedy decode of one family-`f` observation row (the eval path).
+    /// Returns the shared value head's estimate.
+    pub fn greedy_lane(
+        &self,
+        f: usize,
+        obs: &[f32],
+        action: &mut [usize],
+        scratch: &mut MlpScratch,
+    ) -> f32 {
+        let mut values = [0f32; 1];
+        let p = self.families[f].heads.nvec.len();
+        self.greedy_block(f, obs, &mut action[..p], &mut values, scratch);
+        values[0]
+    }
+
+    /// Per-row backprop through the family-`f` head, the shared value
+    /// head, and the trunk — mirrors [`super::mlp::Mlp::backward_scratch`]
+    /// over the padded input rows. Gradients ACCUMULATE into `g` (zero it
+    /// for a fresh chunk); only `g`'s trunk/value tensors and family `f`'s
+    /// head tensors are touched.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_padded(
+        &self,
+        f: usize,
+        pad: &[f32],
+        h1: &[f32],
+        h2: &[f32],
+        rows: usize,
+        dlogits: &[f32],
+        dvalue: &[f32],
+        g: &mut GenGrads,
+        dh1: &mut Vec<f32>,
+        dh2: &mut Vec<f32>,
+    ) {
+        let fh = &self.families[f];
+        let b = rows;
+        let h = self.hidden;
+        let nl = fh.heads.n_logits;
+        debug_assert_eq!(pad.len(), b * self.in_dim);
+        // dh2 = dlogits @ wpi_f^T + dvalue * wv^T
+        dh2.resize(b * h, 0.0);
+        for i in 0..b {
+            let dl = &dlogits[i * nl..(i + 1) * nl];
+            let dv = dvalue[i];
+            for k in 0..h {
+                let row = &fh.wpi[k * nl..(k + 1) * nl];
+                dh2[i * h + k] = kernels::fmadd(dv, self.wv[k], kernels::dot8(row, dl));
+            }
+        }
+        // head grads (the value head is the j_dim == 1 outer product).
+        kernels::outer_acc(h2, dlogits, b, h, nl, &mut g.wpi[f]);
+        kernels::colsum_acc(dlogits, b, nl, &mut g.bpi[f]);
+        kernels::outer_acc(h2, dvalue, b, h, 1, &mut g.wv);
+        kernels::colsum_acc(dvalue, b, 1, &mut g.bv);
+        // through tanh of h2
+        for i in 0..b * h {
+            dh2[i] *= 1.0 - h2[i] * h2[i];
+        }
+        // dh1 = dh2 @ w2^T
+        dh1.resize(b * h, 0.0);
+        for i in 0..b {
+            let dd = &dh2[i * h..(i + 1) * h];
+            for k in 0..h {
+                dh1[i * h + k] = kernels::dot8(&self.w2[k * h..(k + 1) * h], dd);
+            }
+        }
+        kernels::outer_acc(h1, dh2, b, h, h, &mut g.w2);
+        kernels::colsum_acc(dh2, b, h, &mut g.b2);
+        for i in 0..b * h {
+            dh1[i] *= 1.0 - h1[i] * h1[i];
+        }
+        kernels::outer_acc(pad, dh1, b, self.in_dim, h, &mut g.w1);
+        kernels::colsum_acc(dh1, b, h, &mut g.b1);
+    }
+}
+
+/// Which policy a fused shard runs for its lane block: one family's own
+/// [`Learner`], or the [`GeneralistLearner`] with that family's index.
+/// `Copy`, so shard-task splitting stays as cheap as the old `&Learner`
+/// field it replaces.
+#[derive(Clone, Copy)]
+pub enum PolicyRef<'a> {
+    PerFamily(&'a Learner),
+    Generalist(&'a GeneralistLearner, usize),
+}
+
+impl PolicyRef<'_> {
+    pub fn obs_dim(&self) -> usize {
+        match self {
+            PolicyRef::PerFamily(l) => l.obs_dim,
+            PolicyRef::Generalist(g, f) => g.obs_dim(*f),
+        }
+    }
+
+    pub fn n_ports(&self) -> usize {
+        match self {
+            PolicyRef::PerFamily(l) => l.n_ports(),
+            PolicyRef::Generalist(g, f) => g.n_ports(*f),
+        }
+    }
+
+    pub fn make_scratch(&self) -> MlpScratch {
+        match self {
+            PolicyRef::PerFamily(l) => l.make_scratch(),
+            PolicyRef::Generalist(g, _) => g.make_scratch(),
+        }
+    }
+
+    /// Dispatch [`Learner::sample_block`] / the generalist equivalent —
+    /// same signature, same per-(lane, t) counter streams either way.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sample_block(
+        &self,
+        t: usize,
+        lane0: usize,
+        seed: u64,
+        obs: &[f32],
+        actions: &mut [usize],
+        logp: &mut [f32],
+        values: &mut [f32],
+        scratch: &mut MlpScratch,
+    ) {
+        match self {
+            PolicyRef::PerFamily(l) => {
+                l.sample_block(t, lane0, seed, obs, actions, logp, values, scratch)
+            }
+            PolicyRef::Generalist(g, f) => {
+                g.sample_block(*f, t, lane0, seed, obs, actions, logp, values, scratch)
+            }
+        }
+    }
+
+    pub fn greedy_block(
+        &self,
+        obs: &[f32],
+        actions: &mut [usize],
+        values: &mut [f32],
+        scratch: &mut MlpScratch,
+    ) {
+        match self {
+            PolicyRef::PerFamily(l) => l.greedy_block(obs, actions, values, scratch),
+            PolicyRef::Generalist(g, f) => g.greedy_block(*f, obs, actions, values, scratch),
+        }
+    }
+
+    /// Greedy decode of one observation row (the eval path).
+    pub fn greedy_lane(&self, obs: &[f32], action: &mut [usize], scratch: &mut MlpScratch) -> f32 {
+        match self {
+            PolicyRef::PerFamily(l) => l.greedy_lane(obs, action, scratch),
+            PolicyRef::Generalist(g, f) => g.greedy_lane(*f, obs, action, scratch),
+        }
+    }
+}
+
+/// Per-pool-lane reusable buffers for the generalist update's chunk passes
+/// (padded gathered rows, trunk activations, loss gradients, backward
+/// temporaries). Resized on demand, so one scratch serves chunks from any
+/// family head.
+struct GenUpdateScratch {
+    pad: Vec<f32>,
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+    logits: Vec<f32>,
+    values: Vec<f32>,
+    dlogits: Vec<f32>,
+    dvalue: Vec<f32>,
+    dlp: Vec<f32>,
+    dent: Vec<f32>,
+    dh1: Vec<f32>,
+    dh2: Vec<f32>,
+}
+
+impl GenUpdateScratch {
+    fn new() -> GenUpdateScratch {
+        GenUpdateScratch {
+            pad: Vec::new(),
+            h1: Vec::new(),
+            h2: Vec::new(),
+            logits: Vec::new(),
+            values: Vec::new(),
+            dlogits: Vec::new(),
+            dvalue: Vec::new(),
+            dlp: Vec::new(),
+            dent: Vec::new(),
+            dh1: Vec::new(),
+            dh2: Vec::new(),
+        }
+    }
+}
+
+/// One gradient chunk of one family's slice of the current cross-family
+/// minibatch round: stage + forward + loss gradients + backward over
+/// `idxs` (at most [`UPDATE_CHUNK_ROWS`] rows), writing the partial
+/// gradient into this chunk's own full-size [`GenGrads`] accumulator.
+/// Chunks share the learner read-only and own disjoint outputs, so any
+/// number of them can run concurrently on pool lanes.
+struct GenChunkTask<'a> {
+    gen: &'a GeneralistLearner,
+    hp: &'a PpoParams,
+    family: usize,
+    idxs: &'a [usize],
+    /// Loss/grad normalizer: the FULL round row count across ALL families
+    /// (one Adam step serves the whole grid), NOT this family's or this
+    /// chunk's.
+    norm: f32,
+    /// Advantage-normalization stats over this family's WHOLE minibatch.
+    adv_mean: f32,
+    adv_std: f32,
+    batch: &'a UpdateBatch<'a>,
+    adv: &'a [f32],
+    targets: &'a [f32],
+    grads: &'a mut GenGrads,
+    /// (loss, entropy) partial sums over this chunk's rows.
+    stats: &'a mut (f32, f32),
+}
+
+impl GenChunkTask<'_> {
+    fn run(&mut self, s: &mut GenUpdateScratch) {
+        let gen = self.gen;
+        let f = self.family;
+        let fh = &gen.families[f];
+        let d = fh.obs_dim;
+        let k = gen.in_dim;
+        let nl = fh.heads.n_logits;
+        let n_ports = fh.heads.nvec.len();
+        let b = self.idxs.len();
+        let GenUpdateScratch { pad, h1, h2, logits, values, dlogits, dvalue, dlp, dent, dh1, dh2 } =
+            s;
+        // Gather this chunk's observation rows straight into padded trunk
+        // rows (zero fill, obs block, family one-hot), then ONE blocked
+        // forward over the whole chunk.
+        pad.resize(b * k, 0.0);
+        pad.fill(0.0);
+        for (r, &i) in self.idxs.iter().enumerate() {
+            pad[r * k..r * k + d].copy_from_slice(&self.batch.obs[i * d..(i + 1) * d]);
+            pad[r * k + gen.pad_obs + f] = 1.0;
+        }
+        gen.forward_padded(f, pad, b, h1, h2, logits, values);
+        dlogits.resize(b * nl, 0.0);
+        dvalue.resize(b, 0.0);
+        dlp.resize(nl, 0.0);
+        dent.resize(nl, 0.0);
+        let mut loss_acc = 0f32;
+        let mut ent_acc = 0f32;
+        for (r, &i) in self.idxs.iter().enumerate() {
+            let lg = &logits[r * nl..(r + 1) * nl];
+            let act = &self.batch.act[i * n_ports..(i + 1) * n_ports];
+            ppo_row_grads(
+                &fh.heads,
+                self.hp,
+                lg,
+                act,
+                self.adv[i],
+                self.adv_mean,
+                self.adv_std,
+                self.batch.logp[i],
+                values[r],
+                self.batch.val[i],
+                self.targets[i],
+                self.norm,
+                dlp,
+                dent,
+                &mut dlogits[r * nl..(r + 1) * nl],
+                &mut dvalue[r],
+                &mut loss_acc,
+                &mut ent_acc,
+            );
+        }
+        self.grads.zero();
+        gen.backward_padded(
+            f,
+            pad,
+            h1,
+            h2,
+            b,
+            &dlogits[..b * nl],
+            &dvalue[..b],
+            self.grads,
+            dh1,
+            dh2,
+        );
+        *self.stats = (loss_acc, ent_acc);
+    }
+}
+
+/// Dispatch one cross-family round's gradient chunks over the pool, each
+/// pool lane reusing its own [`GenUpdateScratch`]. Without a pool (or a
+/// single chunk) everything runs inline in chunk order; either way every
+/// chunk computes the same bits.
+fn run_gen_chunk_tasks(
+    pool: Option<&WorkerPool>,
+    tasks: &mut [GenChunkTask<'_>],
+    scratch: &mut [GenUpdateScratch],
+) {
+    match pool {
+        Some(pool) if tasks.len() > 1 && pool.max_shards() > 1 => {
+            let wrapped: Vec<Mutex<&mut GenChunkTask<'_>>> =
+                tasks.iter_mut().map(Mutex::new).collect();
+            let scr: Vec<Mutex<&mut GenUpdateScratch>> =
+                scratch.iter_mut().map(Mutex::new).collect();
+            pool.run_strided(wrapped.len(), |lane, k| {
+                let mut guard = scr[lane].lock().unwrap();
+                wrapped[k].lock().unwrap().run(&mut **guard);
+            });
+        }
+        _ => {
+            let (first, _) = scratch.split_first_mut().expect("at least one update scratch");
+            for task in tasks {
+                task.run(first);
+            }
+        }
+    }
+}
+
+/// Shard-parallel PPO update of the generalist over every family's filled
+/// rollout buffers at once — the cross-family counterpart of
+/// [`super::ppo::update_sharded_many`]. Per (epoch, minibatch) round it
+/// dispatches EVERY family's gradient chunks in one pooled call, reduces
+/// ALL of them (family-major chunk order) through ONE fixed-order pairwise
+/// tree, clips, and applies ONE Adam step — so a single optimizer step
+/// serves the whole grid while the trunk gradient accumulates across
+/// families.
+///
+/// Determinism contract (tested in rust/tests/generalist.rs): chunk
+/// boundaries are a pure function of each family's minibatch partition
+/// ([`UPDATE_CHUNK_ROWS`]); every chunk computes the same bits wherever it
+/// runs; the reduction order is family-major chunk order, fixed by the
+/// round's shape alone; epoch permutations are pre-drawn family-major.
+/// Hence the result is bit-identical for ANY pool width (incl. `None`).
+///
+/// Returns per-family `(mean total loss, mean entropy)` — normalized by
+/// each family's own minibatch rows, so the numbers are comparable with
+/// the per-family oracle's stats.
+pub fn update_generalist_sharded(
+    gen: &mut GeneralistLearner,
+    hp: &PpoParams,
+    rng: &mut Rng,
+    pool: Option<&WorkerPool>,
+    batches: &[UpdateBatch<'_>],
+) -> Vec<(f32, f32)> {
+    assert_eq!(gen.n_families(), batches.len(), "one UpdateBatch per family head");
+    struct Prep {
+        adv: Vec<f32>,
+        targets: Vec<f32>,
+        bounds: Vec<(usize, usize)>,
+        /// One permutation per epoch (pre-drawn, family-major).
+        perms: Vec<Vec<usize>>,
+        chunk_grads: Vec<GenGrads>,
+        chunk_stats: Vec<(f32, f32)>,
+        loss_acc: f64,
+        ent_acc: f64,
+        n_upd: usize,
+    }
+    let mut boot = gen.make_scratch();
+    let mut preps: Vec<Prep> = batches
+        .iter()
+        .enumerate()
+        .map(|(f, b)| {
+            let d = gen.obs_dim(f);
+            let bsz = b.n_envs * b.t_len;
+            assert_eq!(b.obs.len(), (b.t_len + 1) * b.n_envs * d, "obs must be [(T+1)*B*d]");
+            // Bootstrap values from the generalist itself (shared value
+            // head over the padded last-obs rows).
+            gen.forward_block(f, &b.obs[b.t_len * b.n_envs * d..], b.n_envs, &mut boot);
+            let (adv, targets) = gae(
+                b.rew,
+                b.val,
+                b.done,
+                &boot.values[..b.n_envs],
+                b.n_envs,
+                hp.gamma,
+                hp.gae_lambda,
+            );
+            let bounds = minibatch_bounds(bsz, hp.n_minibatches);
+            let perms: Vec<Vec<usize>> =
+                (0..hp.update_epochs).map(|_| rng.permutation(bsz)).collect();
+            let max_chunks = update_shard_demand(bsz, hp.n_minibatches);
+            Prep {
+                adv,
+                targets,
+                bounds,
+                perms,
+                chunk_grads: (0..max_chunks).map(|_| gen.zero_grads()).collect(),
+                chunk_stats: vec![(0.0, 0.0); max_chunks],
+                loss_acc: 0.0,
+                ent_acc: 0.0,
+                n_upd: 0,
+            }
+        })
+        .collect();
+    let width = pool.map(|p| p.max_shards()).unwrap_or(1).max(1);
+    let mut scratch: Vec<GenUpdateScratch> = (0..width).map(|_| GenUpdateScratch::new()).collect();
+    for epoch in 0..hp.update_epochs {
+        for mb in 0..hp.n_minibatches.max(1) {
+            // The round's total row count across every family — the
+            // normalizer that makes the reduced gradient the mean over all
+            // rows one Adam step serves.
+            let round_len: usize = preps
+                .iter()
+                .map(|p| {
+                    let (lo, hi) = p.bounds[mb];
+                    hi - lo
+                })
+                .sum();
+            if round_len == 0 {
+                continue; // n_minibatches > every family's bsz
+            }
+            let mut tasks: Vec<GenChunkTask<'_>> = Vec::new();
+            for (f, (batch, prep)) in batches.iter().zip(preps.iter_mut()).enumerate() {
+                let Prep { adv, targets, bounds, perms, chunk_grads, chunk_stats, .. } = prep;
+                let (lo, hi) = bounds[mb];
+                if lo == hi {
+                    continue;
+                }
+                let mb_len = hi - lo;
+                let idxs = &perms[epoch][lo..hi];
+                // Normalize advantages over the family's own minibatch
+                // (matching the per-family oracle) — once, on the caller.
+                let adv_mean = idxs.iter().map(|&i| adv[i]).sum::<f32>() / mb_len as f32;
+                let var = idxs
+                    .iter()
+                    .map(|&i| {
+                        let x = adv[i] - adv_mean;
+                        x * x
+                    })
+                    .sum::<f32>()
+                    / mb_len as f32;
+                let adv_std = var.sqrt() + 1e-8;
+                assert!(
+                    mb_len.div_ceil(UPDATE_CHUNK_ROWS) <= chunk_grads.len(),
+                    "family {f} minibatch {mb}: {} chunks but {} accumulators",
+                    mb_len.div_ceil(UPDATE_CHUNK_ROWS),
+                    chunk_grads.len()
+                );
+                for ((chunk, grads), stats) in idxs
+                    .chunks(UPDATE_CHUNK_ROWS)
+                    .zip(chunk_grads.iter_mut())
+                    .zip(chunk_stats.iter_mut())
+                {
+                    tasks.push(GenChunkTask {
+                        gen,
+                        hp,
+                        family: f,
+                        idxs: chunk,
+                        norm: round_len as f32,
+                        adv_mean,
+                        adv_std,
+                        batch,
+                        adv,
+                        targets,
+                        grads,
+                        stats,
+                    });
+                }
+            }
+            run_gen_chunk_tasks(pool, &mut tasks, &mut scratch);
+            drop(tasks);
+            // Cross-family reduction: every chunk of the round in
+            // family-major chunk order through ONE fixed-order tree, then
+            // clip + ONE Adam step on the caller.
+            let mut stat_counts: Vec<(usize, usize)> = Vec::new();
+            {
+                let mut used: Vec<&mut GenGrads> = Vec::new();
+                for (f, prep) in preps.iter_mut().enumerate() {
+                    let (lo, hi) = prep.bounds[mb];
+                    if lo == hi {
+                        continue;
+                    }
+                    let n_chunks = (hi - lo).div_ceil(UPDATE_CHUNK_ROWS);
+                    for g in prep.chunk_grads[..n_chunks].iter_mut() {
+                        used.push(g);
+                    }
+                    stat_counts.push((f, n_chunks));
+                }
+                tree_reduce(&mut used, |a, b| a.add_from(&**b));
+                let grads = &mut *used[0];
+                let norm = grads.global_norm();
+                if norm > hp.max_grad_norm {
+                    grads.scale(hp.max_grad_norm / norm);
+                }
+                gen.apply_grads(grads, hp.lr);
+            }
+            // Per-family stats off each family's own chunk sub-range.
+            for &(f, n_chunks) in &stat_counts {
+                let prep = &mut preps[f];
+                tree_reduce_stats(&mut prep.chunk_stats[..n_chunks]);
+                let (lo, hi) = prep.bounds[mb];
+                let mb_len = hi - lo;
+                let (loss, ent) = prep.chunk_stats[0];
+                prep.loss_acc += (loss / mb_len as f32) as f64;
+                prep.ent_acc += (ent / mb_len as f32) as f64;
+                prep.n_upd += 1;
+            }
+        }
+    }
+    preps
+        .iter()
+        .map(|p| {
+            let n = p.n_upd.max(1) as f64;
+            ((p.loss_acc / n) as f32, (p.ent_acc / n) as f32)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_gen(rng: &mut Rng) -> GeneralistLearner {
+        GeneralistLearner::new(
+            rng,
+            7,
+            16,
+            &[(7, vec![4, 3]), (5, vec![3, 3, 2]), (6, vec![5])],
+        )
+    }
+
+    /// Padded staging layout: obs block, zero padding, one-hot — and a
+    /// dirty/oversized pad buffer is fully overwritten.
+    #[test]
+    fn stage_rows_layout_and_overwrite() {
+        let mut rng = Rng::new(3);
+        let gen = demo_gen(&mut rng);
+        let k = gen.in_dim;
+        assert_eq!(k, 7 + 3);
+        let obs: Vec<f32> = (0..2 * 5).map(|i| i as f32 + 1.0).collect();
+        let mut pad = vec![f32::NAN; 5 * k]; // stale, too big
+        gen.stage_rows(1, &obs, 2, &mut pad);
+        assert_eq!(pad.len(), 2 * k);
+        for r in 0..2 {
+            assert_eq!(&pad[r * k..r * k + 5], &obs[r * 5..(r + 1) * 5], "row {r} obs");
+            assert!(pad[r * k + 5..r * k + 7].iter().all(|&x| x == 0.0), "row {r} padding");
+            let onehot = &pad[r * k + 7..(r + 1) * k];
+            assert_eq!(onehot, &[0.0, 1.0, 0.0], "row {r} one-hot");
+        }
+    }
+
+    /// A block forward must match the `rows == 1` forward per row bitwise
+    /// (the same kernel-layer invariant the per-family Mlp proves), across
+    /// different families through the same scratch.
+    #[test]
+    fn forward_block_matches_single_row_bitwise() {
+        let mut rng = Rng::new(11);
+        let gen = demo_gen(&mut rng);
+        let mut blk = gen.make_scratch();
+        let mut row = gen.make_scratch();
+        for f in 0..gen.n_families() {
+            let d = gen.obs_dim(f);
+            let nl = gen.n_logits(f);
+            let n = 5usize;
+            let obs: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+            blk.logits.iter_mut().for_each(|x| *x = f32::NAN);
+            gen.forward_block(f, &obs, n, &mut blk);
+            for i in 0..n {
+                gen.forward_block(f, &obs[i * d..(i + 1) * d], 1, &mut row);
+                assert_eq!(
+                    row.logits[..nl],
+                    blk.logits[i * nl..(i + 1) * nl],
+                    "family {f} row {i} logits"
+                );
+                assert_eq!(row.values[0], blk.values[i], "family {f} row {i} value");
+            }
+        }
+    }
+
+    /// Fused block sampling is a pure function of (weights, obs, seed,
+    /// lane, t) and matches a hand-rolled forward + derive2 + heads.sample
+    /// — the same contract as `Learner::sample_block`.
+    #[test]
+    fn sample_block_matches_components() {
+        let mut rng = Rng::new(23);
+        let gen = demo_gen(&mut rng);
+        let (f, n, lane0, t, seed) = (1usize, 4usize, 3usize, 9usize, 0xFEEDu64);
+        let d = gen.obs_dim(f);
+        let p = gen.n_ports(f);
+        let nl = gen.n_logits(f);
+        let obs: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let mut blk = gen.make_scratch();
+        let mut acts = vec![0usize; n * p];
+        let mut logp = vec![0f32; n];
+        let mut vals = vec![0f32; n];
+        gen.sample_block(f, t, lane0, seed, &obs, &mut acts, &mut logp, &mut vals, &mut blk);
+        let mut row = gen.make_scratch();
+        for i in 0..n {
+            gen.forward_block(f, &obs[i * d..(i + 1) * d], 1, &mut row);
+            let mut crng = CounterRng::derive2(seed, (lane0 + i) as u64, t as u64);
+            let mut a = vec![0usize; p];
+            let lp = gen.families[f].heads.sample(&mut crng, &row.logits[..nl], &mut a);
+            assert_eq!(a, acts[i * p..(i + 1) * p], "lane {i} actions");
+            assert_eq!(lp, logp[i], "lane {i} logp");
+            assert_eq!(row.values[0], vals[i], "lane {i} value");
+        }
+        // Greedy counterpart agrees with greedy_lane.
+        let mut acts_g = vec![0usize; n * p];
+        let mut vals_g = vec![0f32; n];
+        gen.greedy_block(f, &obs, &mut acts_g, &mut vals_g, &mut blk);
+        for i in 0..n {
+            let mut a = vec![0usize; p];
+            let v = gen.greedy_lane(f, &obs[i * d..(i + 1) * d], &mut a, &mut row);
+            assert_eq!(a, acts_g[i * p..(i + 1) * p], "lane {i} greedy actions");
+            assert_eq!(v, vals_g[i], "lane {i} greedy value");
+        }
+    }
+
+    /// Finite-difference check of the padded backward pass: trunk, shared
+    /// value head, and one family head — with the OTHER families' head
+    /// grads provably untouched.
+    #[test]
+    fn backward_padded_matches_finite_difference() {
+        let mut rng = Rng::new(31);
+        let mut gen = demo_gen(&mut rng);
+        let (f, b) = (1usize, 3usize);
+        let d = gen.obs_dim(f);
+        let nl = gen.n_logits(f);
+        let obs: Vec<f32> = (0..b * d).map(|_| rng.normal()).collect();
+        let cl: Vec<f32> = (0..b * nl).map(|_| rng.normal()).collect();
+        let cv: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        let loss = |g: &GeneralistLearner| -> f32 {
+            let mut s = g.make_scratch();
+            g.forward_block(f, &obs, b, &mut s);
+            s.logits[..b * nl].iter().zip(&cl).map(|(a, b)| a * b).sum::<f32>()
+                + s.values[..b].iter().zip(&cv).map(|(a, b)| a * b).sum::<f32>()
+        };
+        let mut s = gen.make_scratch();
+        gen.forward_block(f, &obs, b, &mut s);
+        let mut g = gen.zero_grads();
+        let (mut dh1, mut dh2) = (Vec::new(), Vec::new());
+        gen.backward_padded(
+            f, &s.pad, &s.h1, &s.h2, b, &cl, &cv, &mut g, &mut dh1, &mut dh2,
+        );
+        // Untouched families stay exactly zero.
+        for other in [0usize, 2] {
+            assert!(g.wpi[other].iter().all(|&x| x == 0.0), "family {other} wpi dirtied");
+            assert!(g.bpi[other].iter().all(|&x| x == 0.0), "family {other} bpi dirtied");
+        }
+        fn nudge(gen: &mut GeneralistLearner, pi: usize, wi: usize, delta: f32) {
+            let GeneralistLearner { w1, b1, w2, b2, wv, bv, families, .. } = gen;
+            let mut params: Vec<&mut Vec<f32>> = vec![w1, b1, w2, b2, wv, bv];
+            for fh in families.iter_mut() {
+                params.push(&mut fh.wpi);
+                params.push(&mut fh.bpi);
+            }
+            params[pi][wi] += delta;
+        }
+        let eps = 1e-3f32;
+        // (tensor index in canonical order, weight index)
+        let checks: Vec<(usize, usize)> = vec![(0, 3), (2, 17), (4, 5), (6 + 2 * f, 7), (5, 0)];
+        let gref = g.as_slices();
+        for (pi, wi) in checks {
+            let analytic = gref[pi][wi];
+            let orig = gen.params()[pi].clone();
+            nudge(&mut gen, pi, wi, eps);
+            let lp = loss(&gen);
+            nudge(&mut gen, pi, wi, -2.0 * eps);
+            let lm = loss(&gen);
+            nudge(&mut gen, pi, wi, eps); // restore
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - analytic).abs() < 2e-2 * (1.0 + fd.abs()),
+                "param {pi}[{wi}]: fd {fd} vs analytic {analytic}"
+            );
+            // Restoration really restored the weights.
+            assert_eq!(gen.params()[pi], &orig, "param {pi} not restored");
+        }
+    }
+
+    /// The sharded generalist update without a pool is deterministic:
+    /// two identically-seeded runs produce identical weight bits. (The
+    /// pool-width invariance half lives in rust/tests/generalist.rs where
+    /// a real fleet provides the pool.)
+    #[test]
+    fn update_is_deterministic_across_runs() {
+        let run = || -> Vec<f32> {
+            let mut rng = Rng::new(5);
+            let mut gen = demo_gen(&mut rng);
+            let hp = PpoParams {
+                n_minibatches: 2,
+                update_epochs: 2,
+                ..Default::default()
+            };
+            let mut data_rng = Rng::new(77);
+            let (t_len, n_envs) = (6usize, 4usize);
+            let mut store: Vec<(Vec<f32>, Vec<usize>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> =
+                Vec::new();
+            for f in 0..gen.n_families() {
+                let d = gen.obs_dim(f);
+                let p = gen.n_ports(f);
+                let bsz = t_len * n_envs;
+                let obs: Vec<f32> = (0..(t_len + 1) * n_envs * d)
+                    .map(|_| data_rng.normal() * 0.5)
+                    .collect();
+                let act: Vec<usize> = (0..bsz * p)
+                    .enumerate()
+                    .map(|(i, _)| {
+                        let head = i % p;
+                        (data_rng.below(gen.families[f].heads.nvec[head] as u32)) as usize
+                    })
+                    .collect();
+                let logp: Vec<f32> = (0..bsz).map(|_| -data_rng.normal().abs()).collect();
+                let val: Vec<f32> = (0..bsz).map(|_| data_rng.normal()).collect();
+                let rew: Vec<f32> = (0..bsz).map(|_| data_rng.normal()).collect();
+                let done: Vec<f32> = (0..bsz).map(|i| if i % 7 == 6 { 1.0 } else { 0.0 }).collect();
+                store.push((obs, act, logp, val, rew, done));
+            }
+            let batches: Vec<UpdateBatch<'_>> = store
+                .iter()
+                .map(|(obs, act, logp, val, rew, done)| UpdateBatch {
+                    n_envs,
+                    t_len,
+                    obs,
+                    act,
+                    logp,
+                    val,
+                    rew,
+                    done,
+                })
+                .collect();
+            let mut urng = Rng::new(99);
+            let stats = update_generalist_sharded(&mut gen, &hp, &mut urng, None, &batches);
+            assert_eq!(stats.len(), gen.n_families());
+            gen.params().into_iter().flat_map(|p| p.iter().copied()).collect()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -94,6 +94,11 @@ pub struct MlpScratch {
     pub logits: Vec<f32>, // [rows, n_logits]
     pub values: Vec<f32>, // [rows]
     pub rows: usize,
+    /// Padded-input staging rows for the generalist shared-trunk policy
+    /// ([`super::generalist`]): obs padded to the grid-wide max dim plus a
+    /// family one-hot block. Empty (and never touched) on the per-family
+    /// `Learner` path.
+    pub pad: Vec<f32>,
 }
 
 impl Mlp {
@@ -204,6 +209,7 @@ impl Mlp {
             logits: vec![0.0; self.n_logits],
             values: vec![0.0; 1],
             rows: 1,
+            pad: Vec::new(),
         }
     }
 

@@ -2,6 +2,7 @@
 //! policies over the scalar simulator, standing in for the paper's
 //! SB3-on-CPU-gym baseline rows in Table 2 / Fig. 1.
 
+pub mod generalist;
 pub mod kernels;
 pub mod mlp;
 pub mod policies;

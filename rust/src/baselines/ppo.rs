@@ -68,10 +68,17 @@ pub struct Adam {
 
 impl Adam {
     pub fn new(mlp: &Mlp) -> Adam {
-        let sizes = [
+        Adam::from_sizes(&[
             mlp.w1.len(), mlp.b1.len(), mlp.w2.len(), mlp.b2.len(),
             mlp.wpi.len(), mlp.bpi.len(), mlp.wv.len(), mlp.bv.len(),
-        ];
+        ])
+    }
+
+    /// Optimizer state over an arbitrary canonical-order tensor list — the
+    /// generalist shared-trunk learner ([`super::generalist`]) has a
+    /// different parameter layout than [`Mlp`] but steps through the same
+    /// optimizer.
+    pub fn from_sizes(sizes: &[usize]) -> Adam {
         Adam {
             m: sizes.iter().map(|&s| vec![0.0; s]).collect(),
             v: sizes.iter().map(|&s| vec![0.0; s]).collect(),
@@ -79,18 +86,27 @@ impl Adam {
         }
     }
 
-    pub fn update(&mut self, mlp: &mut Mlp, grads: &mut Grads, lr: f32) {
+    pub fn update(&mut self, mlp: &mut Mlp, grads: &Grads, lr: f32) {
+        self.step(mlp.params_mut(), &grads.as_slices(), lr);
+    }
+
+    /// One bias-corrected Adam step over parallel (param, grad) tensor
+    /// lists. Both lists must be in the same canonical order as the sizes
+    /// this state was built from — the zip silently truncates otherwise,
+    /// so callers keep ONE ordering for params, grads, and sizes.
+    pub fn step(&mut self, params: Vec<&mut Vec<f32>>, grads: &[&Vec<f32>], lr: f32) {
         const B1: f32 = 0.9;
         const B2: f32 = 0.999;
         const EPS: f32 = 1e-8;
+        debug_assert_eq!(params.len(), self.m.len());
+        debug_assert_eq!(grads.len(), self.m.len());
         self.count += 1;
         let c = self.count as f32;
         let bias1 = 1.0 - B1.powf(c);
         let bias2 = 1.0 - B2.powf(c);
-        for (((p, g), m), v) in mlp
-            .params_mut()
+        for (((p, g), m), v) in params
             .into_iter()
-            .zip(grads.as_slices_mut())
+            .zip(grads.iter())
             .zip(self.m.iter_mut())
             .zip(self.v.iter_mut())
         {
@@ -247,7 +263,7 @@ pub fn update_shard_demand(bsz: usize, n_minibatches: usize) -> usize {
 /// sharded update's bitwise-determinism contract. ONE control flow for
 /// every reduced quantity, so gradient and stats reductions can never
 /// drift apart structurally.
-fn tree_reduce<T>(parts: &mut [T], mut combine: impl FnMut(&mut T, &T)) {
+pub(crate) fn tree_reduce<T>(parts: &mut [T], mut combine: impl FnMut(&mut T, &T)) {
     let n = parts.len();
     let mut stride = 1;
     while stride < n {
@@ -266,7 +282,7 @@ fn tree_reduce_grads(parts: &mut [Grads]) {
 }
 
 /// The same fixed-order tree over per-chunk (loss, entropy) partial sums.
-fn tree_reduce_stats(parts: &mut [(f32, f32)]) {
+pub(crate) fn tree_reduce_stats(parts: &mut [(f32, f32)]) {
     tree_reduce(parts, |a, b| {
         a.0 += b.0;
         a.1 += b.1;
@@ -317,6 +333,75 @@ impl UpdateScratch {
     }
 }
 
+/// One sample-row of the PPO clipped-surrogate loss: log-prob/entropy of
+/// the stored action, normalized-advantage policy gradient, clipped value
+/// loss — filling `dlogits_row`/`dvalue_out` (both scaled by `1/norm`, the
+/// FULL minibatch-round row count) and accumulating raw loss/entropy into
+/// `loss_acc`/`ent_acc` in a fixed op order. Extracted from the chunk pass
+/// so the per-family [`ChunkTask`] and the generalist's cross-family
+/// chunks ([`super::generalist`]) run literally the same float ops —
+/// their bitwise contracts are one proof, not two.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn ppo_row_grads(
+    heads: &Heads,
+    hp: &PpoParams,
+    lg: &[f32],
+    act: &[usize],
+    adv_raw: f32,
+    adv_mean: f32,
+    adv_std: f32,
+    logp_old: f32,
+    v: f32,
+    v_old: f32,
+    target: f32,
+    norm: f32,
+    dlp: &mut [f32],
+    dent: &mut [f32],
+    dlogits_row: &mut [f32],
+    dvalue_out: &mut f32,
+    loss_acc: &mut f32,
+    ent_acc: &mut f32,
+) {
+    let nl = heads.n_logits;
+    dlp.iter_mut().for_each(|x| *x = 0.0);
+    dent.iter_mut().for_each(|x| *x = 0.0);
+    let (logp, ent) = heads.logp_entropy(lg, act, dlp, dent);
+    let a_n = (adv_raw - adv_mean) / adv_std;
+    let ratio = (logp - logp_old).exp();
+    let clipped = ratio.clamp(1.0 - hp.clip_eps, 1.0 + hp.clip_eps);
+    let pg1 = ratio * a_n;
+    let pg2 = clipped * a_n;
+    // d(-min(pg1,pg2))/dlogp
+    let dpg_dlogp = if pg1 <= pg2 {
+        -ratio * a_n // d(-ratio*a)/dlogp = -a*ratio
+    } else if (ratio < 1.0 - hp.clip_eps && a_n < 0.0)
+        || (ratio > 1.0 + hp.clip_eps && a_n > 0.0)
+    {
+        0.0 // clipped branch, constant
+    } else {
+        -ratio * a_n
+    };
+    *loss_acc += -pg1.min(pg2);
+    *ent_acc += ent;
+    // value loss (clipped)
+    let v_clip = v_old + (v - v_old).clamp(-hp.vf_clip, hp.vf_clip);
+    let e1 = (v - target) * (v - target);
+    let e2 = (v_clip - target) * (v_clip - target);
+    *loss_acc += 0.5 * hp.vf_coef * e1.max(e2);
+    let dv = if e1 >= e2 {
+        v - target
+    } else if (v - v_old).abs() < hp.vf_clip {
+        v_clip - target
+    } else {
+        0.0
+    };
+    *dvalue_out = hp.vf_coef * dv / norm;
+    for k in 0..nl {
+        dlogits_row[k] = (dpg_dlogp * dlp[k] - hp.ent_coef * dent[k]) / norm;
+    }
+    *loss_acc -= hp.ent_coef * ent;
+}
+
 /// One gradient chunk of one family's current minibatch: forward + loss
 /// gradients + backward over `idxs` (at most [`UPDATE_CHUNK_ROWS`] rows),
 /// writing the partial gradient into this chunk's own accumulator. Chunks
@@ -365,46 +450,26 @@ impl ChunkTask<'_> {
         for (r, &i) in self.idxs.iter().enumerate() {
             let lg = &s.cache.logits[r * nl..(r + 1) * nl];
             let act = &self.batch.act[i * n_ports..(i + 1) * n_ports];
-            s.dlp.iter_mut().for_each(|x| *x = 0.0);
-            s.dent.iter_mut().for_each(|x| *x = 0.0);
-            let (logp, ent) = learner.heads.logp_entropy(lg, act, &mut s.dlp, &mut s.dent);
-            let a_n = (self.adv[i] - self.adv_mean) / self.adv_std;
-            let ratio = (logp - self.batch.logp[i]).exp();
-            let clipped = ratio.clamp(1.0 - hp.clip_eps, 1.0 + hp.clip_eps);
-            let pg1 = ratio * a_n;
-            let pg2 = clipped * a_n;
-            // d(-min(pg1,pg2))/dlogp
-            let dpg_dlogp = if pg1 <= pg2 {
-                -ratio * a_n // d(-ratio*a)/dlogp = -a*ratio
-            } else if (ratio < 1.0 - hp.clip_eps && a_n < 0.0)
-                || (ratio > 1.0 + hp.clip_eps && a_n > 0.0)
-            {
-                0.0 // clipped branch, constant
-            } else {
-                -ratio * a_n
-            };
-            loss_acc += -pg1.min(pg2);
-            ent_acc += ent;
-            // value loss (clipped)
-            let v = s.cache.value[r];
-            let v_old = self.batch.val[i];
-            let v_clip = v_old + (v - v_old).clamp(-hp.vf_clip, hp.vf_clip);
-            let e1 = (v - self.targets[i]) * (v - self.targets[i]);
-            let e2 = (v_clip - self.targets[i]) * (v_clip - self.targets[i]);
-            loss_acc += 0.5 * hp.vf_coef * e1.max(e2);
-            let dv = if e1 >= e2 {
-                v - self.targets[i]
-            } else if (v - v_old).abs() < hp.vf_clip {
-                v_clip - self.targets[i]
-            } else {
-                0.0
-            };
-            s.dvalue[r] = hp.vf_coef * dv / self.mb_len as f32;
-            for k in 0..nl {
-                s.dlogits[r * nl + k] =
-                    (dpg_dlogp * s.dlp[k] - hp.ent_coef * s.dent[k]) / self.mb_len as f32;
-            }
-            loss_acc -= hp.ent_coef * ent;
+            ppo_row_grads(
+                &learner.heads,
+                hp,
+                lg,
+                act,
+                self.adv[i],
+                self.adv_mean,
+                self.adv_std,
+                self.batch.logp[i],
+                s.cache.value[r],
+                self.batch.val[i],
+                self.targets[i],
+                self.mb_len as f32,
+                &mut s.dlp,
+                &mut s.dent,
+                &mut s.dlogits[r * nl..(r + 1) * nl],
+                &mut s.dvalue[r],
+                &mut loss_acc,
+                &mut ent_acc,
+            );
         }
         self.grads.zero();
         learner.mlp.backward_scratch(

@@ -30,6 +30,7 @@
 
 use std::sync::{Arc, Mutex};
 
+use crate::baselines::generalist::PolicyRef;
 use crate::baselines::mlp::MlpScratch;
 use crate::baselines::ppo::Learner;
 use crate::runtime::pool::WorkerPool;
@@ -490,20 +491,21 @@ impl VectorEnv {
         assert_eq!(pol.actions.len(), n_steps * b * p, "actions must be [T*B*n_ports]");
         assert_eq!(pol.logp.len(), n_steps * b, "logp must be [T*B]");
         assert_eq!(pol.values.len(), n_steps * b, "values must be [T*B]");
-        assert_eq!(learner.obs_dim, d, "learner obs_dim does not match env");
-        assert_eq!(learner.n_ports(), p, "learner n_ports does not match env");
+        let policy = PolicyRef::PerFamily(learner);
+        assert_eq!(policy.obs_dim(), d, "learner obs_dim does not match env");
+        assert_eq!(policy.n_ports(), p, "learner n_ports does not match env");
         let shards = self.auto_shards();
         let pool = if shards > 1 { Some(self.ensure_pool(shards)) } else { None };
         // One forward scratch per shard, allocated once and reused for
         // every (lane, step) that shard handles.
         let mut scratch: Vec<MlpScratch> =
-            (0..shards).map(|_| learner.make_scratch()).collect();
+            (0..shards).map(|_| policy.make_scratch()).collect();
         let mut infos = vec![StepInfo::default(); b];
         self.observe_all(&mut bufs.obs[..b * d]);
         for t in 0..n_steps {
             let (obs_t, obs_next) = bufs.obs[t * b * d..].split_at_mut(b * d);
             let fused = FusedStep {
-                learner,
+                learner: policy,
                 seed: policy_seed,
                 t,
                 greedy,
@@ -754,12 +756,13 @@ pub(crate) enum StepActs<'a> {
 }
 
 /// Env-wide fused-policy inputs/outputs for one step (see
-/// [`VectorEnv::rollout_fused`]): the learner (shared read-only), the
-/// policy seed, the step index, the full `[B * obs_dim]` observation row
-/// the policy reads, the full-width output rows it fills, and one forward
-/// scratch per shard task.
+/// [`VectorEnv::rollout_fused`]): the policy (shared read-only — a
+/// per-family [`Learner`] or one family's view of the shared-trunk
+/// generalist), the policy seed, the step index, the full `[B * obs_dim]`
+/// observation row the policy reads, the full-width output rows it fills,
+/// and one forward scratch per shard task.
 pub(crate) struct FusedStep<'a> {
-    pub(crate) learner: &'a Learner,
+    pub(crate) learner: PolicyRef<'a>,
     pub(crate) seed: u64,
     pub(crate) t: usize,
     pub(crate) greedy: bool,
@@ -782,7 +785,7 @@ pub(crate) enum ShardActs<'a> {
 /// env-local offset of this shard's first lane, so per-(lane, t) RNG
 /// streams are global to the env, not the shard.
 pub(crate) struct FusedShard<'a> {
-    learner: &'a Learner,
+    learner: PolicyRef<'a>,
     seed: u64,
     t: usize,
     lane0: usize,

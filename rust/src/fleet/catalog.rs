@@ -13,13 +13,13 @@
 //! `Arc<ScenarioTables>` instead of each caller hand-building per-lane
 //! table vectors.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::{DataStore, Scenario};
-use crate::env::core::ScenarioTables;
+use crate::env::core::{self, ScenarioTables};
 use crate::env::tree::StationConfig;
 use crate::util::json::Json;
 use crate::util::rng::CounterRng;
@@ -145,6 +145,41 @@ impl ScenarioSpec {
         out
     }
 
+    /// Named-error validation of the grid axes. Empty axes collapse the
+    /// cross product to nothing, and a repeated axis value makes two grid
+    /// cells resolve to the SAME scenario — the [`TableCache`] would then
+    /// silently dedup them and the entry would train on fewer distinct
+    /// cells than its spec claims. Both are almost certainly config typos,
+    /// so they are rejected here (called from the JSON loader and from
+    /// [`expand`], covering programmatically-built specs too).
+    pub fn validate(&self) -> Result<()> {
+        for (axis, n) in [
+            ("countries", self.countries.len()),
+            ("years", self.years.len()),
+            ("traffics", self.traffics.len()),
+            ("profiles", self.profiles.len()),
+        ] {
+            if n == 0 {
+                bail!(
+                    "fleet entry '{}': axis \"{axis}\" is empty (grid would have no cells)",
+                    self.name
+                );
+            }
+        }
+        let mut seen = BTreeSet::new();
+        for sc in self.cells() {
+            let name = cell_name(&sc);
+            if !seen.insert(name.clone()) {
+                bail!(
+                    "fleet entry '{}': duplicate scenario cell '{name}' \
+                     (an axis value is repeated)",
+                    self.name
+                );
+            }
+        }
+        Ok(())
+    }
+
     fn from_json(j: &Json) -> Result<ScenarioSpec> {
         let d = ScenarioSpec::default();
         let str_list = |key: &str, dflt: Vec<String>| -> Result<Vec<String>> {
@@ -182,7 +217,7 @@ impl ScenarioSpec {
             Some(l) => StationLayout::from_json(l)
                 .with_context(|| format!("fleet entry '{name}' layout"))?,
         };
-        Ok(ScenarioSpec {
+        let spec = ScenarioSpec {
             lanes,
             countries: str_list("countries", d.countries)?,
             years,
@@ -196,15 +231,23 @@ impl ScenarioSpec {
             layout,
             v2g: j.get("v2g").and_then(Json::as_bool).unwrap_or(false),
             name,
-        })
+        };
+        spec.validate()?;
+        Ok(spec)
     }
 }
 
-/// A whole fleet: several grid entries plus the expansion seed.
+/// A whole fleet: several grid entries plus the expansion seed and an
+/// optional list of scenario cells (named as `profile/country/year/traffic`,
+/// see [`cell_name`]) carved out of training for zero-shot eval.
 #[derive(Debug, Clone)]
 pub struct FleetSpec {
     pub seed: u64,
     pub specs: Vec<ScenarioSpec>,
+    /// Cell names excluded from every training lane. [`expand`] still
+    /// builds their tables (into [`FamilyPlan::holdout_tables`]) so eval
+    /// can report zero-shot per-cell numbers on them.
+    pub holdout: Vec<String>,
 }
 
 impl FleetSpec {
@@ -245,7 +288,23 @@ impl FleetSpec {
                     ..ScenarioSpec::default()
                 },
             ],
+            holdout: Vec::new(),
         }
+    }
+
+    /// Demo fleet resized to roughly `total_lanes` lanes split 2:2:1
+    /// across the three families (bench sweeps drive arbitrary batch
+    /// sizes that the `lanes_scale` multiplier of [`FleetSpec::demo`]
+    /// cannot hit).
+    pub fn demo_total(seed: u64, total_lanes: usize) -> FleetSpec {
+        let mut f = FleetSpec::demo(seed, 1);
+        let t = total_lanes.max(5);
+        let l0 = 2 * t / 5;
+        let l1 = 2 * t / 5;
+        f.specs[0].lanes = l0;
+        f.specs[1].lanes = l1;
+        f.specs[2].lanes = t - l0 - l1;
+        f
     }
 
     pub fn from_json_file(path: &str) -> Result<FleetSpec> {
@@ -257,7 +316,8 @@ impl FleetSpec {
 
     /// Schema (README §Scenario fleets & V2G):
     /// `{"seed": N, "fleet": [{"name", "lanes", "countries", "years",
-    /// "traffics", "profiles", "region", "layout": {...}, "v2g"}, ...]}`.
+    /// "traffics", "profiles", "region", "layout": {...}, "v2g"}, ...],
+    /// "holdout": ["profile/country/year/traffic", ...]}`.
     pub fn from_json(j: &Json) -> Result<FleetSpec> {
         let seed = j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
         let entries = j
@@ -268,7 +328,13 @@ impl FleetSpec {
         for (i, e) in entries.iter().enumerate() {
             specs.push(ScenarioSpec::from_json(e).with_context(|| format!("fleet entry {i}"))?);
         }
-        Ok(FleetSpec { seed, specs })
+        let holdout = match j.get("holdout") {
+            None => Vec::new(),
+            Some(v) => v.as_str_vec().ok_or_else(|| {
+                anyhow!("\"holdout\" must be an array of cell names (profile/country/year/traffic)")
+            })?,
+        };
+        Ok(FleetSpec { seed, specs, holdout })
     }
 }
 
@@ -381,6 +447,62 @@ pub struct FamilyPlan {
     pub cell_names: Vec<String>,
     pub lane_scenario: Vec<usize>,
     pub seeds: Vec<u64>,
+    /// Held-out scenario cells of this family (`holdout` key): tables are
+    /// built so eval can run zero-shot on them, but NO training lane is
+    /// ever assigned one. `holdout_names[i]` names `holdout_tables[i]`.
+    pub holdout_tables: Vec<Arc<ScenarioTables>>,
+    pub holdout_names: Vec<String>,
+}
+
+/// Shape of the whole scenario grid as one policy input/output spec: the
+/// padded observation width (grid-wide max) and one head spec per family
+/// in deterministic [`expand`] order. This is what the shared-trunk
+/// generalist ([`crate::baselines::generalist::GeneralistLearner`]) is
+/// built from: trunk input is `pad_obs + heads.len()` (obs padded with
+/// zeros plus a family one-hot block), and family `f` decodes through
+/// `heads[f].action_nvec`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridShape {
+    pub pad_obs: usize,
+    pub heads: Vec<HeadSpec>,
+}
+
+/// Per-family slice of the [`GridShape`]: the family's native obs width
+/// and factored action dims.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeadSpec {
+    pub label: String,
+    pub obs_dim: usize,
+    pub action_nvec: Vec<usize>,
+}
+
+impl GridShape {
+    /// Derive the grid shape from expanded family plans. Family index ==
+    /// position in `plans` — the same deterministic order the fused
+    /// rollout and the cross-family update iterate in.
+    pub fn from_plans(plans: &[FamilyPlan]) -> GridShape {
+        let heads: Vec<HeadSpec> = plans
+            .iter()
+            .map(|f| HeadSpec {
+                label: f.label.clone(),
+                obs_dim: core::obs_dim(&f.cfg),
+                action_nvec: core::action_nvec(&f.cfg),
+            })
+            .collect();
+        let pad_obs = heads.iter().map(|h| h.obs_dim).max().unwrap_or(0);
+        GridShape { pad_obs, heads }
+    }
+
+    /// Trunk input width: padded obs + one-hot family id.
+    pub fn in_dim(&self) -> usize {
+        self.pad_obs + self.heads.len()
+    }
+
+    /// `(obs_dim, action_nvec)` pairs in family order — the constructor
+    /// argument of `GeneralistLearner::new`.
+    pub fn learner_specs(&self) -> Vec<(usize, Vec<usize>)> {
+        self.heads.iter().map(|h| (h.obs_dim, h.action_nvec.clone())).collect()
+    }
 }
 
 /// Expand a [`FleetSpec`] into per-family lane plans.
@@ -394,6 +516,12 @@ pub fn expand(fleet: &FleetSpec, store: Option<&DataStore>) -> Result<Vec<Family
     if fleet.specs.is_empty() {
         bail!("fleet spec has no scenario entries");
     }
+    for (i, h) in fleet.holdout.iter().enumerate() {
+        if fleet.holdout[..i].contains(h) {
+            bail!("duplicate holdout cell '{h}' in fleet spec");
+        }
+    }
+    let mut holdout_used = vec![false; fleet.holdout.len()];
     let mut cache = TableCache::new();
     let mut families: Vec<FamilyPlan> = Vec::new();
     let mut seeder = CounterRng::derive(fleet.seed, 0xF1EE7);
@@ -401,11 +529,34 @@ pub fn expand(fleet: &FleetSpec, store: Option<&DataStore>) -> Result<Vec<Family
         if spec.lanes == 0 {
             bail!("fleet entry '{}' has zero lanes", spec.name);
         }
-        let cells = spec.cells();
+        spec.validate()?;
+        // Carve held-out cells from this entry's grid BEFORE the order
+        // shuffle: training lanes round-robin over the surviving cells
+        // only, so a holdout cell can never reach a lane. With no holdout
+        // the partition is the identity and every seeded draw below is
+        // byte-for-byte what it was without the feature.
+        let mut cells = Vec::new();
+        let mut held = Vec::new();
+        for sc in spec.cells() {
+            let name = cell_name(&sc);
+            match fleet.holdout.iter().position(|h| h == &name) {
+                Some(k) => {
+                    holdout_used[k] = true;
+                    held.push(sc);
+                }
+                None => cells.push(sc),
+            }
+        }
         if cells.is_empty() {
+            if held.is_empty() {
+                bail!(
+                    "fleet entry '{}' expands to an empty grid \
+                     (check countries/years/traffics/profiles)",
+                    spec.name
+                );
+            }
             bail!(
-                "fleet entry '{}' expands to an empty grid \
-                 (check countries/years/traffics/profiles)",
+                "fleet entry '{}' has every scenario cell held out — nothing left to train on",
                 spec.name
             );
         }
@@ -432,6 +583,8 @@ pub fn expand(fleet: &FleetSpec, store: Option<&DataStore>) -> Result<Vec<Family
                     cell_names: Vec::new(),
                     lane_scenario: Vec::new(),
                     seeds: Vec::new(),
+                    holdout_tables: Vec::new(),
+                    holdout_names: Vec::new(),
                 });
                 families.len() - 1
             }
@@ -452,6 +605,25 @@ pub fn expand(fleet: &FleetSpec, store: Option<&DataStore>) -> Result<Vec<Family
             };
             fam.lane_scenario.push(t_idx);
             fam.seeds.push(seeder.next_u64());
+        }
+        for sc in &held {
+            let name = cell_name(sc);
+            if fam.holdout_names.contains(&name) {
+                continue;
+            }
+            let table = cache
+                .get(store, sc)
+                .with_context(|| format!("fleet entry '{}' holdout", spec.name))?;
+            fam.holdout_tables.push(table);
+            fam.holdout_names.push(name);
+        }
+    }
+    for (h, used) in fleet.holdout.iter().zip(&holdout_used) {
+        if !used {
+            bail!(
+                "holdout cell '{h}' matches no scenario cell in any fleet entry \
+                 (cells are named profile/country/year/traffic)"
+            );
         }
     }
     Ok(families)
@@ -517,6 +689,7 @@ mod tests {
                 traffics: vec!["medium".into(), "high".into()],
                 ..ScenarioSpec::default()
             }],
+            holdout: Vec::new(),
         };
         let fams = expand(&spec, None).unwrap();
         assert_eq!(fams.len(), 1);
@@ -536,7 +709,8 @@ mod tests {
         let mut a = ScenarioSpec { name: "a".into(), lanes: 3, ..ScenarioSpec::default() };
         a.traffics = vec!["low".into()];
         let b = ScenarioSpec { name: "b".into(), lanes: 2, ..ScenarioSpec::default() };
-        let fams = expand(&FleetSpec { seed: 1, specs: vec![a, b] }, None).unwrap();
+        let fams =
+            expand(&FleetSpec { seed: 1, specs: vec![a, b], holdout: Vec::new() }, None).unwrap();
         assert_eq!(fams.len(), 1);
         assert_eq!(fams[0].lane_scenario.len(), 5);
         assert_eq!(fams[0].label, "a+b");
@@ -566,5 +740,139 @@ mod tests {
         let bad = r#"{"fleet": [{"name": "x"}]}"#;
         let err = FleetSpec::from_json(&Json::parse(bad).unwrap()).unwrap_err();
         assert!(format!("{err:#}").contains("lanes"), "{err:#}");
+    }
+
+    #[test]
+    fn duplicate_cells_and_empty_axes_are_rejected_not_deduped() {
+        // A repeated axis value used to slip through: TableCache collapsed
+        // the duplicate cells and training silently covered fewer cells
+        // than the spec claimed.
+        let dup = r#"{"fleet": [{"name": "d", "lanes": 4,
+                                 "years": [2021, 2021]}]}"#;
+        let err = FleetSpec::from_json(&Json::parse(dup).unwrap()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("duplicate scenario cell"), "{msg}");
+        assert!(msg.contains("'d'"), "entry not named: {msg}");
+
+        let empty = r#"{"fleet": [{"name": "e", "lanes": 4, "traffics": []}]}"#;
+        let err = FleetSpec::from_json(&Json::parse(empty).unwrap()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("\"traffics\" is empty"), "{msg}");
+
+        // expand() validates too, for programmatically-built specs.
+        let mut spec = ScenarioSpec { lanes: 2, ..ScenarioSpec::default() };
+        spec.countries = vec!["NL".into(), "NL".into()];
+        let err = expand(
+            &FleetSpec { seed: 1, specs: vec![spec], holdout: Vec::new() },
+            None,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate scenario cell"), "{err:#}");
+    }
+
+    #[test]
+    fn holdout_cells_are_carved_out_of_training() {
+        let mut fleet = FleetSpec::demo(7, 1);
+        // demo entry 0 grid: shopping × NL × {2021,2022} × {medium,high}.
+        let held = "shopping/NL/2022/high".to_string();
+        fleet.holdout = vec![held.clone()];
+        let fams = expand(&fleet, None).unwrap();
+        let with_holdout: Vec<_> =
+            fams.iter().filter(|f| !f.holdout_names.is_empty()).collect();
+        assert_eq!(with_holdout.len(), 1, "exactly one family holds the cell");
+        let f = with_holdout[0];
+        assert_eq!(f.holdout_names, vec![held.clone()]);
+        assert_eq!(f.holdout_tables.len(), 1);
+        // The held-out cell appears in NO training assignment.
+        assert!(
+            !f.cell_names.contains(&held),
+            "holdout cell leaked into training cells: {:?}",
+            f.cell_names
+        );
+        assert_eq!(f.cell_names.len(), 3, "3 of 4 grid cells remain trainable");
+        // Same lane count as without holdout — lanes redistribute over the
+        // surviving cells rather than disappearing.
+        let base = expand(&FleetSpec::demo(7, 1), None).unwrap();
+        let base_lanes: usize = base.iter().map(|f| f.lane_scenario.len()).sum();
+        let lanes: usize = fams.iter().map(|f| f.lane_scenario.len()).sum();
+        assert_eq!(lanes, base_lanes);
+    }
+
+    #[test]
+    fn holdout_validation_names_bad_cells() {
+        let mut fleet = FleetSpec::demo(7, 1);
+        fleet.holdout = vec!["nope/XX/1999/low".into()];
+        let err = expand(&fleet, None).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("nope/XX/1999/low"),
+            "unknown holdout not named: {err:#}"
+        );
+
+        let mut fleet = FleetSpec::demo(7, 1);
+        fleet.holdout =
+            vec!["shopping/NL/2022/high".into(), "shopping/NL/2022/high".into()];
+        let err = expand(&fleet, None).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate holdout"), "{err:#}");
+
+        // Holding out EVERY cell of an entry is an error, not a 0-lane plan.
+        let mut fleet = FleetSpec::demo(7, 1);
+        fleet.holdout = vec!["work/NL/2021/medium".into()]; // dc-plaza-v2g's only cell
+        let err = expand(&fleet, None).unwrap_err();
+        assert!(format!("{err:#}").contains("every scenario cell held out"), "{err:#}");
+    }
+
+    #[test]
+    fn holdout_key_parses_and_empty_holdout_changes_nothing() {
+        let text = r#"{
+            "seed": 5,
+            "fleet": [{"name": "nl", "lanes": 4, "years": [2021, 2022]}],
+            "holdout": ["shopping/NL/2022/medium"]
+        }"#;
+        let spec = FleetSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.holdout, vec!["shopping/NL/2022/medium".to_string()]);
+        let fams = expand(&spec, None).unwrap();
+        assert_eq!(fams[0].holdout_names.len(), 1);
+
+        // No holdout key → expansion identical to the pre-holdout planner
+        // (the carve-out partition is the identity).
+        let a = expand(&FleetSpec::demo(7, 1), None).unwrap();
+        let mut with_empty = FleetSpec::demo(7, 1);
+        with_empty.holdout = Vec::new();
+        let b = expand(&with_empty, None).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.lane_scenario, y.lane_scenario);
+            assert_eq!(x.seeds, y.seeds);
+            assert_eq!(x.cell_names, y.cell_names);
+        }
+    }
+
+    #[test]
+    fn grid_shape_matches_family_plans() {
+        let fams = expand(&FleetSpec::demo(7, 1), None).unwrap();
+        let shape = GridShape::from_plans(&fams);
+        assert_eq!(shape.heads.len(), 3);
+        let dims: Vec<usize> =
+            fams.iter().map(|f| crate::env::core::obs_dim(&f.cfg)).collect();
+        assert_eq!(shape.pad_obs, *dims.iter().max().unwrap());
+        assert_eq!(shape.in_dim(), shape.pad_obs + 3);
+        for (h, f) in shape.heads.iter().zip(&fams) {
+            assert_eq!(h.label, f.label);
+            assert_eq!(h.obs_dim, crate::env::core::obs_dim(&f.cfg));
+            assert_eq!(h.action_nvec, crate::env::core::action_nvec(&f.cfg));
+            assert!(h.obs_dim <= shape.pad_obs);
+        }
+        let specs = shape.learner_specs();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].0, shape.heads[0].obs_dim);
+    }
+
+    #[test]
+    fn demo_total_splits_lanes_two_two_one() {
+        let f = FleetSpec::demo_total(7, 256);
+        let lanes: Vec<usize> = f.specs.iter().map(|s| s.lanes).collect();
+        assert_eq!(lanes.iter().sum::<usize>(), 256);
+        assert_eq!(lanes, vec![102, 102, 52]);
+        let f = FleetSpec::demo_total(7, 1024);
+        assert_eq!(f.specs.iter().map(|s| s.lanes).sum::<usize>(), 1024);
     }
 }

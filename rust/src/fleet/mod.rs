@@ -34,13 +34,16 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::data::DataStore;
+use crate::env::core::ScenarioTables;
 use crate::env::vector::{VectorEnv, MIN_LANES_PER_SHARD, PAR_MIN_BATCH};
 use crate::runtime::pool::WorkerPool;
 
-pub use catalog::{expand, FleetSpec, ScenarioSpec, StationLayout, TableCache};
+pub use catalog::{
+    expand, FleetSpec, GridShape, HeadSpec, ScenarioSpec, StationLayout, TableCache,
+};
 pub use rollout::{
     family_policy_seed, measure_fleet_throughput, CellEval, FamilyStats, FleetBenchPolicy,
-    FleetPpoTrainer,
+    FleetPolicy, FleetPpoTrainer,
 };
 
 /// N heterogeneous station environments scheduled on one worker pool.
@@ -58,6 +61,11 @@ pub struct Fleet {
     /// exceeds the rollout pool's width (see `VectorEnv::shared_pool` for
     /// why the rollout pool must not be grown past its shard demand).
     aux_pool: Option<Arc<WorkerPool>>,
+    /// Per-env held-out scenario cells (`holdout` schema key): name +
+    /// tables pairs, excluded from every training lane, evaluated
+    /// zero-shot by per-cell eval. Empty for hand-built fleets and specs
+    /// without a `holdout` key.
+    holdout: Vec<Vec<(String, Arc<ScenarioTables>)>>,
 }
 
 impl Fleet {
@@ -95,6 +103,7 @@ impl Fleet {
                 );
             }
         }
+        let holdout = vec![Vec::new(); envs.len()];
         Ok(Fleet {
             envs,
             labels,
@@ -102,6 +111,7 @@ impl Fleet {
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             pool: None,
             aux_pool: None,
+            holdout,
         })
     }
 
@@ -113,6 +123,7 @@ impl Fleet {
         let mut envs = Vec::with_capacity(families.len());
         let mut labels = Vec::with_capacity(families.len());
         let mut cell_labels = Vec::with_capacity(families.len());
+        let mut holdout = Vec::with_capacity(families.len());
         for fam in families {
             envs.push(VectorEnv::with_seeds(
                 fam.cfg,
@@ -122,8 +133,13 @@ impl Fleet {
             ));
             labels.push(fam.label);
             cell_labels.push(fam.cell_names);
+            holdout.push(
+                fam.holdout_names.into_iter().zip(fam.holdout_tables).collect(),
+            );
         }
-        Fleet::from_envs_with_cells(envs, labels, cell_labels)
+        let mut fleet = Fleet::from_envs_with_cells(envs, labels, cell_labels)?;
+        fleet.holdout = holdout;
+        Ok(fleet)
     }
 
     pub fn n_envs(&self) -> usize {
@@ -142,6 +158,31 @@ impl Fleet {
     /// `shopping/NL/2021/medium`, or `cell0` for hand-built fleets).
     pub fn cell_label(&self, e: usize, cell: usize) -> &str {
         &self.cell_labels[e][cell]
+    }
+
+    /// Held-out scenario cells of family `e` (name, tables) — cells the
+    /// `holdout` schema key carved out of training, kept for zero-shot
+    /// per-cell eval.
+    pub fn holdout_cells(&self, e: usize) -> &[(String, Arc<ScenarioTables>)] {
+        &self.holdout[e]
+    }
+
+    /// Policy input/output shape of the whole fleet: padded obs width plus
+    /// one head spec per family, in env order (the generalist's
+    /// constructor spec).
+    pub fn grid_shape(&self) -> GridShape {
+        let heads: Vec<HeadSpec> = self
+            .envs
+            .iter()
+            .zip(&self.labels)
+            .map(|(env, label)| HeadSpec {
+                label: label.clone(),
+                obs_dim: env.obs_dim(),
+                action_nvec: env.action_nvec(),
+            })
+            .collect();
+        let pad_obs = heads.iter().map(|h| h.obs_dim).max().unwrap_or(0);
+        GridShape { pad_obs, heads }
     }
 
     pub fn total_lanes(&self) -> usize {

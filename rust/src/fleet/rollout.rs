@@ -18,6 +18,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::baselines::generalist::{update_generalist_sharded, GeneralistLearner, PolicyRef};
 use crate::baselines::mlp::MlpScratch;
 use crate::baselines::ppo::{
     update_shard_demand, update_sharded_many, Learner, PpoParams, UpdateBatch,
@@ -141,10 +142,32 @@ impl Fleet {
         policy_seed: u64,
         greedy: bool,
     ) {
+        let policies: Vec<PolicyRef<'_>> =
+            learners.iter().map(PolicyRef::PerFamily).collect();
+        self.rollout_fused_with(n_steps, bufs, pols, &policies, policy_seed, greedy);
+    }
+
+    /// [`Fleet::rollout_fused`] generalized over the policy source:
+    /// `policies[e]` is family `e`'s view of whatever drives the fleet — a
+    /// per-family [`Learner`] or the shared-trunk generalist (one
+    /// [`GeneralistLearner`] viewed per family via
+    /// [`PolicyRef::Generalist`], so ONE set of trunk weights serves every
+    /// family's shard blocks in the same fused dispatch). Seeding, shard
+    /// planning, and the bitwise thread-count contract are identical to
+    /// the per-family path.
+    pub fn rollout_fused_with(
+        &mut self,
+        n_steps: usize,
+        bufs: &mut [RolloutBuffers<'_>],
+        pols: &mut [PolicyRollout<'_>],
+        policies: &[PolicyRef<'_>],
+        policy_seed: u64,
+        greedy: bool,
+    ) {
         let n = self.n_envs();
         assert_eq!(bufs.len(), n, "need one RolloutBuffers per fleet env");
         assert_eq!(pols.len(), n, "need one PolicyRollout per fleet env");
-        assert_eq!(learners.len(), n, "need one Learner per fleet env");
+        assert_eq!(policies.len(), n, "need one policy view per fleet env");
         let dims: Vec<(usize, usize, usize)> = (0..n)
             .map(|e| {
                 let env = self.env(e);
@@ -161,8 +184,8 @@ impl Fleet {
             assert_eq!(pol.actions.len(), n_steps * b * p, "env {e}: actions must be [T*B*P]");
             assert_eq!(pol.logp.len(), n_steps * b, "env {e}: logp must be [T*B]");
             assert_eq!(pol.values.len(), n_steps * b, "env {e}: values must be [T*B]");
-            assert_eq!(learners[e].obs_dim, d, "env {e}: learner obs_dim mismatch");
-            assert_eq!(learners[e].n_ports(), p, "env {e}: learner n_ports mismatch");
+            assert_eq!(policies[e].obs_dim(), d, "env {e}: policy obs_dim mismatch");
+            assert_eq!(policies[e].n_ports(), p, "env {e}: policy n_ports mismatch");
         }
         let plan = self.plan_shards();
         let total: usize = plan.iter().sum();
@@ -175,7 +198,7 @@ impl Fleet {
         // once and reused every step.
         let mut scratch: Vec<Vec<MlpScratch>> = plan
             .iter()
-            .zip(learners)
+            .zip(policies)
             .map(|(&s, l)| (0..s.max(1)).map(|_| l.make_scratch()).collect())
             .collect();
 
@@ -196,7 +219,7 @@ impl Fleet {
                 let (b, p, d) = dims[env_idx];
                 let (obs_t, obs_rest) = buf.obs[t * b * d..].split_at_mut(b * d);
                 let fused = FusedStep {
-                    learner: &learners[env_idx],
+                    learner: policies[env_idx],
                     seed: family_policy_seed(policy_seed, env_idx),
                     t,
                     greedy,
@@ -282,13 +305,68 @@ pub struct FamilyStats {
     pub completed_return_mean: f32,
 }
 
-/// PPO over a fleet: one [`Learner`] per station family (families have
-/// different obs/action dims, so weights cannot be shared), all families
-/// rolled out in one fused [`Fleet::rollout`] pass per iteration.
+/// What drives a fleet: one isolated [`Learner`] per station family (the
+/// original oracle path, `--policy per-family`), or ONE shared-trunk
+/// [`GeneralistLearner`] whose trunk serves every family and whose
+/// per-family heads decode each family's action space
+/// (`--policy generalist`).
+pub enum FleetPolicy {
+    PerFamily(Vec<Learner>),
+    Generalist(GeneralistLearner),
+}
+
+impl FleetPolicy {
+    /// Family `e`'s read-only policy view — what the fused rollout and
+    /// greedy eval dispatch through.
+    pub fn family(&self, e: usize) -> PolicyRef<'_> {
+        match self {
+            FleetPolicy::PerFamily(ls) => PolicyRef::PerFamily(&ls[e]),
+            FleetPolicy::Generalist(g) => PolicyRef::Generalist(g, e),
+        }
+    }
+
+    /// Every parameter of every net, flattened in a deterministic order —
+    /// what the thread-count-invariance tests compare bitwise.
+    pub fn params_flat(&self) -> Vec<f32> {
+        match self {
+            FleetPolicy::PerFamily(ls) => ls
+                .iter()
+                .flat_map(|l| {
+                    l.mlp.params().into_iter().flat_map(|p| p.iter().copied()).collect::<Vec<_>>()
+                })
+                .collect(),
+            FleetPolicy::Generalist(g) => {
+                g.params().into_iter().flat_map(|p| p.iter().copied()).collect()
+            }
+        }
+    }
+
+    /// The per-family learners, when this is the per-family path (tests
+    /// and the oracle comparisons use this; the generalist has no
+    /// per-family nets to hand out).
+    pub fn per_family(&self) -> Option<&[Learner]> {
+        match self {
+            FleetPolicy::PerFamily(ls) => Some(ls),
+            FleetPolicy::Generalist(_) => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FleetPolicy::PerFamily(_) => "per-family",
+            FleetPolicy::Generalist(_) => "generalist",
+        }
+    }
+}
+
+/// PPO over a fleet: a [`FleetPolicy`] (per-family learners or one
+/// shared-trunk generalist) rolled out over all families in one fused
+/// [`Fleet::rollout_fused_with`] pass per iteration, then updated through
+/// one pooled sharded update.
 pub struct FleetPpoTrainer {
     pub hp: PpoParams,
     pub fleet: Fleet,
-    pub learners: Vec<Learner>,
+    pub policy: FleetPolicy,
     pub rng: Rng,
     pub env_steps: usize,
     /// Per-family, per-lane running episode returns (same accounting as
@@ -320,7 +398,39 @@ impl FleetPpoTrainer {
             (0..fleet.n_envs()).map(|e| vec![0.0; fleet.env(e).batch()]).collect();
         // Drawn AFTER the learners so their init matches older builds.
         let eval_seed = rng.next_u64();
-        FleetPpoTrainer { hp, fleet, learners, rng, env_steps: 0, running_return, eval_seed }
+        FleetPpoTrainer {
+            hp,
+            fleet,
+            policy: FleetPolicy::PerFamily(learners),
+            rng,
+            env_steps: 0,
+            running_return,
+            eval_seed,
+        }
+    }
+
+    /// Trainer with ONE shared-trunk generalist across the whole scenario
+    /// grid (`--policy generalist`): trunk input is the fleet's
+    /// [`GridShape`](crate::fleet::GridShape) — obs padded to the
+    /// grid-wide max dim plus a family one-hot — with per-family action
+    /// heads and a shared value head.
+    pub fn new_generalist(hp: PpoParams, fleet: Fleet, seed: u64) -> FleetPpoTrainer {
+        let mut rng = Rng::new(seed);
+        let shape = fleet.grid_shape();
+        let gen =
+            GeneralistLearner::new(&mut rng, shape.pad_obs, hp.hidden, &shape.learner_specs());
+        let running_return =
+            (0..fleet.n_envs()).map(|e| vec![0.0; fleet.env(e).batch()]).collect();
+        let eval_seed = rng.next_u64();
+        FleetPpoTrainer {
+            hp,
+            fleet,
+            policy: FleetPolicy::Generalist(gen),
+            rng,
+            env_steps: 0,
+            running_return,
+            eval_seed,
+        }
     }
 
     /// Env steps consumed by one `iteration` (all families).
@@ -358,7 +468,9 @@ impl FleetPpoTrainer {
             // Fused-policy pass: every family's forward+step shard tasks
             // go out in one pooled dispatch per step; a fresh
             // per-iteration seed keys the per-(lane, t) counter streams.
-            let FleetPpoTrainer { fleet, learners, rng, .. } = self;
+            // Under the generalist, every family's view shares one set of
+            // trunk weights — still a single dispatch per step.
+            let FleetPpoTrainer { fleet, policy, rng, .. } = self;
             let policy_seed = rng.next_u64();
             let mut bufs: Vec<RolloutBuffers<'_>> =
                 eb.iter_mut().map(EnvBufs::as_rollout_buffers).collect();
@@ -370,8 +482,8 @@ impl FleetPpoTrainer {
                     values: &mut p.val,
                 })
                 .collect();
-            let ls = learners.as_slice();
-            fleet.rollout_fused(t_len, &mut bufs, &mut pols, ls, policy_seed, false);
+            let views: Vec<PolicyRef<'_>> = (0..n).map(|e| policy.family(e)).collect();
+            fleet.rollout_fused_with(t_len, &mut bufs, &mut pols, &views, policy_seed, false);
         }
         self.env_steps += self.fleet.total_lanes() * t_len;
 
@@ -400,7 +512,10 @@ impl FleetPpoTrainer {
         // single pooled dispatch (strided over at most `--threads`
         // lanes), so the pool never idles between families the way
         // serial per-family updates left it. Bit-identical to those
-        // serial updates for any thread count.
+        // serial updates for any thread count. The generalist goes one
+        // further — its round's chunks from ALL families reduce through
+        // one fixed-order pairwise tree into a single Adam step on the
+        // shared trunk.
         let width: usize = dims
             .iter()
             .map(|&(b, _, _)| update_shard_demand(b * t_len, self.hp.n_minibatches))
@@ -419,8 +534,15 @@ impl FleetPpoTrainer {
             })
             .collect();
         let upd = {
-            let FleetPpoTrainer { hp, learners, rng, .. } = &mut *self;
-            update_sharded_many(learners, hp, rng, pool.as_deref(), &batches)
+            let FleetPpoTrainer { hp, policy, rng, .. } = &mut *self;
+            match policy {
+                FleetPolicy::PerFamily(learners) => {
+                    update_sharded_many(learners, hp, rng, pool.as_deref(), &batches)
+                }
+                FleetPolicy::Generalist(gen) => {
+                    update_generalist_sharded(gen, hp, rng, pool.as_deref(), &batches)
+                }
+            }
         };
 
         let mut out = Vec::with_capacity(n);
@@ -451,40 +573,63 @@ impl FleetPpoTrainer {
 
     /// Greedy eval of family `e` on EVERY distinct scenario cell its lanes
     /// train on — one fresh B=1 scalar env per cell (Arc-shared tables),
-    /// one full episode each. Replaces the old lane-0-only eval, which
-    /// always scored the single cell lane 0 happened to draw and so hid
-    /// distribution shift across the rest of the grid. Each entry names
-    /// the cell it came from and how many training lanes run it.
+    /// one full episode each — PLUS every `holdout` cell of the family,
+    /// evaluated zero-shot (the planner guarantees no training lane ever
+    /// saw one). Each entry names the cell it came from, how many training
+    /// lanes run it (0 and `holdout == true` for held-out cells), and how
+    /// many eval episodes its reward/profit totals cover, so trained and
+    /// held-out cells are comparable on the paper's profit metric.
     pub fn eval_cells(&self, e: usize, seed: u64) -> Vec<CellEval> {
         let fam = self.fleet.env(e);
-        let learner = &self.learners[e];
+        let pol = self.policy.family(e);
         let counts = fam.scenario_lane_counts();
-        let mut scratch = learner.make_scratch();
-        let mut obs = vec![0f32; learner.obs_dim];
-        let mut action = vec![0usize; learner.n_ports()];
-        let mut out = Vec::with_capacity(fam.n_scenarios());
-        for cell in 0..fam.n_scenarios() {
+        let mut scratch = pol.make_scratch();
+        let mut obs = vec![0f32; pol.obs_dim()];
+        let mut action = vec![0usize; pol.n_ports()];
+        let holdout = self.fleet.holdout_cells(e);
+        let mut out = Vec::with_capacity(fam.n_scenarios() + holdout.len());
+        let mut run_cell = |cell: usize, tables, name: String, lanes: usize, held: bool| {
             // Decorrelate cells without losing seed-level reproducibility.
             let env_seed = seed ^ ((cell as u64) << 32);
-            let mut env = ScalarEnv::new(fam.cfg.clone(), fam.scenario_tables(cell), env_seed);
+            let mut env = ScalarEnv::new(fam.cfg.clone(), tables, env_seed);
             let mut tot_r = 0f32;
             let mut tot_p = 0f32;
+            let mut episodes = 0usize;
             for _ in 0..STEPS_PER_EPISODE {
                 env.observe(&mut obs);
-                learner.greedy_lane(&obs, &mut action, &mut scratch);
+                pol.greedy_lane(&obs, &mut action, &mut scratch);
                 let info = env.step(&action);
                 tot_r += info.reward;
                 tot_p += info.profit;
+                if info.done {
+                    episodes += 1;
+                }
             }
             out.push(CellEval {
                 family: self.fleet.label(e).to_string(),
                 family_idx: e,
-                cell: self.fleet.cell_label(e, cell).to_string(),
+                cell: name,
                 cell_idx: cell,
-                lanes: counts[cell],
+                lanes,
+                holdout: held,
+                episodes,
                 reward: tot_r,
                 profit: tot_p,
             });
+        };
+        for cell in 0..fam.n_scenarios() {
+            run_cell(
+                cell,
+                fam.scenario_tables(cell),
+                self.fleet.cell_label(e, cell).to_string(),
+                counts[cell],
+                false,
+            );
+        }
+        // Held-out cells continue the cell index space after the trained
+        // cells, so their eval seeds never collide with a trained cell's.
+        for (i, (name, tables)) in holdout.iter().enumerate() {
+            run_cell(fam.n_scenarios() + i, std::sync::Arc::clone(tables), name.clone(), 0, true);
         }
         out
     }
@@ -517,7 +662,9 @@ impl FleetPpoTrainer {
 
 /// One greedy-eval number with its provenance: which station family and
 /// which scenario cell (country × year × traffic × profile) produced it,
-/// plus how many training lanes run that cell.
+/// how many training lanes run that cell (`0` for held-out cells, which
+/// also carry `holdout == true`), and how many completed eval episodes
+/// the reward/profit totals cover.
 #[derive(Debug, Clone)]
 pub struct CellEval {
     pub family: String,
@@ -525,6 +672,12 @@ pub struct CellEval {
     pub cell: String,
     pub cell_idx: usize,
     pub lanes: usize,
+    /// True when this cell was carved out of training by the `holdout`
+    /// schema key — its numbers are zero-shot.
+    pub holdout: bool,
+    /// Completed episodes behind `reward`/`profit` (counted from env
+    /// dones, so the totals are honestly per-`episodes`, not per-step).
+    pub episodes: usize,
     pub reward: f32,
     pub profit: f32,
 }
@@ -541,6 +694,10 @@ pub enum FleetBenchPolicy {
     /// The same MLPs forwarded + sampled inside the shard tasks
     /// ([`Fleet::rollout_fused`], the default training path).
     FusedNet,
+    /// ONE shared-trunk generalist serving every family inside the shard
+    /// tasks ([`Fleet::rollout_fused_with`] over
+    /// [`PolicyRef::Generalist`] views — padded rows, per-family heads).
+    GeneralistNet,
 }
 
 impl FleetBenchPolicy {
@@ -549,6 +706,7 @@ impl FleetBenchPolicy {
             FleetBenchPolicy::Random => "fleet-rollout",
             FleetBenchPolicy::SerialNet => "fleet-policy-serial",
             FleetBenchPolicy::FusedNet => "fleet-policy-fused",
+            FleetBenchPolicy::GeneralistNet => "fleet-generalist",
         }
     }
 }
@@ -597,15 +755,29 @@ pub fn measure_fleet_throughput(
     } else {
         Vec::new()
     };
-    let learners: Vec<Learner> = if policy == FleetBenchPolicy::Random {
-        Vec::new()
-    } else {
+    let learners: Vec<Learner> = if matches!(
+        policy,
+        FleetBenchPolicy::SerialNet | FleetBenchPolicy::FusedNet
+    ) {
         (0..n)
             .map(|e| {
                 let env = fleet.env(e);
                 Learner::new(&mut arng, env.obs_dim(), BENCH_POLICY_HIDDEN, env.action_nvec())
             })
             .collect()
+    } else {
+        Vec::new()
+    };
+    let gen: Option<GeneralistLearner> = if policy == FleetBenchPolicy::GeneralistNet {
+        let shape = fleet.grid_shape();
+        Some(GeneralistLearner::new(
+            &mut arng,
+            shape.pad_obs,
+            BENCH_POLICY_HIDDEN,
+            &shape.learner_specs(),
+        ))
+    } else {
+        None
     };
     struct PolBufs {
         act: Vec<usize>,
@@ -667,6 +839,22 @@ pub fn measure_fleet_throughput(
                         t_chunk, &mut bufs, &mut pols, &learners, chunk as u64, false,
                     );
                 }
+                FleetBenchPolicy::GeneralistNet => {
+                    let g = gen.as_ref().expect("generalist net built for this policy");
+                    let mut pols: Vec<PolicyRollout<'_>> = pb
+                        .iter_mut()
+                        .map(|p| PolicyRollout {
+                            actions: &mut p.act,
+                            logp: &mut p.logp,
+                            values: &mut p.val,
+                        })
+                        .collect();
+                    let views: Vec<PolicyRef<'_>> =
+                        (0..n).map(|e| PolicyRef::Generalist(g, e)).collect();
+                    fleet.rollout_fused_with(
+                        t_chunk, &mut bufs, &mut pols, &views, chunk as u64, false,
+                    );
+                }
             }
         }
     };
@@ -726,14 +914,66 @@ mod tests {
 
     #[test]
     fn fleet_throughput_probe_runs() {
-        for policy in
-            [FleetBenchPolicy::Random, FleetBenchPolicy::SerialNet, FleetBenchPolicy::FusedNet]
-        {
+        for policy in [
+            FleetBenchPolicy::Random,
+            FleetBenchPolicy::SerialNet,
+            FleetBenchPolicy::FusedNet,
+            FleetBenchPolicy::GeneralistNet,
+        ] {
             let (sps, s100k, lanes, fams) =
                 measure_fleet_throughput(&FleetSpec::demo(2, 1), None, 2, 2_000, policy).unwrap();
             assert!(sps > 0.0 && s100k > 0.0, "{}", policy.label());
             assert_eq!(lanes, 20);
             assert_eq!(fams, 3);
+        }
+    }
+
+    /// The generalist path: one shared-trunk policy trains across all
+    /// three heterogeneous demo families in a single fused dispatch per
+    /// step, and a holdout cell shows up in eval as a zero-shot row
+    /// (lanes == 0) while never entering training.
+    #[test]
+    fn generalist_iteration_trains_and_reports_holdout() {
+        let mut spec = FleetSpec::demo(9, 1);
+        spec.holdout = vec!["shopping/NL/2022/high".into()];
+        let fleet = Fleet::from_spec(&spec, None).unwrap();
+        let lanes = fleet.total_lanes();
+        let hp = PpoParams {
+            rollout_steps: 24,
+            n_minibatches: 2,
+            update_epochs: 2,
+            hidden: 32,
+            ..Default::default()
+        };
+        let mut tr = FleetPpoTrainer::new_generalist(hp, fleet, 5);
+        assert_eq!(tr.policy.label(), "generalist");
+        let before = tr.policy.params_flat();
+        let stats = tr.iteration();
+        assert_eq!(stats.len(), 3);
+        for s in &stats {
+            assert!(s.mean_reward.is_finite(), "{}: reward", s.label);
+            assert!(s.total_loss.is_finite(), "{}: loss", s.label);
+            assert!(s.entropy > 0.0, "{}: entropy", s.label);
+        }
+        assert_eq!(tr.env_steps, lanes * 24);
+        let after = tr.policy.params_flat();
+        assert_eq!(before.len(), after.len());
+        assert!(
+            before.iter().zip(&after).any(|(a, b)| a != b),
+            "update did not move the generalist's weights"
+        );
+        // Eval: the held-out cell reports zero-shot (family 0 holds it).
+        let evals = tr.eval_all_cells(123);
+        let held: Vec<_> = evals.iter().filter(|c| c.holdout).collect();
+        assert_eq!(held.len(), 1);
+        assert_eq!(held[0].cell, "shopping/NL/2022/high");
+        assert_eq!(held[0].lanes, 0);
+        assert!(held[0].reward.is_finite() && held[0].profit.is_finite());
+        assert_eq!(held[0].episodes, 1, "one full greedy episode per cell");
+        for c in evals.iter().filter(|c| !c.holdout) {
+            assert!(c.lanes > 0, "{}: trained cell {} has no lanes", c.family, c.cell);
+            assert_ne!(c.cell, "shopping/NL/2022/high", "holdout leaked into training cells");
+            assert_eq!(c.episodes, 1);
         }
     }
 }

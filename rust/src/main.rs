@@ -45,7 +45,7 @@ fn run() -> Result<()> {
     let cfg = RunConfig::load(config_path.as_deref(), &cfg_overrides)?;
 
     match cmd.as_str() {
-        "train" => cmd_train(&cfg),
+        "train" => cmd_train(&cfg, &overrides),
         "eval" => cmd_eval(&cfg, &overrides),
         "bench" => {
             let id = args
@@ -88,9 +88,20 @@ fn parse_flags(args: &[String]) -> Result<(Option<String>, Vec<(String, String)>
     Ok((config, overrides))
 }
 
-fn cmd_train(cfg: &RunConfig) -> Result<()> {
+fn cmd_train(cfg: &RunConfig, overrides: &[(String, String)]) -> Result<()> {
+    // Train-side `--policy` picks the fleet's policy architecture
+    // (per-family oracle vs shared-trunk generalist); it is meaningless
+    // outside `--fleet`, so reject it there instead of ignoring it.
+    let policy = overrides
+        .iter()
+        .find(|(k, _)| k == "policy")
+        .map(|(_, v)| v.as_str())
+        .unwrap_or("per-family");
+    if cfg.fleet_spec.is_none() && policy != "per-family" {
+        bail!("--policy {policy} only applies to --fleet training");
+    }
     if cfg.backend == "native" {
-        return cmd_train_native(cfg);
+        return cmd_train_native(cfg, policy);
     }
     if cfg.fleet_spec.is_some() {
         bail!("--fleet requires the native backend (add --backend native)");
@@ -142,12 +153,12 @@ fn cmd_train(cfg: &RunConfig) -> Result<()> {
 /// `chargax train --backend native`: pure-Rust VectorEnv PPO. Needs no
 /// AOT artifacts or PJRT runtime; falls back to synthetic scenario tables
 /// when `artifacts/data` has not been exported.
-fn cmd_train_native(cfg: &RunConfig) -> Result<()> {
+fn cmd_train_native(cfg: &RunConfig, policy: &str) -> Result<()> {
     use chargax::baselines::ppo::PpoParams;
     use chargax::env::tree::StationConfig;
 
     if let Some(spec) = &cfg.fleet_spec {
-        return cmd_train_fleet(cfg, spec);
+        return cmd_train_fleet(cfg, spec, policy);
     }
     // Before the first pool spawns: workers read the flag at spawn time.
     chargax::runtime::pool::set_pin_cores(cfg.pin_cores);
@@ -208,9 +219,12 @@ fn cmd_train_native(cfg: &RunConfig) -> Result<()> {
 
 /// `chargax train --backend native --fleet <spec.json | demo>`: expand the
 /// scenario grid into station families, drive every family's `VectorEnv`
-/// on one worker pool via the fused fleet rollout, and train one PPO
-/// policy per family in a single pass per iteration.
-fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str) -> Result<()> {
+/// on one worker pool via the fused fleet rollout, and train either one
+/// PPO policy per family (`--policy per-family`, default) or one
+/// shared-trunk generalist across the whole grid (`--policy generalist`)
+/// in a single pass per iteration. Cells named by the spec's `holdout`
+/// key never train and show up in the eval rows as zero-shot.
+fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str, policy: &str) -> Result<()> {
     use chargax::baselines::ppo::PpoParams;
     use chargax::fleet::{Fleet, FleetPpoTrainer, FleetSpec};
 
@@ -245,7 +259,12 @@ fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str) -> Result<()> {
         );
     }
     let hp = PpoParams { threads: cfg.num_threads, ..Default::default() };
-    let mut tr = FleetPpoTrainer::new(hp, fleet, cfg.seed as u64);
+    let mut tr = match policy {
+        "per-family" => FleetPpoTrainer::new(hp, fleet, cfg.seed as u64),
+        "generalist" => FleetPpoTrainer::new_generalist(hp, fleet, cfg.seed as u64),
+        other => bail!("unknown --policy '{other}' (expected per-family | generalist)"),
+    };
+    eprintln!("  policy architecture: {}", tr.policy.label());
     let batch = tr.steps_per_iteration();
     let iters = cfg.total_env_steps.div_ceil(batch).max(1);
     let t0 = std::time::Instant::now();
@@ -292,14 +311,17 @@ fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str) -> Result<()> {
         for ci in 0..per_seed[0].len() {
             let r = per_seed.iter().map(|v| v[ci].reward).sum::<f32>() / n;
             let p = per_seed.iter().map(|v| v[ci].profit).sum::<f32>() / n;
+            let eps: usize = per_seed.iter().map(|v| v[ci].episodes).sum();
             println!(
-                "eval (greedy, {} seeds) {:<24} cell {:<28} lanes={:<3} ep_reward={:.3} ep_profit={:.3}",
+                "eval (greedy, {} seeds) {:<24} cell {:<28} lanes={:<3} eps={:<3} ep_reward={:.3} ep_profit={:.3}{}",
                 per_seed.len(),
                 tr.fleet.label(e),
                 per_seed[0][ci].cell,
                 per_seed[0][ci].lanes,
+                eps,
                 r,
-                p
+                p,
+                if per_seed[0][ci].holdout { "  [holdout: zero-shot]" } else { "" },
             );
         }
     }
@@ -411,6 +433,11 @@ KEYS: variant backend num_envs threads pin_cores scenario region country
   --pin_cores true pins pool workers to cores (Linux only, no-op
   elsewhere; placement-only, results identical); see README §Kernel layer.
   --fleet takes a scenario-grid JSON (README §Scenario fleets & V2G) or
-  the literal `demo` for the built-in three-family fleet."
+  the literal `demo` for the built-in three-family fleet.
+  --policy per-family|generalist picks the fleet policy architecture:
+  one PPO learner per station family (default) or one shared-trunk
+  generalist across the whole grid (README §Generalist policy). Cells
+  under the spec's `holdout` key never train and are evaluated
+  zero-shot."
     );
 }

@@ -417,12 +417,7 @@ fn fleet_training_iteration_is_thread_count_invariant_including_update() {
                 stats.push((s.total_loss, s.entropy));
             }
         }
-        let weights = tr
-            .learners
-            .iter()
-            .flat_map(|l| l.mlp.params().into_iter().cloned().collect::<Vec<_>>())
-            .collect();
-        (weights, stats)
+        (vec![tr.policy.params_flat()], stats)
     };
     let max_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let (w1, s1) = run(1);
@@ -479,10 +474,11 @@ fn fleet_eval_is_reproducible_within_an_iteration() {
     let mut silent = mk();
     silent.iteration();
     silent.iteration();
-    for (le, ls) in tr.learners.iter().zip(&silent.learners) {
-        assert_eq!(le.mlp.w1, ls.mlp.w1, "evals perturbed training");
-        assert_eq!(le.mlp.wpi, ls.mlp.wpi, "evals perturbed training");
-    }
+    assert_eq!(
+        tr.policy.params_flat(),
+        silent.policy.params_flat(),
+        "evals perturbed training"
+    );
     // Explicit-seed evals remain pure functions of their seed.
     let e1 = tr.eval_cells(0, 123);
     let e2 = tr.eval_cells(0, 123);

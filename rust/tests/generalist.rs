@@ -1,0 +1,149 @@
+//! Generalist shared-trunk policy: end-to-end determinism + holdout
+//! carve-out (ISSUE 7).
+//!
+//! Headline properties:
+//! * A full generalist training iteration — fused rollout through the
+//!   shared trunk AND the pooled cross-family `update_generalist_sharded`
+//!   — produces bit-identical weights at `--threads` 1, 4, and max.
+//! * Scenario cells named by the spec's `holdout` key never appear in any
+//!   training lane of the expanded plan, yet survive as named zero-shot
+//!   eval cells.
+
+use chargax::baselines::ppo::PpoParams;
+use chargax::fleet::{expand, Fleet, FleetPpoTrainer, FleetSpec};
+
+/// The built-in demo grid with one of the mixed family's four cells held
+/// out for zero-shot eval.
+fn demo_with_holdout(seed: u64) -> FleetSpec {
+    let mut spec = FleetSpec::demo(seed, 1);
+    spec.holdout = vec!["shopping/NL/2022/high".to_string()];
+    spec
+}
+
+/// ISSUE 7 tentpole gate: two generalist iterations (so Adam state and
+/// the second rollout's updated trunk are covered) over a fleet WITH a
+/// holdout cell are bit-identical at `--threads` 1, 4, and max — the
+/// cross-family gradient accumulation reduces through one fixed-order
+/// tree, so pool width must be invisible in the weights and the
+/// per-family stats.
+#[test]
+fn generalist_training_iteration_is_thread_count_invariant() {
+    let run = |threads: usize| -> (Vec<f32>, Vec<(f32, f32)>) {
+        let mut fleet = Fleet::from_spec(&demo_with_holdout(9), None).unwrap();
+        fleet.set_threads(threads);
+        let hp = PpoParams {
+            rollout_steps: 24,
+            n_minibatches: 2,
+            update_epochs: 2,
+            hidden: 16,
+            threads,
+            ..Default::default()
+        };
+        let mut tr = FleetPpoTrainer::new_generalist(hp, fleet, 5);
+        assert_eq!(tr.policy.label(), "generalist");
+        let mut stats = Vec::new();
+        for _ in 0..2 {
+            for s in tr.iteration() {
+                stats.push((s.total_loss, s.entropy));
+            }
+        }
+        (tr.policy.params_flat(), stats)
+    };
+    let max_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let (w1, s1) = run(1);
+    let (w4, s4) = run(4);
+    let (wm, sm) = run(max_threads);
+    assert_eq!(s1, s4, "threads 1 vs 4: per-family stats drifted");
+    assert_eq!(s1, sm, "threads 1 vs max: per-family stats drifted");
+    assert_eq!(w1.len(), w4.len());
+    for (k, (a, b)) in w1.iter().zip(&w4).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "threads 1 vs 4: weight {k} not bit-identical");
+    }
+    for (k, (a, b)) in w1.iter().zip(&wm).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "threads 1 vs max: weight {k} not bit-identical");
+    }
+}
+
+/// Holdout cells are carved out of the EXPANDED LANE PLAN itself — not
+/// merely skipped at rollout time: no training lane of any family maps to
+/// a held cell, the held cell is absent from the trainable cell list, and
+/// every family keeps its configured lane count (remaining cells absorb
+/// the held cell's lanes).
+#[test]
+fn holdout_cells_never_enter_training_lanes() {
+    let held = "shopping/NL/2022/high";
+    let spec = demo_with_holdout(9);
+    let plans = expand(&spec, None).unwrap();
+    let baseline = expand(&FleetSpec::demo(9, 1), None).unwrap();
+    assert_eq!(plans.len(), baseline.len());
+    let mut held_seen = 0usize;
+    for (fam, base) in plans.iter().zip(&baseline) {
+        // Lane counts are preserved: the carve-out redistributes lanes,
+        // it never shrinks the family.
+        assert_eq!(fam.lane_scenario.len(), base.lane_scenario.len(), "{}", fam.label);
+        assert_eq!(fam.seeds.len(), base.seeds.len(), "{}", fam.label);
+        // The held cell is not a trainable cell...
+        assert!(
+            !fam.cell_names.iter().any(|n| n == held),
+            "{}: held cell still in trainable cell list",
+            fam.label
+        );
+        // ...and every lane points at a real trainable cell.
+        for (lane, &cell) in fam.lane_scenario.iter().enumerate() {
+            assert!(
+                cell < fam.cell_names.len(),
+                "{} lane {lane}: scenario index {cell} out of range",
+                fam.label
+            );
+        }
+        held_seen += fam.holdout_names.iter().filter(|n| n.as_str() == held).count();
+        assert_eq!(fam.holdout_names.len(), fam.holdout_tables.len(), "{}", fam.label);
+    }
+    assert_eq!(held_seen, 1, "held cell must survive as exactly one zero-shot eval cell");
+
+    // The same invariant via the built fleet: the holdout cell is
+    // reported for eval but owns zero lanes and no cell label.
+    let fleet = Fleet::from_spec(&spec, None).unwrap();
+    let mut found = false;
+    for e in 0..fleet.n_envs() {
+        for cell in 0..fleet.env(e).n_scenarios() {
+            assert_ne!(fleet.cell_label(e, cell), held, "family {e} trains the held cell");
+        }
+        for (name, _tables) in fleet.holdout_cells(e) {
+            assert_eq!(name, held);
+            found = true;
+        }
+    }
+    assert!(found, "held cell missing from the fleet's holdout set");
+}
+
+/// Zero-shot reporting end to end: after a (tiny) generalist training
+/// run, per-cell eval emits exactly one extra row for the held cell,
+/// marked `holdout` with `lanes == 0`, alongside the trained cells.
+#[test]
+fn generalist_eval_reports_heldout_cell_zero_shot() {
+    let mut fleet = Fleet::from_spec(&demo_with_holdout(11), None).unwrap();
+    fleet.set_threads(2);
+    let hp = PpoParams {
+        rollout_steps: 12,
+        n_minibatches: 2,
+        update_epochs: 1,
+        hidden: 16,
+        ..Default::default()
+    };
+    let mut tr = FleetPpoTrainer::new_generalist(hp, fleet, 3);
+    tr.iteration();
+    let evals = tr.eval_all_cells_current();
+    let held: Vec<_> = evals.iter().filter(|c| c.holdout).collect();
+    assert_eq!(held.len(), 1, "exactly one zero-shot row");
+    let h = held[0];
+    assert_eq!(h.cell, "shopping/NL/2022/high");
+    assert_eq!(h.lanes, 0, "holdout cells own no training lanes");
+    assert!(h.episodes >= 1, "zero-shot eval must complete an episode");
+    assert!(h.reward.is_finite() && h.profit.is_finite());
+    for c in evals.iter().filter(|c| !c.holdout) {
+        assert!(c.lanes > 0, "{}/{}: trained cell without lanes", c.family, c.cell);
+        assert_ne!(c.cell, h.cell, "held cell leaked into trained rows");
+        assert!(c.episodes >= 1, "{}/{}", c.family, c.cell);
+    }
+}

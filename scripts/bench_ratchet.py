@@ -2,15 +2,18 @@
 """Perf ratchet: compare a fresh BENCH_table2.json against the committed
 BENCH_baseline.json and warn on steps/sec regressions.
 
-Five rows are gated, all at B=256 (present in the full sweep and the CI
+Six rows are gated, all at B=256 (present in the full sweep and the CI
 ``--smoke`` sweep): the ``native-vector`` pool path (raw env runtime),
 the ``policy-fused`` path (shard-parallel MLP policy + env, the default
 training rollout), the ``update-sharded`` path (the shard-parallel PPO
 minibatch update; its unit is PPO samples/sec rather than env steps/sec,
-compared like-for-like against its own baseline row), and the
-kernel-layer pair ``forward-blocked`` / ``update-blocked`` (blocked MLP
-forward, and forward + blocked backward, in MLP rows/sec — the tiled GEMM
-layer measured without env overhead). CI
+compared like-for-like against its own baseline row), the kernel-layer
+pair ``forward-blocked`` / ``update-blocked`` (blocked MLP forward, and
+forward + blocked backward, in MLP rows/sec — the tiled GEMM layer
+measured without env overhead), and the ``fleet-generalist`` row from
+BENCH_fleet.json (ONE shared-trunk policy across the demo grid's three
+station families, fused rollout at L=256; pass the fleet file via
+``--current-fleet``). CI
 runner variance is still being characterized, so a
 regression past the threshold emits a GitHub ``::warning`` annotation and
 exits 0 — flip ``--strict`` once the variance envelope is known and the
@@ -18,6 +21,7 @@ ratchet should fail the job instead.
 
 Usage:
   scripts/bench_ratchet.py [--current BENCH_table2.json]
+                           [--current-fleet BENCH_fleet.json]
                            [--baseline BENCH_baseline.json]
                            [--batch 256] [--threshold 0.20]
                            [--strict] [--update]
@@ -43,6 +47,7 @@ GATED_PREFIXES = (
     "update-sharded",
     "forward-blocked",
     "update-blocked",
+    "fleet-generalist",
 )
 
 
@@ -107,6 +112,8 @@ def compare_one(prefix: str, base_rows: list[dict], cur_rows: list[dict],
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default="BENCH_table2.json")
+    ap.add_argument("--current-fleet", default=None,
+                    help="BENCH_fleet.json to merge in (fleet-generalist row)")
     ap.add_argument("--baseline", default="BENCH_baseline.json")
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--threshold", type=float, default=0.20)
@@ -123,6 +130,17 @@ def main() -> int:
               "(did the bench job run?)")
         return 0
 
+    # The fleet sweep writes its own artifact; merge its rows so the
+    # fleet-generalist prefix is gated (and kept by --update) alongside
+    # the single-env rows. Variant prefixes are disjoint across the two
+    # files, so merging cannot shadow a table2 row.
+    if args.current_fleet:
+        try:
+            cur_rows = cur_rows + load_rows(args.current_fleet)
+        except FileNotFoundError:
+            print(f"::warning::bench ratchet: {args.current_fleet} not found "
+                  "(did the fleet sweep run?)")
+
     if args.update:
         kept = [r for r in cur_rows
                 if str(r.get("variant", "")).startswith(GATED_PREFIXES)]
@@ -132,10 +150,11 @@ def main() -> int:
         payload = {
             "note": (
                 "Perf-ratchet baseline: native-vector, policy-fused, "
-                "update-sharded, forward-blocked, and update-blocked "
-                "steps/sec rows from a trusted run of "
+                "update-sharded, forward-blocked, update-blocked, and "
+                "fleet-generalist steps/sec rows from a trusted run of "
                 "`cargo bench --bench table2_throughput -- --smoke`. "
-                "Refresh with scripts/bench_ratchet.py --update."
+                "Refresh with scripts/bench_ratchet.py --update "
+                "--current-fleet BENCH_fleet.json."
             ),
             "rows": kept,
         }
