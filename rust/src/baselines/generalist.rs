@@ -580,6 +580,7 @@ struct GenChunkTask<'a> {
 
 impl GenChunkTask<'_> {
     fn run(&mut self, s: &mut GenUpdateScratch) {
+        let _span = crate::telemetry::Span::fine(crate::telemetry::SpanKind::UpdateChunk);
         let gen = self.gen;
         let f = self.family;
         let fh = &gen.families[f];
@@ -644,6 +645,7 @@ impl GenChunkTask<'_> {
             dh2,
         );
         *self.stats = (loss_acc, ent_acc);
+        crate::telemetry::counters(|c| c.minibatch_rows += b as u64);
     }
 }
 
@@ -668,6 +670,7 @@ fn run_gen_chunk_tasks(
             });
         }
         _ => {
+            let _scope = crate::telemetry::quiet_scope();
             let (first, _) = scratch.split_first_mut().expect("at least one update scratch");
             for task in tasks {
                 task.run(first);
@@ -836,12 +839,16 @@ pub fn update_generalist_sharded(
                     }
                     stat_counts.push((f, n_chunks));
                 }
-                tree_reduce(&mut used, |a, b| a.add_from(&**b));
+                {
+                    let _span = crate::telemetry::scope(crate::telemetry::SpanKind::Reduce);
+                    tree_reduce(&mut used, |a, b| a.add_from(&**b));
+                }
                 let grads = &mut *used[0];
                 let norm = grads.global_norm();
                 if norm > hp.max_grad_norm {
                     grads.scale(hp.max_grad_norm / norm);
                 }
+                let _span = crate::telemetry::scope(crate::telemetry::SpanKind::Adam);
                 gen.apply_grads(grads, hp.lr);
             }
             // Per-family stats off each family's own chunk sub-range.

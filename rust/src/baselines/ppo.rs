@@ -170,6 +170,9 @@ impl Heads {
     /// +inf) but can never panic the comparator the way
     /// `partial_cmp().unwrap()` did.
     pub fn greedy(&self, logits: &[f32], action: &mut [usize]) {
+        if crate::telemetry::recording() && logits.iter().any(|x| !x.is_finite()) {
+            crate::telemetry::counters(|c| c.nan_guard_trips += 1);
+        }
         for (h, (&ofs, &n)) in self.offsets.iter().zip(&self.nvec).enumerate() {
             let lg = &logits[ofs..ofs + n];
             action[h] = lg
@@ -427,6 +430,7 @@ struct ChunkTask<'a> {
 
 impl ChunkTask<'_> {
     fn run(&mut self, s: &mut UpdateScratch) {
+        let _span = crate::telemetry::Span::fine(crate::telemetry::SpanKind::UpdateChunk);
         let learner = self.learner;
         let hp = self.hp;
         let d = learner.obs_dim;
@@ -481,6 +485,7 @@ impl ChunkTask<'_> {
             &mut s.bw,
         );
         *self.stats = (loss_acc, ent_acc);
+        crate::telemetry::counters(|c| c.minibatch_rows += b as u64);
     }
 }
 
@@ -506,6 +511,7 @@ fn run_chunk_tasks(
             });
         }
         _ => {
+            let _scope = crate::telemetry::quiet_scope();
             let (first, _) = scratch.split_first_mut().expect("at least one update scratch");
             for task in tasks {
                 task.run(first);
@@ -653,15 +659,21 @@ pub fn update_sharded_many(
                 }
                 let mb_len = hi - lo;
                 let n_chunks = mb_len.div_ceil(UPDATE_CHUNK_ROWS);
-                tree_reduce_grads(&mut prep.chunk_grads[..n_chunks]);
-                tree_reduce_stats(&mut prep.chunk_stats[..n_chunks]);
+                {
+                    let _span = crate::telemetry::scope(crate::telemetry::SpanKind::Reduce);
+                    tree_reduce_grads(&mut prep.chunk_grads[..n_chunks]);
+                    tree_reduce_stats(&mut prep.chunk_stats[..n_chunks]);
+                }
                 let grads = &mut prep.chunk_grads[0];
                 let norm = grads.global_norm();
                 if norm > hp.max_grad_norm {
                     grads.scale(hp.max_grad_norm / norm);
                 }
                 let Learner { mlp, adam, .. } = learner;
-                adam.update(mlp, grads, hp.lr);
+                {
+                    let _span = crate::telemetry::scope(crate::telemetry::SpanKind::Adam);
+                    adam.update(mlp, grads, hp.lr);
+                }
                 let (loss, ent) = prep.chunk_stats[0];
                 prep.loss_acc += (loss / mb_len as f32) as f64;
                 prep.ent_acc += (ent / mb_len as f32) as f64;
@@ -1006,6 +1018,7 @@ impl PpoTrainer {
         // A fresh per-iteration sampling seed keys the per-(lane, t)
         // counter streams.
         {
+            let _span = crate::telemetry::scope(crate::telemetry::SpanKind::Rollout);
             let PpoTrainer { venv, learner, rng, .. } = self;
             let policy_seed = rng.next_u64();
             let mut bufs = RolloutBuffers {
@@ -1068,6 +1081,7 @@ impl PpoTrainer {
     /// Greedy evaluation for one full episode; returns total reward/profit.
     /// Reuses the training envs' shared scenario tables (Arc) — no rebuild.
     pub fn eval_episode(&mut self, seed: u64) -> (f32, f32) {
+        let _span = crate::telemetry::scope(crate::telemetry::SpanKind::Eval);
         let mut env =
             ScalarEnv::new(self.venv.cfg.clone(), self.venv.tables_arc(0), seed);
         let mut obs = vec![0f32; self.learner.obs_dim];

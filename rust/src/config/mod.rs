@@ -35,6 +35,21 @@ pub struct RunConfig {
     /// a JSON file path (README §Scenario fleets & V2G) or the literal
     /// `demo` for the built-in three-family demo fleet.
     pub fleet_spec: Option<String>,
+    /// Enable the telemetry layer (`--telemetry true`): per-shard span
+    /// recording, typed counters, and per-iteration profiler reports.
+    /// Results are bit-identical on or off (README §Telemetry & profiling).
+    pub telemetry: bool,
+    /// Run-log format (`--log_format {text,json}`). "json" emits one
+    /// structured JSONL record per iteration on stdout and into the JSONL
+    /// sink; "text" keeps the human-readable per-iteration lines.
+    pub log_format: String,
+    /// Suppress diagnostic (stderr) output (`--quiet true`). Result
+    /// payloads on stdout are always emitted.
+    pub quiet: bool,
+    /// Write a Chrome trace-event file (load in Perfetto / chrome://tracing)
+    /// of every recorded span at exit (`--trace_out runs/trace.json`).
+    /// Implies span recording for the traced run.
+    pub trace_out: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -53,6 +68,10 @@ impl Default for RunConfig {
             paper_scale: false,
             out_path: None,
             fleet_spec: None,
+            telemetry: false,
+            log_format: "text".into(),
+            quiet: false,
+            trace_out: None,
         }
     }
 }
@@ -115,6 +134,13 @@ impl RunConfig {
             "paper_scale" => self.paper_scale = val.parse()?,
             "out" => self.out_path = Some(val.to_string()),
             "fleet" => self.fleet_spec = Some(val.to_string()),
+            "telemetry" => self.telemetry = val.parse()?,
+            "log_format" | "log-format" => match val {
+                "text" | "json" => self.log_format = val.to_string(),
+                other => return Err(anyhow!("unknown log_format '{other}' (text | json)")),
+            },
+            "quiet" => self.quiet = val.parse()?,
+            "trace_out" | "trace-out" => self.trace_out = Some(val.to_string()),
             k if k.starts_with("alpha_") => {
                 let name = &k["alpha_".len()..];
                 self.scenario = self.scenario.clone().with_alpha(name, val.parse()?)?;
@@ -156,6 +182,27 @@ mod tests {
         assert_eq!(cfg.num_threads, 4);
         assert_eq!(cfg.fleet_spec.as_deref(), Some("configs/fleet_demo.json"));
         assert!(cfg.set("backend", "tpu").is_err());
+    }
+
+    #[test]
+    fn telemetry_keys_apply() {
+        let mut cfg = RunConfig::default();
+        assert!(!cfg.telemetry, "telemetry must default off");
+        assert_eq!(cfg.log_format, "text");
+        assert!(!cfg.quiet);
+        assert!(cfg.trace_out.is_none());
+        cfg.set("telemetry", "true").unwrap();
+        cfg.set("log_format", "json").unwrap();
+        cfg.set("quiet", "true").unwrap();
+        cfg.set("trace_out", "runs/trace.json").unwrap();
+        assert!(cfg.telemetry);
+        assert_eq!(cfg.log_format, "json");
+        assert!(cfg.quiet);
+        assert_eq!(cfg.trace_out.as_deref(), Some("runs/trace.json"));
+        cfg.set("log-format", "text").unwrap();
+        assert_eq!(cfg.log_format, "text");
+        assert!(cfg.set("log_format", "yaml").is_err());
+        assert!(cfg.set("telemetry", "maybe").is_err());
     }
 
     #[test]

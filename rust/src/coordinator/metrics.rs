@@ -3,11 +3,16 @@
 //! plus simple aggregation across seeds/iterations.
 
 use anyhow::{anyhow, Result};
+use std::collections::HashMap;
 
 #[derive(Debug, Clone)]
 pub struct NamedVec {
     pub fields: Vec<String>,
     pub values: Vec<f32>,
+    /// Field-name → position, built once at construction so `get` is a
+    /// hash lookup instead of a linear scan (`fmt_fields` over long
+    /// manifests hit the O(fields²) scan every logged iteration).
+    index: HashMap<String, usize>,
 }
 
 impl NamedVec {
@@ -19,14 +24,19 @@ impl NamedVec {
                 fields.len()
             ));
         }
-        Ok(NamedVec { fields: fields.to_vec(), values })
+        let mut index = HashMap::with_capacity(fields.len());
+        for (i, f) in fields.iter().enumerate() {
+            if index.insert(f.clone(), i).is_some() {
+                return Err(anyhow!("duplicate metric field '{f}'"));
+            }
+        }
+        Ok(NamedVec { fields: fields.to_vec(), values, index })
     }
 
     pub fn get(&self, name: &str) -> Result<f32> {
-        self.fields
-            .iter()
-            .position(|f| f == name)
-            .map(|i| self.values[i])
+        self.index
+            .get(name)
+            .map(|&i| self.values[i])
             .ok_or_else(|| anyhow!("no metric '{name}' (have {:?})", self.fields))
     }
 
@@ -102,5 +112,12 @@ mod tests {
     #[test]
     fn length_mismatch_rejected() {
         assert!(NamedVec::new(&["a".to_string()], vec![1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn duplicate_fields_rejected() {
+        let fields = ["a".to_string(), "b".to_string(), "a".to_string()];
+        let err = NamedVec::new(&fields, vec![1.0, 2.0, 3.0]).unwrap_err();
+        assert!(err.to_string().contains("duplicate metric field 'a'"), "{err}");
     }
 }

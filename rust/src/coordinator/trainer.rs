@@ -92,13 +92,16 @@ pub struct NativeTrainOutcome {
 /// Train the native-vector PPO agent (the `--backend native` path): the
 /// pure-Rust PPO whose rollouts advance all envs through
 /// `VectorEnv::step_all`. Scenario tables are built (or synthesized) once
-/// and shared across every lane via `Arc`.
+/// and shared across every lane via `Arc`. `on_iter(i)` fires after each
+/// completed iteration (the CLI hangs its per-iteration telemetry drain
+/// off it; pass `|_| {}` when unused).
 pub fn train_native(
     store: Option<&DataStore>,
     scenario: &Scenario,
     station: StationConfig,
     params: PpoParams,
     opts: &TrainOptions,
+    mut on_iter: impl FnMut(usize),
 ) -> Result<NativeTrainOutcome> {
     let tables = match store {
         Some(s) => ScenarioTables::build(s, scenario)?,
@@ -148,6 +151,7 @@ pub fn train_native(
             );
         }
         history.push(m);
+        on_iter(i);
     }
     Ok(NativeTrainOutcome {
         env_steps: tr.env_steps,

@@ -34,6 +34,7 @@ use crate::baselines::generalist::PolicyRef;
 use crate::baselines::mlp::MlpScratch;
 use crate::baselines::ppo::Learner;
 use crate::runtime::pool::WorkerPool;
+use crate::telemetry;
 use crate::util::rng::CounterRng;
 
 use super::core::{self, LaneRef, LaneView, Scratch, ScenarioTables, StepInfo};
@@ -839,6 +840,7 @@ impl ShardTask<'_> {
         // invariant and sampling uses per-(lane, t) counter RNG, so shard
         // placement still can never change a lane's action stream.
         if let ShardActs::Fused(f) = &mut self.acts {
+            let _span = telemetry::Span::fine(telemetry::SpanKind::PolicyForward);
             if f.greedy {
                 f.logp.fill(0.0);
                 f.learner.greedy_block(f.obs_t, f.actions, f.values, f.scratch);
@@ -852,6 +854,13 @@ impl ShardTask<'_> {
             ShardActs::Given(a) => *a,
             ShardActs::Fused(f) => &*f.actions,
         };
+        // Telemetry: the env-step span covers step + observe for this
+        // shard's whole lane block; domain counters accumulate in locals
+        // (one branch per lane when recording, nothing when not) and
+        // commit once per task.
+        let _span = telemetry::Span::fine(telemetry::SpanKind::EnvStep);
+        let recording = telemetry::recording();
+        let (mut arrived, mut departed, mut grid_kwh) = (0.0f64, 0.0f64, 0.0f64);
         let mut scratch = Scratch::new(p);
         for lane in 0..self.t.len() {
             let mut view = LaneView {
@@ -881,6 +890,11 @@ impl ShardTask<'_> {
                 &mut scratch,
             );
             self.infos[lane] = info;
+            if recording {
+                arrived += info.arrived as f64;
+                departed += info.departed as f64;
+                grid_kwh += info.energy_grid_net_kwh as f64;
+            }
             if let Some(out) = &mut self.out {
                 out.rewards[lane] = info.reward;
                 out.dones[lane] = info.done as i32 as f32;
@@ -906,6 +920,14 @@ impl ShardTask<'_> {
                 );
             }
         }
+        if recording {
+            telemetry::counters(|c| {
+                c.env_steps += self.t.len() as u64;
+                c.cars_arrived += arrived as u64;
+                c.cars_departed += departed as u64;
+                c.grid_kwh += grid_kwh;
+            });
+        }
     }
 }
 
@@ -921,6 +943,7 @@ fn run_shard_tasks(pool: Option<&WorkerPool>, tasks: &mut [ShardTask<'_>]) {
             pool.run(wrapped.len(), |s| wrapped[s].lock().unwrap().run());
         }
         _ => {
+            let _scope = telemetry::quiet_scope();
             for task in tasks {
                 task.run();
             }

@@ -470,6 +470,7 @@ impl FleetPpoTrainer {
             // per-iteration seed keys the per-(lane, t) counter streams.
             // Under the generalist, every family's view shares one set of
             // trunk weights — still a single dispatch per step.
+            let _span = crate::telemetry::scope(crate::telemetry::SpanKind::Rollout);
             let FleetPpoTrainer { fleet, policy, rng, .. } = self;
             let policy_seed = rng.next_u64();
             let mut bufs: Vec<RolloutBuffers<'_>> =
@@ -580,6 +581,7 @@ impl FleetPpoTrainer {
     /// many eval episodes its reward/profit totals cover, so trained and
     /// held-out cells are comparable on the paper's profit metric.
     pub fn eval_cells(&self, e: usize, seed: u64) -> Vec<CellEval> {
+        let _span = crate::telemetry::scope(crate::telemetry::SpanKind::Eval);
         let fam = self.fleet.env(e);
         let pol = self.policy.family(e);
         let counts = fam.scenario_lane_counts();

@@ -16,6 +16,9 @@
 //!   fused cross-env rollout and per-family PPO,
 //! * [`baselines`] — pure-Rust PPO + heuristic policies (CPU comparators),
 //! * [`config`] — experiment configuration,
+//! * [`telemetry`] — zero-overhead span tracing, typed counters, and the
+//!   pool-utilization profiler (per-iteration reports, JSONL run logs,
+//!   Chrome trace export),
 //! * [`util`] — in-tree JSON / RNG / bench-stat / property-test substrates.
 
 pub mod baselines;
@@ -25,4 +28,5 @@ pub mod data;
 pub mod env;
 pub mod fleet;
 pub mod runtime;
+pub mod telemetry;
 pub mod util;

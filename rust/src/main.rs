@@ -11,21 +11,94 @@
 //!
 //! Options are `--key value` pairs (see config::RunConfig::set) plus
 //! `--config file.json`. clap is unavailable offline; parsing is manual.
+//!
+//! Output contract (README §Telemetry & profiling): results go to stdout,
+//! diagnostics go to stderr, always — routed through one
+//! [`RunLog`] so `--quiet` and `--log_format json` apply everywhere.
+//! `--telemetry true` drains the span recorder per iteration into
+//! structured reports (JSONL sink at runs/telemetry.jsonl); `--trace_out
+//! <file>` additionally exports every recorded span as a Chrome trace.
 
 use anyhow::{anyhow, bail, Result};
+use std::path::Path;
 
 use chargax::config::RunConfig;
 use chargax::coordinator::{metrics, trainer};
 use chargax::data::DataStore;
 use chargax::runtime::engine::{artifacts_dir, Engine};
 use chargax::runtime::manifest::Manifest;
+use chargax::telemetry::{self, IterationReport, LogFormat, RunLog};
 
 mod experiments;
+
+/// Default JSONL sink for `--telemetry` runs.
+const TELEMETRY_JSONL: &str = "runs/telemetry.jsonl";
 
 fn main() {
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+/// CLI-side telemetry state: the run logger plus the span accumulator
+/// feeding `--trace_out`. One per process, threaded through the commands.
+struct Telem {
+    log: RunLog,
+    /// Emit per-iteration reports (`--telemetry true`).
+    report: bool,
+    /// Chrome trace destination (`--trace_out <file>`), spans accumulated
+    /// across every per-iteration drain.
+    trace_out: Option<String>,
+    trace: Vec<telemetry::SpanRec>,
+}
+
+impl Telem {
+    fn new(cfg: &RunConfig) -> Result<Telem> {
+        let format = LogFormat::parse(&cfg.log_format).map_err(|e| anyhow!(e))?;
+        let mut log = RunLog::new(cfg.quiet, format);
+        if cfg.telemetry {
+            log = log.with_jsonl(Path::new(TELEMETRY_JSONL))?;
+        }
+        Ok(Telem {
+            log,
+            report: cfg.telemetry,
+            trace_out: cfg.trace_out.clone(),
+            trace: Vec::new(),
+        })
+    }
+
+    /// Drain the recorder at an iteration boundary: append one structured
+    /// record (and a text summary in text format), bank spans for the
+    /// trace. No-op when telemetry is disabled.
+    fn iteration(&mut self, iter: usize, wall_ms: f64) {
+        if !telemetry::enabled() {
+            return;
+        }
+        let d = telemetry::drain();
+        if self.report {
+            let rep = IterationReport::from_drained(iter, wall_ms, &d);
+            self.log.record(&rep.to_json());
+            if self.log.format() == LogFormat::Text {
+                self.log.info(&rep.text_summary());
+            }
+        }
+        if self.trace_out.is_some() {
+            self.trace.extend(d.spans);
+        }
+    }
+
+    /// Write the Chrome trace (if requested) from every span drained so
+    /// far plus whatever is still in the recorder.
+    fn finish(&mut self) -> Result<()> {
+        let Some(path) = self.trace_out.clone() else {
+            return Ok(());
+        };
+        self.trace.extend(telemetry::drain().spans);
+        telemetry::write_chrome_trace(Path::new(&path), &self.trace)?;
+        self.log
+            .info(&format!("wrote chrome trace ({} spans) to {path}", self.trace.len()));
+        Ok(())
     }
 }
 
@@ -43,10 +116,14 @@ fn run() -> Result<()> {
         .cloned()
         .collect();
     let cfg = RunConfig::load(config_path.as_deref(), &cfg_overrides)?;
+    // Before any pool spawns: recording state is read at scope entry, and
+    // the trace origin is pinned at first enable.
+    telemetry::set_enabled(cfg.telemetry || cfg.trace_out.is_some());
+    let mut tele = Telem::new(&cfg)?;
 
-    match cmd.as_str() {
-        "train" => cmd_train(&cfg, &overrides),
-        "eval" => cmd_eval(&cfg, &overrides),
+    let out = match cmd.as_str() {
+        "train" => cmd_train(&cfg, &overrides, &mut tele),
+        "eval" => cmd_eval(&cfg, &overrides, &mut tele),
         "bench" => {
             let id = args
                 .get(1)
@@ -54,16 +131,22 @@ fn run() -> Result<()> {
                 .ok_or_else(|| anyhow!("bench needs an experiment id"))?;
             experiments::run(id, &cfg)
         }
-        "list-profiles" => cmd_list_profiles(),
-        "list-artifacts" => cmd_list_artifacts(),
-        "cross-check" => cmd_cross_check(&cfg),
+        "list-profiles" => cmd_list_profiles(&mut tele),
+        "list-artifacts" => cmd_list_artifacts(&mut tele),
+        "cross-check" => cmd_cross_check(&cfg, &mut tele),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
         }
         other => bail!("unknown command '{other}' (try `chargax help`)"),
-    }
+    };
+    tele.finish()?;
+    out
 }
+
+/// Boolean config keys that may be passed bare (`--telemetry` ==
+/// `--telemetry true`) so the ISSUE-facing flags read naturally.
+const BARE_BOOL_FLAGS: [&str; 5] = ["telemetry", "quiet", "pin_cores", "pin-cores", "paper_scale"];
 
 fn parse_flags(args: &[String]) -> Result<(Option<String>, Vec<(String, String)>)> {
     let mut config = None;
@@ -72,15 +155,20 @@ fn parse_flags(args: &[String]) -> Result<(Option<String>, Vec<(String, String)>
     while i < args.len() {
         let a = &args[i];
         if let Some(key) = a.strip_prefix("--") {
-            let val = args
-                .get(i + 1)
-                .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
-            if key == "config" {
-                config = Some(val.clone());
+            let next = args.get(i + 1);
+            let has_val = next.is_some_and(|v| !v.starts_with("--"));
+            let bare = BARE_BOOL_FLAGS.contains(&key) && !has_val;
+            let val = if bare {
+                "true".to_string()
             } else {
-                overrides.push((key.to_string(), val.clone()));
+                next.ok_or_else(|| anyhow!("flag --{key} needs a value"))?.clone()
+            };
+            if key == "config" {
+                config = Some(val);
+            } else {
+                overrides.push((key.to_string(), val));
             }
-            i += 2;
+            i += if bare { 1 } else { 2 };
         } else {
             i += 1; // positional (subcommand argument), handled by caller
         }
@@ -88,7 +176,7 @@ fn parse_flags(args: &[String]) -> Result<(Option<String>, Vec<(String, String)>
     Ok((config, overrides))
 }
 
-fn cmd_train(cfg: &RunConfig, overrides: &[(String, String)]) -> Result<()> {
+fn cmd_train(cfg: &RunConfig, overrides: &[(String, String)], tele: &mut Telem) -> Result<()> {
     // Train-side `--policy` picks the fleet's policy architecture
     // (per-family oracle vs shared-trunk generalist); it is meaningless
     // outside `--fleet`, so reject it there instead of ignoring it.
@@ -101,7 +189,7 @@ fn cmd_train(cfg: &RunConfig, overrides: &[(String, String)]) -> Result<()> {
         bail!("--policy {policy} only applies to --fleet training");
     }
     if cfg.backend == "native" {
-        return cmd_train_native(cfg, policy);
+        return cmd_train_native(cfg, policy, tele);
     }
     if cfg.fleet_spec.is_some() {
         bail!("--fleet requires the native backend (add --backend native)");
@@ -110,7 +198,7 @@ fn cmd_train(cfg: &RunConfig, overrides: &[(String, String)]) -> Result<()> {
     let variant = manifest.variant(&cfg.variant)?;
     let store = DataStore::load(&artifacts_dir().join("data"))?;
     let engine = Engine::cpu()?;
-    eprintln!(
+    tele.log.info(&format!(
         "training on {} ({} envs x {} rollout steps, {} params) scenario={} {} {}/{} traffic={}",
         cfg.variant,
         variant.meta.num_envs,
@@ -121,19 +209,23 @@ fn cmd_train(cfg: &RunConfig, overrides: &[(String, String)]) -> Result<()> {
         cfg.scenario.country,
         cfg.scenario.year,
         cfg.scenario.traffic,
-    );
+    ));
     let opts = trainer::TrainOptions {
         seed: cfg.seed,
         total_env_steps: cfg.total_env_steps,
+        quiet: cfg.quiet,
         ..Default::default()
     };
     let out = trainer::train(&engine, variant, &store, &cfg.scenario, &opts)?;
-    eprintln!(
+    tele.log.info(&format!(
         "trained {} env steps in {:.2}s ({:.0} steps/s)",
         out.env_steps,
         out.wallclock_s,
         out.env_steps as f64 / out.wallclock_s
-    );
+    ));
+    // The PJRT driver owns its iteration loop; one aggregate report
+    // covers the whole run.
+    tele.iteration(0, out.wallclock_s * 1e3);
     let evals = trainer::evaluate(
         &engine,
         &out.session,
@@ -142,36 +234,36 @@ fn cmd_train(cfg: &RunConfig, overrides: &[(String, String)]) -> Result<()> {
         1000..1000 + cfg.eval_seeds as u32,
     )?;
     let mean = metrics::mean(&evals)?;
-    println!(
+    tele.log.result(&format!(
         "eval (net, {} seeds): {}",
         evals.len(),
         mean.fmt_fields(&["ep_reward", "ep_profit", "ep_missing_kwh", "ep_overtime_steps"])
-    );
+    ));
     Ok(())
 }
 
 /// `chargax train --backend native`: pure-Rust VectorEnv PPO. Needs no
 /// AOT artifacts or PJRT runtime; falls back to synthetic scenario tables
 /// when `artifacts/data` has not been exported.
-fn cmd_train_native(cfg: &RunConfig, policy: &str) -> Result<()> {
+fn cmd_train_native(cfg: &RunConfig, policy: &str, tele: &mut Telem) -> Result<()> {
     use chargax::baselines::ppo::PpoParams;
     use chargax::env::tree::StationConfig;
 
     if let Some(spec) = &cfg.fleet_spec {
-        return cmd_train_fleet(cfg, spec, policy);
+        return cmd_train_fleet(cfg, spec, policy, tele);
     }
     // Before the first pool spawns: workers read the flag at spawn time.
     chargax::runtime::pool::set_pin_cores(cfg.pin_cores);
     let store = DataStore::load(&artifacts_dir().join("data")).ok();
     if store.is_none() {
-        eprintln!("note: artifacts/data not found; using synthetic scenario tables");
+        tele.log.info("note: artifacts/data not found; using synthetic scenario tables");
     }
     let params = PpoParams {
         num_envs: cfg.num_envs,
         threads: cfg.num_threads,
         ..Default::default()
     };
-    eprintln!(
+    tele.log.info(&format!(
         "training native-vector backend ({} envs x {} rollout steps, threads={}) scenario={} {} {}/{} traffic={}",
         params.num_envs,
         params.rollout_steps,
@@ -181,39 +273,48 @@ fn cmd_train_native(cfg: &RunConfig, policy: &str) -> Result<()> {
         cfg.scenario.country,
         cfg.scenario.year,
         cfg.scenario.traffic,
-    );
+    ));
     let opts = trainer::TrainOptions {
         seed: cfg.seed,
         total_env_steps: cfg.total_env_steps,
+        quiet: cfg.quiet,
         ..Default::default()
     };
+    let mut iter_t0 = std::time::Instant::now();
     let out = trainer::train_native(
         store.as_ref(),
         &cfg.scenario,
         StationConfig::default(),
         params,
         &opts,
+        |i| {
+            let wall_ms = iter_t0.elapsed().as_secs_f64() * 1e3;
+            iter_t0 = std::time::Instant::now();
+            tele.iteration(i, wall_ms);
+        },
     )?;
-    eprintln!(
+    tele.log.info(&format!(
         "trained {} env steps in {:.2}s ({:.0} steps/s)",
         out.env_steps,
         out.wallclock_s,
         out.env_steps as f64 / out.wallclock_s
-    );
+    ));
+    let eval_t0 = std::time::Instant::now();
     let mut tr = out.trainer;
     let evals: Vec<(f32, f32)> = (0..cfg.eval_seeds as u64)
         .map(|s| tr.eval_episode(1000 + s))
         .collect();
+    tele.iteration(out.history.len(), eval_t0.elapsed().as_secs_f64() * 1e3);
     let n = evals.len().max(1) as f32;
     let (r, p): (f32, f32) = evals
         .iter()
         .fold((0.0, 0.0), |(ar, ap), (r, p)| (ar + r, ap + p));
-    println!(
+    tele.log.result(&format!(
         "eval (greedy net, {} seeds): ep_reward={:.3} ep_profit={:.3}",
         evals.len(),
         r / n,
         p / n
-    );
+    ));
     Ok(())
 }
 
@@ -224,14 +325,19 @@ fn cmd_train_native(cfg: &RunConfig, policy: &str) -> Result<()> {
 /// shared-trunk generalist across the whole grid (`--policy generalist`)
 /// in a single pass per iteration. Cells named by the spec's `holdout`
 /// key never train and show up in the eval rows as zero-shot.
-fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str, policy: &str) -> Result<()> {
+fn cmd_train_fleet(
+    cfg: &RunConfig,
+    spec_path: &str,
+    policy: &str,
+    tele: &mut Telem,
+) -> Result<()> {
     use chargax::baselines::ppo::PpoParams;
     use chargax::fleet::{Fleet, FleetPpoTrainer, FleetSpec};
 
     chargax::runtime::pool::set_pin_cores(cfg.pin_cores);
     let store = DataStore::load(&artifacts_dir().join("data")).ok();
     if store.is_none() {
-        eprintln!("note: artifacts/data not found; using synthetic scenario tables");
+        tele.log.info("note: artifacts/data not found; using synthetic scenario tables");
     }
     let spec = if spec_path == "demo" {
         FleetSpec::demo(cfg.seed as u64, 1)
@@ -240,23 +346,23 @@ fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str, policy: &str) -> Result<()>
     };
     let mut fleet = Fleet::from_spec(&spec, store.as_ref())?;
     fleet.set_threads(cfg.num_threads);
-    eprintln!(
+    tele.log.info(&format!(
         "training fleet of {} lanes across {} station families (threads={}, \
          rollout + PPO update sharded on one worker pool):",
         fleet.total_lanes(),
         fleet.n_envs(),
         if cfg.num_threads == 0 { "auto".to_string() } else { cfg.num_threads.to_string() },
-    );
+    ));
     for e in 0..fleet.n_envs() {
         let env = fleet.env(e);
-        eprintln!(
+        tele.log.info(&format!(
             "  [{e}] {:<24} lanes={:<4} chargers={:<3} obs_dim={:<4} v2g={}",
             fleet.label(e),
             env.batch(),
             env.n_chargers(),
             env.obs_dim(),
             env.cfg.v2g,
-        );
+        ));
     }
     let hp = PpoParams { threads: cfg.num_threads, ..Default::default() };
     let mut tr = match policy {
@@ -264,15 +370,16 @@ fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str, policy: &str) -> Result<()>
         "generalist" => FleetPpoTrainer::new_generalist(hp, fleet, cfg.seed as u64),
         other => bail!("unknown --policy '{other}' (expected per-family | generalist)"),
     };
-    eprintln!("  policy architecture: {}", tr.policy.label());
+    tele.log.info(&format!("  policy architecture: {}", tr.policy.label()));
     let batch = tr.steps_per_iteration();
     let iters = cfg.total_env_steps.div_ceil(batch).max(1);
     let t0 = std::time::Instant::now();
     for i in 0..iters {
+        let it0 = std::time::Instant::now();
         let stats = tr.iteration();
         if i % 5 == 0 || i + 1 == iters {
             for s in &stats {
-                eprintln!(
+                tele.log.info(&format!(
                     "[fleet iter {}/{} steps {}] {:<24} reward={:.3} profit={:.3} loss={:.3} ent={:.3}",
                     i + 1,
                     iters,
@@ -282,16 +389,17 @@ fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str, policy: &str) -> Result<()>
                     s.mean_profit,
                     s.total_loss,
                     s.entropy,
-                );
+                ));
             }
         }
+        tele.iteration(i, it0.elapsed().as_secs_f64() * 1e3);
     }
     let el = t0.elapsed().as_secs_f64();
-    eprintln!(
+    tele.log.info(&format!(
         "trained {} env steps in {el:.2}s ({:.0} steps/s)",
         tr.env_steps,
         tr.env_steps as f64 / el
-    );
+    ));
     // Greedy eval per (family × scenario cell): every distinct cell a
     // family trains on gets its own number, with the cell named — so
     // distribution shift across the grid is visible instead of hidden
@@ -299,6 +407,7 @@ fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str, policy: &str) -> Result<()>
     // per-iteration eval seed (ISSUE 5): seed 0 is exactly the
     // reproducible `eval_cells_current` episode, further seeds widen the
     // average, and re-running the eval block cannot drift.
+    let eval_t0 = std::time::Instant::now();
     let eval_base = tr.current_eval_seed();
     for e in 0..tr.fleet.n_envs() {
         let per_seed: Vec<Vec<chargax::fleet::CellEval>> = (0..cfg.eval_seeds as u64)
@@ -312,7 +421,7 @@ fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str, policy: &str) -> Result<()>
             let r = per_seed.iter().map(|v| v[ci].reward).sum::<f32>() / n;
             let p = per_seed.iter().map(|v| v[ci].profit).sum::<f32>() / n;
             let eps: usize = per_seed.iter().map(|v| v[ci].episodes).sum();
-            println!(
+            tele.log.result(&format!(
                 "eval (greedy, {} seeds) {:<24} cell {:<28} lanes={:<3} eps={:<3} ep_reward={:.3} ep_profit={:.3}{}",
                 per_seed.len(),
                 tr.fleet.label(e),
@@ -322,13 +431,15 @@ fn cmd_train_fleet(cfg: &RunConfig, spec_path: &str, policy: &str) -> Result<()>
                 r,
                 p,
                 if per_seed[0][ci].holdout { "  [holdout: zero-shot]" } else { "" },
-            );
+            ));
         }
     }
+    // One trailing report covers the greedy-eval pass.
+    tele.iteration(iters, eval_t0.elapsed().as_secs_f64() * 1e3);
     Ok(())
 }
 
-fn cmd_eval(cfg: &RunConfig, overrides: &[(String, String)]) -> Result<()> {
+fn cmd_eval(cfg: &RunConfig, overrides: &[(String, String)], tele: &mut Telem) -> Result<()> {
     let policy = overrides
         .iter()
         .find(|(k, _)| k == "policy")
@@ -351,60 +462,71 @@ fn cmd_eval(cfg: &RunConfig, overrides: &[(String, String)]) -> Result<()> {
     )?;
     let mean = metrics::mean(&evals)?;
     let std = metrics::std(&evals)?;
-    println!("policy={policy} scenario={} {} seeds:", cfg.scenario.scenario, evals.len());
+    tele.log.result(&format!(
+        "policy={policy} scenario={} {} seeds:",
+        cfg.scenario.scenario,
+        evals.len()
+    ));
     for f in &evals[0].fields {
-        println!("  {f:>22}: {:>10.3} ± {:.3}", mean.get(f)?, std.get(f)?);
+        tele.log
+            .result(&format!("  {f:>22}: {:>10.3} ± {:.3}", mean.get(f)?, std.get(f)?));
     }
     Ok(())
 }
 
-fn cmd_list_profiles() -> Result<()> {
+fn cmd_list_profiles(tele: &mut Telem) -> Result<()> {
     let store = DataStore::load(&artifacts_dir().join("data"))?;
-    println!("Price profiles (hourly, {} days):", store.n_days);
+    let log = &tele.log;
+    log.result(&format!("Price profiles (hourly, {} days):", store.n_days));
     for k in store.prices.keys() {
-        println!("  {k}");
+        log.result(&format!("  {k}"));
     }
-    println!("Car catalog ({} models):", store.n_models);
+    log.result(&format!("Car catalog ({} models):", store.n_models));
     for (i, n) in store.car_names.iter().enumerate() {
         let row = &store.car_table[i * 4..i * 4 + 4];
-        println!(
+        log.result(&format!(
             "  {n:<22} cap={:>5.1} kWh  AC={:>4.1} kW  DC={:>5.1} kW  tau={:.2}",
             row[0], row[1], row[2], row[3]
-        );
+        ));
     }
-    println!("Car regions: {:?}", store.car_weights.keys().collect::<Vec<_>>());
-    println!("Arrival scenarios: {:?}", store.arrival_shapes.keys().collect::<Vec<_>>());
-    println!("Traffic levels: {:?}", store.traffic);
-    println!("User profiles: {:?}", store.user_profiles.keys().collect::<Vec<_>>());
+    log.result(&format!("Car regions: {:?}", store.car_weights.keys().collect::<Vec<_>>()));
+    log.result(&format!(
+        "Arrival scenarios: {:?}",
+        store.arrival_shapes.keys().collect::<Vec<_>>()
+    ));
+    log.result(&format!("Traffic levels: {:?}", store.traffic));
+    log.result(&format!("User profiles: {:?}", store.user_profiles.keys().collect::<Vec<_>>()));
     Ok(())
 }
 
-fn cmd_list_artifacts() -> Result<()> {
+fn cmd_list_artifacts(tele: &mut Telem) -> Result<()> {
     let manifest = Manifest::load(&artifacts_dir())?;
     for (key, v) in &manifest.variants {
-        println!(
+        tele.log.result(&format!(
             "{key}: obs_dim={} ports={} envs={} batch={}",
             v.meta.obs_dim, v.meta.n_ports, v.meta.num_envs, v.meta.batch_size
-        );
+        ));
         for (name, p) in &v.programs {
-            println!(
+            tele.log.result(&format!(
                 "  {name:<16} {} inputs, {} outputs  ({})",
                 p.inputs.len(),
                 p.outputs.len(),
                 p.file.file_name().unwrap_or_default().to_string_lossy()
-            );
+            ));
         }
     }
     Ok(())
 }
 
-fn cmd_cross_check(cfg: &RunConfig) -> Result<()> {
+fn cmd_cross_check(cfg: &RunConfig, tele: &mut Telem) -> Result<()> {
     let report = experiments::cross_check(&cfg.variant)?;
-    println!("{report}");
+    tele.log.result(&report);
     Ok(())
 }
 
 fn print_usage() {
+    // Usage text is a result (stdout, never quieted), printed before any
+    // RunLog can exist when the binary runs with no arguments.
     println!(
         "chargax — Chargax (JAX EV-charging RL) reproduction, rust coordinator
 
@@ -426,7 +548,7 @@ COMMANDS:
 
 KEYS: variant backend num_envs threads pin_cores scenario region country
       year traffic p_sell beta seed n_seeds steps eval_seeds paper_scale
-      out fleet alpha_<penalty>
+      out fleet telemetry log_format quiet trace_out alpha_<penalty>
 
   --threads N caps the persistent worker pool driving native rollouts
   (0 = all cores); see README §Rollout runtime.
@@ -438,6 +560,14 @@ KEYS: variant backend num_envs threads pin_cores scenario region country
   one PPO learner per station family (default) or one shared-trunk
   generalist across the whole grid (README §Generalist policy). Cells
   under the spec's `holdout` key never train and are evaluated
-  zero-shot."
+  zero-shot.
+  --telemetry enables the profiler: per-iteration stage p50/p99, shard
+  imbalance, pool utilization; one JSONL record per iteration lands in
+  runs/telemetry.jsonl. Results are bit-identical on or off.
+  --log_format text|json routes the per-iteration record to stdout as a
+  JSON line (json) or keeps human-readable text (default).
+  --quiet true silences stderr diagnostics; stdout results always print.
+  --trace_out FILE writes every recorded span as a Chrome trace-event
+  file (open in Perfetto / chrome://tracing); implies span recording."
     );
 }

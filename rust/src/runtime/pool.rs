@@ -26,6 +26,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::telemetry;
+
 /// Process-wide opt-in for worker core pinning (`--pin_cores true`).
 /// Read once by each worker at spawn, so set it BEFORE the first pool is
 /// built (main.rs does, right after parsing the run config). Pinning only
@@ -102,6 +104,11 @@ struct State {
     /// Bumped once per dispatched job; workers detect work by comparing
     /// against the last epoch they served (state-based, no lost wakeups).
     epoch: u64,
+    /// Telemetry dispatch id for the current job (0 = telemetry off):
+    /// every shard of one job tags its `PoolShard` span with the same id
+    /// so the profiler can compute per-epoch imbalance. Published under
+    /// the state lock alongside the job, read by workers with it.
+    tele_seq: u64,
     job: Option<Job>,
     /// Shards in the current job (caller runs shard 0, workers 1..shards).
     shards: usize,
@@ -142,6 +149,7 @@ impl WorkerPool {
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 epoch: 0,
+                tele_seq: 0,
                 job: None,
                 shards: 0,
                 remaining: 0,
@@ -181,6 +189,9 @@ impl WorkerPool {
         );
         if shards <= 1 {
             if shards == 1 {
+                // Inline dispatch still opens a telemetry shard scope so
+                // fine spans inside shard tasks record at --threads 1.
+                let _scope = telemetry::shard_scope(0, telemetry::dispatch_seq());
                 f(0);
             }
             return;
@@ -189,6 +200,7 @@ impl WorkerPool {
         // the current job fully drains (tolerate poisoning — WaitGuard has
         // already restored protocol state on any panicking path).
         let _dispatch = self.dispatch.lock().unwrap_or_else(|e| e.into_inner());
+        let seq = telemetry::dispatch_seq();
         // SAFETY: the erased reference is only reachable through
         // `State.job`, workers only call it between this publication and
         // their check-in, and control cannot leave this function — by
@@ -202,6 +214,7 @@ impl WorkerPool {
         {
             let mut st = self.shared.state.lock().unwrap();
             st.epoch += 1;
+            st.tele_seq = seq;
             st.job = Some(Job(job));
             st.shards = shards;
             st.remaining = shards - 1;
@@ -223,6 +236,9 @@ impl WorkerPool {
         }
         {
             let _guard = WaitGuard(&self.shared);
+            // Scope declared after the guard: its span (and flush) ends
+            // when shard 0's own work does, before waiting on workers.
+            let _scope = telemetry::shard_scope(0, seq);
             f(0);
         }
         let panics = self.shared.state.lock().unwrap().panics;
@@ -317,7 +333,7 @@ fn worker_loop(w: usize, shared: &Shared) {
     }
     let mut seen = 0u64;
     loop {
-        let (job, shards) = {
+        let (job, shards, seq) = {
             let mut st = shared.state.lock().unwrap();
             while !st.shutdown && st.epoch == seen {
                 st = shared.work.wait(st).unwrap();
@@ -327,7 +343,7 @@ fn worker_loop(w: usize, shared: &Shared) {
             }
             seen = st.epoch;
             match st.job {
-                Some(job) => (job, st.shards),
+                Some(job) => (job, st.shards, st.tele_seq),
                 // Stale wake: this worker did not participate in `seen`'s
                 // job and only woke after the caller already cleared it.
                 // (Participants always observe their epoch's job — the
@@ -341,8 +357,10 @@ fn worker_loop(w: usize, shared: &Shared) {
             // decrement would hang the caller on `done` forever) and stays
             // alive for future jobs; the caller re-raises after the job.
             // The default panic hook has already printed the message.
-            let result =
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.0)(mine)));
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _scope = telemetry::shard_scope(mine as u32, seq);
+                (job.0)(mine)
+            }));
             let mut st = shared.state.lock().unwrap();
             if result.is_err() {
                 st.panics += 1;

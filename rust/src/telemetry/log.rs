@@ -1,0 +1,124 @@
+//! One logging front end for every human-facing line the CLI emits.
+//!
+//! Contract (ISSUE 8 satellite): **results go to stdout, diagnostics go
+//! to stderr, always.** `--quiet` silences diagnostics; `--log-format
+//! json` switches structured per-iteration records onto stdout as JSON
+//! lines (and they are always appended to the JSONL sink when one is
+//! open, regardless of format).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// `--log-format {text,json}`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LogFormat {
+    Text,
+    Json,
+}
+
+impl LogFormat {
+    pub fn parse(s: &str) -> Result<LogFormat, String> {
+        match s {
+            "text" => Ok(LogFormat::Text),
+            "json" => Ok(LogFormat::Json),
+            other => Err(format!("unknown log format '{other}' (text|json)")),
+        }
+    }
+}
+
+/// The run logger: diagnostics vs results routing, quiet gating, and an
+/// optional JSONL sink (`runs/telemetry.jsonl`) for structured records.
+pub struct RunLog {
+    quiet: bool,
+    format: LogFormat,
+    sink: Option<BufWriter<File>>,
+}
+
+impl RunLog {
+    pub fn new(quiet: bool, format: LogFormat) -> RunLog {
+        RunLog { quiet, format, sink: None }
+    }
+
+    /// Attach a JSONL sink (truncates; creates parent directories).
+    pub fn with_jsonl(mut self, path: &Path) -> std::io::Result<RunLog> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        self.sink = Some(BufWriter::new(File::create(path)?));
+        Ok(self)
+    }
+
+    pub fn format(&self) -> LogFormat {
+        self.format
+    }
+
+    /// Progress/diagnostic line → stderr (dropped under `--quiet`).
+    pub fn info(&self, msg: &str) {
+        if !self.quiet {
+            eprintln!("{msg}");
+        }
+    }
+
+    /// Result line (tables, summary metrics, output paths) → stdout,
+    /// always — quiet mode only silences diagnostics.
+    pub fn result(&self, msg: &str) {
+        println!("{msg}");
+    }
+
+    /// Structured per-iteration record: appended to the JSONL sink when
+    /// one is open; printed to stdout as one JSON line in `json` format.
+    pub fn record(&mut self, rec: &Json) {
+        let line = rec.to_string();
+        if let Some(sink) = &mut self.sink {
+            // Flush per record so CI artifact uploads and `tail -f` see
+            // complete lines even if the run is cut short.
+            let _ = writeln!(sink, "{line}");
+            let _ = sink.flush();
+        }
+        if self.format == LogFormat::Json {
+            println!("{line}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_format_parses_and_rejects() {
+        assert_eq!(LogFormat::parse("text").unwrap(), LogFormat::Text);
+        assert_eq!(LogFormat::parse("json").unwrap(), LogFormat::Json);
+        assert!(LogFormat::parse("yaml").is_err());
+    }
+
+    #[test]
+    fn jsonl_sink_appends_one_line_per_record() {
+        let dir = std::env::temp_dir().join(format!(
+            "chargax-runlog-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = dir.join("telemetry.jsonl");
+        {
+            let mut log = RunLog::new(true, LogFormat::Text)
+                .with_jsonl(&path)
+                .expect("open jsonl sink");
+            log.record(&Json::parse(r#"{"iter":0,"wall_ms":1.5}"#).unwrap());
+            log.record(&Json::parse(r#"{"iter":1,"wall_ms":2.5}"#).unwrap());
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for (i, line) in lines.iter().enumerate() {
+            let j = Json::parse(line).expect("each line is standalone JSON");
+            assert_eq!(j.get("iter").unwrap().as_usize(), Some(i));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,524 @@
+//! Zero-overhead telemetry: per-shard span tracing, typed counters, and
+//! a pool-utilization profiler for the training stack.
+//!
+//! Design constraints (and how they are met):
+//!
+//! * **Inert when disabled.** One process-wide [`AtomicBool`] gates the
+//!   whole layer. It is read once per *pool dispatch* (by
+//!   [`shard_scope`], at the `WorkerPool::run` seam) and once per coarse
+//!   caller-side stage ([`scope`]) — never per span. When off, every
+//!   recording call is a thread-local boolean read and an untaken branch.
+//! * **Lock-free, zero-atomic hot path.** Inside a dispatch, spans and
+//!   counters are staged into plain thread-local buffers (a preallocated
+//!   `Vec<SpanRec>` ring with a drop counter, capacity [`SPAN_CAP`]).
+//!   The staged data is flushed to this thread's shared [`ThreadBuf`]
+//!   (a `Mutex`-protected append buffer registered in a global registry)
+//!   exactly once, when the outermost scope exits — one uncontended lock
+//!   per shard per dispatch, nothing per span.
+//! * **Provably non-perturbing.** The recorder only reads `Instant` and
+//!   writes its own buffers: it never touches RNG streams, dispatch
+//!   shapes, chunk boundaries, or training data, so results are bitwise
+//!   identical with telemetry on or off at any `--threads` (proven in
+//!   rust/tests/telemetry.rs).
+//!
+//! Aggregation: [`drain`] collects every thread's completed spans between
+//! iterations (safe at any time — the shared buffers are lock-protected
+//! and only ever hold *completed* scopes), and
+//! [`report::IterationReport`] turns one drain into per-stage p50/p99,
+//! per-shard busy time, the per-epoch imbalance ratio, and pool
+//! utilization. [`trace::write_chrome_trace`] exports the raw spans as a
+//! Chrome trace-event file viewable in Perfetto (`--trace-out`).
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+pub mod log;
+pub mod report;
+pub mod trace;
+
+pub use log::{LogFormat, RunLog};
+pub use report::{IterationReport, StageStats};
+pub use trace::write_chrome_trace;
+
+/// Staged spans a single thread can hold between flushes (one pool
+/// dispatch); beyond this, spans are counted as dropped, never reallocated.
+pub const SPAN_CAP: usize = 1 << 16;
+
+/// Total spans the shared per-thread buffers retain between [`drain`]
+/// calls; a runaway producer degrades to drop-counting instead of
+/// unbounded growth.
+const SHARED_CAP: usize = 1 << 21;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DISPATCH_SEQ: AtomicU64 = AtomicU64::new(0);
+static ORIGIN: OnceLock<Instant> = OnceLock::new();
+static REGISTRY: Mutex<Vec<Arc<ThreadBuf>>> = Mutex::new(Vec::new());
+
+/// Turn the telemetry layer on/off process-wide (`--telemetry`). Scopes
+/// opened after this call observe the new state; in-flight scopes finish
+/// under the state they started with.
+pub fn set_enabled(on: bool) {
+    if on {
+        // Fix the trace time origin before the first span can exist.
+        let _ = origin();
+    }
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Whether the telemetry layer is currently enabled.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The process-wide trace epoch all span timestamps are relative to.
+fn origin() -> Instant {
+    *ORIGIN.get_or_init(Instant::now)
+}
+
+/// Instrumented stages. `PoolShard` is the dispatch envelope (one span
+/// per shard per pool job — the utilization/imbalance signal); the rest
+/// are the per-iteration report's stage set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    /// One shard of one `WorkerPool` job (caller = lane 0, workers 1..).
+    PoolShard,
+    /// A trainer iteration's fused rollout (caller envelope).
+    Rollout,
+    /// Fused in-shard policy inference (`sample_block`/`greedy_block`).
+    PolicyForward,
+    /// A shard's env-step lane loop.
+    EnvStep,
+    /// One 64-row PPO gradient chunk.
+    UpdateChunk,
+    /// Fixed-order pairwise tree-reduce of chunk gradients/stats.
+    Reduce,
+    /// The Adam application on the caller.
+    Adam,
+    /// Greedy evaluation (per-cell fleet eval or single-env episode).
+    Eval,
+}
+
+impl SpanKind {
+    /// The per-iteration report's stage set, in display order (everything
+    /// except the `PoolShard` envelope, which feeds the shard columns).
+    pub const STAGES: [SpanKind; 7] = [
+        SpanKind::Rollout,
+        SpanKind::PolicyForward,
+        SpanKind::EnvStep,
+        SpanKind::UpdateChunk,
+        SpanKind::Reduce,
+        SpanKind::Adam,
+        SpanKind::Eval,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::PoolShard => "pool-shard",
+            SpanKind::Rollout => "rollout",
+            SpanKind::PolicyForward => "policy-forward",
+            SpanKind::EnvStep => "env-step",
+            SpanKind::UpdateChunk => "update-chunks",
+            SpanKind::Reduce => "reduce",
+            SpanKind::Adam => "adam",
+            SpanKind::Eval => "eval",
+        }
+    }
+}
+
+/// One completed span: stage, pool lane, dispatch sequence id (0 for
+/// caller-side coarse stages), and nanoseconds since the trace origin.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRec {
+    pub kind: SpanKind,
+    pub lane: u32,
+    pub seq: u64,
+    pub t0_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// Typed domain counters, accumulated per shard task and committed once
+/// per scope (never per lane-step).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Counters {
+    /// Environment lane-steps advanced (B lanes × 1 step each).
+    pub env_steps: u64,
+    /// Cars that arrived at a port this drain window.
+    pub cars_arrived: u64,
+    /// Cars that departed this drain window.
+    pub cars_departed: u64,
+    /// Net grid energy (kWh, import positive) summed over lane-steps.
+    pub grid_kwh: f64,
+    /// Times the NaN-safe greedy head saw a non-finite logit.
+    pub nan_guard_trips: u64,
+    /// PPO minibatch rows pushed through gradient chunks.
+    pub minibatch_rows: u64,
+}
+
+impl Counters {
+    pub fn add(&mut self, o: &Counters) {
+        self.env_steps += o.env_steps;
+        self.cars_arrived += o.cars_arrived;
+        self.cars_departed += o.cars_departed;
+        self.grid_kwh += o.grid_kwh;
+        self.nan_guard_trips += o.nan_guard_trips;
+        self.minibatch_rows += o.minibatch_rows;
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == Counters::default()
+    }
+}
+
+// -- per-thread staging (the hot path) -----------------------------------
+
+struct Staged {
+    spans: Vec<SpanRec>,
+    dropped: u64,
+    counters: Counters,
+    buf: Option<Arc<ThreadBuf>>,
+}
+
+thread_local! {
+    static RECORDING: Cell<bool> = const { Cell::new(false) };
+    static LANE: Cell<u32> = const { Cell::new(0) };
+    static SEQ: Cell<u64> = const { Cell::new(0) };
+    static ORIGIN_TLS: Cell<Option<Instant>> = const { Cell::new(None) };
+    static STAGED: RefCell<Staged> = RefCell::new(Staged {
+        spans: Vec::new(),
+        dropped: 0,
+        counters: Counters::default(),
+        buf: None,
+    });
+}
+
+/// Whether the current thread is inside a recording scope. Fine-grained
+/// instrumentation (spans inside shard tasks, counter accumulation) gates
+/// on this — a thread-local read, zero atomics.
+#[inline]
+pub fn recording() -> bool {
+    RECORDING.with(|c| c.get())
+}
+
+/// Accumulate into the staged counters if this thread is recording.
+/// Callers batch locally and commit once per task, so the per-lane hot
+/// loop pays one branch.
+#[inline]
+pub fn counters(f: impl FnOnce(&mut Counters)) {
+    if recording() {
+        STAGED.with(|s| f(&mut s.borrow_mut().counters));
+    }
+}
+
+#[inline]
+fn thread_origin() -> Instant {
+    ORIGIN_TLS.with(|c| match c.get() {
+        Some(o) => o,
+        None => {
+            let o = origin();
+            c.set(Some(o));
+            o
+        }
+    })
+}
+
+fn push_span(kind: SpanKind, t0: Instant, t1: Instant) {
+    let o = thread_origin();
+    let t0_ns = t0.saturating_duration_since(o).as_nanos() as u64;
+    let dur_ns = t1.saturating_duration_since(t0).as_nanos() as u64;
+    let lane = LANE.with(|c| c.get());
+    let seq = SEQ.with(|c| c.get());
+    STAGED.with(|s| {
+        let mut s = s.borrow_mut();
+        if s.spans.capacity() == 0 {
+            s.spans.reserve_exact(SPAN_CAP);
+        }
+        if s.spans.len() >= SPAN_CAP {
+            s.dropped += 1;
+        } else {
+            s.spans.push(SpanRec { kind, lane, seq, t0_ns, dur_ns });
+        }
+    });
+}
+
+/// Move this thread's staged spans/counters into its shared buffer
+/// (registering it on first use). One lock per call; called only at
+/// outermost-scope exit and from [`drain`].
+fn flush() {
+    STAGED.with(|s| {
+        let mut s = s.borrow_mut();
+        let Staged { spans, dropped, counters, buf } = &mut *s;
+        if spans.is_empty() && *dropped == 0 && counters.is_zero() {
+            return;
+        }
+        if buf.is_none() {
+            let b = Arc::new(ThreadBuf::default());
+            REGISTRY.lock().unwrap().push(Arc::clone(&b));
+            *buf = Some(b);
+        }
+        let mut inner = buf.as_ref().unwrap().inner.lock().unwrap();
+        let room = SHARED_CAP.saturating_sub(inner.spans.len());
+        if spans.len() > room {
+            *dropped += (spans.len() - room) as u64;
+            spans.truncate(room);
+        }
+        inner.spans.append(spans);
+        inner.dropped += *dropped;
+        *dropped = 0;
+        inner.counters.add(counters);
+        *counters = Counters::default();
+    });
+}
+
+// -- shared buffers + drain ----------------------------------------------
+
+#[derive(Default)]
+struct BufInner {
+    spans: Vec<SpanRec>,
+    dropped: u64,
+    counters: Counters,
+}
+
+/// One thread's published telemetry. Shared only through its `Mutex`;
+/// the owner appends at scope exit, [`drain`] takes everything.
+#[derive(Default)]
+struct ThreadBuf {
+    inner: Mutex<BufInner>,
+}
+
+/// Everything recorded since the previous drain, across all threads,
+/// sorted by start time.
+#[derive(Debug, Default)]
+pub struct Drained {
+    pub spans: Vec<SpanRec>,
+    pub counters: Counters,
+    pub dropped: u64,
+}
+
+/// Collect and clear every thread's published telemetry. Callable at any
+/// time (buffers are lock-protected and hold only completed scopes);
+/// trainers call it once per iteration.
+pub fn drain() -> Drained {
+    flush(); // the caller thread may hold staged counters outside a scope
+    let bufs: Vec<Arc<ThreadBuf>> = REGISTRY.lock().unwrap().clone();
+    let mut out = Drained::default();
+    for b in &bufs {
+        let mut inner = b.inner.lock().unwrap();
+        out.spans.append(&mut inner.spans);
+        out.counters.add(&inner.counters);
+        inner.counters = Counters::default();
+        out.dropped += inner.dropped;
+        inner.dropped = 0;
+    }
+    out.spans.sort_by_key(|s| (s.t0_ns, s.lane));
+    out
+}
+
+// -- scopes --------------------------------------------------------------
+
+/// Allocate a dispatch sequence id shared by every shard of one pool job
+/// (groups `PoolShard` spans for the per-epoch imbalance ratio). Returns
+/// 0 when telemetry is off — the single atomic the pool pays per
+/// dispatch, nothing per span.
+#[inline]
+pub fn dispatch_seq() -> u64 {
+    if enabled() {
+        DISPATCH_SEQ.fetch_add(1, Ordering::Relaxed) + 1
+    } else {
+        0
+    }
+}
+
+/// RAII recording scope. Entering marks the thread as recording (saving
+/// the outer state); leaving records the scope's own span, restores the
+/// outer state, and — when outermost — flushes staged data to the shared
+/// buffer.
+pub struct Scope {
+    active: bool,
+    prev_recording: bool,
+    prev_lane: u32,
+    prev_seq: u64,
+    kind: SpanKind,
+    t0: Option<Instant>,
+}
+
+const INACTIVE_SCOPE: Scope = Scope {
+    active: false,
+    prev_recording: false,
+    prev_lane: 0,
+    prev_seq: 0,
+    kind: SpanKind::PoolShard,
+    t0: None,
+};
+
+fn scope_impl(kind: SpanKind, lane: u32, seq: u64) -> Scope {
+    if !enabled() {
+        return INACTIVE_SCOPE;
+    }
+    let prev_recording = RECORDING.with(|c| c.replace(true));
+    let prev_lane = LANE.with(|c| c.replace(lane));
+    let prev_seq = SEQ.with(|c| c.replace(seq));
+    Scope {
+        active: true,
+        prev_recording,
+        prev_lane,
+        prev_seq,
+        kind,
+        t0: Some(Instant::now()),
+    }
+}
+
+/// Pool dispatch seam: one shard of one pool job (`lane` = shard index,
+/// `seq` from [`dispatch_seq`], identical across the job's shards).
+/// Placed by `WorkerPool::run` around both the caller's shard-0 call and
+/// each worker's shard body, so fine spans inside shard tasks see
+/// `recording() == true` without ever touching an atomic.
+#[inline]
+pub fn shard_scope(lane: u32, seq: u64) -> Scope {
+    scope_impl(SpanKind::PoolShard, lane, seq)
+}
+
+/// Coarse caller-side stage scope (rollout / reduce / adam / eval):
+/// checks the atomic enable flag itself, so it is valid outside any pool
+/// dispatch (including fully inline `--threads 1` runs).
+#[inline]
+pub fn scope(kind: SpanKind) -> Scope {
+    scope_impl(kind, 0, 0)
+}
+
+/// Mark the current thread as recording WITHOUT emitting a span of its
+/// own: wraps inline (pool-less) dispatch fallbacks so their fine spans
+/// and counters still record at `--threads 1`.
+#[inline]
+pub fn quiet_scope() -> Scope {
+    let mut s = scope_impl(SpanKind::PoolShard, 0, 0);
+    s.t0 = None;
+    s
+}
+
+impl Drop for Scope {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        if let Some(t0) = self.t0 {
+            push_span(self.kind, t0, Instant::now());
+        }
+        RECORDING.with(|c| c.set(self.prev_recording));
+        LANE.with(|c| c.set(self.prev_lane));
+        SEQ.with(|c| c.set(self.prev_seq));
+        if !self.prev_recording {
+            flush();
+        }
+    }
+}
+
+/// Fine-grained span inside a recording scope (policy-forward, env-step,
+/// update-chunk). Thread-local check only; a no-op outside a scope or
+/// with telemetry off.
+pub struct Span {
+    kind: SpanKind,
+    t0: Option<Instant>,
+}
+
+impl Span {
+    #[inline]
+    pub fn fine(kind: SpanKind) -> Span {
+        let t0 = if recording() { Some(Instant::now()) } else { None };
+        Span { kind, t0 }
+    }
+}
+
+impl Drop for Span {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some(t0) = self.t0 {
+            push_span(self.kind, t0, Instant::now());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Telemetry state is process-global; tests in this module serialize
+    // on one lock so enable/disable toggles don't interleave.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_scopes_record_nothing() {
+        let _l = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        let _ = drain();
+        {
+            let _sc = shard_scope(0, dispatch_seq());
+            let _sp = Span::fine(SpanKind::EnvStep);
+            counters(|c| c.env_steps += 10);
+        }
+        let d = drain();
+        assert!(d.spans.is_empty(), "disabled telemetry must record no spans");
+        assert!(d.counters.is_zero());
+    }
+
+    #[test]
+    fn scopes_and_counters_round_trip_through_drain() {
+        let _l = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        let _ = drain();
+        let seq = dispatch_seq();
+        assert!(seq > 0);
+        {
+            let _sc = shard_scope(3, seq);
+            assert!(recording());
+            let _sp = Span::fine(SpanKind::EnvStep);
+            counters(|c| {
+                c.env_steps += 64;
+                c.grid_kwh += 1.5;
+            });
+        }
+        {
+            let _sc = scope(SpanKind::Eval);
+            counters(|c| c.nan_guard_trips += 1);
+        }
+        assert!(!recording(), "scope exit must restore the outer state");
+        set_enabled(false);
+        let d = drain();
+        let pool: Vec<_> =
+            d.spans.iter().filter(|s| s.kind == SpanKind::PoolShard).collect();
+        assert_eq!(pool.len(), 1);
+        assert_eq!(pool[0].lane, 3);
+        assert_eq!(pool[0].seq, seq);
+        assert!(d.spans.iter().any(|s| s.kind == SpanKind::EnvStep));
+        assert!(d.spans.iter().any(|s| s.kind == SpanKind::Eval));
+        assert_eq!(d.counters.env_steps, 64);
+        assert_eq!(d.counters.nan_guard_trips, 1);
+        assert!((d.counters.grid_kwh - 1.5).abs() < 1e-12);
+        // Drain clears.
+        assert!(drain().spans.is_empty());
+    }
+
+    #[test]
+    fn nested_scopes_restore_lane_and_seq() {
+        let _l = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        let _ = drain();
+        {
+            let _outer = scope(SpanKind::Rollout);
+            {
+                let _inner = shard_scope(5, 42);
+            }
+            assert!(recording(), "inner scope exit must not end the outer one");
+        }
+        set_enabled(false);
+        let d = drain();
+        let outer = d.spans.iter().find(|s| s.kind == SpanKind::Rollout).unwrap();
+        let inner = d.spans.iter().find(|s| s.kind == SpanKind::PoolShard).unwrap();
+        assert_eq!(outer.lane, 0);
+        assert_eq!(inner.lane, 5);
+        assert_eq!(inner.seq, 42);
+        assert!(outer.dur_ns >= inner.dur_ns, "outer span envelops inner");
+    }
+}

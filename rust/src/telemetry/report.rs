@@ -1,0 +1,345 @@
+//! Per-iteration aggregation of drained telemetry: per-stage p50/p99,
+//! per-shard busy time, the per-epoch imbalance ratio, and pool
+//! utilization — plus the JSONL record (`runs/telemetry.jsonl`) and the
+//! human-readable `--telemetry` summary.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{obj, Json};
+
+use super::{Counters, Drained, SpanKind, SpanRec};
+
+/// One stage's duration distribution within a drain window.
+#[derive(Clone, Debug)]
+pub struct StageStats {
+    pub kind: SpanKind,
+    pub count: usize,
+    pub total_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Aggregate view of one training iteration's telemetry.
+#[derive(Clone, Debug)]
+pub struct IterationReport {
+    pub iter: usize,
+    /// Caller-measured wallclock for the iteration (ms).
+    pub wall_ms: f64,
+    /// One entry per [`SpanKind::STAGES`] member, in display order
+    /// (count 0 when a stage did not run this iteration).
+    pub stages: Vec<StageStats>,
+    /// Summed `PoolShard` busy time per pool lane (index = lane).
+    pub shard_busy_ms: Vec<f64>,
+    /// Mean over dispatch epochs of (slowest shard / fastest shard);
+    /// 1.0 when no multi-shard dispatch ran.
+    pub imbalance_mean: f64,
+    /// Worst single-epoch imbalance ratio.
+    pub imbalance_max: f64,
+    /// Total shard busy time / (dispatch envelope × lanes seen), in
+    /// [0, 1]; how much of the pool's capacity the dispatches used.
+    pub utilization: f64,
+    pub counters: Counters,
+    pub dropped_spans: u64,
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (0.0 if empty).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+fn ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+impl IterationReport {
+    pub fn from_drained(iter: usize, wall_ms: f64, d: &Drained) -> IterationReport {
+        let stages = SpanKind::STAGES
+            .iter()
+            .map(|&kind| {
+                let mut durs: Vec<f64> = d
+                    .spans
+                    .iter()
+                    .filter(|s| s.kind == kind)
+                    .map(|s| ms(s.dur_ns))
+                    .collect();
+                durs.sort_by(|a, b| a.total_cmp(b));
+                StageStats {
+                    kind,
+                    count: durs.len(),
+                    total_ms: durs.iter().sum(),
+                    p50_ms: percentile(&durs, 50.0),
+                    p99_ms: percentile(&durs, 99.0),
+                }
+            })
+            .collect();
+
+        let pool: Vec<&SpanRec> =
+            d.spans.iter().filter(|s| s.kind == SpanKind::PoolShard).collect();
+
+        let n_lanes = pool.iter().map(|s| s.lane as usize + 1).max().unwrap_or(0);
+        let mut shard_busy_ms = vec![0.0; n_lanes];
+        for s in &pool {
+            shard_busy_ms[s.lane as usize] += ms(s.dur_ns);
+        }
+
+        // Imbalance: within each dispatch epoch (seq), slowest/fastest
+        // shard. Single-shard dispatches carry no imbalance signal.
+        let mut by_seq: BTreeMap<u64, (f64, f64)> = BTreeMap::new();
+        for s in &pool {
+            let dur = ms(s.dur_ns);
+            let e = by_seq.entry(s.seq).or_insert((f64::INFINITY, 0.0));
+            e.0 = e.0.min(dur);
+            e.1 = e.1.max(dur);
+        }
+        let mut count_by_seq: BTreeMap<u64, usize> = BTreeMap::new();
+        for s in &pool {
+            *count_by_seq.entry(s.seq).or_insert(0) += 1;
+        }
+        let ratios: Vec<f64> = by_seq
+            .iter()
+            .filter(|(seq, _)| count_by_seq.get(*seq).copied().unwrap_or(0) >= 2)
+            .map(|(_, (lo, hi))| if *lo > 0.0 { hi / lo } else { 1.0 })
+            .collect();
+        let imbalance_mean = if ratios.is_empty() {
+            1.0
+        } else {
+            ratios.iter().sum::<f64>() / ratios.len() as f64
+        };
+        let imbalance_max = ratios.iter().copied().fold(1.0f64, f64::max);
+
+        // Utilization: busy time over the envelope that the dispatches
+        // actually spanned, normalized by distinct lanes seen.
+        let utilization = if pool.is_empty() {
+            0.0
+        } else {
+            let t_min = pool.iter().map(|s| s.t0_ns).min().unwrap_or(0);
+            let t_max = pool.iter().map(|s| s.t0_ns + s.dur_ns).max().unwrap_or(0);
+            let envelope = ms(t_max.saturating_sub(t_min));
+            let busy: f64 = shard_busy_ms.iter().sum();
+            let lanes_seen = {
+                let mut lanes: Vec<u32> = pool.iter().map(|s| s.lane).collect();
+                lanes.sort_unstable();
+                lanes.dedup();
+                lanes.len()
+            };
+            if envelope > 0.0 && lanes_seen > 0 {
+                (busy / (envelope * lanes_seen as f64)).min(1.0)
+            } else {
+                0.0
+            }
+        };
+
+        IterationReport {
+            iter,
+            wall_ms,
+            stages,
+            shard_busy_ms,
+            imbalance_mean,
+            imbalance_max,
+            utilization,
+            counters: d.counters,
+            dropped_spans: d.dropped,
+        }
+    }
+
+    /// The JSONL record: one line per iteration in `runs/telemetry.jsonl`.
+    pub fn to_json(&self) -> Json {
+        let stages = Json::Obj(
+            self.stages
+                .iter()
+                .map(|st| {
+                    (
+                        st.kind.label().to_string(),
+                        obj(vec![
+                            ("count", Json::Num(st.count as f64)),
+                            ("total_ms", Json::Num(st.total_ms)),
+                            ("p50_ms", Json::Num(st.p50_ms)),
+                            ("p99_ms", Json::Num(st.p99_ms)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("type", Json::Str("telemetry".to_string())),
+            ("iter", Json::Num(self.iter as f64)),
+            ("wall_ms", Json::Num(self.wall_ms)),
+            ("stages", stages),
+            (
+                "shards",
+                obj(vec![
+                    (
+                        "busy_ms",
+                        Json::Arr(
+                            self.shard_busy_ms.iter().map(|&b| Json::Num(b)).collect(),
+                        ),
+                    ),
+                    ("imbalance_mean", Json::Num(self.imbalance_mean)),
+                    ("imbalance_max", Json::Num(self.imbalance_max)),
+                    ("utilization", Json::Num(self.utilization)),
+                ]),
+            ),
+            (
+                "counters",
+                obj(vec![
+                    ("env_steps", Json::Num(self.counters.env_steps as f64)),
+                    ("cars_arrived", Json::Num(self.counters.cars_arrived as f64)),
+                    ("cars_departed", Json::Num(self.counters.cars_departed as f64)),
+                    ("grid_kwh", Json::Num(self.counters.grid_kwh)),
+                    (
+                        "nan_guard_trips",
+                        Json::Num(self.counters.nan_guard_trips as f64),
+                    ),
+                    (
+                        "minibatch_rows",
+                        Json::Num(self.counters.minibatch_rows as f64),
+                    ),
+                ]),
+            ),
+            ("dropped_spans", Json::Num(self.dropped_spans as f64)),
+        ])
+    }
+
+    /// The `--telemetry` console summary (multi-line, stderr-bound).
+    pub fn text_summary(&self) -> String {
+        let mut out = format!(
+            "telemetry iter {}: wall {:.1} ms, pool util {:.1}%, \
+             imbalance mean {:.2}x max {:.2}x, dropped {}",
+            self.iter,
+            self.wall_ms,
+            self.utilization * 100.0,
+            self.imbalance_mean,
+            self.imbalance_max,
+            self.dropped_spans,
+        );
+        for st in &self.stages {
+            if st.count == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "\n  {:<14} n={:<5} total {:>9.2} ms  p50 {:>8.3} ms  p99 {:>8.3} ms",
+                st.kind.label(),
+                st.count,
+                st.total_ms,
+                st.p50_ms,
+                st.p99_ms,
+            ));
+        }
+        let c = &self.counters;
+        out.push_str(&format!(
+            "\n  counters: env_steps={} arrived={} departed={} grid_kwh={:.2} \
+             nan_trips={} mb_rows={}",
+            c.env_steps,
+            c.cars_arrived,
+            c.cars_departed,
+            c.grid_kwh,
+            c.nan_guard_trips,
+            c.minibatch_rows,
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, lane: u32, seq: u64, t0_ns: u64, dur_ns: u64) -> SpanRec {
+        SpanRec { kind, lane, seq, t0_ns, dur_ns }
+    }
+
+    fn sample_drain() -> Drained {
+        let mut d = Drained::default();
+        // One 2-shard dispatch: lane 0 busy 4 ms, lane 1 busy 2 ms.
+        d.spans.push(span(SpanKind::PoolShard, 0, 1, 0, 4_000_000));
+        d.spans.push(span(SpanKind::PoolShard, 1, 1, 0, 2_000_000));
+        // A second dispatch, balanced.
+        d.spans.push(span(SpanKind::PoolShard, 0, 2, 5_000_000, 3_000_000));
+        d.spans.push(span(SpanKind::PoolShard, 1, 2, 5_000_000, 3_000_000));
+        d.spans.push(span(SpanKind::EnvStep, 0, 1, 100, 1_000_000));
+        d.spans.push(span(SpanKind::EnvStep, 1, 1, 100, 3_000_000));
+        d.spans.push(span(SpanKind::Rollout, 0, 0, 0, 8_000_000));
+        d.counters.env_steps = 128;
+        d.counters.grid_kwh = 2.25;
+        d
+    }
+
+    #[test]
+    fn report_covers_all_stages_and_shard_columns() {
+        let d = sample_drain();
+        let r = IterationReport::from_drained(3, 9.0, &d);
+        assert_eq!(r.stages.len(), SpanKind::STAGES.len());
+        let env = r.stages.iter().find(|s| s.kind == SpanKind::EnvStep).unwrap();
+        assert_eq!(env.count, 2);
+        assert!((env.total_ms - 4.0).abs() < 1e-9);
+        assert!(env.p50_ms <= env.p99_ms);
+        let adam = r.stages.iter().find(|s| s.kind == SpanKind::Adam).unwrap();
+        assert_eq!(adam.count, 0, "absent stages report zero, not vanish");
+        assert_eq!(r.shard_busy_ms.len(), 2);
+        assert!((r.shard_busy_ms[0] - 7.0).abs() < 1e-9);
+        assert!((r.shard_busy_ms[1] - 5.0).abs() < 1e-9);
+        // Epoch 1 imbalance 2.0, epoch 2 imbalance 1.0.
+        assert!((r.imbalance_mean - 1.5).abs() < 1e-9);
+        assert!((r.imbalance_max - 2.0).abs() < 1e-9);
+        // busy 12 ms over an 8 ms envelope × 2 lanes.
+        assert!((r.utilization - 0.75).abs() < 1e-9);
+        assert_eq!(r.counters.env_steps, 128);
+    }
+
+    #[test]
+    fn json_record_has_required_stage_keys() {
+        let d = sample_drain();
+        let r = IterationReport::from_drained(0, 1.0, &d);
+        let j = r.to_json();
+        let stages = j.get("stages").unwrap();
+        for key in [
+            "rollout",
+            "policy-forward",
+            "env-step",
+            "update-chunks",
+            "reduce",
+            "adam",
+            "eval",
+        ] {
+            let st = stages.get(key).unwrap_or_else(|| panic!("missing stage {key}"));
+            assert!(st.get("p50_ms").unwrap().as_f64().is_some());
+            assert!(st.get("p99_ms").unwrap().as_f64().is_some());
+        }
+        let shards = j.get("shards").unwrap();
+        assert!(shards.get("imbalance_mean").unwrap().as_f64().is_some());
+        assert!(shards.get("utilization").unwrap().as_f64().is_some());
+        assert_eq!(shards.get("busy_ms").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            j.get("counters").unwrap().get("env_steps").unwrap().as_usize(),
+            Some(128)
+        );
+        // The record round-trips through the in-tree parser (JSONL line).
+        let line = j.to_string();
+        assert!(!line.contains('\n'));
+        assert_eq!(Json::parse(&line).unwrap(), j);
+    }
+
+    #[test]
+    fn empty_drain_produces_neutral_report() {
+        let d = Drained::default();
+        let r = IterationReport::from_drained(0, 0.0, &d);
+        assert_eq!(r.utilization, 0.0);
+        assert_eq!(r.imbalance_mean, 1.0);
+        assert!(r.shard_busy_ms.is_empty());
+        assert!(r.stages.iter().all(|s| s.count == 0));
+        let _ = r.text_summary();
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 50.0), 2.0);
+        assert_eq!(percentile(&v, 99.0), 4.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+}

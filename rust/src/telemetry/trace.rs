@@ -1,0 +1,107 @@
+//! Chrome trace-event export (`--trace-out <file>`): every worker's
+//! spans on a timeline, viewable in Perfetto (https://ui.perfetto.dev)
+//! or chrome://tracing. One complete-event (`ph: "X"`) per span, with
+//! the pool lane as the thread row and the dispatch sequence id in args.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::{obj, Json};
+
+use super::SpanRec;
+
+/// Serialize spans (as drained across one or more iterations) into the
+/// Chrome trace-event JSON format. Timestamps are microseconds since the
+/// telemetry origin; `tid` is the pool lane (0 = the caller thread).
+pub fn chrome_trace_json(spans: &[SpanRec]) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(spans.len() + 8);
+    // Name the lane rows so Perfetto shows "lane 0 (caller)" etc.
+    let mut lanes: Vec<u32> = spans.iter().map(|s| s.lane).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    for lane in &lanes {
+        let name = if *lane == 0 {
+            "lane 0 (caller)".to_string()
+        } else {
+            format!("lane {lane}")
+        };
+        events.push(obj(vec![
+            ("name", Json::Str("thread_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(*lane as f64)),
+            ("args", obj(vec![("name", Json::Str(name))])),
+        ]));
+    }
+    for s in spans {
+        events.push(obj(vec![
+            ("name", Json::Str(s.kind.label().to_string())),
+            ("cat", Json::Str("telemetry".to_string())),
+            ("ph", Json::Str("X".to_string())),
+            ("ts", Json::Num(s.t0_ns as f64 / 1000.0)),
+            ("dur", Json::Num(s.dur_ns as f64 / 1000.0)),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(s.lane as f64)),
+            ("args", obj(vec![("seq", Json::Num(s.seq as f64))])),
+        ]));
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// Write the Chrome trace file (creating parent directories).
+pub fn write_chrome_trace(path: &Path, spans: &[SpanRec]) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(chrome_trace_json(spans).to_string().as_bytes())?;
+    f.write_all(b"\n")?;
+    f.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::SpanKind;
+
+    #[test]
+    fn trace_json_is_valid_and_complete() {
+        let spans = vec![
+            SpanRec {
+                kind: SpanKind::PoolShard,
+                lane: 0,
+                seq: 1,
+                t0_ns: 1_000,
+                dur_ns: 2_500,
+            },
+            SpanRec {
+                kind: SpanKind::EnvStep,
+                lane: 1,
+                seq: 1,
+                t0_ns: 1_200,
+                dur_ns: 800,
+            },
+        ];
+        let j = chrome_trace_json(&spans);
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 thread_name metadata events + 2 span events.
+        assert_eq!(events.len(), 4);
+        let x: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .collect();
+        assert_eq!(x.len(), 2);
+        assert_eq!(x[0].get("name").unwrap().as_str(), Some("pool-shard"));
+        assert_eq!(x[0].get("ts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(x[0].get("dur").unwrap().as_f64(), Some(2.5));
+        assert_eq!(x[1].get("tid").unwrap().as_f64(), Some(1.0));
+        // Round-trips through the in-tree parser.
+        let re = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(re, j);
+    }
+}

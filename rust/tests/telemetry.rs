@@ -1,0 +1,282 @@
+//! ISSUE 8 gate: the telemetry layer is provably inert.
+//!
+//! Headline property: training results are **bitwise identical** with
+//! telemetry on vs off — trainer weights and fused-rollout buffers, at
+//! `--threads` {1, 4, max}, for the per-family oracle AND the shared-trunk
+//! generalist. The recorder only reads `Instant` and writes its own
+//! buffers; these tests pin that contract so no future instrumentation
+//! can leak into RNG streams, dispatch shapes, or float math.
+//!
+//! Telemetry state is process-global (enable flag, registry, dispatch
+//! counter), so every test serializes on one lock and leaves the recorder
+//! disabled and drained.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use chargax::baselines::ppo::{Learner, PpoParams};
+use chargax::env::scalar::ScenarioTables;
+use chargax::env::tree::StationConfig;
+use chargax::env::vector::{PolicyRollout, RolloutBuffers, VectorEnv};
+use chargax::fleet::{Fleet, FleetPpoTrainer, FleetSpec};
+use chargax::telemetry::{self, IterationReport, SpanKind};
+use chargax::util::json::Json;
+use chargax::util::rng::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn max_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Reset the recorder to a known state around each measured run.
+fn reset(on: bool) {
+    telemetry::set_enabled(on);
+    telemetry::drain();
+}
+
+/// Two fleet training iterations (demo grid, rollout + sharded update +
+/// per-cell greedy eval) → (flat weights, per-family stats, eval bits).
+fn run_training(threads: usize, generalist: bool) -> (Vec<f32>, Vec<(f32, f32)>, Vec<u32>) {
+    let mut fleet = Fleet::from_spec(&FleetSpec::demo(9, 1), None).unwrap();
+    fleet.set_threads(threads);
+    let hp = PpoParams {
+        rollout_steps: 16,
+        n_minibatches: 2,
+        update_epochs: 1,
+        hidden: 16,
+        threads,
+        ..Default::default()
+    };
+    let mut tr = if generalist {
+        FleetPpoTrainer::new_generalist(hp, fleet, 5)
+    } else {
+        FleetPpoTrainer::new(hp, fleet, 5)
+    };
+    let mut stats = Vec::new();
+    for _ in 0..2 {
+        for s in tr.iteration() {
+            stats.push((s.total_loss, s.entropy));
+        }
+    }
+    let evals: Vec<u32> = tr
+        .eval_all_cells_current()
+        .iter()
+        .flat_map(|c| [c.reward.to_bits(), c.profit.to_bits()])
+        .collect();
+    (tr.policy.params_flat(), stats, evals)
+}
+
+/// Trainer weights, stats, and eval returns are bitwise identical with
+/// telemetry on vs off at every thread count, for both fleet policy
+/// architectures.
+#[test]
+fn telemetry_is_bitwise_inert_for_training() {
+    let _g = lock();
+    for generalist in [false, true] {
+        let arch = if generalist { "generalist" } else { "per-family" };
+        for threads in [1usize, 4, max_threads()] {
+            reset(false);
+            let (w_off, s_off, e_off) = run_training(threads, generalist);
+            reset(true);
+            let (w_on, s_on, e_on) = run_training(threads, generalist);
+            let d = telemetry::drain();
+            reset(false);
+            assert!(
+                !d.spans.is_empty(),
+                "{arch} threads={threads}: telemetry-on run recorded no spans"
+            );
+            let wb_off: Vec<u32> = w_off.iter().map(|x| x.to_bits()).collect();
+            let wb_on: Vec<u32> = w_on.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(wb_off, wb_on, "{arch} threads={threads}: weights drifted");
+            assert_eq!(s_off, s_on, "{arch} threads={threads}: train stats drifted");
+            assert_eq!(e_off, e_on, "{arch} threads={threads}: eval returns drifted");
+        }
+    }
+}
+
+/// The fused rollout writes bitwise-identical env-side and policy-side
+/// buffers with telemetry on vs off at every thread count.
+#[test]
+fn telemetry_is_bitwise_inert_for_fused_rollout() {
+    let _g = lock();
+    let t_len = 40;
+    let b = 48;
+    let build = || {
+        let tables = Arc::new(ScenarioTables::synthetic(1.2));
+        VectorEnv::new(StationConfig::default(), tables, b, 77)
+    };
+    let proto = build();
+    let learner =
+        Learner::new(&mut Rng::new(23), proto.obs_dim(), 24, proto.action_nvec());
+    let (d, p) = (proto.obs_dim(), proto.n_ports());
+    drop(proto);
+    let run = |threads: usize, on: bool| -> Vec<u32> {
+        reset(on);
+        let mut env = build();
+        env.set_threads(threads);
+        let mut obs = vec![0f32; (t_len + 1) * b * d];
+        let mut rew = vec![0f32; t_len * b];
+        let mut done = vec![0f32; t_len * b];
+        let mut profit = vec![0f32; t_len * b];
+        let mut act = vec![0usize; t_len * b * p];
+        let mut logp = vec![0f32; t_len * b];
+        let mut val = vec![0f32; t_len * b];
+        {
+            let mut rb = RolloutBuffers {
+                obs: &mut obs,
+                rewards: &mut rew,
+                dones: &mut done,
+                profits: &mut profit,
+            };
+            let mut pol =
+                PolicyRollout { actions: &mut act, logp: &mut logp, values: &mut val };
+            env.rollout_fused(t_len, &mut rb, &mut pol, &learner, 0xDEAD, false);
+        }
+        if on {
+            let drained = telemetry::drain();
+            assert!(
+                drained.counters.env_steps >= (t_len * b) as u64,
+                "threads={threads}: env_steps counter missed steps"
+            );
+        }
+        reset(false);
+        obs.iter()
+            .chain(rew.iter())
+            .chain(done.iter())
+            .chain(profit.iter())
+            .chain(logp.iter())
+            .chain(val.iter())
+            .map(|x| x.to_bits())
+            .chain(act.iter().map(|&a| a as u32))
+            .collect()
+    };
+    for threads in [1usize, 4, max_threads()] {
+        let off = run(threads, false);
+        let on = run(threads, true);
+        assert_eq!(off, on, "threads={threads}: fused-rollout checksum drifted");
+    }
+}
+
+/// One instrumented fleet iteration produces a report that covers every
+/// pipeline stage, exact env-step accounting, and sane shard columns.
+#[test]
+fn fleet_iteration_report_covers_stages_and_counters() {
+    let _g = lock();
+    reset(true);
+    let mut fleet = Fleet::from_spec(&FleetSpec::demo(9, 1), None).unwrap();
+    fleet.set_threads(4);
+    let hp = PpoParams {
+        rollout_steps: 16,
+        n_minibatches: 2,
+        update_epochs: 1,
+        hidden: 16,
+        threads: 4,
+        ..Default::default()
+    };
+    let mut tr = FleetPpoTrainer::new(hp, fleet, 5);
+    let lanes = tr.fleet.total_lanes();
+    tr.iteration();
+    let d = telemetry::drain();
+    reset(false);
+
+    let rep = IterationReport::from_drained(3, 42.0, &d);
+    assert_eq!(rep.iter, 3);
+    assert_eq!(rep.stages.len(), SpanKind::STAGES.len());
+    let count_of = |kind: SpanKind| {
+        rep.stages.iter().find(|s| s.kind == kind).map(|s| s.count).unwrap_or(0)
+    };
+    assert_eq!(count_of(SpanKind::Rollout), 1, "one fused rollout per iteration");
+    assert!(count_of(SpanKind::PolicyForward) > 0, "no policy-forward spans");
+    assert!(count_of(SpanKind::EnvStep) > 0, "no env-step spans");
+    assert!(count_of(SpanKind::UpdateChunk) > 0, "no update-chunk spans");
+    assert!(count_of(SpanKind::Reduce) > 0, "no reduce spans");
+    assert!(count_of(SpanKind::Adam) > 0, "no adam spans");
+    assert_eq!(count_of(SpanKind::Eval), 0, "no eval ran yet");
+    for s in &rep.stages {
+        assert!(s.p50_ms <= s.p99_ms + 1e-9, "{}: p50 > p99", s.kind.label());
+        assert!(s.total_ms >= 0.0 && s.p99_ms.is_finite(), "{}", s.kind.label());
+    }
+    // Exactly one EnvStep counter tick per (lane, step) of the rollout —
+    // the greedy eval has not run, so nothing else steps envs.
+    assert_eq!(rep.counters.env_steps, (lanes * 16) as u64, "env-step accounting");
+    assert!(rep.counters.minibatch_rows > 0, "no minibatch rows counted");
+    assert!(rep.dropped_spans == 0, "spans dropped in a tiny run");
+    assert!(!rep.shard_busy_ms.is_empty(), "no per-shard busy time");
+    assert!(rep.utilization > 0.0 && rep.utilization <= 1.0, "{}", rep.utilization);
+    assert!(rep.imbalance_max >= rep.imbalance_mean, "imbalance ordering");
+    assert!(rep.imbalance_mean >= 1.0, "imbalance ratio is max/min >= 1");
+
+    // The JSONL record carries every stage label the ISSUE names.
+    let j = rep.to_json();
+    let txt = j.to_string();
+    let parsed = Json::parse(&txt).expect("record round-trips");
+    let stages = parsed.get("stages").and_then(|s| s.as_obj()).expect("stages object");
+    for kind in SpanKind::STAGES {
+        assert!(stages.contains_key(kind.label()), "record lacks stage {}", kind.label());
+    }
+    assert_eq!(parsed.get("type").and_then(|t| t.as_str()), Some("telemetry"));
+
+    // Eval spans show up once the greedy eval runs.
+    reset(true);
+    tr.eval_cells(0, 7);
+    let d2 = telemetry::drain();
+    reset(false);
+    let rep2 = IterationReport::from_drained(4, 1.0, &d2);
+    let evals =
+        rep2.stages.iter().find(|s| s.kind == SpanKind::Eval).map(|s| s.count).unwrap_or(0);
+    assert!(evals > 0, "eval pass recorded no eval spans");
+}
+
+/// The Chrome trace export is valid JSON with one complete event per span
+/// and per-lane thread metadata — loadable in Perfetto.
+#[test]
+fn chrome_trace_export_is_valid_and_complete() {
+    let _g = lock();
+    reset(true);
+    let mut fleet = Fleet::from_spec(&FleetSpec::demo(9, 1), None).unwrap();
+    fleet.set_threads(4);
+    let hp = PpoParams {
+        rollout_steps: 8,
+        n_minibatches: 2,
+        update_epochs: 1,
+        hidden: 16,
+        threads: 4,
+        ..Default::default()
+    };
+    let mut tr = FleetPpoTrainer::new(hp, fleet, 5);
+    tr.iteration();
+    let d = telemetry::drain();
+    reset(false);
+    assert!(!d.spans.is_empty());
+
+    let dir = std::env::temp_dir().join(format!(
+        "chargax-trace-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let path = dir.join("trace.json");
+    telemetry::write_chrome_trace(&path, &d.spans).expect("write trace");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = Json::parse(&text).expect("trace file is valid JSON");
+    let events = j.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents");
+    let complete: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .collect();
+    assert_eq!(complete.len(), d.spans.len(), "one X event per span");
+    for e in &complete {
+        assert!(e.get("name").and_then(|n| n.as_str()).is_some());
+        assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
+        assert!(e.get("dur").and_then(|t| t.as_f64()).is_some());
+        assert!(e.get("tid").and_then(|t| t.as_usize()).is_some());
+    }
+    assert!(
+        events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M")),
+        "no thread_name metadata events"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

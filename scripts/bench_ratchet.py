@@ -19,10 +19,20 @@ regression past the threshold emits a GitHub ``::warning`` annotation and
 exits 0 — flip ``--strict`` once the variance envelope is known and the
 ratchet should fail the job instead.
 
+A second, baseline-free gate covers the telemetry layer: pass
+``--overhead BENCH_overhead.json`` (written by ``cargo bench --bench
+runtime_overhead``) and the ``telemetry-overhead`` row's measured
+``overhead_pct`` — env-steps/sec with the span recorder off vs on — is
+checked against the ISSUE 8 budget (``--overhead-budget``, default 2%).
+No baseline file is involved because the bench A/B-measures both modes in
+one run.
+
 Usage:
   scripts/bench_ratchet.py [--current BENCH_table2.json]
                            [--current-fleet BENCH_fleet.json]
                            [--baseline BENCH_baseline.json]
+                           [--overhead BENCH_overhead.json]
+                           [--overhead-budget 2.0]
                            [--batch 256] [--threshold 0.20]
                            [--strict] [--update]
 
@@ -109,12 +119,45 @@ def compare_one(prefix: str, base_rows: list[dict], cur_rows: list[dict],
     return False
 
 
+def check_overhead(path: str, budget_pct: float) -> bool:
+    """Gate the telemetry-overhead row against its budget (baseline-free:
+    the bench measures off vs on in one run). Returns True on breach."""
+    try:
+        rows = load_rows(path)
+    except FileNotFoundError:
+        print(f"::warning::bench ratchet: {path} not found "
+              "(did the overhead bench run?)")
+        return False
+    row = next((r for r in rows
+                if str(r.get("variant", "")) == "telemetry-overhead"), None)
+    if row is None:
+        print(f"::warning::bench ratchet: {path} has no telemetry-overhead row")
+        return False
+    pct = float(row["overhead_pct"])
+    off = float(row.get("steps_per_sec_off", 0.0))
+    on = float(row.get("steps_per_sec_on", 0.0))
+    print(f"bench ratchet: telemetry overhead {pct:+.2f}% "
+          f"(off {off:,.0f} -> on {on:,.0f} env-steps/s, "
+          f"budget {budget_pct:.1f}%)")
+    if pct > budget_pct:
+        print(f"::warning::bench ratchet: telemetry overhead {pct:.2f}% "
+              f"exceeds the {budget_pct:.1f}% budget (ISSUE 8 / ROADMAP "
+              "§Telemetry) — the recorder must stay a thread-local push "
+              "per span")
+        return True
+    return False
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default="BENCH_table2.json")
     ap.add_argument("--current-fleet", default=None,
                     help="BENCH_fleet.json to merge in (fleet-generalist row)")
     ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--overhead", default=None,
+                    help="BENCH_overhead.json to gate telemetry overhead")
+    ap.add_argument("--overhead-budget", type=float, default=2.0,
+                    help="max telemetry overhead_pct before warning")
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--threshold", type=float, default=0.20)
     ap.add_argument("--strict", action="store_true",
@@ -123,12 +166,16 @@ def main() -> int:
                     help="rewrite the baseline from --current and exit")
     args = ap.parse_args()
 
+    overhead_breach = False
+    if args.overhead:
+        overhead_breach = check_overhead(args.overhead, args.overhead_budget)
+
     try:
         cur_rows = load_rows(args.current)
     except FileNotFoundError:
         print(f"::warning::bench ratchet: {args.current} not found "
               "(did the bench job run?)")
-        return 0
+        return 1 if (overhead_breach and args.strict) else 0
 
     # The fleet sweep writes its own artifact; merge its rows so the
     # fleet-generalist prefix is gated (and kept by --update) alongside
@@ -168,9 +215,9 @@ def main() -> int:
         base_rows = load_rows(args.baseline)
     except FileNotFoundError:
         print(f"bench ratchet: no baseline at {args.baseline}; nothing to compare")
-        return 0
+        return 1 if (overhead_breach and args.strict) else 0
 
-    regressed = False
+    regressed = overhead_breach
     for prefix in GATED_PREFIXES:
         regressed |= compare_one(prefix, base_rows, cur_rows,
                                  args.batch, args.threshold)

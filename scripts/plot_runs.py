@@ -10,9 +10,12 @@ Produces (when the corresponding CSV exists):
   fig5_shift.png         — train-year x eval-year matrix (paper Fig. 5)
   fig6to11_scenarios.png — scenario/region/mix bars (paper Fig. 6-11)
   train_shopping.png     — E2E loss/reward curve (examples/train_shopping)
+  telemetry_stages.png   — per-iteration stage time breakdown + pool
+                           utilization (runs/telemetry.jsonl, `--telemetry`)
 """
 
 import csv
+import json
 import os
 import sys
 from collections import defaultdict
@@ -166,6 +169,67 @@ def plot_e2e(runs, out):
     fig.savefig(os.path.join(out, "train_shopping.png"), dpi=130)
 
 
+STAGE_ORDER = [
+    "rollout", "policy-forward", "env-step",
+    "update-chunks", "reduce", "adam", "eval",
+]
+
+
+def read_telemetry(path):
+    """One dict per JSONL record of type 'telemetry' (skips blank lines
+    and any foreign records sharing the sink)."""
+    recs = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            if rec.get("type") == "telemetry":
+                recs.append(rec)
+    return recs
+
+
+def plot_telemetry(runs, out):
+    recs = read_telemetry(os.path.join(runs, "telemetry.jsonl"))
+    if not recs:
+        print("skip: telemetry.jsonl has no telemetry records")
+        return
+    its = [int(r["iter"]) for r in recs]
+    fig, (ax1, ax2) = plt.subplots(
+        2, 1, figsize=(8, 6), sharex=True,
+        gridspec_kw={"height_ratios": [3, 1]},
+    )
+    # Stacked per-stage total time per iteration: where each iteration's
+    # wallclock actually went. Note policy-forward/env-step run INSIDE the
+    # rollout envelope (and update-chunks inside pool dispatches), so the
+    # stack shows instrumented work, not disjoint wallclock.
+    bottom = [0.0] * len(recs)
+    for si, stage in enumerate(STAGE_ORDER):
+        ys = [float(r["stages"].get(stage, {}).get("total_ms", 0.0)) for r in recs]
+        if not any(ys):
+            continue
+        ax1.bar(its, ys, 0.8, bottom=bottom, label=stage, color=f"C{si}")
+        bottom = [b + y for b, y in zip(bottom, ys)]
+    ax1.plot(its, [float(r["wall_ms"]) for r in recs], "k--", lw=1,
+             label="iteration wallclock")
+    ax1.set_ylabel("stage time (ms, summed over shards)")
+    ax1.set_title("Telemetry — per-iteration stage time breakdown")
+    ax1.legend(fontsize=8, ncol=2)
+    # Pool utilization + shard imbalance under the same x axis.
+    util = [float(r["shards"]["utilization"]) for r in recs]
+    imb = [float(r["shards"]["imbalance_mean"]) for r in recs]
+    ax2.plot(its, util, "C0", label="pool utilization")
+    ax2.set_ylim(0, 1.05)
+    ax2.set_ylabel("utilization", color="C0")
+    ax3 = ax2.twinx()
+    ax3.plot(its, imb, "C3", alpha=0.7, label="imbalance (mean max/min)")
+    ax3.set_ylabel("imbalance ratio", color="C3")
+    ax2.set_xlabel("iteration")
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "telemetry_stages.png"), dpi=130)
+
+
 def main():
     runs = sys.argv[1] if len(sys.argv) > 1 else "runs"
     out = sys.argv[2] if len(sys.argv) > 2 else runs
@@ -178,6 +242,7 @@ def main():
         ("fig5.csv", plot_fig5),
         ("fig6to8.csv", plot_scenarios),
         ("train_shopping.csv", plot_e2e),
+        ("telemetry.jsonl", plot_telemetry),
     ]:
         if maybe(os.path.join(runs, name)):
             fn(runs, out)
