@@ -88,6 +88,8 @@ class GymChargingEnv:
         n_ac: int = 6,
         seed: int = 0,
         v2g: bool = False,
+        grid_capacity_kw: Optional[float] = None,
+        grid_policy: str = "proportional",
     ):
         self.rng = np.random.default_rng(seed)
         self.tables = tables
@@ -95,6 +97,20 @@ class GymChargingEnv:
         # (N_LEVELS_BATTERY levels over [-1, 1]) instead of the unipolar
         # charge-only ladder; mirrors rust env/core.rs step_lane.
         self.v2g = v2g
+        # Feeder coupling: a finite grid_capacity_kw turns on the rust
+        # propose -> allocate -> commit semantics for this single station
+        # (a one-member coupling group): when the post-projection proposed
+        # grid draw exceeds the capacity, either every staged current is
+        # scaled by capacity/proposed ("proportional") or the step's buy
+        # price is multiplied by proposed/capacity ("price-feedback"), and
+        # a normalized feeder-headroom column is appended to observations.
+        # Mirrors rust env/core.rs proposed_grid_kw / commit_lane and
+        # fleet/grid.rs allocate / headroom.
+        if grid_policy not in ("proportional", "price-feedback"):
+            raise ValueError(f"unknown grid_policy {grid_policy!r}")
+        self.grid_capacity_kw = grid_capacity_kw
+        self.grid_policy = grid_policy
+        self.grid_headroom = 1.0
         self.evses: List[Evse] = [
             Evse(voltage=400.0, i_max=375.0, eta=0.95, is_dc=True) for _ in range(n_dc)
         ] + [
@@ -119,7 +135,8 @@ class GymChargingEnv:
 
     @property
     def obs_dim(self) -> int:
-        return 6 * len(self.evses) + 3 + 4 + 4
+        coupled = 1 if self.grid_capacity_kw is not None else 0
+        return 6 * len(self.evses) + 3 + 4 + 4 + coupled
 
     def action_nvec(self) -> List[int]:
         car_levels = N_LEVELS_BATTERY if self.v2g else N_LEVELS
@@ -174,6 +191,22 @@ class GymChargingEnv:
         b.i_drawn = max(min(p_target, r_ch, head_up), -min(r_dis, head_dn)) * 1000.0 / b.voltage
 
         excess = self._project_constraints()
+
+        # Feeder allocate + commit (rust commit_lane's budget guards):
+        # the proposal is read off the staged currents AFTER the tree
+        # projection, exactly where the rust propose phase ends.
+        if self.grid_capacity_kw is not None:
+            cap = self.grid_capacity_kw
+            proposed = self._proposed_grid_kw()
+            if proposed > cap and proposed > 0.0:
+                if self.grid_policy == "proportional":
+                    f = cap / proposed
+                    for e in self.evses:
+                        e.i_drawn *= f
+                    self.battery.i_drawn *= f
+                else:  # price-feedback
+                    price_buy *= proposed / cap
+            self.grid_headroom = min(max(1.0 - max(proposed, 0.0) / cap, 0.0), 1.0)
 
         # (ii) charge. Car-side discharge is accumulated here, at charge
         # time, so a car departing this same step still incurs the
@@ -270,6 +303,24 @@ class GymChargingEnv:
             self.battery.i_drawn *= scale[-1]
         return flows_excess
 
+    def _proposed_grid_kw(self) -> float:
+        """Grid-side power (kW, positive = import) the staged currents
+        would move this step — rust env/core.rs proposed_grid_kw: the
+        charge-phase SoC clamps and port efficiencies, read-only."""
+        grid_kwh = 0.0
+        for e in self.evses:
+            if e.car is None:
+                continue
+            p_kw = e.voltage * e.i_drawn / 1000.0
+            en = p_kw * DT_HOURS
+            en = max(min(en, (1.0 - e.car.soc) * e.car.cap), -e.car.soc * e.car.cap)
+            grid_kwh += en / e.eta if en > 0 else en * e.eta
+        b = self.battery
+        p_bat = b.voltage * b.i_drawn / 1000.0
+        e_bat = max(min(p_bat * DT_HOURS, (1.0 - b.soc) * b.capacity), -b.soc * b.capacity)
+        grid_kwh += e_bat
+        return grid_kwh / DT_HOURS
+
     def _sample_car(self, slot: int) -> Car:
         tb = self.tables
         up = tb["user_profile"]
@@ -325,6 +376,8 @@ class GymChargingEnv:
         out[b + 8] = self.tables["price_buy"][next_idx]
         out[b + 9] = self.tables["price_sell_grid"][idx]
         out[b + 10] = self.tables["moer"][idx]
+        if self.grid_capacity_kw is not None:
+            out[b + 11] = self.grid_headroom
         return out
 
 

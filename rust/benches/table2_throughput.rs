@@ -397,6 +397,48 @@ fn main() {
             ),
         }
     }
+    // Coupled rows: the same fused per-family nets with all three
+    // families on one shared feeder (proportional curtailment), so every
+    // step pays propose → fixed-order reduce → commit. Matched lane
+    // totals with the fused rows make the pair isolate the grid-coupling
+    // overhead; the ratchet gates the L=256 row.
+    let coupled_lanes: &[usize] = if smoke { &[256] } else { &[256, 1024] };
+    println!(
+        "\n{} sweep (shared feeder, two-phase step):",
+        FleetBenchPolicy::CoupledNet.label()
+    );
+    for &total in coupled_lanes {
+        match measure_fleet_throughput(
+            &FleetSpec::demo_coupled_total(7, total),
+            store.as_ref(),
+            0,
+            budget,
+            FleetBenchPolicy::CoupledNet,
+        ) {
+            Ok((steps_per_sec, s_per_100k, lanes, families)) => {
+                println!(
+                    "  L={lanes:<5} ({families} families) {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k"
+                );
+                fleet_rows.push(json::obj(vec![
+                    (
+                        "variant",
+                        Json::Str(format!(
+                            "{} (L={lanes})",
+                            FleetBenchPolicy::CoupledNet.label()
+                        )),
+                    ),
+                    ("batch", Json::Num(lanes as f64)),
+                    ("families", Json::Num(families as f64)),
+                    ("steps_per_sec", Json::Num(steps_per_sec)),
+                    ("s_per_100k", Json::Num(s_per_100k)),
+                ]));
+            }
+            Err(e) => println!(
+                "  {} L={total} skipped: {e:#}",
+                FleetBenchPolicy::CoupledNet.label()
+            ),
+        }
+    }
     let fleet_payload = json::obj(vec![
         ("bench", Json::Str("fleet_throughput".into())),
         ("unit", Json::Str("env_steps".into())),

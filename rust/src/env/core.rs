@@ -186,8 +186,34 @@ impl Scratch {
     }
 }
 
+/// A lane's share of its coupling group's feeder for one step, decided by
+/// the allocate phase between [`propose_lane`] and [`commit_lane`].
+/// `factor` scales every staged current (proportional curtailment);
+/// `buy_mult` scales the buy price instead (price-feedback). The
+/// uncoupled path commits with [`GridBudget::UNCURTAILED`], and the
+/// commit guards on `!= 1.0` so that path executes byte-identically to
+/// the pre-split step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GridBudget {
+    pub factor: f32,
+    pub buy_mult: f32,
+}
+
+impl GridBudget {
+    pub const UNCURTAILED: GridBudget = GridBudget { factor: 1.0, buy_mult: 1.0 };
+}
+
+/// Output of the propose phase for one lane: the pre-projection excess
+/// (carried to commit for the reward's excess penalty) and the grid-side
+/// power the staged currents would draw this step (positive = import).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Proposal {
+    pub excess_kw: f32,
+    pub grid_kw: f32,
+}
+
 pub fn obs_dim(cfg: &StationConfig) -> usize {
-    6 * cfg.n_chargers() + 3 + 4 + 4
+    6 * cfg.n_chargers() + 3 + 4 + 4 + (cfg.grid_coupled as usize)
 }
 
 pub fn action_nvec(cfg: &StationConfig) -> Vec<usize> {
@@ -223,7 +249,9 @@ pub fn reset_lane(
 
 /// One env step for one lane. `action[p]` is the discrete level per port.
 /// Semantically identical to the original per-object `ScalarEnv::step`
-/// (same transition order, same RNG draw order).
+/// (same transition order, same RNG draw order): the propose/commit split
+/// composes back into the original single-phase step when the budget is
+/// [`GridBudget::UNCURTAILED`].
 pub fn step_lane(
     lane: &mut LaneView<'_>,
     rng: &mut CounterRng,
@@ -233,12 +261,23 @@ pub fn step_lane(
     action: &[usize],
     scratch: &mut Scratch,
 ) -> StepInfo {
-    let c = cfg.n_chargers();
-    let price_idx = *lane.day as usize * 24 + hour(*lane.t);
-    let price_buy = tables.price_buy[price_idx];
-    let price_sell_grid = tables.price_sell_grid[price_idx];
-    let moer = tables.moer[price_idx];
+    let excess = stage_currents(lane, cfg, tree, action, scratch);
+    commit_lane(lane, rng, cfg, tree, tables, GridBudget::UNCURTAILED, excess)
+}
 
+/// Propose phase (i): map actions to clamped signed currents, project
+/// them through the electrical tree, and stage them in `lane.i_drawn`.
+/// Mutates ONLY `i_drawn` — no clock, price, SoC, or RNG effects — so a
+/// staged lane can wait for the allocate phase. Returns the
+/// pre-projection excess (kW) for the reward's excess penalty.
+pub fn stage_currents(
+    lane: &mut LaneView<'_>,
+    cfg: &StationConfig,
+    tree: &StationTree,
+    action: &[usize],
+    scratch: &mut Scratch,
+) -> f32 {
+    let c = cfg.n_chargers();
     // (i) apply actions: level -> fraction -> clamped signed current.
     // Charge-only stations map levels to [0, 1] of the port maximum; V2G
     // stations use the battery's symmetric ladder ([-1, 1]), with the
@@ -278,6 +317,90 @@ pub fn step_lane(
     }
     let excess = tree.project_currents_scratch(i_new, &mut scratch.leaf_scale);
     lane.i_drawn.copy_from_slice(i_new);
+    excess
+}
+
+/// Read-only preview of the grid-side power (kW, positive = import) the
+/// staged currents would move this step, mirroring the charge-phase SoC
+/// clamps and port efficiencies exactly. Because [`stage_currents`]
+/// already clamped every port to its SoC headroom, the committed grid
+/// energy under a proportional budget `f` is `f x` this proposal (the
+/// clamps are linear through zero and cannot newly bind when currents
+/// shrink) — which is what makes proportional curtailment conserve the
+/// feeder capacity exactly.
+pub fn proposed_grid_kw(lane: &LaneView<'_>, cfg: &StationConfig, tree: &StationTree) -> f32 {
+    let c = cfg.n_chargers();
+    let mut grid_kwh = 0f32;
+    for j in 0..c {
+        if !lane.present[j] {
+            continue;
+        }
+        let p_kw = tree.volt[j] * lane.i_drawn[j] / 1000.0;
+        let e = (p_kw * DT_HOURS)
+            .min((1.0 - lane.soc[j]) * lane.cap[j])
+            .max(-lane.soc[j] * lane.cap[j]);
+        grid_kwh += if e > 0.0 {
+            e / tree.eta_port[j]
+        } else {
+            e * tree.eta_port[j]
+        };
+    }
+    if cfg.battery_capacity_kwh > 0.0 {
+        let p_kw = tree.volt[c] * lane.i_drawn[c] / 1000.0;
+        let e = (p_kw * DT_HOURS)
+            .min((1.0 - *lane.battery_soc) * cfg.battery_capacity_kwh)
+            .max(-*lane.battery_soc * cfg.battery_capacity_kwh);
+        grid_kwh += e;
+    }
+    grid_kwh / DT_HOURS
+}
+
+/// Propose phase for one lane: stage currents and report what they would
+/// draw from the grid. No clock/price/SoC/RNG effects — the lane sits
+/// staged until [`commit_lane`] applies the allocated budget.
+pub fn propose_lane(
+    lane: &mut LaneView<'_>,
+    cfg: &StationConfig,
+    tree: &StationTree,
+    action: &[usize],
+    scratch: &mut Scratch,
+) -> Proposal {
+    let excess_kw = stage_currents(lane, cfg, tree, action, scratch);
+    let grid_kw = proposed_grid_kw(lane, cfg, tree);
+    Proposal { excess_kw, grid_kw }
+}
+
+/// Commit phase (ii)-(iv) + reward for one lane: apply the allocated
+/// budget to the staged currents, then charge, depart, arrive, and score
+/// exactly as the single-phase step always did. `excess` is the staged
+/// pre-projection excess from [`stage_currents`]/[`propose_lane`].
+pub fn commit_lane(
+    lane: &mut LaneView<'_>,
+    rng: &mut CounterRng,
+    cfg: &StationConfig,
+    tree: &StationTree,
+    tables: &ScenarioTables,
+    budget: GridBudget,
+    excess: f32,
+) -> StepInfo {
+    let c = cfg.n_chargers();
+    // Prices read at the still pre-increment clock — same values the
+    // single-phase step read before phase (i), which never touches t/day.
+    let price_idx = *lane.day as usize * 24 + hour(*lane.t);
+    let mut price_buy = tables.price_buy[price_idx];
+    let price_sell_grid = tables.price_sell_grid[price_idx];
+    let moer = tables.moer[price_idx];
+    // Budget guards: the uncoupled path commits UNCURTAILED and must not
+    // touch a single float (byte-for-byte contract with the pre-split
+    // step), so both applications are skipped at exactly 1.0.
+    if budget.factor != 1.0 {
+        for i in lane.i_drawn.iter_mut() {
+            *i *= budget.factor;
+        }
+    }
+    if budget.buy_mult != 1.0 {
+        price_buy *= budget.buy_mult;
+    }
 
     // (ii) charge. Car-side discharge is accumulated here, at charge
     // time, so a car that departs later in this same step still incurs
@@ -464,12 +587,16 @@ pub fn sample_car(
 }
 
 /// Observation for one lane, mirroring env.py::observe (same layout &
-/// normalizers). `out` has length [`obs_dim`].
+/// normalizers). `out` has length [`obs_dim`]. `headroom` is the lane's
+/// coupling group's normalized feeder headroom after the last allocate
+/// (1.0 before any step, and always 1.0 for uncoupled stations, whose
+/// observation simply has no such column).
 pub fn observe_lane(
     lane: &LaneRef<'_>,
     cfg: &StationConfig,
     tree: &StationTree,
     tables: &ScenarioTables,
+    headroom: f32,
     out: &mut [f32],
 ) {
     let c = cfg.n_chargers();
@@ -519,6 +646,9 @@ pub fn observe_lane(
     out[b + 8] = tables.price_buy[idx_next];
     out[b + 9] = tables.price_sell_grid[idx];
     out[b + 10] = tables.moer[idx];
+    if cfg.grid_coupled {
+        out[b + 11] = headroom;
+    }
 }
 
 #[cfg(test)]
@@ -681,6 +811,130 @@ mod tests {
         assert_eq!(*action_nvec(&plain).last().unwrap(), N_LEVELS_BATTERY);
     }
 
+    /// The tentpole's composition contract: propose + commit(UNCURTAILED)
+    /// must BE the single-phase step, bit for bit, through full episodes
+    /// with arrivals, departures, V2G discharge, and episode resets — the
+    /// pre-refactor oracle for every uncoupled trajectory in the repo.
+    #[test]
+    fn propose_commit_uncurtailed_matches_step_lane_bitwise() {
+        let cfg = StationConfig { v2g: true, ..StationConfig::default() };
+        let tree = StationTree::standard(&cfg);
+        let tables = ScenarioTables::synthetic(1.5);
+        let mut rng_a = crate::util::rng::CounterRng::new(7);
+        let mut rng_b = crate::util::rng::CounterRng::new(7);
+        let mut a = LaneState::empty(&cfg);
+        let mut b = LaneState::empty(&cfg);
+        reset_lane(&mut a.view(), &mut rng_a, &cfg, &tables);
+        reset_lane(&mut b.view(), &mut rng_b, &cfg, &tables);
+        let mut scratch = Scratch::new(cfg.n_ports());
+        let nvec = action_nvec(&cfg);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for step in 0..2 * STEPS_PER_EPISODE {
+            let action: Vec<usize> = nvec
+                .iter()
+                .enumerate()
+                .map(|(p, &n)| (step * 31 + p * 17) % n)
+                .collect();
+            let ia = step_lane(
+                &mut a.view(),
+                &mut rng_a,
+                &cfg,
+                &tree,
+                &tables,
+                &action,
+                &mut scratch,
+            );
+            let prop = propose_lane(&mut b.view(), &cfg, &tree, &action, &mut scratch);
+            let ib = commit_lane(
+                &mut b.view(),
+                &mut rng_b,
+                &cfg,
+                &tree,
+                &tables,
+                GridBudget::UNCURTAILED,
+                prop.excess_kw,
+            );
+            assert_eq!(ia.reward.to_bits(), ib.reward.to_bits(), "reward, step {step}");
+            assert_eq!(
+                ia.energy_grid_net_kwh.to_bits(),
+                ib.energy_grid_net_kwh.to_bits(),
+                "grid energy, step {step}"
+            );
+            assert_eq!(ia.done, ib.done, "done, step {step}");
+            assert_eq!(a.t, b.t, "clock, step {step}");
+            assert_eq!(a.day, b.day, "day, step {step}");
+            assert_eq!(a.battery_soc.to_bits(), b.battery_soc.to_bits(), "bsoc, step {step}");
+            assert_eq!(a.present, b.present, "presence, step {step}");
+            assert_eq!(bits(&a.soc), bits(&b.soc), "soc, step {step}");
+            assert_eq!(bits(&a.de_remain), bits(&b.de_remain), "de, step {step}");
+            assert_eq!(bits(&a.i_drawn), bits(&b.i_drawn), "currents, step {step}");
+            assert_eq!(a.ep_return.to_bits(), b.ep_return.to_bits(), "return, step {step}");
+        }
+    }
+
+    /// Proportional curtailment is exact: because stage_currents already
+    /// clamped every port to its SoC headroom, committing with factor f
+    /// moves exactly f x the proposed grid energy; price-feedback commits
+    /// full energy and only reprices the import.
+    #[test]
+    fn grid_budget_scales_energy_or_reprices_import() {
+        let cfg = StationConfig::default();
+        let tree = StationTree::standard(&cfg);
+        let tables = ScenarioTables::synthetic(0.0); // no arrivals
+        let mut scratch = Scratch::new(cfg.n_ports());
+        let nvec = action_nvec(&cfg);
+        let full: Vec<usize> = nvec.iter().map(|&n| n - 1).collect(); // max charge
+        let park = |st: &mut LaneState| {
+            for j in 0..cfg.n_chargers() {
+                st.present[j] = true;
+                st.soc[j] = 0.3;
+                st.de_remain[j] = 40.0;
+                st.dt_remain[j] = 100.0;
+            }
+        };
+        let run = |budget: GridBudget| {
+            let mut st = LaneState::empty(&cfg);
+            park(&mut st);
+            let mut rng = crate::util::rng::CounterRng::new(3);
+            let prop = propose_lane(&mut st.view(), &cfg, &tree, &full, &mut scratch);
+            assert!(prop.grid_kw > 0.0, "a full-charge action must propose import");
+            let info = commit_lane(
+                &mut st.view(),
+                &mut rng,
+                &cfg,
+                &tree,
+                &tables,
+                budget,
+                prop.excess_kw,
+            );
+            (prop, info)
+        };
+        let (prop, base) = run(GridBudget::UNCURTAILED);
+        assert!(
+            (prop.grid_kw * DT_HOURS - base.energy_grid_net_kwh).abs()
+                <= 1e-4 * base.energy_grid_net_kwh.abs(),
+            "proposal {} kW must preview the uncurtailed commit {} kWh",
+            prop.grid_kw,
+            base.energy_grid_net_kwh
+        );
+        let f = 0.4f32;
+        let (_, cut) = run(GridBudget { factor: f, buy_mult: 1.0 });
+        assert!(
+            (cut.energy_grid_net_kwh - f * base.energy_grid_net_kwh).abs()
+                <= 1e-4 * base.energy_grid_net_kwh.abs(),
+            "factor {f} committed {} kWh, expected {}",
+            cut.energy_grid_net_kwh,
+            f * base.energy_grid_net_kwh
+        );
+        let (_, priced) = run(GridBudget { factor: 1.0, buy_mult: 2.0 });
+        assert_eq!(
+            priced.energy_grid_net_kwh.to_bits(),
+            base.energy_grid_net_kwh.to_bits(),
+            "price feedback must not curtail energy"
+        );
+        assert!(priced.profit < base.profit, "doubled buy price must cost profit");
+    }
+
     /// Regression for the next-hour price clamp: at hour 23 the "next
     /// price" must be hour 0 of the next day (mod n_days), not hour 23
     /// again.
@@ -711,6 +965,7 @@ mod tests {
             &cfg,
             &tree,
             &tables,
+            1.0,
             &mut out,
         );
         let b = 6 * cfg.n_chargers();

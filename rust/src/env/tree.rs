@@ -44,6 +44,13 @@ pub struct StationConfig {
     /// transition core (`charge_cars`) and the reward path already account
     /// car-side discharge; this flag only changes the action mapping.
     pub v2g: bool,
+    /// Grid coupling: the station belongs to a feeder coupling group
+    /// (fleet `grid` key with a concrete `capacity_kw`), so its
+    /// observation grows one trailing column — the group's normalized
+    /// feeder headroom after the last allocate. Like every other field,
+    /// this changes the obs space, so coupled and uncoupled stations can
+    /// never merge into one family.
+    pub grid_coupled: bool,
 }
 
 impl Default for StationConfig {
@@ -62,6 +69,7 @@ impl Default for StationConfig {
             battery_tau: 0.8,
             battery_soc0: 0.5,
             v2g: false,
+            grid_coupled: false,
         }
     }
 }

@@ -37,7 +37,7 @@ use crate::runtime::pool::WorkerPool;
 use crate::telemetry;
 use crate::util::rng::CounterRng;
 
-use super::core::{self, LaneRef, LaneView, Scratch, ScenarioTables, StepInfo};
+use super::core::{self, GridBudget, LaneRef, LaneView, Scratch, ScenarioTables, StepInfo};
 use super::tree::{StationConfig, StationTree};
 
 /// Don't shard below this batch size; the per-lane work is microseconds
@@ -89,6 +89,12 @@ pub struct VectorEnv {
     sensitive: Vec<bool>,
     // per-port lanes [B * P]
     i_drawn: Vec<f32>,
+    /// Normalized feeder headroom the NEXT observation reports (coupled
+    /// envs only — `cfg.grid_coupled` adds the obs column). The fleet's
+    /// allocate phase updates it between the propose and commit
+    /// dispatches; uncoupled envs keep the initial 1.0 forever and never
+    /// read it into an observation.
+    grid_headroom: f32,
 }
 
 /// Caller-provided PPO rollout buffers (time-major). `obs` holds one extra
@@ -182,6 +188,7 @@ impl VectorEnv {
             tau: vec![0.0; b * c],
             sensitive: vec![false; b * c],
             i_drawn: vec![0.0; b * p],
+            grid_headroom: 1.0,
             cfg,
         };
         env.reset_all();
@@ -232,6 +239,18 @@ impl VectorEnv {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Set the feeder-headroom value the next observations report (the
+    /// fleet allocate phase calls this between the propose and commit
+    /// dispatches). No-op in effect for uncoupled envs: without
+    /// `cfg.grid_coupled` the obs has no headroom column.
+    pub fn set_grid_headroom(&mut self, headroom: f32) {
+        self.grid_headroom = headroom;
+    }
+
+    pub fn grid_headroom(&self) -> f32 {
+        self.grid_headroom
     }
 
     pub fn tables_for(&self, lane: usize) -> &ScenarioTables {
@@ -556,6 +575,7 @@ impl VectorEnv {
             &self.cfg,
             &self.tree,
             &self.tables[self.lane_scenario[lane] as usize],
+            self.grid_headroom,
             out,
         );
     }
@@ -570,18 +590,63 @@ impl VectorEnv {
     /// so the shard can run its own policy forwards before stepping.
     pub(crate) fn shard_tasks<'a>(
         &'a mut self,
-        mut acts: StepActs<'a>,
+        acts: StepActs<'a>,
         infos: &'a mut [StepInfo],
         out: Option<StepOut<'a>>,
         shards: usize,
     ) -> Vec<ShardTask<'a>> {
-        assert_eq!(infos.len(), self.b, "infos must be [B]");
+        self.shard_tasks_mode(acts, infos, out, shards, StepMode::Full)
+    }
+
+    /// [`VectorEnv::shard_tasks`] with an explicit step phase. A propose
+    /// dispatch carries no infos/out (nothing is committed yet) and writes
+    /// only the mode's per-lane proposal buffers; a commit dispatch
+    /// carries no action source. Shard boundaries are identical across
+    /// the phases (same `(B, shards)` split), so a propose + commit pair
+    /// covers exactly the lanes a single `Full` dispatch would.
+    pub(crate) fn shard_tasks_mode<'a>(
+        &'a mut self,
+        mut acts: StepActs<'a>,
+        infos: &'a mut [StepInfo],
+        out: Option<StepOut<'a>>,
+        shards: usize,
+        mut mode: StepMode<'a>,
+    ) -> Vec<ShardTask<'a>> {
+        let proposing = matches!(mode, StepMode::Propose { .. });
+        match &mode {
+            StepMode::Full => assert!(
+                !matches!(acts, StepActs::Committed),
+                "a full step needs an action source"
+            ),
+            StepMode::Propose { grid_kw, excess } => {
+                assert_eq!(grid_kw.len(), self.b, "propose grid_kw must be [B]");
+                assert_eq!(excess.len(), self.b, "propose excess must be [B]");
+                assert!(out.is_none(), "propose commits nothing — no step outputs");
+                assert!(
+                    !matches!(acts, StepActs::Committed),
+                    "a propose dispatch needs an action source"
+                );
+            }
+            StepMode::Commit { excess, .. } => {
+                assert_eq!(excess.len(), self.b, "commit excess must be [B]");
+                assert!(
+                    matches!(acts, StepActs::Committed),
+                    "a commit dispatch must not re-act (currents already staged)"
+                );
+            }
+        }
+        if proposing {
+            assert!(infos.is_empty(), "propose produces no StepInfo");
+        } else {
+            assert_eq!(infos.len(), self.b, "infos must be [B]");
+        }
         let shards = shards.clamp(1, self.b.max(1));
         let lanes_per = self.b.div_ceil(shards);
         match &acts {
             StepActs::Given(a) => {
                 assert_eq!(a.len(), self.b * self.p, "actions must be [B * n_ports]");
             }
+            StepActs::Committed => {}
             StepActs::Fused(f) => {
                 let d = core::obs_dim(&self.cfg);
                 assert_eq!(f.obs_t.len(), self.b * d, "fused obs_t must be [B * obs_dim]");
@@ -619,6 +684,7 @@ impl VectorEnv {
             ref mut tau,
             ref mut sensitive,
             ref mut i_drawn,
+            grid_headroom,
             ..
         } = *self;
         let d = core::obs_dim(cfg);
@@ -673,6 +739,23 @@ impl VectorEnv {
                 StepOut { obs: obs_h, rewards: rew_h, dones: done_h, profits: prof_h }
             });
 
+            // This shard's slice of the step-phase buffers.
+            let task_mode = match &mut mode {
+                StepMode::Full => StepMode::Full,
+                StepMode::Propose { grid_kw, excess } => {
+                    let (g_h, g_r) = std::mem::take(grid_kw).split_at_mut(take);
+                    *grid_kw = g_r;
+                    let (e_h, e_r) = std::mem::take(excess).split_at_mut(take);
+                    *excess = e_r;
+                    StepMode::Propose { grid_kw: g_h, excess: e_h }
+                }
+                StepMode::Commit { budget, excess } => {
+                    let (e_h, e_r) = excess.split_at(take);
+                    *excess = e_r;
+                    StepMode::Commit { budget: *budget, excess: e_h }
+                }
+            };
+
             // This shard's slice of the action source (and, in fused mode,
             // of the policy input/output buffers + one scratch).
             let task_acts = match &mut acts {
@@ -681,6 +764,7 @@ impl VectorEnv {
                     *a = rest;
                     ShardActs::Given(head)
                 }
+                StepActs::Committed => ShardActs::Committed,
                 StepActs::Fused(f) => {
                     let (obs_h, obs_r) = f.obs_t.split_at(take * d);
                     f.obs_t = obs_r;
@@ -731,8 +815,10 @@ impl VectorEnv {
                 sensitive: split_mut!(sens, take * c),
                 i_drawn: split_mut!(i_drawn, take * p),
                 acts: task_acts,
-                infos: split_mut!(infos, take),
+                infos: split_mut!(infos, if proposing { 0 } else { take }),
                 out: out_h,
+                mode: task_mode,
+                headroom: grid_headroom,
             });
             lane0 += take;
         }
@@ -751,9 +837,36 @@ pub(crate) struct StepOut<'a> {
 /// Whole-env action source for one step: caller-supplied rows (serial
 /// policy or scripted actions) or a fused policy the shards evaluate
 /// themselves. `shard_tasks` splits either variant into per-shard blocks.
+/// `Committed` is the commit dispatch of a two-phase coupled step: the
+/// matching propose dispatch already staged every lane's currents, so no
+/// action source exists (or is needed).
 pub(crate) enum StepActs<'a> {
     Given(&'a [usize]),
     Fused(FusedStep<'a>),
+    Committed,
+}
+
+/// Which phase of the step a dispatch runs. Uncoupled envs always use
+/// `Full` (the single-phase [`core::step_lane`] — byte-identical to the
+/// pre-coupling runtime). A feeder-coupled env steps in two dispatches:
+/// `Propose` stages currents and records each lane's would-be grid draw
+/// (kW) and pre-projection excess; the caller reduces the draws, picks a
+/// [`GridBudget`] per coupling group, and dispatches `Commit` to apply it.
+pub(crate) enum StepMode<'a> {
+    Full,
+    Propose {
+        /// Per-lane proposed grid draw (kW), written by the shards.
+        grid_kw: &'a mut [f32],
+        /// Per-lane pre-projection excess (kW), carried to the commit.
+        excess: &'a mut [f32],
+    },
+    Commit {
+        /// The group's allocation (same for every lane of the env — an
+        /// env belongs to at most one coupling group).
+        budget: GridBudget,
+        /// The per-lane excess recorded by the propose dispatch.
+        excess: &'a [f32],
+    },
 }
 
 /// Env-wide fused-policy inputs/outputs for one step (see
@@ -774,11 +887,13 @@ pub(crate) struct FusedStep<'a> {
     pub(crate) scratch: &'a mut [MlpScratch],
 }
 
-/// One shard's slice of [`StepActs`]: either its lanes' pre-filled action
-/// rows, or the fused-policy block it must evaluate before stepping.
+/// One shard's slice of [`StepActs`]: its lanes' pre-filled action rows,
+/// the fused-policy block it must evaluate before stepping, or nothing
+/// (commit dispatch — currents already staged).
 pub(crate) enum ShardActs<'a> {
     Given(&'a [usize]),
     Fused(FusedShard<'a>),
+    Committed,
 }
 
 /// One shard's fused-policy work: forward + sample `[lane0, lane0 + n)`
@@ -823,6 +938,10 @@ pub(crate) struct ShardTask<'a> {
     acts: ShardActs<'a>,
     infos: &'a mut [StepInfo],
     out: Option<StepOut<'a>>,
+    /// Which step phase this task runs (its slice of the phase buffers).
+    mode: StepMode<'a>,
+    /// Feeder headroom the observe pass reports (coupled envs only).
+    headroom: f32,
 }
 
 impl ShardTask<'_> {
@@ -853,6 +972,7 @@ impl ShardTask<'_> {
         let actions: &[usize] = match &self.acts {
             ShardActs::Given(a) => *a,
             ShardActs::Fused(f) => &*f.actions,
+            ShardActs::Committed => &[],
         };
         // Telemetry: the env-step span covers step + observe for this
         // shard's whole lane block; domain counters accumulate in locals
@@ -860,8 +980,47 @@ impl ShardTask<'_> {
         // commit once per task.
         let _span = telemetry::Span::fine(telemetry::SpanKind::EnvStep);
         let recording = telemetry::recording();
-        let (mut arrived, mut departed, mut grid_kwh) = (0.0f64, 0.0f64, 0.0f64);
         let mut scratch = Scratch::new(p);
+        // Propose phase: stage currents and record each lane's would-be
+        // draw. Nothing commits — no RNG draw, no clock advance, no
+        // counters, no observation — so an allocate + commit can follow
+        // with the lane exactly where a single-phase step's phase (i)
+        // would have left it.
+        if let StepMode::Propose { grid_kw, excess } = &mut self.mode {
+            for lane in 0..self.t.len() {
+                let mut view = LaneView {
+                    t: &mut self.t[lane],
+                    day: &mut self.day[lane],
+                    battery_soc: &mut self.battery_soc[lane],
+                    ep_return: &mut self.ep_return[lane],
+                    ep_profit: &mut self.ep_profit[lane],
+                    present: &mut self.present[lane * c..(lane + 1) * c],
+                    soc: &mut self.soc[lane * c..(lane + 1) * c],
+                    de_remain: &mut self.de_remain[lane * c..(lane + 1) * c],
+                    dt_remain: &mut self.dt_remain[lane * c..(lane + 1) * c],
+                    cap: &mut self.cap[lane * c..(lane + 1) * c],
+                    r_bar: &mut self.r_bar[lane * c..(lane + 1) * c],
+                    tau: &mut self.tau[lane * c..(lane + 1) * c],
+                    sensitive: &mut self.sensitive[lane * c..(lane + 1) * c],
+                    i_drawn: &mut self.i_drawn[lane * p..(lane + 1) * p],
+                };
+                excess[lane] = core::stage_currents(
+                    &mut view,
+                    self.cfg,
+                    self.tree,
+                    &actions[lane * p..(lane + 1) * p],
+                    &mut scratch,
+                );
+                grid_kw[lane] = core::proposed_grid_kw(&view, self.cfg, self.tree);
+            }
+            return;
+        }
+        let (budget, staged_excess): (GridBudget, Option<&[f32]>) = match &self.mode {
+            StepMode::Full => (GridBudget::UNCURTAILED, None),
+            StepMode::Commit { budget, excess } => (*budget, Some(excess)),
+            StepMode::Propose { .. } => unreachable!("handled above"),
+        };
+        let (mut arrived, mut departed, mut grid_kwh) = (0.0f64, 0.0f64, 0.0f64);
         for lane in 0..self.t.len() {
             let mut view = LaneView {
                 t: &mut self.t[lane],
@@ -880,15 +1039,30 @@ impl ShardTask<'_> {
                 i_drawn: &mut self.i_drawn[lane * p..(lane + 1) * p],
             };
             let tables = &self.tables[self.scen[lane] as usize];
-            let info = core::step_lane(
-                &mut view,
-                &mut self.rng[lane],
-                self.cfg,
-                self.tree,
-                tables,
-                &actions[lane * p..(lane + 1) * p],
-                &mut scratch,
-            );
+            let info = match staged_excess {
+                // Single-phase step: the uncoupled path, byte-identical
+                // to the pre-coupling runtime.
+                None => core::step_lane(
+                    &mut view,
+                    &mut self.rng[lane],
+                    self.cfg,
+                    self.tree,
+                    tables,
+                    &actions[lane * p..(lane + 1) * p],
+                    &mut scratch,
+                ),
+                // Commit phase: apply the group's allocation to the
+                // currents staged by the propose dispatch.
+                Some(ex) => core::commit_lane(
+                    &mut view,
+                    &mut self.rng[lane],
+                    self.cfg,
+                    self.tree,
+                    tables,
+                    budget,
+                    ex[lane],
+                ),
+            };
             self.infos[lane] = info;
             if recording {
                 arrived += info.arrived as f64;
@@ -916,6 +1090,7 @@ impl ShardTask<'_> {
                     self.cfg,
                     self.tree,
                     tables,
+                    self.headroom,
                     &mut out.obs[lane * d..(lane + 1) * d],
                 );
             }
@@ -1260,6 +1435,60 @@ mod tests {
                 assert!(!all_done);
             }
         }
+    }
+
+    #[test]
+    fn two_phase_dispatch_with_uncurtailed_budget_matches_step_all() {
+        // propose → (no-op allocate) → commit must reproduce the
+        // single-phase step bit for bit, even with DIFFERENT shard counts
+        // for the two phases (the per-lane proposal buffers are in env
+        // order, so phase shard plans are independent).
+        let b = 8;
+        let mut two = mixed_env(b);
+        let mut full = mixed_env(b);
+        let mut rng = Rng::new(5);
+        let mut grid_kw = vec![0f32; b];
+        let mut excess = vec![0f32; b];
+        let mut infos2 = vec![StepInfo::default(); b];
+        let mut infos1 = vec![StepInfo::default(); b];
+        for step in 0..150 {
+            let actions = random_actions(&mut rng, &full);
+            let mut tasks = two.shard_tasks_mode(
+                StepActs::Given(&actions),
+                &mut [],
+                None,
+                [1, 3][step % 2],
+                StepMode::Propose { grid_kw: &mut grid_kw, excess: &mut excess },
+            );
+            for t in tasks.iter_mut() {
+                t.run();
+            }
+            assert!(grid_kw.iter().all(|x| x.is_finite()));
+            let mut tasks = two.shard_tasks_mode(
+                StepActs::Committed,
+                &mut infos2,
+                None,
+                [2, 1][step % 2],
+                StepMode::Commit { budget: GridBudget::UNCURTAILED, excess: &excess },
+            );
+            for t in tasks.iter_mut() {
+                t.run();
+            }
+            full.step_all_sharded(&actions, &mut infos1, 1);
+            for lane in 0..b {
+                assert_eq!(
+                    infos2[lane].reward.to_bits(),
+                    infos1[lane].reward.to_bits(),
+                    "step {step} lane {lane}"
+                );
+                assert_eq!(infos2[lane].done, infos1[lane].done, "step {step} lane {lane}");
+            }
+        }
+        let mut o1 = vec![0f32; b * full.obs_dim()];
+        let mut o2 = o1.clone();
+        full.observe_all(&mut o1);
+        two.observe_all(&mut o2);
+        assert_eq!(o1, o2);
     }
 
     #[test]

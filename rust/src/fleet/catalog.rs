@@ -24,6 +24,24 @@ use crate::env::tree::StationConfig;
 use crate::util::json::Json;
 use crate::util::rng::CounterRng;
 
+use super::grid::{CurtailPolicy, GridSpec};
+
+/// Reject unknown keys in a spec object with a named error. A typo'd
+/// `holdout`/`grid`/axis key used to be silently ignored — dropping the
+/// constraint the author thought they expressed — so every schema object
+/// now enumerates its legal keys and fails loudly on anything else.
+fn reject_unknown_keys(j: &Json, allowed: &[&str], what: &str) -> Result<()> {
+    let Some(map) = j.as_obj() else {
+        bail!("{what} must be a JSON object");
+    };
+    for key in map.keys() {
+        if !allowed.contains(&key.as_str()) {
+            bail!("{what}: unknown key \"{key}\" (allowed: {})", allowed.join(", "));
+        }
+    }
+    Ok(())
+}
+
 /// Station-layout axis of the grid: the electrical shape of one family.
 /// Everything not listed here keeps the paper's Table 3 defaults.
 #[derive(Debug, Clone, PartialEq)]
@@ -60,6 +78,11 @@ impl StationLayout {
     }
 
     fn from_json(j: &Json) -> Result<StationLayout> {
+        reject_unknown_keys(
+            j,
+            &["n_dc", "n_ac", "battery_capacity_kwh", "battery_p_max_kw"],
+            "layout",
+        )?;
         let d = StationLayout::default();
         let num = |key: &str, dflt: f32| -> Result<f32> {
             match j.get(key) {
@@ -104,6 +127,11 @@ pub struct ScenarioSpec {
     pub region: String,
     pub layout: StationLayout,
     pub v2g: bool,
+    /// Feeder coupling (`grid` key): entries sharing a feeder name form
+    /// one coupling group whose summed draw is capped at `capacity_kw`.
+    /// `capacity_kw: null` (or no `grid` key) keeps the entry uncoupled —
+    /// byte-for-byte today's semantics.
+    pub grid: Option<GridSpec>,
 }
 
 impl Default for ScenarioSpec {
@@ -118,8 +146,43 @@ impl Default for ScenarioSpec {
             region: "EU".into(),
             layout: StationLayout::default(),
             v2g: false,
+            grid: None,
         }
     }
+}
+
+/// Parse one entry's `grid` object:
+/// `{"feeder": "name", "capacity_kw": N | null, "policy":
+/// "proportional" | "price-feedback"}`. `capacity_kw` absent or null
+/// documents the feeder without coupling; `policy` defaults to
+/// proportional.
+fn grid_from_json(j: &Json) -> Result<GridSpec> {
+    reject_unknown_keys(j, &["feeder", "capacity_kw", "policy"], "grid")?;
+    let feeder = j
+        .get("feeder")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("grid needs a \"feeder\" name"))?
+        .to_string();
+    let capacity_kw = match j.get("capacity_kw") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_f64()
+                .map(|x| x as f32)
+                .ok_or_else(|| anyhow!("grid \"capacity_kw\" must be a number or null"))?,
+        ),
+    };
+    let policy = match j.get("policy") {
+        None => CurtailPolicy::Proportional,
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("grid \"policy\" must be a string"))?;
+            CurtailPolicy::parse(s).ok_or_else(|| {
+                anyhow!("grid \"policy\" must be \"proportional\" or \"price-feedback\" (got \"{s}\")")
+            })?
+        }
+    };
+    Ok(GridSpec { feeder, capacity_kw, policy })
 }
 
 impl ScenarioSpec {
@@ -177,10 +240,32 @@ impl ScenarioSpec {
                 );
             }
         }
+        if let Some(g) = &self.grid {
+            if g.feeder.is_empty() {
+                bail!("fleet entry '{}': grid \"feeder\" must be non-empty", self.name);
+            }
+            if let Some(cap) = g.capacity_kw {
+                if !cap.is_finite() || cap <= 0.0 {
+                    bail!(
+                        "fleet entry '{}': grid \"capacity_kw\" must be finite and > 0 \
+                         (got {cap}); use null for an uncoupled feeder",
+                        self.name
+                    );
+                }
+            }
+        }
         Ok(())
     }
 
     fn from_json(j: &Json) -> Result<ScenarioSpec> {
+        reject_unknown_keys(
+            j,
+            &[
+                "name", "lanes", "countries", "years", "traffics", "profiles", "region",
+                "layout", "v2g", "grid",
+            ],
+            "fleet entry",
+        )?;
         let d = ScenarioSpec::default();
         let str_list = |key: &str, dflt: Vec<String>| -> Result<Vec<String>> {
             match j.get(key) {
@@ -230,6 +315,12 @@ impl ScenarioSpec {
                 .to_string(),
             layout,
             v2g: j.get("v2g").and_then(Json::as_bool).unwrap_or(false),
+            grid: match j.get("grid") {
+                None => None,
+                Some(g) => Some(
+                    grid_from_json(g).with_context(|| format!("fleet entry '{name}' grid"))?,
+                ),
+            },
             name,
         };
         spec.validate()?;
@@ -307,6 +398,37 @@ impl FleetSpec {
         f
     }
 
+    /// [`FleetSpec::demo`] with all three families coupled on one shared
+    /// feeder ("metro-west"), proportionally curtailed. Capacity scales
+    /// with the lane count (50 kW/lane — well under the 600 kW a station
+    /// root can draw) so the feeder genuinely binds under aggressive
+    /// charging at any fleet size.
+    pub fn demo_coupled(seed: u64, lanes_scale: usize) -> FleetSpec {
+        let mut f = FleetSpec::demo(seed, lanes_scale);
+        Self::couple_demo(&mut f);
+        f
+    }
+
+    /// [`FleetSpec::demo_total`] with the same shared-feeder coupling as
+    /// [`FleetSpec::demo_coupled`] (bench sweeps drive arbitrary totals).
+    pub fn demo_coupled_total(seed: u64, total_lanes: usize) -> FleetSpec {
+        let mut f = FleetSpec::demo_total(seed, total_lanes);
+        Self::couple_demo(&mut f);
+        f
+    }
+
+    fn couple_demo(f: &mut FleetSpec) {
+        let total: usize = f.specs.iter().map(|s| s.lanes).sum();
+        let grid = GridSpec {
+            feeder: "metro-west".into(),
+            capacity_kw: Some(50.0 * total as f32),
+            policy: CurtailPolicy::Proportional,
+        };
+        for s in &mut f.specs {
+            s.grid = Some(grid.clone());
+        }
+    }
+
     pub fn from_json_file(path: &str) -> Result<FleetSpec> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading fleet spec {path}"))?;
@@ -319,6 +441,7 @@ impl FleetSpec {
     /// "traffics", "profiles", "region", "layout": {...}, "v2g"}, ...],
     /// "holdout": ["profile/country/year/traffic", ...]}`.
     pub fn from_json(j: &Json) -> Result<FleetSpec> {
+        reject_unknown_keys(j, &["seed", "fleet", "holdout"], "fleet spec")?;
         let seed = j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
         let entries = j
             .get("fleet")
@@ -443,6 +566,12 @@ pub fn cell_name(sc: &Scenario) -> String {
 pub struct FamilyPlan {
     pub label: String,
     pub cfg: StationConfig,
+    /// The family's coupling spec, normalized: `Some` only for a feeder
+    /// with a concrete capacity (a `capacity_kw: null` grid key is
+    /// documentation, not coupling, and normalizes to `None` so the entry
+    /// merges and behaves exactly like an ungridded one). Families on the
+    /// same feeder form one coupling group in the fleet rollout.
+    pub grid: Option<GridSpec>,
     pub tables: Vec<Arc<ScenarioTables>>,
     pub cell_names: Vec<String>,
     pub lane_scenario: Vec<usize>,
@@ -522,6 +651,29 @@ pub fn expand(fleet: &FleetSpec, store: Option<&DataStore>) -> Result<Vec<Family
         }
     }
     let mut holdout_used = vec![false; fleet.holdout.len()];
+    // A feeder name is a physical asset: two entries naming the same
+    // feeder with different capacities/policies describe contradictory
+    // hardware, which would otherwise expand into two coupling groups
+    // that silently double-count the feeder.
+    let mut feeders: BTreeMap<&str, (&GridSpec, &str)> = BTreeMap::new();
+    for spec in &fleet.specs {
+        let Some(g) = &spec.grid else { continue };
+        match feeders.get(g.feeder.as_str()) {
+            None => {
+                feeders.insert(&g.feeder, (g, &spec.name));
+            }
+            Some((prev, prev_entry)) if *prev != g => {
+                bail!(
+                    "fleet entries '{}' and '{}' both name feeder \"{}\" but with \
+                     different capacity_kw/policy — one feeder, one definition",
+                    prev_entry,
+                    spec.name,
+                    g.feeder
+                );
+            }
+            Some(_) => {}
+        }
+    }
     let mut cache = TableCache::new();
     let mut families: Vec<FamilyPlan> = Vec::new();
     let mut seeder = CounterRng::derive(fleet.seed, 0xF1EE7);
@@ -560,7 +712,12 @@ pub fn expand(fleet: &FleetSpec, store: Option<&DataStore>) -> Result<Vec<Family
                 spec.name
             );
         }
-        let cfg = spec.layout.station_config(spec.v2g);
+        // Normalize: a grid key without a concrete capacity is pure
+        // documentation — the entry stays uncoupled and must merge (and
+        // behave) exactly like one with no grid key at all.
+        let grid = spec.grid.clone().filter(GridSpec::coupled);
+        let mut cfg = spec.layout.station_config(spec.v2g);
+        cfg.grid_coupled = grid.is_some();
         cfg.validate()
             .with_context(|| format!("fleet entry '{}' layout", spec.name))?;
         let mut order: Vec<usize> = (0..cells.len()).collect();
@@ -569,7 +726,12 @@ pub fn expand(fleet: &FleetSpec, store: Option<&DataStore>) -> Result<Vec<Family
             let j = rng.below(i as u32 + 1) as usize;
             order.swap(i, j);
         }
-        let fam_idx = match families.iter().position(|f| f.cfg == cfg) {
+        // Families merge on config AND coupling spec: same feeder, same
+        // electrical shape. Coupled-vs-uncoupled already differ in
+        // `cfg.grid_coupled`; the grid term keeps two coupled entries on
+        // DIFFERENT feeders in separate families so each backs its own
+        // coupling group.
+        let fam_idx = match families.iter().position(|f| f.cfg == cfg && f.grid == grid) {
             Some(i) => {
                 families[i].label.push('+');
                 families[i].label.push_str(&spec.name);
@@ -579,6 +741,7 @@ pub fn expand(fleet: &FleetSpec, store: Option<&DataStore>) -> Result<Vec<Family
                 families.push(FamilyPlan {
                     label: spec.name.clone(),
                     cfg: cfg.clone(),
+                    grid: grid.clone(),
                     tables: Vec::new(),
                     cell_names: Vec::new(),
                     lane_scenario: Vec::new(),
@@ -864,6 +1027,197 @@ mod tests {
         let specs = shape.learner_specs();
         assert_eq!(specs.len(), 3);
         assert_eq!(specs[0].0, shape.heads[0].obs_dim);
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_with_name() {
+        // Top-level fleet spec.
+        let bad = r#"{"seed": 1, "flet": [], "fleet": [{"name": "a", "lanes": 1}]}"#;
+        let err = FleetSpec::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown key \"flet\""), "{msg}");
+        assert!(msg.contains("fleet spec"), "{msg}");
+        // Entry level: a typo'd axis used to be silently ignored.
+        let bad = r#"{"fleet": [{"name": "a", "lanes": 1, "trafics": ["low"]}]}"#;
+        let err = FleetSpec::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown key \"trafics\""), "{msg}");
+        // Layout level.
+        let bad = r#"{"fleet": [{"name": "a", "lanes": 1,
+                                 "layout": {"n_dcs": 4}}]}"#;
+        let err = FleetSpec::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown key \"n_dcs\""), "{msg}");
+        assert!(msg.contains("'a'"), "entry not named: {msg}");
+        // Grid level.
+        let bad = r#"{"fleet": [{"name": "a", "lanes": 1,
+                                 "grid": {"feeder": "f", "capacity": 100}}]}"#;
+        let err = FleetSpec::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown key \"capacity\""), "{msg}");
+        assert!(msg.contains("capacity_kw"), "allowed keys not listed: {msg}");
+    }
+
+    #[test]
+    fn grid_key_parses_and_null_capacity_is_uncoupled() {
+        let text = r#"{"fleet": [
+            {"name": "a", "lanes": 2,
+             "grid": {"feeder": "west", "capacity_kw": 300,
+                      "policy": "price-feedback"}},
+            {"name": "b", "lanes": 2, "traffics": ["low"],
+             "grid": {"feeder": "east", "capacity_kw": null}}
+        ]}"#;
+        let spec = FleetSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+        let a = spec.specs[0].grid.as_ref().unwrap();
+        assert_eq!(a.feeder, "west");
+        assert_eq!(a.capacity_kw, Some(300.0));
+        assert_eq!(a.policy, CurtailPolicy::PriceFeedback);
+        assert!(a.coupled());
+        let b = spec.specs[1].grid.as_ref().unwrap();
+        assert_eq!(b.capacity_kw, None);
+        assert!(!b.coupled(), "null capacity documents the feeder without coupling");
+        // Policy defaults to proportional; bad names error with the value.
+        let dflt = r#"{"fleet": [{"name": "a", "lanes": 1, "grid": {"feeder": "f"}}]}"#;
+        let spec = FleetSpec::from_json(&Json::parse(dflt).unwrap()).unwrap();
+        assert_eq!(spec.specs[0].grid.as_ref().unwrap().policy, CurtailPolicy::Proportional);
+        let bad = r#"{"fleet": [{"name": "a", "lanes": 1,
+                                 "grid": {"feeder": "f", "policy": "hard"}}]}"#;
+        let err = FleetSpec::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("\"hard\""), "{err:#}");
+        // Validation: capacity must be finite and positive when set.
+        let bad = r#"{"fleet": [{"name": "a", "lanes": 1,
+                                 "grid": {"feeder": "f", "capacity_kw": -5}}]}"#;
+        let err = FleetSpec::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("capacity_kw"), "{err:#}");
+        let bad = r#"{"fleet": [{"name": "a", "lanes": 1, "grid": {"feeder": ""}}]}"#;
+        let err = FleetSpec::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("feeder"), "{err:#}");
+    }
+
+    #[test]
+    fn coupled_families_do_not_merge_with_uncoupled_or_other_feeders() {
+        let coupled = |name: &str, feeder: &str| ScenarioSpec {
+            name: name.into(),
+            lanes: 2,
+            grid: Some(GridSpec {
+                feeder: feeder.into(),
+                capacity_kw: Some(200.0),
+                policy: CurtailPolicy::Proportional,
+            }),
+            ..ScenarioSpec::default()
+        };
+        // Same layout, but coupled vs uncoupled: two families, and only
+        // the coupled one grows the headroom obs column.
+        let plain = ScenarioSpec { name: "plain".into(), lanes: 2, ..ScenarioSpec::default() };
+        let fams = expand(
+            &FleetSpec {
+                seed: 1,
+                specs: vec![coupled("c", "west"), plain],
+                holdout: Vec::new(),
+            },
+            None,
+        )
+        .unwrap();
+        assert_eq!(fams.len(), 2);
+        assert!(fams[0].cfg.grid_coupled && fams[0].grid.is_some());
+        assert!(!fams[1].cfg.grid_coupled && fams[1].grid.is_none());
+        assert_eq!(
+            crate::env::core::obs_dim(&fams[0].cfg),
+            crate::env::core::obs_dim(&fams[1].cfg) + 1,
+            "coupling adds exactly the headroom column"
+        );
+        // Same layout, different feeders: separate families (separate
+        // coupling groups); same feeder merges.
+        let fams = expand(
+            &FleetSpec {
+                seed: 1,
+                specs: vec![coupled("c1", "west"), coupled("c2", "east")],
+                holdout: Vec::new(),
+            },
+            None,
+        )
+        .unwrap();
+        assert_eq!(fams.len(), 2, "different feeders must not share a family");
+        let mut same = coupled("c2", "west");
+        same.traffics = vec!["low".into()];
+        let fams = expand(
+            &FleetSpec {
+                seed: 1,
+                specs: vec![coupled("c1", "west"), same],
+                holdout: Vec::new(),
+            },
+            None,
+        )
+        .unwrap();
+        assert_eq!(fams.len(), 1, "same feeder + layout must merge");
+        assert_eq!(fams[0].label, "c1+c2");
+        assert_eq!(fams[0].grid.as_ref().unwrap().feeder, "west");
+    }
+
+    #[test]
+    fn null_capacity_grid_expands_byte_identical_to_no_grid() {
+        let mut documented = FleetSpec::demo(7, 1);
+        for s in &mut documented.specs {
+            s.grid = Some(GridSpec {
+                feeder: "paper-only".into(),
+                capacity_kw: None,
+                policy: CurtailPolicy::Proportional,
+            });
+        }
+        let a = expand(&FleetSpec::demo(7, 1), None).unwrap();
+        let b = expand(&documented, None).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.cfg, y.cfg);
+            assert!(!y.cfg.grid_coupled);
+            assert_eq!(y.grid, None, "null capacity normalizes to an ungridded family");
+            assert_eq!(x.lane_scenario, y.lane_scenario);
+            assert_eq!(x.seeds, y.seeds);
+            assert_eq!(x.cell_names, y.cell_names);
+        }
+    }
+
+    #[test]
+    fn conflicting_feeder_definitions_are_rejected() {
+        let mk = |name: &str, cap: f32| ScenarioSpec {
+            name: name.into(),
+            lanes: 2,
+            grid: Some(GridSpec {
+                feeder: "west".into(),
+                capacity_kw: Some(cap),
+                policy: CurtailPolicy::Proportional,
+            }),
+            ..ScenarioSpec::default()
+        };
+        let err = expand(
+            &FleetSpec {
+                seed: 1,
+                specs: vec![mk("a", 200.0), mk("b", 300.0)],
+                holdout: Vec::new(),
+            },
+            None,
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("\"west\""), "feeder not named: {msg}");
+        assert!(msg.contains("'a'") && msg.contains("'b'"), "entries not named: {msg}");
+    }
+
+    #[test]
+    fn demo_coupled_shares_one_feeder_across_all_families() {
+        let fams = expand(&FleetSpec::demo_coupled(7, 1), None).unwrap();
+        assert_eq!(fams.len(), 3);
+        let base = expand(&FleetSpec::demo(7, 1), None).unwrap();
+        for (f, b) in fams.iter().zip(&base) {
+            assert!(f.cfg.grid_coupled);
+            let g = f.grid.as_ref().expect("every demo_coupled family is coupled");
+            assert_eq!(g.feeder, "metro-west");
+            assert_eq!(g.capacity_kw, Some(50.0 * 20.0));
+            // Coupling changes ONLY the obs column — lane assignment and
+            // seeds stay exactly the uncoupled demo's.
+            assert_eq!(f.lane_scenario, b.lane_scenario);
+            assert_eq!(f.seeds, b.seeds);
+        }
     }
 
     #[test]

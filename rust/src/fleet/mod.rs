@@ -27,6 +27,7 @@
 //! rust/tests/fleet.rs).
 
 pub mod catalog;
+pub mod grid;
 pub mod rollout;
 
 use std::sync::Arc;
@@ -41,6 +42,7 @@ use crate::runtime::pool::WorkerPool;
 pub use catalog::{
     expand, FleetSpec, GridShape, HeadSpec, ScenarioSpec, StationLayout, TableCache,
 };
+pub use grid::{CurtailPolicy, GridSpec};
 pub use rollout::{
     family_policy_seed, measure_fleet_throughput, CellEval, FamilyStats, FleetBenchPolicy,
     FleetPolicy, FleetPpoTrainer,
@@ -66,6 +68,11 @@ pub struct Fleet {
     /// zero-shot by per-cell eval. Empty for hand-built fleets and specs
     /// without a `holdout` key.
     holdout: Vec<Vec<(String, Arc<ScenarioTables>)>>,
+    /// Per-env feeder coupling (`grid` schema key, normalized): `Some`
+    /// exactly for families whose `cfg.grid_coupled` is set. Families
+    /// sharing a feeder name form one coupling group — see
+    /// [`Fleet::coupling_groups`]. Always `None` for hand-built fleets.
+    grids: Vec<Option<GridSpec>>,
 }
 
 impl Fleet {
@@ -104,6 +111,7 @@ impl Fleet {
             }
         }
         let holdout = vec![Vec::new(); envs.len()];
+        let grids = vec![None; envs.len()];
         Ok(Fleet {
             envs,
             labels,
@@ -112,6 +120,7 @@ impl Fleet {
             pool: None,
             aux_pool: None,
             holdout,
+            grids,
         })
     }
 
@@ -124,6 +133,7 @@ impl Fleet {
         let mut labels = Vec::with_capacity(families.len());
         let mut cell_labels = Vec::with_capacity(families.len());
         let mut holdout = Vec::with_capacity(families.len());
+        let mut grids = Vec::with_capacity(families.len());
         for fam in families {
             envs.push(VectorEnv::with_seeds(
                 fam.cfg,
@@ -136,9 +146,11 @@ impl Fleet {
             holdout.push(
                 fam.holdout_names.into_iter().zip(fam.holdout_tables).collect(),
             );
+            grids.push(fam.grid);
         }
         let mut fleet = Fleet::from_envs_with_cells(envs, labels, cell_labels)?;
         fleet.holdout = holdout;
+        fleet.grids = grids;
         Ok(fleet)
     }
 
@@ -165,6 +177,34 @@ impl Fleet {
     /// per-cell eval.
     pub fn holdout_cells(&self, e: usize) -> &[(String, Arc<ScenarioTables>)] {
         &self.holdout[e]
+    }
+
+    /// Feeder coupling of family `e` (`None` for uncoupled families and
+    /// every hand-built fleet).
+    pub fn grid(&self, e: usize) -> Option<&GridSpec> {
+        self.grids[e].as_ref()
+    }
+
+    /// Whether any family is feeder-coupled — i.e. whether the rollout
+    /// must run the two-phase propose → allocate → commit step at all.
+    pub fn has_coupling(&self) -> bool {
+        self.grids.iter().any(Option::is_some)
+    }
+
+    /// Coupling groups in deterministic first-appearance env order: one
+    /// `(spec, member env indices)` entry per distinct feeder name.
+    /// Catalog expansion already guarantees one definition per feeder, so
+    /// the first spec seen for a name is THE spec.
+    pub fn coupling_groups(&self) -> Vec<(GridSpec, Vec<usize>)> {
+        let mut groups: Vec<(GridSpec, Vec<usize>)> = Vec::new();
+        for (e, g) in self.grids.iter().enumerate() {
+            let Some(g) = g else { continue };
+            match groups.iter_mut().find(|(spec, _)| spec.feeder == g.feeder) {
+                Some((_, members)) => members.push(e),
+                None => groups.push((g.clone(), vec![e])),
+            }
+        }
+        groups
     }
 
     /// Policy input/output shape of the whole fleet: padded obs width plus
@@ -293,6 +333,26 @@ mod tests {
         // one-thread budget: everything single-shard
         fleet.set_threads(1);
         assert_eq!(fleet.plan_shards(), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn coupling_groups_collect_families_by_feeder() {
+        let fleet = Fleet::from_spec(&FleetSpec::demo(5, 1), None).unwrap();
+        assert!(!fleet.has_coupling());
+        assert!(fleet.coupling_groups().is_empty());
+        assert!((0..fleet.n_envs()).all(|e| fleet.grid(e).is_none()));
+
+        let fleet = Fleet::from_spec(&FleetSpec::demo_coupled(5, 1), None).unwrap();
+        assert!(fleet.has_coupling());
+        let groups = fleet.coupling_groups();
+        assert_eq!(groups.len(), 1, "demo_coupled shares one feeder");
+        let (spec, members) = &groups[0];
+        assert_eq!(spec.feeder, "metro-west");
+        assert_eq!(members, &vec![0, 1, 2]);
+        assert!((0..3).all(|e| fleet.env(e).cfg.grid_coupled));
+        // Hand-built fleets are never coupled.
+        let hand = Fleet::from_envs(vec![tiny_env(8, 1)], vec!["x".into()]).unwrap();
+        assert!(!hand.has_coupling());
     }
 
     #[test]

@@ -24,14 +24,16 @@ use crate::baselines::ppo::{
     update_shard_demand, update_sharded_many, Learner, PpoParams, UpdateBatch,
 };
 use crate::data::DataStore;
-use crate::env::core::{StepInfo, STEPS_PER_EPISODE};
+use crate::env::core::{GridBudget, StepInfo, DT_HOURS, STEPS_PER_EPISODE};
 use crate::env::scalar::ScalarEnv;
 use crate::env::vector::{
-    FusedStep, PolicyRollout, RolloutBuffers, ShardTask, StepActs, StepOut, BENCH_POLICY_HIDDEN,
+    FusedStep, PolicyRollout, RolloutBuffers, ShardTask, StepActs, StepMode, StepOut, VectorEnv,
+    BENCH_POLICY_HIDDEN,
 };
 use crate::runtime::pool::WorkerPool;
 use crate::util::rng::Rng;
 
+use super::grid::{self, CurtailPolicy, GridSpec};
 use super::{Fleet, FleetSpec};
 
 /// Per-family policy-sampling seed: mixes the iteration seed with the
@@ -93,31 +95,110 @@ impl Fleet {
         for ((env, buf), &(b, _, d)) in self.envs.iter().zip(bufs.iter_mut()).zip(&dims) {
             env.observe_all(&mut buf.obs[..b * d]);
         }
+        let mut coupling = Coupling::plan(self);
         for t in 0..n_steps {
-            // Policies first (serial, caller thread), then one pooled
-            // dispatch covering every family's shard tasks.
-            let mut tasks = Vec::with_capacity(total);
-            for ((((env_idx, env), buf), act), info) in self
-                .envs
-                .iter_mut()
-                .enumerate()
-                .zip(bufs.iter_mut())
-                .zip(actions.iter_mut())
-                .zip(infos.iter_mut())
-            {
-                let (b, _, d) = dims[env_idx];
-                let (obs_t, obs_rest) = buf.obs[t * b * d..].split_at_mut(b * d);
-                policy(env_idx, t, obs_t, act);
-                let out = StepOut {
-                    obs: &mut obs_rest[..b * d],
-                    rewards: &mut buf.rewards[t * b..(t + 1) * b],
-                    dones: &mut buf.dones[t * b..(t + 1) * b],
-                    profits: &mut buf.profits[t * b..(t + 1) * b],
-                };
-                let acts = StepActs::Given(act.as_slice());
-                tasks.extend(env.shard_tasks(acts, info, Some(out), plan[env_idx]));
+            match &mut coupling {
+                // No coupled family: the pre-coupling single dispatch,
+                // byte for byte. Policies first (serial, caller thread),
+                // then one pooled call covering every family's shard
+                // tasks.
+                None => {
+                    let mut tasks = Vec::with_capacity(total);
+                    for ((((env_idx, env), buf), act), info) in self
+                        .envs
+                        .iter_mut()
+                        .enumerate()
+                        .zip(bufs.iter_mut())
+                        .zip(actions.iter_mut())
+                        .zip(infos.iter_mut())
+                    {
+                        let (b, _, d) = dims[env_idx];
+                        let (obs_t, obs_rest) = buf.obs[t * b * d..].split_at_mut(b * d);
+                        policy(env_idx, t, obs_t, act);
+                        let out = StepOut {
+                            obs: &mut obs_rest[..b * d],
+                            rewards: &mut buf.rewards[t * b..(t + 1) * b],
+                            dones: &mut buf.dones[t * b..(t + 1) * b],
+                            profits: &mut buf.profits[t * b..(t + 1) * b],
+                        };
+                        let acts = StepActs::Given(act.as_slice());
+                        tasks.extend(env.shard_tasks(acts, info, Some(out), plan[env_idx]));
+                    }
+                    run_fleet_tasks(pool.as_deref(), &mut tasks);
+                }
+                // Coupled fleet: propose → allocate → commit. Coupled
+                // envs stage their currents and report proposed draws in
+                // phase one; uncoupled envs run their normal full step in
+                // the SAME dispatch (they never wait on the reduce).
+                Some(cp) => {
+                    let mut tasks = Vec::with_capacity(total);
+                    for ((((((env_idx, env), buf), act), info), kw_e), ex_e) in self
+                        .envs
+                        .iter_mut()
+                        .enumerate()
+                        .zip(bufs.iter_mut())
+                        .zip(actions.iter_mut())
+                        .zip(infos.iter_mut())
+                        .zip(cp.kw.iter_mut())
+                        .zip(cp.excess.iter_mut())
+                    {
+                        let (b, _, d) = dims[env_idx];
+                        let (obs_t, obs_rest) = buf.obs[t * b * d..].split_at_mut(b * d);
+                        policy(env_idx, t, obs_t, act);
+                        let acts = StepActs::Given(act.as_slice());
+                        if kw_e.is_empty() {
+                            let out = StepOut {
+                                obs: &mut obs_rest[..b * d],
+                                rewards: &mut buf.rewards[t * b..(t + 1) * b],
+                                dones: &mut buf.dones[t * b..(t + 1) * b],
+                                profits: &mut buf.profits[t * b..(t + 1) * b],
+                            };
+                            tasks.extend(env.shard_tasks(acts, info, Some(out), plan[env_idx]));
+                        } else {
+                            tasks.extend(env.shard_tasks_mode(
+                                acts,
+                                &mut [],
+                                None,
+                                plan[env_idx],
+                                StepMode::Propose { grid_kw: kw_e, excess: ex_e },
+                            ));
+                        }
+                    }
+                    run_fleet_tasks(pool.as_deref(), &mut tasks);
+                    cp.allocate(&mut self.envs);
+                    let mut tasks = Vec::with_capacity(total);
+                    for (((env_idx, env), buf), info) in self
+                        .envs
+                        .iter_mut()
+                        .enumerate()
+                        .zip(bufs.iter_mut())
+                        .zip(infos.iter_mut())
+                    {
+                        if !cp.is_coupled(env_idx) {
+                            continue;
+                        }
+                        let (b, _, d) = dims[env_idx];
+                        let (_, obs_rest) = buf.obs[t * b * d..].split_at_mut(b * d);
+                        let out = StepOut {
+                            obs: &mut obs_rest[..b * d],
+                            rewards: &mut buf.rewards[t * b..(t + 1) * b],
+                            dones: &mut buf.dones[t * b..(t + 1) * b],
+                            profits: &mut buf.profits[t * b..(t + 1) * b],
+                        };
+                        tasks.extend(env.shard_tasks_mode(
+                            StepActs::Committed,
+                            info,
+                            Some(out),
+                            plan[env_idx],
+                            StepMode::Commit {
+                                budget: cp.budgets[env_idx],
+                                excess: &cp.excess[env_idx],
+                            },
+                        ));
+                    }
+                    run_fleet_tasks(pool.as_deref(), &mut tasks);
+                }
             }
-            run_fleet_tasks(pool.as_deref(), &mut tasks);
         }
     }
 
@@ -205,38 +286,129 @@ impl Fleet {
         for ((env, buf), &(b, _, d)) in self.envs.iter().zip(bufs.iter_mut()).zip(&dims) {
             env.observe_all(&mut buf.obs[..b * d]);
         }
+        let mut coupling = Coupling::plan(self);
         for t in 0..n_steps {
+            // Phase one: every family forwards + samples inside its shard
+            // tasks. Coupled envs stage currents and report proposed
+            // draws (their policy buffers for step `t` are written here,
+            // nothing is committed); uncoupled envs take their normal
+            // full step in the same dispatch.
             let mut tasks = Vec::with_capacity(total);
-            for (((((env_idx, env), buf), pol), info), scr) in self
+            match &mut coupling {
+                None => {
+                    for (((((env_idx, env), buf), pol), info), scr) in self
+                        .envs
+                        .iter_mut()
+                        .enumerate()
+                        .zip(bufs.iter_mut())
+                        .zip(pols.iter_mut())
+                        .zip(infos.iter_mut())
+                        .zip(scratch.iter_mut())
+                    {
+                        let (b, p, d) = dims[env_idx];
+                        let (obs_t, obs_rest) = buf.obs[t * b * d..].split_at_mut(b * d);
+                        let fused = FusedStep {
+                            learner: policies[env_idx],
+                            seed: family_policy_seed(policy_seed, env_idx),
+                            t,
+                            greedy,
+                            obs_t: &*obs_t,
+                            actions: &mut pol.actions[t * b * p..(t + 1) * b * p],
+                            logp: &mut pol.logp[t * b..(t + 1) * b],
+                            values: &mut pol.values[t * b..(t + 1) * b],
+                            scratch: scr.as_mut_slice(),
+                        };
+                        let out = StepOut {
+                            obs: &mut obs_rest[..b * d],
+                            rewards: &mut buf.rewards[t * b..(t + 1) * b],
+                            dones: &mut buf.dones[t * b..(t + 1) * b],
+                            profits: &mut buf.profits[t * b..(t + 1) * b],
+                        };
+                        let acts = StepActs::Fused(fused);
+                        tasks.extend(env.shard_tasks(acts, info, Some(out), plan[env_idx]));
+                    }
+                }
+                Some(cp) => {
+                    for (((((((env_idx, env), buf), pol), info), scr), kw_e), ex_e) in self
+                        .envs
+                        .iter_mut()
+                        .enumerate()
+                        .zip(bufs.iter_mut())
+                        .zip(pols.iter_mut())
+                        .zip(infos.iter_mut())
+                        .zip(scratch.iter_mut())
+                        .zip(cp.kw.iter_mut())
+                        .zip(cp.excess.iter_mut())
+                    {
+                        let (b, p, d) = dims[env_idx];
+                        let (obs_t, obs_rest) = buf.obs[t * b * d..].split_at_mut(b * d);
+                        let fused = FusedStep {
+                            learner: policies[env_idx],
+                            seed: family_policy_seed(policy_seed, env_idx),
+                            t,
+                            greedy,
+                            obs_t: &*obs_t,
+                            actions: &mut pol.actions[t * b * p..(t + 1) * b * p],
+                            logp: &mut pol.logp[t * b..(t + 1) * b],
+                            values: &mut pol.values[t * b..(t + 1) * b],
+                            scratch: scr.as_mut_slice(),
+                        };
+                        let acts = StepActs::Fused(fused);
+                        if kw_e.is_empty() {
+                            let out = StepOut {
+                                obs: &mut obs_rest[..b * d],
+                                rewards: &mut buf.rewards[t * b..(t + 1) * b],
+                                dones: &mut buf.dones[t * b..(t + 1) * b],
+                                profits: &mut buf.profits[t * b..(t + 1) * b],
+                            };
+                            tasks.extend(env.shard_tasks(acts, info, Some(out), plan[env_idx]));
+                        } else {
+                            tasks.extend(env.shard_tasks_mode(
+                                acts,
+                                &mut [],
+                                None,
+                                plan[env_idx],
+                                StepMode::Propose { grid_kw: kw_e, excess: ex_e },
+                            ));
+                        }
+                    }
+                }
+            }
+            run_fleet_tasks(pool.as_deref(), &mut tasks);
+            let Some(cp) = &mut coupling else { continue };
+            cp.allocate(&mut self.envs);
+            // Phase two: commit the coupled lanes under their feeder
+            // budgets (no action source — currents were staged in phase
+            // one; headroom was just refreshed by the allocate).
+            let mut tasks = Vec::with_capacity(total);
+            for (((env_idx, env), buf), info) in self
                 .envs
                 .iter_mut()
                 .enumerate()
                 .zip(bufs.iter_mut())
-                .zip(pols.iter_mut())
                 .zip(infos.iter_mut())
-                .zip(scratch.iter_mut())
             {
-                let (b, p, d) = dims[env_idx];
-                let (obs_t, obs_rest) = buf.obs[t * b * d..].split_at_mut(b * d);
-                let fused = FusedStep {
-                    learner: policies[env_idx],
-                    seed: family_policy_seed(policy_seed, env_idx),
-                    t,
-                    greedy,
-                    obs_t: &*obs_t,
-                    actions: &mut pol.actions[t * b * p..(t + 1) * b * p],
-                    logp: &mut pol.logp[t * b..(t + 1) * b],
-                    values: &mut pol.values[t * b..(t + 1) * b],
-                    scratch: scr.as_mut_slice(),
-                };
+                if !cp.is_coupled(env_idx) {
+                    continue;
+                }
+                let (b, _, d) = dims[env_idx];
+                let (_, obs_rest) = buf.obs[t * b * d..].split_at_mut(b * d);
                 let out = StepOut {
                     obs: &mut obs_rest[..b * d],
                     rewards: &mut buf.rewards[t * b..(t + 1) * b],
                     dones: &mut buf.dones[t * b..(t + 1) * b],
                     profits: &mut buf.profits[t * b..(t + 1) * b],
                 };
-                let acts = StepActs::Fused(fused);
-                tasks.extend(env.shard_tasks(acts, info, Some(out), plan[env_idx]));
+                tasks.extend(env.shard_tasks_mode(
+                    StepActs::Committed,
+                    info,
+                    Some(out),
+                    plan[env_idx],
+                    StepMode::Commit {
+                        budget: cp.budgets[env_idx],
+                        excess: &cp.excess[env_idx],
+                    },
+                ));
             }
             run_fleet_tasks(pool.as_deref(), &mut tasks);
         }
@@ -261,6 +433,81 @@ fn run_fleet_tasks(pool: Option<&WorkerPool>, tasks: &mut [ShardTask<'_>]) {
         _ => {
             for task in tasks {
                 task.run();
+            }
+        }
+    }
+}
+
+/// Per-step scratch + plan for a feeder-coupled fleet's allocate phase
+/// (built once per rollout, reused every step). Uncoupled envs carry
+/// empty proposal buffers — `is_coupled` keys off that — and always keep
+/// [`GridBudget::UNCURTAILED`].
+struct Coupling {
+    /// `(spec, member env indices)` per distinct feeder, in deterministic
+    /// first-appearance env order (from [`Fleet::coupling_groups`]).
+    groups: Vec<(GridSpec, Vec<usize>)>,
+    /// Per-env proposed grid draw (kW) per lane; empty for uncoupled envs.
+    kw: Vec<Vec<f32>>,
+    /// Per-env staged pre-projection excess (kW) per lane.
+    excess: Vec<Vec<f32>>,
+    /// Per-env allocation for the current step.
+    budgets: Vec<GridBudget>,
+    /// Group-concat scratch for the fixed-order reduce.
+    concat: Vec<f32>,
+}
+
+impl Coupling {
+    /// `None` when the fleet has no coupled family — the caller keeps the
+    /// pre-coupling single-dispatch step byte for byte.
+    fn plan(fleet: &Fleet) -> Option<Coupling> {
+        if !fleet.has_coupling() {
+            return None;
+        }
+        let n = fleet.n_envs();
+        let lanes = |e: usize| {
+            if fleet.grid(e).is_some() { fleet.env(e).batch() } else { 0 }
+        };
+        Some(Coupling {
+            groups: fleet.coupling_groups(),
+            kw: (0..n).map(|e| vec![0.0; lanes(e)]).collect(),
+            excess: (0..n).map(|e| vec![0.0; lanes(e)]).collect(),
+            budgets: vec![GridBudget::UNCURTAILED; n],
+            concat: Vec::new(),
+        })
+    }
+
+    fn is_coupled(&self, e: usize) -> bool {
+        !self.kw[e].is_empty()
+    }
+
+    /// The allocate phase: per coupling group, sum the proposed draws
+    /// with the fixed-order tree reduce (member lanes concatenated in env
+    /// order — NEVER per-shard partials, so the f32 total is identical at
+    /// any `--threads`), pick the group's budget, and publish the
+    /// feeder-headroom obs value to every member env. One `grid-reduce`
+    /// telemetry span covers all groups of the step; over-capacity
+    /// proportional curtailment accrues the `curtailed_kwh` counter.
+    fn allocate(&mut self, envs: &mut [VectorEnv]) {
+        let _span = crate::telemetry::scope(crate::telemetry::SpanKind::GridReduce);
+        let recording = crate::telemetry::recording();
+        for (spec, members) in &self.groups {
+            let cap = spec.capacity_kw.expect("coupling groups have a concrete capacity");
+            self.concat.clear();
+            for &e in members {
+                self.concat.extend_from_slice(&self.kw[e]);
+            }
+            let total = grid::reduce_proposals(&self.concat);
+            let budget = grid::allocate(total, cap, spec.policy);
+            let head = grid::headroom(total, cap);
+            if recording && spec.policy == CurtailPolicy::Proportional {
+                let curtailed = ((total - cap).max(0.0) * DT_HOURS) as f64;
+                if curtailed > 0.0 {
+                    crate::telemetry::counters(|c| c.curtailed_kwh += curtailed);
+                }
+            }
+            for &e in members {
+                self.budgets[e] = budget;
+                envs[e].set_grid_headroom(head);
             }
         }
     }
@@ -700,6 +947,12 @@ pub enum FleetBenchPolicy {
     /// tasks ([`Fleet::rollout_fused_with`] over
     /// [`PolicyRef::Generalist`] views — padded rows, per-family heads).
     GeneralistNet,
+    /// Same fused per-family MLPs as [`FleetBenchPolicy::FusedNet`], but
+    /// the caller passes a feeder-coupled spec, so every step pays the
+    /// propose → allocate → commit double dispatch. The row pair
+    /// (`fleet-policy-fused` vs `fleet-coupled` at matched lanes)
+    /// isolates the grid-coupling overhead.
+    CoupledNet,
 }
 
 impl FleetBenchPolicy {
@@ -709,6 +962,7 @@ impl FleetBenchPolicy {
             FleetBenchPolicy::SerialNet => "fleet-policy-serial",
             FleetBenchPolicy::FusedNet => "fleet-policy-fused",
             FleetBenchPolicy::GeneralistNet => "fleet-generalist",
+            FleetBenchPolicy::CoupledNet => "fleet-coupled",
         }
     }
 }
@@ -759,7 +1013,7 @@ pub fn measure_fleet_throughput(
     };
     let learners: Vec<Learner> = if matches!(
         policy,
-        FleetBenchPolicy::SerialNet | FleetBenchPolicy::FusedNet
+        FleetBenchPolicy::SerialNet | FleetBenchPolicy::FusedNet | FleetBenchPolicy::CoupledNet
     ) {
         (0..n)
             .map(|e| {
@@ -828,7 +1082,7 @@ pub fn measure_fleet_throughput(
                         pbe.act[t * b * p..(t + 1) * b * p].copy_from_slice(act);
                     });
                 }
-                FleetBenchPolicy::FusedNet => {
+                FleetBenchPolicy::FusedNet | FleetBenchPolicy::CoupledNet => {
                     let mut pols: Vec<PolicyRollout<'_>> = pb
                         .iter_mut()
                         .map(|p| PolicyRollout {
@@ -928,6 +1182,19 @@ mod tests {
             assert_eq!(lanes, 20);
             assert_eq!(fams, 3);
         }
+        // The coupled row runs the propose → allocate → commit double
+        // dispatch over the feeder-coupled demo (same lane grid).
+        let (sps, s100k, lanes, fams) = measure_fleet_throughput(
+            &FleetSpec::demo_coupled(2, 1),
+            None,
+            2,
+            2_000,
+            FleetBenchPolicy::CoupledNet,
+        )
+        .unwrap();
+        assert!(sps > 0.0 && s100k > 0.0, "fleet-coupled");
+        assert_eq!(lanes, 20);
+        assert_eq!(fams, 3);
     }
 
     /// The generalist path: one shared-trunk policy trains across all

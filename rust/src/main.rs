@@ -318,13 +318,16 @@ fn cmd_train_native(cfg: &RunConfig, policy: &str, tele: &mut Telem) -> Result<(
     Ok(())
 }
 
-/// `chargax train --backend native --fleet <spec.json | demo>`: expand the
-/// scenario grid into station families, drive every family's `VectorEnv`
-/// on one worker pool via the fused fleet rollout, and train either one
-/// PPO policy per family (`--policy per-family`, default) or one
-/// shared-trunk generalist across the whole grid (`--policy generalist`)
-/// in a single pass per iteration. Cells named by the spec's `holdout`
-/// key never train and show up in the eval rows as zero-shot.
+/// `chargax train --backend native --fleet <spec.json | demo |
+/// demo-coupled>`: expand the scenario grid into station families, drive
+/// every family's `VectorEnv` on one worker pool via the fused fleet
+/// rollout, and train either one PPO policy per family
+/// (`--policy per-family`, default) or one shared-trunk generalist across
+/// the whole grid (`--policy generalist`) in a single pass per iteration.
+/// Cells named by the spec's `holdout` key never train and show up in the
+/// eval rows as zero-shot. Specs with a `grid` key couple families onto
+/// shared feeders (README §Grid coupling); `demo-coupled` is the built-in
+/// demo fleet on one proportional-curtailment feeder.
 fn cmd_train_fleet(
     cfg: &RunConfig,
     spec_path: &str,
@@ -341,6 +344,8 @@ fn cmd_train_fleet(
     }
     let spec = if spec_path == "demo" {
         FleetSpec::demo(cfg.seed as u64, 1)
+    } else if spec_path == "demo-coupled" {
+        FleetSpec::demo_coupled(cfg.seed as u64, 1)
     } else {
         FleetSpec::from_json_file(spec_path)?
     };
@@ -355,8 +360,17 @@ fn cmd_train_fleet(
     ));
     for e in 0..fleet.n_envs() {
         let env = fleet.env(e);
+        let feeder = match fleet.grid(e) {
+            Some(g) if g.coupled() => format!(
+                " feeder={} cap={:.0}kW ({})",
+                g.feeder,
+                g.capacity_kw.unwrap_or(0.0),
+                g.policy.label()
+            ),
+            _ => String::new(),
+        };
         tele.log.info(&format!(
-            "  [{e}] {:<24} lanes={:<4} chargers={:<3} obs_dim={:<4} v2g={}",
+            "  [{e}] {:<24} lanes={:<4} chargers={:<3} obs_dim={:<4} v2g={}{feeder}",
             fleet.label(e),
             env.batch(),
             env.n_chargers(),
@@ -535,8 +549,8 @@ USAGE: chargax <command> [--config file.json] [--key value ...]
 COMMANDS:
   train            train PPO (--backend pjrt: AOT fast path;
                    --backend native: pure-Rust VectorEnv, no artifacts;
-                   --backend native --fleet <spec.json | demo>: scenario
-                   fleet, one policy per station family)
+                   --backend native --fleet <spec.json | demo |
+                   demo-coupled>: scenario fleet, one policy per family)
   eval             evaluate max/random baseline policies
   bench <id>       regenerate a paper table/figure:
                    table2 | fig4a | fig4bc | fig5 | fig6to8 | fig9to11 |
@@ -554,8 +568,9 @@ KEYS: variant backend num_envs threads pin_cores scenario region country
   (0 = all cores); see README §Rollout runtime.
   --pin_cores true pins pool workers to cores (Linux only, no-op
   elsewhere; placement-only, results identical); see README §Kernel layer.
-  --fleet takes a scenario-grid JSON (README §Scenario fleets & V2G) or
-  the literal `demo` for the built-in three-family fleet.
+  --fleet takes a scenario-grid JSON (README §Scenario fleets & V2G), the
+  literal `demo` for the built-in three-family fleet, or `demo-coupled`
+  for the same fleet sharing one curtailed feeder (README §Grid coupling).
   --policy per-family|generalist picks the fleet policy architecture:
   one PPO learner per station family (default) or one shared-trunk
   generalist across the whole grid (README §Generalist policy). Cells

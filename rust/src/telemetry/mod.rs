@@ -91,6 +91,10 @@ pub enum SpanKind {
     PolicyForward,
     /// A shard's env-step lane loop.
     EnvStep,
+    /// A coupled fleet's per-step allocate pass: fixed-order tree reduce
+    /// of proposed feeder draws + budget/headroom broadcast (caller-side,
+    /// between the propose and commit dispatches).
+    GridReduce,
     /// One 64-row PPO gradient chunk.
     UpdateChunk,
     /// Fixed-order pairwise tree-reduce of chunk gradients/stats.
@@ -104,10 +108,11 @@ pub enum SpanKind {
 impl SpanKind {
     /// The per-iteration report's stage set, in display order (everything
     /// except the `PoolShard` envelope, which feeds the shard columns).
-    pub const STAGES: [SpanKind; 7] = [
+    pub const STAGES: [SpanKind; 8] = [
         SpanKind::Rollout,
         SpanKind::PolicyForward,
         SpanKind::EnvStep,
+        SpanKind::GridReduce,
         SpanKind::UpdateChunk,
         SpanKind::Reduce,
         SpanKind::Adam,
@@ -120,6 +125,7 @@ impl SpanKind {
             SpanKind::Rollout => "rollout",
             SpanKind::PolicyForward => "policy-forward",
             SpanKind::EnvStep => "env-step",
+            SpanKind::GridReduce => "grid-reduce",
             SpanKind::UpdateChunk => "update-chunks",
             SpanKind::Reduce => "reduce",
             SpanKind::Adam => "adam",
@@ -151,6 +157,9 @@ pub struct Counters {
     pub cars_departed: u64,
     /// Net grid energy (kWh, import positive) summed over lane-steps.
     pub grid_kwh: f64,
+    /// Feeder energy denied by proportional curtailment (kWh): per
+    /// coupling group per step, `(total - capacity)+ * dt`.
+    pub curtailed_kwh: f64,
     /// Times the NaN-safe greedy head saw a non-finite logit.
     pub nan_guard_trips: u64,
     /// PPO minibatch rows pushed through gradient chunks.
@@ -163,6 +172,7 @@ impl Counters {
         self.cars_arrived += o.cars_arrived;
         self.cars_departed += o.cars_departed;
         self.grid_kwh += o.grid_kwh;
+        self.curtailed_kwh += o.curtailed_kwh;
         self.nan_guard_trips += o.nan_guard_trips;
         self.minibatch_rows += o.minibatch_rows;
     }

@@ -190,6 +190,7 @@ impl IterationReport {
                     ("cars_arrived", Json::Num(self.counters.cars_arrived as f64)),
                     ("cars_departed", Json::Num(self.counters.cars_departed as f64)),
                     ("grid_kwh", Json::Num(self.counters.grid_kwh)),
+                    ("curtailed_kwh", Json::Num(self.counters.curtailed_kwh)),
                     (
                         "nan_guard_trips",
                         Json::Num(self.counters.nan_guard_trips as f64),
@@ -232,11 +233,12 @@ impl IterationReport {
         let c = &self.counters;
         out.push_str(&format!(
             "\n  counters: env_steps={} arrived={} departed={} grid_kwh={:.2} \
-             nan_trips={} mb_rows={}",
+             curtailed_kwh={:.2} nan_trips={} mb_rows={}",
             c.env_steps,
             c.cars_arrived,
             c.cars_departed,
             c.grid_kwh,
+            c.curtailed_kwh,
             c.nan_guard_trips,
             c.minibatch_rows,
         ));
@@ -300,6 +302,7 @@ mod tests {
             "rollout",
             "policy-forward",
             "env-step",
+            "grid-reduce",
             "update-chunks",
             "reduce",
             "adam",
@@ -316,6 +319,10 @@ mod tests {
         assert_eq!(
             j.get("counters").unwrap().get("env_steps").unwrap().as_usize(),
             Some(128)
+        );
+        assert!(
+            j.get("counters").unwrap().get("curtailed_kwh").unwrap().as_f64().is_some(),
+            "the grid-coupling counter must land in the JSONL record"
         );
         // The record round-trips through the in-tree parser (JSONL line).
         let line = j.to_string();

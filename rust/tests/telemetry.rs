@@ -231,6 +231,75 @@ fn fleet_iteration_report_covers_stages_and_counters() {
     assert!(evals > 0, "eval pass recorded no eval spans");
 }
 
+/// Grid-coupling telemetry: a coupled fleet iteration records EXACTLY one
+/// `grid-reduce` span per rollout step (the allocate phase runs once per
+/// step, covering every feeder), drops nothing, and — under a feeder
+/// tight enough to bind — accrues a positive `curtailed_kwh` counter. An
+/// uncoupled iteration records zero `grid-reduce` spans and zero
+/// curtailed energy.
+#[test]
+fn grid_reduce_spans_cover_coupled_iterations_exactly() {
+    let _g = lock();
+    let run = |spec: &FleetSpec| {
+        reset(true);
+        let mut fleet = Fleet::from_spec(spec, None).unwrap();
+        fleet.set_threads(4);
+        let hp = PpoParams {
+            rollout_steps: 16,
+            n_minibatches: 2,
+            update_epochs: 1,
+            hidden: 16,
+            threads: 4,
+            ..Default::default()
+        };
+        let mut tr = FleetPpoTrainer::new(hp, fleet, 5);
+        tr.iteration();
+        let d = telemetry::drain();
+        reset(false);
+        IterationReport::from_drained(0, 1.0, &d)
+    };
+
+    let rep = run(&FleetSpec::demo(9, 1));
+    let count_of = |rep: &IterationReport, kind: SpanKind| {
+        rep.stages.iter().find(|s| s.kind == kind).map(|s| s.count).unwrap_or(0)
+    };
+    assert_eq!(
+        count_of(&rep, SpanKind::GridReduce),
+        0,
+        "uncoupled fleets must never enter the allocate phase"
+    );
+    assert_eq!(rep.counters.curtailed_kwh, 0.0, "uncoupled run curtailed energy");
+
+    // 100 kW shared feeder for 20 lanes: binds from the first steps.
+    let mut spec = FleetSpec::demo_coupled(9, 1);
+    for s in &mut spec.specs {
+        s.grid.as_mut().unwrap().capacity_kw = Some(100.0);
+    }
+    let rep = run(&spec);
+    assert_eq!(
+        count_of(&rep, SpanKind::GridReduce),
+        16,
+        "one grid-reduce span per rollout step"
+    );
+    assert_eq!(rep.dropped_spans, 0, "allocate-phase spans were dropped");
+    assert!(
+        rep.counters.curtailed_kwh > 0.0,
+        "a binding feeder must accrue curtailed_kwh"
+    );
+    // The allocate phase is once-per-step bookkeeping over a handful of
+    // f32 sums — it must stay a rounding error next to the env step
+    // work, far inside the <2% overhead budget.
+    let ms_of = |rep: &IterationReport, kind: SpanKind| {
+        rep.stages.iter().find(|s| s.kind == kind).map(|s| s.total_ms).unwrap_or(0.0)
+    };
+    let reduce_ms = ms_of(&rep, SpanKind::GridReduce);
+    let step_ms = ms_of(&rep, SpanKind::EnvStep);
+    assert!(
+        reduce_ms <= (step_ms * 0.5).max(2.0),
+        "grid-reduce {reduce_ms} ms vs env-step {step_ms} ms: allocate phase too heavy"
+    );
+}
+
 /// The Chrome trace export is valid JSON with one complete event per span
 /// and per-lane thread metadata — loadable in Perfetto.
 #[test]

@@ -2,7 +2,7 @@
 """Perf ratchet: compare a fresh BENCH_table2.json against the committed
 BENCH_baseline.json and warn on steps/sec regressions.
 
-Six rows are gated, all at B=256 (present in the full sweep and the CI
+Seven rows are gated, all at B=256 (present in the full sweep and the CI
 ``--smoke`` sweep): the ``native-vector`` pool path (raw env runtime),
 the ``policy-fused`` path (shard-parallel MLP policy + env, the default
 training rollout), the ``update-sharded`` path (the shard-parallel PPO
@@ -10,10 +10,13 @@ minibatch update; its unit is PPO samples/sec rather than env steps/sec,
 compared like-for-like against its own baseline row), the kernel-layer
 pair ``forward-blocked`` / ``update-blocked`` (blocked MLP forward, and
 forward + blocked backward, in MLP rows/sec — the tiled GEMM layer
-measured without env overhead), and the ``fleet-generalist`` row from
-BENCH_fleet.json (ONE shared-trunk policy across the demo grid's three
-station families, fused rollout at L=256; pass the fleet file via
-``--current-fleet``). CI
+measured without env overhead), and two rows from BENCH_fleet.json
+(pass the fleet file via ``--current-fleet``): ``fleet-generalist``
+(ONE shared-trunk policy across the demo grid's three station families,
+fused rollout at L=256) and ``fleet-coupled`` (the same fused per-family
+nets with all families on one shared feeder, so every step pays the
+propose -> allocate -> commit double dispatch — this row holds the
+grid-coupling overhead to the ratchet threshold). CI
 runner variance is still being characterized, so a
 regression past the threshold emits a GitHub ``::warning`` annotation and
 exits 0 — flip ``--strict`` once the variance envelope is known and the
@@ -58,6 +61,7 @@ GATED_PREFIXES = (
     "forward-blocked",
     "update-blocked",
     "fleet-generalist",
+    "fleet-coupled",
 )
 
 
@@ -152,7 +156,8 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default="BENCH_table2.json")
     ap.add_argument("--current-fleet", default=None,
-                    help="BENCH_fleet.json to merge in (fleet-generalist row)")
+                    help="BENCH_fleet.json to merge in "
+                         "(fleet-generalist / fleet-coupled rows)")
     ap.add_argument("--baseline", default="BENCH_baseline.json")
     ap.add_argument("--overhead", default=None,
                     help="BENCH_overhead.json to gate telemetry overhead")
@@ -178,9 +183,9 @@ def main() -> int:
         return 1 if (overhead_breach and args.strict) else 0
 
     # The fleet sweep writes its own artifact; merge its rows so the
-    # fleet-generalist prefix is gated (and kept by --update) alongside
-    # the single-env rows. Variant prefixes are disjoint across the two
-    # files, so merging cannot shadow a table2 row.
+    # fleet-generalist and fleet-coupled prefixes are gated (and kept by
+    # --update) alongside the single-env rows. Variant prefixes are
+    # disjoint across the two files, so merging cannot shadow a table2 row.
     if args.current_fleet:
         try:
             cur_rows = cur_rows + load_rows(args.current_fleet)
@@ -197,8 +202,9 @@ def main() -> int:
         payload = {
             "note": (
                 "Perf-ratchet baseline: native-vector, policy-fused, "
-                "update-sharded, forward-blocked, update-blocked, and "
-                "fleet-generalist steps/sec rows from a trusted run of "
+                "update-sharded, forward-blocked, update-blocked, "
+                "fleet-generalist, and fleet-coupled steps/sec rows "
+                "from a trusted run of "
                 "`cargo bench --bench table2_throughput -- --smoke`. "
                 "Refresh with scripts/bench_ratchet.py --update "
                 "--current-fleet BENCH_fleet.json."

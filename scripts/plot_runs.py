@@ -12,6 +12,8 @@ Produces (when the corresponding CSV exists):
   train_shopping.png     — E2E loss/reward curve (examples/train_shopping)
   telemetry_stages.png   — per-iteration stage time breakdown + pool
                            utilization (runs/telemetry.jsonl, `--telemetry`)
+  telemetry_grid.png     — feeder delivery vs curtailment per iteration
+                           (grid-coupled runs only; README §Grid coupling)
 """
 
 import csv
@@ -170,7 +172,7 @@ def plot_e2e(runs, out):
 
 
 STAGE_ORDER = [
-    "rollout", "policy-forward", "env-step",
+    "rollout", "policy-forward", "env-step", "grid-reduce",
     "update-chunks", "reduce", "adam", "eval",
 ]
 
@@ -228,6 +230,36 @@ def plot_telemetry(runs, out):
     ax2.set_xlabel("iteration")
     fig.tight_layout()
     fig.savefig(os.path.join(out, "telemetry_stages.png"), dpi=130)
+    plot_grid_coupling(recs, out)
+
+
+def plot_grid_coupling(recs, out):
+    """Feeder panel for grid-coupled runs: per-iteration curtailed energy
+    next to the energy actually delivered from the grid, plus the curtailed
+    fraction (how often the shared feeder was binding). Skipped entirely for
+    uncoupled runs, where curtailed_kwh is 0 and no grid-reduce spans exist."""
+    curt = [float(r.get("counters", {}).get("curtailed_kwh", 0.0)) for r in recs]
+    if not any(curt):
+        print("skip: no curtailed_kwh in telemetry (uncoupled run)")
+        return
+    its = [int(r["iter"]) for r in recs]
+    grid = [float(r.get("counters", {}).get("grid_kwh", 0.0)) for r in recs]
+    fig, ax = plt.subplots(figsize=(8, 4))
+    ax.bar(its, grid, 0.8, label="grid kWh delivered", color="C0")
+    ax.bar(its, curt, 0.8, bottom=grid, label="kWh curtailed", color="C3")
+    ax.set_xlabel("iteration")
+    ax.set_ylabel("energy (kWh)")
+    ax.set_title("Grid coupling — feeder delivery vs curtailment")
+    ax2 = ax.twinx()
+    frac = [c / (c + g) if (c + g) > 0 else 0.0 for c, g in zip(curt, grid)]
+    ax2.plot(its, frac, "k--", lw=1.2, label="curtailed fraction")
+    ax2.set_ylim(0, max(frac) * 1.3 + 1e-9)
+    ax2.set_ylabel("curtailed fraction of proposed-over-cap energy")
+    h1, l1 = ax.get_legend_handles_labels()
+    h2, l2 = ax2.get_legend_handles_labels()
+    ax.legend(h1 + h2, l1 + l2, fontsize=8)
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "telemetry_grid.png"), dpi=130)
 
 
 def main():
