@@ -39,7 +39,8 @@ use chargax::env::scalar::{ScalarEnv, ScenarioTables};
 use chargax::env::tree::StationConfig;
 use chargax::env::vector::{self, StepPath, NATIVE_SWEEP_B};
 use chargax::fleet::{
-    measure_fleet_throughput, Fleet, FleetBenchPolicy, FleetPpoTrainer, FleetSpec,
+    measure_fleet_throughput, measure_fleet_training_throughput, Fleet, FleetBenchPolicy,
+    FleetPpoTrainer, FleetSpec,
 };
 use chargax::runtime::engine::{artifacts_dir, Engine};
 use chargax::runtime::manifest::Manifest;
@@ -439,6 +440,54 @@ fn main() {
             ),
         }
     }
+    // -- Pipeline rows: barrier vs double-buffered training ------------------
+    // Full training iterations (fused rollout + sharded PPO update +
+    // accounting) over the demo grid at fixed fleet-wide lane totals,
+    // `--overlap off` vs `--overlap on`. Both modes perform bit-identical
+    // work (same seeds, same draws), so the pair isolates the wall-clock
+    // won by streaming iteration k+1's rollout on the pipeline lane
+    // behind iteration k's tail. Rows land in BENCH_table2.json; the
+    // ratchet gates the overlapped B=256 row.
+    let pipe_lanes: &[usize] = if smoke { &[256] } else { &[256, 1024] };
+    let pipe_iters = if smoke { 3 } else { 6 };
+    let mut pipe_pairs: Vec<(usize, f64, f64)> = Vec::new();
+    for overlap in [false, true] {
+        let label = if overlap { "pipeline-overlapped" } else { "pipeline-barrier" };
+        println!("\n{label} sweep (full train iterations, demo grid):");
+        for &total in pipe_lanes {
+            match measure_fleet_training_throughput(
+                &FleetSpec::demo_total(7, total),
+                store.as_ref(),
+                0,
+                pipe_iters,
+                overlap,
+            ) {
+                Ok((steps_per_sec, s_per_100k, lanes, families)) => {
+                    println!(
+                        "  B={lanes:<5} ({families} families) {steps_per_sec:>12.0} steps/s  {s_per_100k:>8.3} s/100k"
+                    );
+                    pair_fill(&mut pipe_pairs, lanes, steps_per_sec, overlap);
+                    rows.push(BenchRow {
+                        name: format!("{label} (B={lanes})"),
+                        batch: lanes,
+                        steps_per_sec,
+                        s_per_100k,
+                    });
+                }
+                Err(e) => println!("  {label} B={total} skipped: {e:#}"),
+            }
+        }
+    }
+    println!("\nbarrier vs overlapped training pipeline (steps/s):");
+    for (b, barrier, overlapped) in &pipe_pairs {
+        if *barrier > 0.0 && *overlapped > 0.0 {
+            println!(
+                "  B={b:<5} barrier {barrier:>12.0}  overlapped {overlapped:>12.0}  ({:.2}x)",
+                overlapped / barrier
+            );
+        }
+    }
+
     let fleet_payload = json::obj(vec![
         ("bench", Json::Str("fleet_throughput".into())),
         ("unit", Json::Str("env_steps".into())),

@@ -16,9 +16,7 @@
 //! contract holds for the generalist at any `--threads`, exactly as it
 //! does per family.
 
-use std::sync::Mutex;
-
-use crate::runtime::pool::WorkerPool;
+use crate::runtime::pool::{DisjointTasks, WorkerPool};
 use crate::util::rng::{CounterRng, Rng};
 
 use super::kernels;
@@ -660,13 +658,14 @@ fn run_gen_chunk_tasks(
 ) {
     match pool {
         Some(pool) if tasks.len() > 1 && pool.max_shards() > 1 => {
-            let wrapped: Vec<Mutex<&mut GenChunkTask<'_>>> =
-                tasks.iter_mut().map(Mutex::new).collect();
-            let scr: Vec<Mutex<&mut GenUpdateScratch>> =
-                scratch.iter_mut().map(Mutex::new).collect();
-            pool.run_strided(wrapped.len(), |lane, k| {
-                let mut guard = scr[lane].lock().unwrap();
-                wrapped[k].lock().unwrap().run(&mut **guard);
+            let shared = DisjointTasks::new(tasks);
+            let scr = DisjointTasks::new(scratch);
+            pool.run_strided(shared.len(), |lane, k| {
+                // SAFETY: `run_strided` visits chunk `k` exactly once, and lane
+                // index `lane` is owned by exactly one OS thread for the whole
+                // dispatch — both accesses are exclusive with no locks on the
+                // hot path.
+                unsafe { shared.get(k).run(scr.get(lane)) }
             });
         }
         _ => {

@@ -9,12 +9,12 @@
 //! no serial caller-thread policy forward. Scenario tables are shared
 //! across lanes via `Arc`.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::env::scalar::{ScalarEnv, ScenarioTables};
 use crate::env::tree::StationConfig;
 use crate::env::vector::{PolicyRollout, RolloutBuffers, VectorEnv};
-use crate::runtime::pool::WorkerPool;
+use crate::runtime::pool::{DisjointTasks, WorkerPool};
 use crate::util::rng::{CounterRng, Rng, Uniform01};
 
 use super::mlp::{BackwardScratch, Cache, Grads, Mlp, MlpScratch};
@@ -37,6 +37,13 @@ pub struct PpoParams {
     /// Worker-pool width for rollouts (`--threads`); 0 = auto
     /// (`available_parallelism`).
     pub threads: usize,
+    /// Double-buffered training (`--overlap on`): after each update, the
+    /// NEXT iteration's fused rollout streams on the pool's pipeline lane
+    /// while the caller finishes this iteration's accounting/stats (and
+    /// any interleaved eval). Bit-identical to the barrier default — the
+    /// rng draw order (policy seed, update perms, eval seed) is the same
+    /// sequence either way; only wall-clock changes.
+    pub overlap: bool,
 }
 
 impl Default for PpoParams {
@@ -56,6 +63,7 @@ impl Default for PpoParams {
             update_epochs: 4,
             hidden: 128,
             threads: 0,
+            overlap: false,
         }
     }
 }
@@ -501,13 +509,14 @@ fn run_chunk_tasks(
 ) {
     match pool {
         Some(pool) if tasks.len() > 1 && pool.max_shards() > 1 => {
-            let wrapped: Vec<Mutex<&mut ChunkTask<'_>>> =
-                tasks.iter_mut().map(Mutex::new).collect();
-            let scr: Vec<Mutex<&mut UpdateScratch>> =
-                scratch.iter_mut().map(Mutex::new).collect();
-            pool.run_strided(wrapped.len(), |lane, k| {
-                let mut guard = scr[lane].lock().unwrap();
-                wrapped[k].lock().unwrap().run(&mut **guard);
+            let shared = DisjointTasks::new(tasks);
+            let scr = DisjointTasks::new(scratch);
+            pool.run_strided(shared.len(), |lane, k| {
+                // SAFETY: `run_strided` visits chunk `k` exactly once,
+                // and lane index `lane` is owned by exactly one OS
+                // thread for the whole dispatch — both accesses are
+                // exclusive with no locks on the hot path.
+                unsafe { shared.get(k).run(scr.get(lane)) }
             });
         }
         _ => {
@@ -948,6 +957,53 @@ impl Learner {
     }
 }
 
+/// One slot of [`PpoTrainer`]'s double buffer: all seven rollout/policy
+/// buffers of one iteration. With `--overlap on` two slots ping-pong —
+/// the caller consumes slot `cur` while the pool's pipeline lane streams
+/// the next iteration's fused rollout into the other. Every buffer is
+/// fully overwritten by each rollout, so reuse is bitwise inert.
+struct TrainerSlot {
+    obs: Vec<f32>,
+    act: Vec<usize>,
+    logp: Vec<f32>,
+    val: Vec<f32>,
+    rew: Vec<f32>,
+    done: Vec<f32>,
+    profit: Vec<f32>,
+}
+
+impl TrainerSlot {
+    fn new(e: usize, d: usize, n_ports: usize, t_len: usize) -> TrainerSlot {
+        let bsz = e * t_len;
+        TrainerSlot {
+            // obs has one extra row: row t_len is the bootstrap observation.
+            obs: vec![0f32; (t_len + 1) * e * d],
+            act: vec![0usize; bsz * n_ports],
+            logp: vec![0f32; bsz],
+            val: vec![0f32; bsz],
+            rew: vec![0f32; bsz],
+            done: vec![0f32; bsz],
+            profit: vec![0f32; bsz],
+        }
+    }
+
+    fn views(&mut self) -> (RolloutBuffers<'_>, PolicyRollout<'_>) {
+        (
+            RolloutBuffers {
+                obs: &mut self.obs,
+                rewards: &mut self.rew,
+                dones: &mut self.done,
+                profits: &mut self.profit,
+            },
+            PolicyRollout {
+                actions: &mut self.act,
+                logp: &mut self.logp,
+                values: &mut self.val,
+            },
+        )
+    }
+}
+
 /// The CPU PPO trainer (comparator): one [`Learner`] over one
 /// [`VectorEnv`] batch.
 pub struct PpoTrainer {
@@ -960,6 +1016,14 @@ pub struct PpoTrainer {
     /// inside the fused rollout).
     running_return: Vec<f32>,
     pub env_steps: usize,
+    /// Double-buffer slots, allocated lazily (one for barrier mode, two
+    /// once overlap ever prefetches) and reused every iteration.
+    slots: Vec<TrainerSlot>,
+    /// Which slot the next update consumes; the other (when it exists) is
+    /// the pipelined prefetch target.
+    cur: usize,
+    /// True when slot `cur` already holds the next iteration's rollout.
+    pending: bool,
 }
 
 impl PpoTrainer {
@@ -990,66 +1054,56 @@ impl PpoTrainer {
             learner,
             rng,
             env_steps: 0,
+            slots: Vec::new(),
+            cur: 0,
+            pending: false,
         }
     }
 
     /// One PPO iteration (rollout + update). Mirrors ppo.py::train_iter.
+    /// With `cfg.overlap` set, the NEXT iteration's rollout is prefetched
+    /// on the pool's pipeline lane while this iteration's accounting and
+    /// stats assembly run on the caller thread — bit-identical to the
+    /// barrier path, only wall-clock changes.
     pub fn iteration(&mut self) -> TrainStats {
+        let overlap = self.cfg.overlap;
+        self.iteration_inner(overlap)
+    }
+
+    /// The last iteration of a run: identical to [`Self::iteration`] but
+    /// never prefetches, so N iteration calls perform exactly N rollouts.
+    pub fn final_iteration(&mut self) -> TrainStats {
+        self.iteration_inner(false)
+    }
+
+    fn iteration_inner(&mut self, prefetch: bool) -> TrainStats {
         let e = self.cfg.num_envs;
         let t_len = self.cfg.rollout_steps;
         let n_ports = self.learner.n_ports();
         let bsz = e * t_len;
         let d = self.learner.obs_dim;
-
-        // obs has one extra row: row t_len is the bootstrap observation.
-        let mut obs_buf = vec![0f32; (t_len + 1) * e * d];
-        let mut act_buf = vec![0usize; bsz * n_ports];
-        let mut logp_buf = vec![0f32; bsz];
-        let mut val_buf = vec![0f32; bsz];
-        let mut rew_buf = vec![0f32; bsz];
-        let mut done_buf = vec![0f32; bsz];
-        let mut profit_buf = vec![0f32; bsz];
+        let want_slots = if prefetch { 2 } else { 1 };
+        while self.slots.len() < want_slots {
+            self.slots.push(TrainerSlot::new(e, d, n_ports, t_len));
+        }
 
         // ---- rollout ------------------------------------------------------
         // One fused pass: each pool shard forwards + samples its own
         // lanes' policies inside the same dispatch that steps them (no
         // serial caller-thread forward), writing actions/logp/values and
-        // obs/rewards/dones/profits directly into the PPO buffers above.
+        // obs/rewards/dones/profits directly into slot `cur`'s buffers.
         // A fresh per-iteration sampling seed keys the per-(lane, t)
-        // counter streams.
-        {
+        // counter streams. Skipped when the previous iteration already
+        // streamed this rollout into slot `cur` via the pipeline lane.
+        if !self.pending {
             let _span = crate::telemetry::scope(crate::telemetry::SpanKind::Rollout);
-            let PpoTrainer { venv, learner, rng, .. } = self;
+            let PpoTrainer { venv, learner, rng, slots, cur, .. } = self;
             let policy_seed = rng.next_u64();
-            let mut bufs = RolloutBuffers {
-                obs: &mut obs_buf,
-                rewards: &mut rew_buf,
-                dones: &mut done_buf,
-                profits: &mut profit_buf,
-            };
-            let mut pol = PolicyRollout {
-                actions: &mut act_buf,
-                logp: &mut logp_buf,
-                values: &mut val_buf,
-            };
+            let (mut bufs, mut pol) = slots[*cur].views();
             venv.rollout_fused(t_len, &mut bufs, &mut pol, learner, policy_seed, false);
         }
+        self.pending = false;
         self.env_steps += bsz;
-
-        // Episode accounting from the filled buffers (off the hot loop).
-        let mut profit_sum = 0f64;
-        let mut comp_returns: Vec<f32> = Vec::new();
-        for t in 0..t_len {
-            for j in 0..e {
-                let idx = t * e + j;
-                profit_sum += profit_buf[idx] as f64;
-                self.running_return[j] += rew_buf[idx];
-                if done_buf[idx] > 0.5 {
-                    comp_returns.push(self.running_return[j]);
-                    self.running_return[j] = 0.0;
-                }
-            }
-        }
 
         // ---- update -------------------------------------------------------
         // Sharded over the same persistent pool the rollout ran on
@@ -1058,15 +1112,73 @@ impl PpoTrainer {
             let pool = self
                 .venv
                 .shared_pool(update_shard_demand(bsz, self.cfg.n_minibatches));
-            let PpoTrainer { cfg, learner, rng, .. } = self;
+            let PpoTrainer { cfg, learner, rng, slots, cur, .. } = self;
+            let slot = &slots[*cur];
             learner.update_sharded(
                 cfg, rng, pool.as_deref(), e, t_len,
-                &obs_buf, &act_buf, &logp_buf, &val_buf, &rew_buf, &done_buf,
+                &slot.obs, &slot.act, &slot.logp, &slot.val, &slot.rew, &slot.done,
             )
         };
 
-        TrainStats {
-            mean_reward: rew_buf.iter().sum::<f32>() / bsz as f32,
+        // ---- prefetch + overlapped tail -----------------------------------
+        // The prefetch launches AFTER the update (it samples from the
+        // post-update weights — same as the barrier path), so the overlap
+        // window covers episode accounting and stats assembly below.
+        let PpoTrainer {
+            venv, learner, rng, running_return, slots, cur, pending, ..
+        } = self;
+        let mut guard = None;
+        if prefetch {
+            if let Some(pool) = venv.rollout_pool() {
+                // Next iteration's policy seed — drawn HERE, right where
+                // the barrier path would draw it, so the global rng
+                // sequence is identical in both modes.
+                let policy_seed = rng.next_u64();
+                let (a, b) = slots.split_at_mut(1);
+                let next = if *cur == 0 { &mut b[0] } else { &mut a[0] };
+                let learner: &Learner = learner;
+                let venv = &mut *venv;
+                // SAFETY: until `guard` joins below, the pipeline lane
+                // owns `venv`, slot `next`, and a shared view of
+                // `learner`. The overlapped tail only reads slot `cur`
+                // and mutates `running_return` / stats locals, and the
+                // guard joins before this function returns (its Drop
+                // joins even on unwind).
+                guard = Some(unsafe {
+                    pool.run_pipelined(move || {
+                        let _span =
+                            crate::telemetry::scope(crate::telemetry::SpanKind::Rollout);
+                        let (mut bufs, mut pol) = next.views();
+                        venv.rollout_fused(
+                            t_len, &mut bufs, &mut pol, learner, policy_seed, false,
+                        );
+                    })
+                });
+            }
+        }
+
+        let _window = guard
+            .is_some()
+            .then(|| crate::telemetry::scope(crate::telemetry::SpanKind::PipelineOverlap));
+        let slot = &slots[*cur];
+
+        // Episode accounting from the filled buffers (off the hot loop).
+        let mut profit_sum = 0f64;
+        let mut comp_returns: Vec<f32> = Vec::new();
+        for t in 0..t_len {
+            for j in 0..e {
+                let idx = t * e + j;
+                profit_sum += slot.profit[idx] as f64;
+                running_return[j] += slot.rew[idx];
+                if slot.done[idx] > 0.5 {
+                    comp_returns.push(running_return[j]);
+                    running_return[j] = 0.0;
+                }
+            }
+        }
+
+        let stats = TrainStats {
+            mean_reward: slot.rew.iter().sum::<f32>() / bsz as f32,
             mean_profit: (profit_sum / bsz as f64) as f32,
             total_loss,
             entropy,
@@ -1075,7 +1187,14 @@ impl PpoTrainer {
             } else {
                 comp_returns.iter().sum::<f32>() / comp_returns.len() as f32
             },
+        };
+
+        if let Some(g) = guard {
+            g.join();
+            *cur ^= 1;
+            *pending = true;
         }
+        stats
     }
 
     /// Greedy evaluation for one full episode; returns total reward/profit.

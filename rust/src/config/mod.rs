@@ -27,6 +27,12 @@ pub struct RunConfig {
     /// Pin pool workers to cores (`--pin_cores true`; Linux only, no-op
     /// elsewhere). Placement-only: results are bit-identical either way.
     pub pin_cores: bool,
+    /// Double-buffered training (`--overlap {off,on}`): with "on", each
+    /// iteration's tail (accounting, stats, interleaved eval) runs while
+    /// the NEXT iteration's fused rollout streams on the pool's pipeline
+    /// lane. Results are bit-identical to the "off" barrier default at
+    /// any `--threads` (README §Overlapped pipeline).
+    pub overlap: bool,
     pub total_env_steps: usize,
     pub eval_seeds: usize,
     pub paper_scale: bool,
@@ -63,6 +69,7 @@ impl Default for RunConfig {
             num_envs: 12,
             num_threads: 0,
             pin_cores: false,
+            overlap: false,
             total_env_steps: 200_000,
             eval_seeds: 8,
             paper_scale: false,
@@ -120,6 +127,11 @@ impl RunConfig {
             "num_envs" | "envs" => self.num_envs = val.parse()?,
             "num_threads" | "threads" => self.num_threads = val.parse()?,
             "pin_cores" | "pin-cores" => self.pin_cores = val.parse()?,
+            "overlap" => match val {
+                "on" => self.overlap = true,
+                "off" => self.overlap = false,
+                other => return Err(anyhow!("unknown overlap mode '{other}' (off | on)")),
+            },
             "scenario" => self.scenario.scenario = val.to_string(),
             "region" => self.scenario.region = val.to_string(),
             "country" => self.scenario.country = val.to_string(),
@@ -177,6 +189,12 @@ mod tests {
         cfg.set("pin-cores", "false").unwrap();
         assert!(!cfg.pin_cores);
         assert!(cfg.set("pin_cores", "yes").is_err());
+        assert!(!cfg.overlap, "overlap must default off (barrier oracle)");
+        cfg.set("overlap", "on").unwrap();
+        assert!(cfg.overlap);
+        cfg.set("overlap", "off").unwrap();
+        assert!(!cfg.overlap);
+        assert!(cfg.set("overlap", "true").is_err());
         assert_eq!(cfg.backend, "native");
         assert_eq!(cfg.num_envs, 64);
         assert_eq!(cfg.num_threads, 4);

@@ -123,7 +123,9 @@ pub fn train_native(
     let t0 = std::time::Instant::now();
     let mut history = Vec::with_capacity(iters);
     for i in 0..iters {
-        let s = tr.iteration();
+        // The last iteration never prefetches (`--overlap on` double
+        // buffering), so N iterations perform exactly N rollouts.
+        let s = if i + 1 == iters { tr.final_iteration() } else { tr.iteration() };
         let m = NamedVec::new(
             &fields,
             vec![

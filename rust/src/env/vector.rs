@@ -28,12 +28,12 @@
 //! weights, per-shard scratch, per-(lane, t) counter RNG) before
 //! stepping them, so nothing about a rollout is serial in B.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::baselines::generalist::PolicyRef;
 use crate::baselines::mlp::MlpScratch;
 use crate::baselines::ppo::Learner;
-use crate::runtime::pool::WorkerPool;
+use crate::runtime::pool::{DisjointTasks, WorkerPool};
 use crate::telemetry;
 use crate::util::rng::CounterRng;
 
@@ -401,6 +401,16 @@ impl VectorEnv {
             self.threads,
             width,
         )
+    }
+
+    /// The pool a fused rollout of the current batch will dispatch on, or
+    /// `None` when rollouts run inline (single shard). Building it up
+    /// front lets the overlapped trainer submit the NEXT iteration's
+    /// rollout to this pool's pipeline lane while it keeps the `&mut`
+    /// borrow of the env for the streamed rollout itself.
+    pub fn rollout_pool(&mut self) -> Option<Arc<WorkerPool>> {
+        let shards = self.auto_shards();
+        if shards > 1 { Some(self.ensure_pool(shards)) } else { None }
     }
 
     /// Step every lane. `actions` is `[B * P]` (row-major per lane),
@@ -1113,9 +1123,11 @@ impl ShardTask<'_> {
 fn run_shard_tasks(pool: Option<&WorkerPool>, tasks: &mut [ShardTask<'_>]) {
     match pool {
         Some(pool) if tasks.len() > 1 => {
-            let wrapped: Vec<Mutex<&mut ShardTask<'_>>> =
-                tasks.iter_mut().map(Mutex::new).collect();
-            pool.run(wrapped.len(), |s| wrapped[s].lock().unwrap().run());
+            let shared = DisjointTasks::new(tasks);
+            // SAFETY: `run` hands shard index `s` to exactly one thread,
+            // so task `s` has exactly one visitor — no locks on the hot
+            // path (telemetry-budget rule).
+            pool.run(shared.len(), |s| unsafe { shared.get(s) }.run());
         }
         _ => {
             let _scope = telemetry::quiet_scope();

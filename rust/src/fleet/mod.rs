@@ -44,8 +44,8 @@ pub use catalog::{
 };
 pub use grid::{CurtailPolicy, GridSpec};
 pub use rollout::{
-    family_policy_seed, measure_fleet_throughput, CellEval, FamilyStats, FleetBenchPolicy,
-    FleetPolicy, FleetPpoTrainer,
+    family_policy_seed, measure_fleet_throughput, measure_fleet_training_throughput, CellEval,
+    FamilyStats, FleetBenchPolicy, FleetPolicy, FleetPpoTrainer,
 };
 
 /// N heterogeneous station environments scheduled on one worker pool.
@@ -150,8 +150,53 @@ impl Fleet {
         }
         let mut fleet = Fleet::from_envs_with_cells(envs, labels, cell_labels)?;
         fleet.holdout = holdout;
-        fleet.grids = grids;
+        fleet.set_grids(grids)?;
         Ok(fleet)
+    }
+
+    /// Install per-family feeder couplings, validating the coupling
+    /// invariant the rollout's allocate phase depends on: every `Some`
+    /// entry must carry a concrete, finite, positive `capacity_kw`
+    /// (doc-only `capacity_kw: null` specs normalize to `None` at catalog
+    /// expansion and must arrive here as `None`), and every family on one
+    /// feeder must agree on its definition. Violations return a named
+    /// error — feeder name + family index/label — instead of the old
+    /// rollout-time `expect` panic deep inside the allocate phase.
+    pub fn set_grids(&mut self, grids: Vec<Option<GridSpec>>) -> Result<()> {
+        if grids.len() != self.envs.len() {
+            bail!("{} envs but {} grid entries", self.envs.len(), grids.len());
+        }
+        let mut feeders: Vec<(&GridSpec, usize)> = Vec::new();
+        for (e, g) in grids.iter().enumerate() {
+            let Some(g) = g else { continue };
+            match g.capacity_kw {
+                None => bail!(
+                    "feeder \"{}\" (family {e} '{}'): capacity_kw is null — a \
+                     doc-only grid entry must not couple; pass None instead",
+                    g.feeder,
+                    self.labels[e],
+                ),
+                Some(cap) if !cap.is_finite() || cap <= 0.0 => bail!(
+                    "feeder \"{}\" (family {e} '{}'): capacity_kw ({cap}) must be \
+                     finite and > 0",
+                    g.feeder,
+                    self.labels[e],
+                ),
+                Some(_) => {}
+            }
+            match feeders.iter().find(|(spec, _)| spec.feeder == g.feeder) {
+                Some((spec, first)) if *spec != g => bail!(
+                    "families {first} and {e} ('{}') both name feeder \"{}\" but \
+                     with different capacity_kw/policy — one feeder, one definition",
+                    self.labels[e],
+                    g.feeder,
+                ),
+                Some(_) => {}
+                None => feeders.push((g, e)),
+            }
+        }
+        self.grids = grids;
+        Ok(())
     }
 
     pub fn n_envs(&self) -> usize {

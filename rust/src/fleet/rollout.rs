@@ -13,7 +13,7 @@
 //! family and trains all of them from a single fused rollout per
 //! iteration.
 
-use std::sync::Mutex;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -24,13 +24,14 @@ use crate::baselines::ppo::{
     update_shard_demand, update_sharded_many, Learner, PpoParams, UpdateBatch,
 };
 use crate::data::DataStore;
-use crate::env::core::{GridBudget, StepInfo, DT_HOURS, STEPS_PER_EPISODE};
+use crate::env::core::{GridBudget, ScenarioTables, StepInfo, DT_HOURS, STEPS_PER_EPISODE};
 use crate::env::scalar::ScalarEnv;
+use crate::env::tree::StationConfig;
 use crate::env::vector::{
     FusedStep, PolicyRollout, RolloutBuffers, ShardTask, StepActs, StepMode, StepOut, VectorEnv,
     BENCH_POLICY_HIDDEN,
 };
-use crate::runtime::pool::WorkerPool;
+use crate::runtime::pool::{DisjointTasks, WorkerPool};
 use crate::util::rng::Rng;
 
 use super::grid::{self, CurtailPolicy, GridSpec};
@@ -426,9 +427,10 @@ impl Fleet {
 fn run_fleet_tasks(pool: Option<&WorkerPool>, tasks: &mut [ShardTask<'_>]) {
     match pool {
         Some(pool) if tasks.len() > 1 && pool.max_shards() > 1 => {
-            let wrapped: Vec<Mutex<&mut ShardTask<'_>>> =
-                tasks.iter_mut().map(Mutex::new).collect();
-            pool.run_strided(wrapped.len(), |_, k| wrapped[k].lock().unwrap().run());
+            let shared = DisjointTasks::new(tasks);
+            // SAFETY: `run_strided` visits task index `k` exactly once, so
+            // each access is exclusive — no locks on the hot path.
+            pool.run_strided(shared.len(), |_, k| unsafe { shared.get(k) }.run());
         }
         _ => {
             for task in tasks {
@@ -443,9 +445,15 @@ fn run_fleet_tasks(pool: Option<&WorkerPool>, tasks: &mut [ShardTask<'_>]) {
 /// empty proposal buffers — `is_coupled` keys off that — and always keep
 /// [`GridBudget::UNCURTAILED`].
 struct Coupling {
-    /// `(spec, member env indices)` per distinct feeder, in deterministic
-    /// first-appearance env order (from [`Fleet::coupling_groups`]).
-    groups: Vec<(GridSpec, Vec<usize>)>,
+    /// `(resolved capacity kW, spec, member env indices)` per distinct
+    /// feeder, in deterministic first-appearance env order (from
+    /// [`Fleet::coupling_groups`]). The capacity is resolved ONCE here, at
+    /// plan time: [`Fleet::set_grids`] already rejected doc-only
+    /// (`capacity_kw: null`) and non-finite entries at spec-load time with
+    /// a named error, so the old rollout-time
+    /// `spec.capacity_kw.expect(...)` panic path is gone — groups without
+    /// a concrete capacity simply never enter the plan.
+    groups: Vec<(f32, GridSpec, Vec<usize>)>,
     /// Per-env proposed grid draw (kW) per lane; empty for uncoupled envs.
     kw: Vec<Vec<f32>>,
     /// Per-env staged pre-projection excess (kW) per lane.
@@ -465,10 +473,15 @@ impl Coupling {
         }
         let n = fleet.n_envs();
         let lanes = |e: usize| {
-            if fleet.grid(e).is_some() { fleet.env(e).batch() } else { 0 }
+            if fleet.grid(e).is_some_and(GridSpec::coupled) { fleet.env(e).batch() } else { 0 }
         };
+        let groups = fleet
+            .coupling_groups()
+            .into_iter()
+            .filter_map(|(spec, members)| spec.capacity_kw.map(|cap| (cap, spec, members)))
+            .collect();
         Some(Coupling {
-            groups: fleet.coupling_groups(),
+            groups,
             kw: (0..n).map(|e| vec![0.0; lanes(e)]).collect(),
             excess: (0..n).map(|e| vec![0.0; lanes(e)]).collect(),
             budgets: vec![GridBudget::UNCURTAILED; n],
@@ -490,8 +503,8 @@ impl Coupling {
     fn allocate(&mut self, envs: &mut [VectorEnv]) {
         let _span = crate::telemetry::scope(crate::telemetry::SpanKind::GridReduce);
         let recording = crate::telemetry::recording();
-        for (spec, members) in &self.groups {
-            let cap = spec.capacity_kw.expect("coupling groups have a concrete capacity");
+        for (cap, spec, members) in &self.groups {
+            let cap = *cap;
             self.concat.clear();
             for &e in members {
                 self.concat.extend_from_slice(&self.kw[e]);
@@ -539,6 +552,120 @@ impl EnvBufs {
             profits: &mut self.profit,
         }
     }
+}
+
+/// Per-family rollout storage for one PPO iteration (policy-written half:
+/// sampled actions, log-probs, values).
+struct PolBufs {
+    act: Vec<usize>,
+    logp: Vec<f32>,
+    val: Vec<f32>,
+}
+
+impl PolBufs {
+    fn new(b: usize, p: usize, t_len: usize) -> PolBufs {
+        PolBufs {
+            act: vec![0usize; t_len * b * p],
+            logp: vec![0.0; t_len * b],
+            val: vec![0.0; t_len * b],
+        }
+    }
+
+    fn as_policy_rollout(&mut self) -> PolicyRollout<'_> {
+        PolicyRollout {
+            actions: &mut self.act,
+            logp: &mut self.logp,
+            values: &mut self.val,
+        }
+    }
+}
+
+/// One slot of the trainer's double buffer: every family's env-written and
+/// policy-written rollout storage for one iteration. With `--overlap on`
+/// two slots ping-pong — the caller consumes slot `cur` (PPO update,
+/// accounting, stats, interleaved eval) while the pool's pipeline lane
+/// streams the NEXT iteration's fused rollout into the other slot. All
+/// buffers are fully overwritten by each rollout, so reuse is bitwise
+/// inert.
+struct IterSlot {
+    eb: Vec<EnvBufs>,
+    pb: Vec<PolBufs>,
+}
+
+impl IterSlot {
+    fn new(dims: &[(usize, usize, usize)], t_len: usize) -> IterSlot {
+        IterSlot {
+            eb: dims.iter().map(|&(b, _, d)| EnvBufs::new(b, d, t_len)).collect(),
+            pb: dims.iter().map(|&(b, p, _)| PolBufs::new(b, p, t_len)).collect(),
+        }
+    }
+}
+
+/// Everything one family's greedy per-cell eval reads from the fleet,
+/// snapshotted up front (cheap: config copies + `Arc` table clones) so
+/// eval can run on the caller thread while the pipeline lane holds the
+/// fleet's `&mut` for the streaming rollout. Built by
+/// [`FleetPpoTrainer::eval_plan`]; consumed by `run_eval_family` — the
+/// ONE eval implementation behind both [`FleetPpoTrainer::eval_cells`]
+/// and the overlapped window, so the two paths cannot drift.
+struct EvalPlan {
+    family: String,
+    family_idx: usize,
+    cfg: StationConfig,
+    /// Trained cells in cell-index order: `(name, tables, training lanes)`.
+    cells: Vec<(String, Arc<ScenarioTables>, usize)>,
+    /// Held-out cells (zero training lanes, `holdout == true` in output).
+    holdout: Vec<(String, Arc<ScenarioTables>)>,
+}
+
+/// Greedy eval of one family from its snapshot: one fresh B=1 scalar env
+/// per cell, one full episode each, trained cells then held-out cells
+/// (cell indices continue past the trained cells so eval seeds never
+/// collide). Byte-for-byte the body `eval_cells` always had.
+fn run_eval_family(plan: &EvalPlan, pol: PolicyRef<'_>, seed: u64) -> Vec<CellEval> {
+    let _span = crate::telemetry::scope(crate::telemetry::SpanKind::Eval);
+    let mut scratch = pol.make_scratch();
+    let mut obs = vec![0f32; pol.obs_dim()];
+    let mut action = vec![0usize; pol.n_ports()];
+    let mut out = Vec::with_capacity(plan.cells.len() + plan.holdout.len());
+    let mut run_cell = |cell: usize, tables: Arc<ScenarioTables>, name: String, lanes: usize, held: bool| {
+        // Decorrelate cells without losing seed-level reproducibility.
+        let env_seed = seed ^ ((cell as u64) << 32);
+        let mut env = ScalarEnv::new(plan.cfg.clone(), tables, env_seed);
+        let mut tot_r = 0f32;
+        let mut tot_p = 0f32;
+        let mut episodes = 0usize;
+        for _ in 0..STEPS_PER_EPISODE {
+            env.observe(&mut obs);
+            pol.greedy_lane(&obs, &mut action, &mut scratch);
+            let info = env.step(&action);
+            tot_r += info.reward;
+            tot_p += info.profit;
+            if info.done {
+                episodes += 1;
+            }
+        }
+        out.push(CellEval {
+            family: plan.family.clone(),
+            family_idx: plan.family_idx,
+            cell: name,
+            cell_idx: cell,
+            lanes,
+            holdout: held,
+            episodes,
+            reward: tot_r,
+            profit: tot_p,
+        });
+    };
+    for (cell, (name, tables, lanes)) in plan.cells.iter().enumerate() {
+        run_cell(cell, Arc::clone(tables), name.clone(), *lanes, false);
+    }
+    // Held-out cells continue the cell index space after the trained
+    // cells, so their eval seeds never collide with a trained cell's.
+    for (i, (name, tables)) in plan.holdout.iter().enumerate() {
+        run_cell(plan.cells.len() + i, Arc::clone(tables), name.clone(), 0, true);
+    }
+    out
 }
 
 /// Per-iteration training stats for one station family.
@@ -627,6 +754,17 @@ pub struct FleetPpoTrainer {
     /// [`FleetPpoTrainer::eval_cells_current`] calls bit-identical until
     /// the next `iteration()` advances it.
     eval_seed: u64,
+    /// Double-buffer slots, allocated lazily (one for barrier mode, two
+    /// once overlap ever prefetches) and reused every iteration.
+    slots: Vec<IterSlot>,
+    /// Which slot the next update consumes. The other slot (when it
+    /// exists) is the pipelined prefetch target.
+    cur: usize,
+    /// True when slot `cur` already holds the next iteration's rollout
+    /// (streamed by the previous iteration's overlap window), so
+    /// `iteration()` skips its synchronous rollout and goes straight to
+    /// the update.
+    pending: bool,
 }
 
 impl FleetPpoTrainer {
@@ -653,6 +791,9 @@ impl FleetPpoTrainer {
             env_steps: 0,
             running_return,
             eval_seed,
+            slots: Vec::new(),
+            cur: 0,
+            pending: false,
         }
     }
 
@@ -677,6 +818,9 @@ impl FleetPpoTrainer {
             env_steps: 0,
             running_return,
             eval_seed,
+            slots: Vec::new(),
+            cur: 0,
+            pending: false,
         }
     }
 
@@ -685,8 +829,48 @@ impl FleetPpoTrainer {
         self.fleet.total_lanes() * self.hp.rollout_steps
     }
 
-    /// One fused rollout + one PPO update per family.
+    /// One fused rollout + one PPO update per family. With `hp.overlap`
+    /// set, the NEXT iteration's rollout is prefetched on the pool's
+    /// pipeline lane while this call finishes its accounting and stats
+    /// (use [`FleetPpoTrainer::final_iteration`] for the last call of a
+    /// run). Results are bit-identical either way: the per-iteration rng
+    /// draw order — policy seed, update permutations, eval seed — forms
+    /// the same global sequence in both modes; only WHEN each rollout
+    /// executes moves (proven in rust/tests/overlap.rs).
     pub fn iteration(&mut self) -> Vec<FamilyStats> {
+        let overlap = self.hp.overlap;
+        self.iteration_inner(overlap, None)
+    }
+
+    /// [`FleetPpoTrainer::iteration`] without the trailing prefetch: call
+    /// this for the LAST iteration of a run so exactly N rollouts execute
+    /// for N iterations (a trailing prefetch would roll the envs forward
+    /// one extra rollout that no one consumes). Identical to
+    /// `iteration()` when overlap is off.
+    pub fn final_iteration(&mut self) -> Vec<FamilyStats> {
+        self.iteration_inner(false, None)
+    }
+
+    /// One iteration PLUS this iteration's full per-cell greedy eval
+    /// (every family, trained + held-out cells, keyed by the iteration's
+    /// eval seed). With overlap on, the eval episodes run on the caller
+    /// thread INSIDE the overlap window — interleaved with the streaming
+    /// next-iteration rollout — and are bit-identical to calling
+    /// `iteration()` then [`FleetPpoTrainer::eval_all_cells_current`]
+    /// (the per-iteration eval seed makes the ordering irrelevant;
+    /// regression-tested in rust/tests/overlap.rs).
+    pub fn iteration_with_eval(&mut self) -> (Vec<FamilyStats>, Vec<CellEval>) {
+        let overlap = self.hp.overlap;
+        let mut evals = Vec::new();
+        let stats = self.iteration_inner(overlap, Some(&mut evals));
+        (stats, evals)
+    }
+
+    fn iteration_inner(
+        &mut self,
+        prefetch: bool,
+        evals: Option<&mut Vec<CellEval>>,
+    ) -> Vec<FamilyStats> {
         let t_len = self.hp.rollout_steps;
         let n = self.fleet.n_envs();
         let dims: Vec<(usize, usize, usize)> = (0..n)
@@ -695,65 +879,32 @@ impl FleetPpoTrainer {
                 (env.batch(), env.n_ports(), env.obs_dim())
             })
             .collect();
-        let mut eb: Vec<EnvBufs> =
-            dims.iter().map(|&(b, _, d)| EnvBufs::new(b, d, t_len)).collect();
-        struct PolBufs {
-            act: Vec<usize>,
-            logp: Vec<f32>,
-            val: Vec<f32>,
+        let want_slots = if prefetch { 2 } else { 1 };
+        while self.slots.len() < want_slots {
+            self.slots.push(IterSlot::new(&dims, t_len));
         }
-        let mut pb: Vec<PolBufs> = dims
-            .iter()
-            .map(|&(b, p, _)| PolBufs {
-                act: vec![0usize; t_len * b * p],
-                logp: vec![0.0; t_len * b],
-                val: vec![0.0; t_len * b],
-            })
-            .collect();
 
-        {
+        if !self.pending {
             // Fused-policy pass: every family's forward+step shard tasks
             // go out in one pooled dispatch per step; a fresh
             // per-iteration seed keys the per-(lane, t) counter streams.
             // Under the generalist, every family's view shares one set of
-            // trunk weights — still a single dispatch per step.
+            // trunk weights — still a single dispatch per step. With
+            // overlap on this branch only runs for the FIRST iteration —
+            // afterwards every rollout arrives prefetched in slot `cur`.
             let _span = crate::telemetry::scope(crate::telemetry::SpanKind::Rollout);
-            let FleetPpoTrainer { fleet, policy, rng, .. } = self;
+            let FleetPpoTrainer { fleet, policy, rng, slots, cur, .. } = &mut *self;
+            let slot = &mut slots[*cur];
             let policy_seed = rng.next_u64();
             let mut bufs: Vec<RolloutBuffers<'_>> =
-                eb.iter_mut().map(EnvBufs::as_rollout_buffers).collect();
-            let mut pols: Vec<PolicyRollout<'_>> = pb
-                .iter_mut()
-                .map(|p| PolicyRollout {
-                    actions: &mut p.act,
-                    logp: &mut p.logp,
-                    values: &mut p.val,
-                })
-                .collect();
+                slot.eb.iter_mut().map(EnvBufs::as_rollout_buffers).collect();
+            let mut pols: Vec<PolicyRollout<'_>> =
+                slot.pb.iter_mut().map(PolBufs::as_policy_rollout).collect();
             let views: Vec<PolicyRef<'_>> = (0..n).map(|e| policy.family(e)).collect();
             fleet.rollout_fused_with(t_len, &mut bufs, &mut pols, &views, policy_seed, false);
         }
+        self.pending = false;
         self.env_steps += self.fleet.total_lanes() * t_len;
-
-        // Episode accounting per family (off the hot loop).
-        let mut acct: Vec<(f64, Vec<f32>)> = Vec::with_capacity(n);
-        for e in 0..n {
-            let (b, _, _) = dims[e];
-            let mut profit_sum = 0f64;
-            let mut comp: Vec<f32> = Vec::new();
-            for t in 0..t_len {
-                for j in 0..b {
-                    let idx = t * b + j;
-                    profit_sum += eb[e].profit[idx] as f64;
-                    self.running_return[e][j] += eb[e].rew[idx];
-                    if eb[e].done[idx] > 0.5 {
-                        comp.push(self.running_return[e][j]);
-                        self.running_return[e][j] = 0.0;
-                    }
-                }
-            }
-            acct.push((profit_sum, comp));
-        }
 
         // One sharded update covering EVERY family: per (epoch,
         // minibatch) round all families' gradient chunks go out in a
@@ -769,20 +920,21 @@ impl FleetPpoTrainer {
             .map(|&(b, _, _)| update_shard_demand(b * t_len, self.hp.n_minibatches))
             .sum();
         let pool = self.fleet.update_pool(width);
-        let batches: Vec<UpdateBatch<'_>> = (0..n)
-            .map(|e| UpdateBatch {
-                n_envs: dims[e].0,
-                t_len,
-                obs: &eb[e].obs,
-                act: &pb[e].act,
-                logp: &pb[e].logp,
-                val: &pb[e].val,
-                rew: &eb[e].rew,
-                done: &eb[e].done,
-            })
-            .collect();
         let upd = {
-            let FleetPpoTrainer { hp, policy, rng, .. } = &mut *self;
+            let FleetPpoTrainer { hp, policy, rng, slots, cur, .. } = &mut *self;
+            let slot = &slots[*cur];
+            let batches: Vec<UpdateBatch<'_>> = (0..n)
+                .map(|e| UpdateBatch {
+                    n_envs: dims[e].0,
+                    t_len,
+                    obs: &slot.eb[e].obs,
+                    act: &slot.pb[e].act,
+                    logp: &slot.pb[e].logp,
+                    val: &slot.pb[e].val,
+                    rew: &slot.eb[e].rew,
+                    done: &slot.eb[e].done,
+                })
+                .collect();
             match policy {
                 FleetPolicy::PerFamily(learners) => {
                     update_sharded_many(learners, hp, rng, pool.as_deref(), &batches)
@@ -792,17 +944,94 @@ impl FleetPpoTrainer {
                 }
             }
         };
+        // Refresh the shared eval seed right after the update so the
+        // rollout/update rng stream is untouched and every
+        // within-iteration eval repeats — and so the prefetch below
+        // (launched AFTER this draw) keeps barrier mode's global draw
+        // order: policy seed, update perms, eval seed, next policy seed.
+        self.eval_seed = self.rng.next_u64();
 
+        // Snapshot everything the overlap window reads from the fleet
+        // BEFORE the pipeline lane takes the fleet's `&mut` for the
+        // streaming rollout.
+        let labels: Vec<String> = (0..n).map(|e| self.fleet.label(e).to_string()).collect();
+        let eval_plans: Vec<EvalPlan> = if evals.is_some() {
+            (0..n).map(|e| self.eval_plan(e)).collect()
+        } else {
+            Vec::new()
+        };
+
+        let FleetPpoTrainer {
+            fleet, policy, rng, running_return, eval_seed, slots, cur, pending, ..
+        } = &mut *self;
+        // Launch the next iteration's rollout on the pool's pipeline
+        // lane. Skipped when the fleet runs inline (`--threads 1` / tiny
+        // fleet): there is no pool to stream on, so the next
+        // `iteration()` call simply rolls out synchronously — same draws,
+        // same bits, pure barrier semantics.
+        let mut guard = None;
+        if prefetch {
+            let width =
+                fleet.plan_shards().iter().sum::<usize>().min(fleet.threads().max(1));
+            if width > 1 {
+                let pool = fleet.ensure_pool(width);
+                let policy_seed = rng.next_u64();
+                let (a, b) = slots.split_at_mut(1);
+                let next = if *cur == 0 { &mut b[0] } else { &mut a[0] };
+                let views: Vec<PolicyRef<'_>> = (0..n).map(|e| policy.family(e)).collect();
+                let fleet = &mut *fleet;
+                // SAFETY: the guard is joined at the end of this window
+                // (never leaked), and until then the caller only touches
+                // state disjoint from the closure's captures: slot `cur`
+                // (the closure fills the OTHER slot), `running_return`,
+                // the label/eval snapshots above, and shared reads of the
+                // policy (the closure holds shared `views` too). The
+                // fleet is not touched again until after the join.
+                guard = Some(unsafe {
+                    pool.run_pipelined(move || {
+                        let _span =
+                            crate::telemetry::scope(crate::telemetry::SpanKind::Rollout);
+                        let mut bufs: Vec<RolloutBuffers<'_>> =
+                            next.eb.iter_mut().map(EnvBufs::as_rollout_buffers).collect();
+                        let mut pols: Vec<PolicyRollout<'_>> =
+                            next.pb.iter_mut().map(PolBufs::as_policy_rollout).collect();
+                        fleet.rollout_fused_with(
+                            t_len, &mut bufs, &mut pols, &views, policy_seed, false,
+                        );
+                    })
+                });
+            }
+        }
+
+        // The overlap window: episode accounting, per-family stats, and
+        // any interleaved eval run on the caller thread while the
+        // pipeline lane streams the next rollout. In barrier mode the
+        // same code simply runs after the synchronous work, unspanned.
+        let _window = guard
+            .is_some()
+            .then(|| crate::telemetry::scope(crate::telemetry::SpanKind::PipelineOverlap));
+        let slot = &slots[*cur];
         let mut out = Vec::with_capacity(n);
-        for (e, ((profit_sum, comp), (total_loss, entropy))) in
-            acct.into_iter().zip(upd).enumerate()
-        {
+        for (e, (total_loss, entropy)) in upd.into_iter().enumerate() {
             let (b, _, _) = dims[e];
             let bsz = b * t_len;
+            let mut profit_sum = 0f64;
+            let mut comp: Vec<f32> = Vec::new();
+            for t in 0..t_len {
+                for j in 0..b {
+                    let idx = t * b + j;
+                    profit_sum += slot.eb[e].profit[idx] as f64;
+                    running_return[e][j] += slot.eb[e].rew[idx];
+                    if slot.eb[e].done[idx] > 0.5 {
+                        comp.push(running_return[e][j]);
+                        running_return[e][j] = 0.0;
+                    }
+                }
+            }
             out.push(FamilyStats {
-                label: self.fleet.label(e).to_string(),
+                label: labels[e].clone(),
                 lanes: b,
-                mean_reward: eb[e].rew.iter().sum::<f32>() / bsz as f32,
+                mean_reward: slot.eb[e].rew.iter().sum::<f32>() / bsz as f32,
                 mean_profit: (profit_sum / bsz as f64) as f32,
                 total_loss,
                 entropy,
@@ -813,9 +1042,19 @@ impl FleetPpoTrainer {
                 },
             });
         }
-        // Refresh the shared eval seed LAST so the rollout/update rng
-        // stream is untouched and every within-iteration eval repeats.
-        self.eval_seed = self.rng.next_u64();
+        if let Some(evals) = evals {
+            // Eval filler: greedy per-cell episodes on the CALLER thread,
+            // off the snapshot (pooled eval would grab the dispatch mutex
+            // and starve the streaming rollout between its steps).
+            for (e, plan) in eval_plans.iter().enumerate() {
+                evals.extend(run_eval_family(plan, policy.family(e), *eval_seed));
+            }
+        }
+        if let Some(g) = guard {
+            g.join();
+            *cur ^= 1;
+            *pending = true;
+        }
         out
     }
 
@@ -828,59 +1067,31 @@ impl FleetPpoTrainer {
     /// many eval episodes its reward/profit totals cover, so trained and
     /// held-out cells are comparable on the paper's profit metric.
     pub fn eval_cells(&self, e: usize, seed: u64) -> Vec<CellEval> {
-        let _span = crate::telemetry::scope(crate::telemetry::SpanKind::Eval);
+        run_eval_family(&self.eval_plan(e), self.policy.family(e), seed)
+    }
+
+    /// Snapshot of everything family `e`'s greedy per-cell eval reads
+    /// from the fleet — a config copy plus `Arc` table clones, cheap —
+    /// so the overlap window can evaluate on the caller thread while the
+    /// pipeline lane holds the fleet's `&mut` for the streaming rollout.
+    fn eval_plan(&self, e: usize) -> EvalPlan {
         let fam = self.fleet.env(e);
-        let pol = self.policy.family(e);
         let counts = fam.scenario_lane_counts();
-        let mut scratch = pol.make_scratch();
-        let mut obs = vec![0f32; pol.obs_dim()];
-        let mut action = vec![0usize; pol.n_ports()];
-        let holdout = self.fleet.holdout_cells(e);
-        let mut out = Vec::with_capacity(fam.n_scenarios() + holdout.len());
-        let mut run_cell = |cell: usize, tables, name: String, lanes: usize, held: bool| {
-            // Decorrelate cells without losing seed-level reproducibility.
-            let env_seed = seed ^ ((cell as u64) << 32);
-            let mut env = ScalarEnv::new(fam.cfg.clone(), tables, env_seed);
-            let mut tot_r = 0f32;
-            let mut tot_p = 0f32;
-            let mut episodes = 0usize;
-            for _ in 0..STEPS_PER_EPISODE {
-                env.observe(&mut obs);
-                pol.greedy_lane(&obs, &mut action, &mut scratch);
-                let info = env.step(&action);
-                tot_r += info.reward;
-                tot_p += info.profit;
-                if info.done {
-                    episodes += 1;
-                }
-            }
-            out.push(CellEval {
-                family: self.fleet.label(e).to_string(),
-                family_idx: e,
-                cell: name,
-                cell_idx: cell,
-                lanes,
-                holdout: held,
-                episodes,
-                reward: tot_r,
-                profit: tot_p,
-            });
-        };
-        for cell in 0..fam.n_scenarios() {
-            run_cell(
-                cell,
-                fam.scenario_tables(cell),
-                self.fleet.cell_label(e, cell).to_string(),
-                counts[cell],
-                false,
-            );
+        EvalPlan {
+            family: self.fleet.label(e).to_string(),
+            family_idx: e,
+            cfg: fam.cfg.clone(),
+            cells: (0..fam.n_scenarios())
+                .map(|cell| {
+                    (
+                        self.fleet.cell_label(e, cell).to_string(),
+                        fam.scenario_tables(cell),
+                        counts[cell],
+                    )
+                })
+                .collect(),
+            holdout: self.fleet.holdout_cells(e).to_vec(),
         }
-        // Held-out cells continue the cell index space after the trained
-        // cells, so their eval seeds never collide with a trained cell's.
-        for (i, (name, tables)) in holdout.iter().enumerate() {
-            run_cell(fam.n_scenarios() + i, std::sync::Arc::clone(tables), name.clone(), 0, true);
-        }
-        out
     }
 
     /// [`FleetPpoTrainer::eval_cells`] over every family, flattened.
@@ -1035,21 +1246,10 @@ pub fn measure_fleet_throughput(
     } else {
         None
     };
-    struct PolBufs {
-        act: Vec<usize>,
-        logp: Vec<f32>,
-        val: Vec<f32>,
-    }
     let mut pb: Vec<PolBufs> = if policy == FleetBenchPolicy::Random {
         Vec::new()
     } else {
-        dims.iter()
-            .map(|&(b, p, _)| PolBufs {
-                act: vec![0usize; t_chunk * b * p],
-                logp: vec![0.0; t_chunk * b],
-                val: vec![0.0; t_chunk * b],
-            })
-            .collect()
+        dims.iter().map(|&(b, p, _)| PolBufs::new(b, p, t_chunk)).collect()
     };
     let mut eb: Vec<EnvBufs> =
         dims.iter().map(|&(b, _, d)| EnvBufs::new(b, d, t_chunk)).collect();
@@ -1119,6 +1319,55 @@ pub fn measure_fleet_throughput(
     pass(&mut fleet, &mut eb, &mut pb);
     let el = t0.elapsed().as_secs_f64();
     let steps = (n_chunks * t_chunk * total_lanes) as f64;
+    Ok((steps / el, el * 100_000.0 / steps, total_lanes, n))
+}
+
+/// Measure end-to-end fleet TRAINING throughput (fused rollout + sharded
+/// PPO update per iteration) with the pipeline either barriered
+/// (`overlap == false`) or double-buffered (`overlap == true`) — the
+/// `pipeline-overlapped` bench rows pair the two at matched lanes so the
+/// table isolates what the overlap window buys. One warm barrier
+/// iteration builds the pool, then `iters` timed iterations run with the
+/// requested mode (the last via [`FleetPpoTrainer::final_iteration`], so
+/// both modes execute exactly `iters` rollouts + `iters` updates inside
+/// the timed region). Returns `(env-steps/sec, seconds per 100k env
+/// steps, total lanes, families)`.
+pub fn measure_fleet_training_throughput(
+    spec: &FleetSpec,
+    store: Option<&DataStore>,
+    threads: usize,
+    iters: usize,
+    overlap: bool,
+) -> Result<(f64, f64, usize, usize)> {
+    let mut fleet = Fleet::from_spec(spec, store)?;
+    fleet.set_threads(threads);
+    let total_lanes = fleet.total_lanes();
+    let n = fleet.n_envs();
+    let hp = PpoParams {
+        rollout_steps: 64,
+        n_minibatches: 4,
+        update_epochs: 2,
+        hidden: BENCH_POLICY_HIDDEN,
+        threads,
+        overlap,
+        ..Default::default()
+    };
+    let t_len = hp.rollout_steps;
+    let mut tr = FleetPpoTrainer::new(hp, fleet, 9);
+    // Warm without a trailing prefetch so no pending rollout crosses the
+    // timing boundary in either mode.
+    tr.final_iteration();
+    let iters = iters.max(1);
+    let t0 = Instant::now();
+    for i in 0..iters {
+        if i + 1 == iters {
+            tr.final_iteration();
+        } else {
+            tr.iteration();
+        }
+    }
+    let el = t0.elapsed().as_secs_f64();
+    let steps = (iters * t_len * total_lanes) as f64;
     Ok((steps / el, el * 100_000.0 / steps, total_lanes, n))
 }
 

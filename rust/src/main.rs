@@ -261,6 +261,7 @@ fn cmd_train_native(cfg: &RunConfig, policy: &str, tele: &mut Telem) -> Result<(
     let params = PpoParams {
         num_envs: cfg.num_envs,
         threads: cfg.num_threads,
+        overlap: cfg.overlap,
         ..Default::default()
     };
     tele.log.info(&format!(
@@ -378,7 +379,11 @@ fn cmd_train_fleet(
             env.cfg.v2g,
         ));
     }
-    let hp = PpoParams { threads: cfg.num_threads, ..Default::default() };
+    let hp = PpoParams {
+        threads: cfg.num_threads,
+        overlap: cfg.overlap,
+        ..Default::default()
+    };
     let mut tr = match policy {
         "per-family" => FleetPpoTrainer::new(hp, fleet, cfg.seed as u64),
         "generalist" => FleetPpoTrainer::new_generalist(hp, fleet, cfg.seed as u64),
@@ -390,7 +395,10 @@ fn cmd_train_fleet(
     let t0 = std::time::Instant::now();
     for i in 0..iters {
         let it0 = std::time::Instant::now();
-        let stats = tr.iteration();
+        // The last iteration never prefetches, so N iterations perform
+        // exactly N rollouts in both overlap modes.
+        let stats =
+            if i + 1 == iters { tr.final_iteration() } else { tr.iteration() };
         if i % 5 == 0 || i + 1 == iters {
             for s in &stats {
                 tele.log.info(&format!(
@@ -560,12 +568,17 @@ COMMANDS:
   cross-check      scalar-vs-JAX transition equivalence
   help             this text
 
-KEYS: variant backend num_envs threads pin_cores scenario region country
-      year traffic p_sell beta seed n_seeds steps eval_seeds paper_scale
-      out fleet telemetry log_format quiet trace_out alpha_<penalty>
+KEYS: variant backend num_envs threads pin_cores overlap scenario region
+      country year traffic p_sell beta seed n_seeds steps eval_seeds
+      paper_scale out fleet telemetry log_format quiet trace_out
+      alpha_<penalty>
 
   --threads N caps the persistent worker pool driving native rollouts
   (0 = all cores); see README §Rollout runtime.
+  --overlap off|on selects barrier (default) or double-buffered training:
+  with `on`, each iteration's accounting/stats/eval tail runs while the
+  next rollout streams on the pool's pipeline lane. Bit-identical to
+  `off` at any --threads (README §Overlapped pipeline).
   --pin_cores true pins pool workers to cores (Linux only, no-op
   elsewhere; placement-only, results identical); see README §Kernel layer.
   --fleet takes a scenario-grid JSON (README §Scenario fleets & V2G), the

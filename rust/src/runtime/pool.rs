@@ -22,6 +22,7 @@
 //! fallback for the same shard count because the pool changes *where* a
 //! shard runs, never *what* it computes.
 
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -100,6 +101,59 @@ fn pin_current_thread(_core: usize) {}
 #[derive(Clone, Copy)]
 struct Job(&'static (dyn Fn(usize) + Sync));
 
+/// Shared handle to a `&mut [T]` whose elements are visited at most once
+/// per dispatch, each by exactly one thread — the lock-free replacement
+/// for the old `Vec<Mutex<&mut T>>` wrappers the strided dispatchers used
+/// to build per call. Those wrappers put an uncontended-but-real mutex
+/// acquisition inside every shard task, violating the telemetry budget's
+/// no-locks-on-the-hot-path rule; this is a raw pointer plus a length.
+///
+/// The aliasing discipline is the caller's: [`WorkerPool::run`] hands
+/// each shard index to exactly one thread, and [`WorkerPool::run_strided`]
+/// visits each item index exactly once — so indexing by shard/item is
+/// exclusive by construction, the same argument `VectorEnv::shard_tasks`
+/// makes for its disjoint lane blocks.
+pub struct DisjointTasks<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: the wrapper only hands out `&mut T` through `get`, whose
+// contract (below) requires exclusive per-index access; with that upheld,
+// sharing the handle across threads moves `T` values between threads,
+// which `T: Send` licenses.
+unsafe impl<T: Send> Sync for DisjointTasks<'_, T> {}
+unsafe impl<T: Send> Send for DisjointTasks<'_, T> {}
+
+impl<'a, T> DisjointTasks<'a, T> {
+    pub fn new(tasks: &'a mut [T]) -> DisjointTasks<'a, T> {
+        DisjointTasks { ptr: tasks.as_mut_ptr(), len: tasks.len(), _marker: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Exclusive access to element `i`.
+    ///
+    /// # Safety
+    /// For the lifetime of the returned reference no other thread may
+    /// call `get(i)` for the same index. Dispatching through
+    /// [`WorkerPool::run`] (one thread per shard index) or
+    /// [`WorkerPool::run_strided`] (each item visited exactly once)
+    /// upholds this when `i` is the shard/item index.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len, "disjoint task index {i} out of {}", self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
 struct State {
     /// Bumped once per dispatched job; workers detect work by comparing
     /// against the last epoch they served (state-based, no lost wakeups).
@@ -128,6 +182,31 @@ struct Shared {
     done: Condvar,
 }
 
+/// State of the pool's single pipeline lane: a completion-epoch pair
+/// (`submitted`/`completed` tickets) alongside the barrier protocol, so
+/// one job can stream on the lane while the submitting thread keeps
+/// doing other work and joins later.
+struct PipeState {
+    /// The pending job, if the lane has not picked it up yet.
+    job: Option<Box<dyn FnOnce() + Send>>,
+    /// Tickets handed out (== the in-flight job's ticket once submitted).
+    submitted: u64,
+    /// Tickets fully executed; `completed == submitted` means idle.
+    completed: u64,
+    /// Ticket whose job panicked (re-raised on the joiner), if any.
+    panicked: Option<u64>,
+    shutdown: bool,
+}
+
+struct PipeShared {
+    state: Mutex<PipeState>,
+    /// The pipeline thread parks here between jobs.
+    work: Condvar,
+    /// Joiners (and the next submitter) park here until their ticket
+    /// completes.
+    done: Condvar,
+}
+
 /// A pool of `threads - 1` persistent workers supporting up to `threads`
 /// concurrent shards (the calling thread is shard 0). Construction is the
 /// only time OS threads are created; `run` is wake + park.
@@ -139,6 +218,16 @@ pub struct WorkerPool {
     /// `remaining` counts.
     dispatch: Mutex<()>,
     handles: Vec<JoinHandle<()>>,
+    /// The lazily-spawned pipeline lane ([`WorkerPool::run_pipelined`]):
+    /// one extra thread that executes streamed jobs — which themselves
+    /// dispatch `run` calls onto this pool — while the submitting thread
+    /// continues. `None` until the first pipelined submission.
+    pipe: Mutex<Option<PipeLane>>,
+}
+
+struct PipeLane {
+    shared: Arc<PipeShared>,
+    handle: Option<JoinHandle<()>>,
 }
 
 impl WorkerPool {
@@ -168,7 +257,7 @@ impl WorkerPool {
                     .expect("spawning pool worker")
             })
             .collect();
-        WorkerPool { shared, dispatch: Mutex::new(()), handles }
+        WorkerPool { shared, dispatch: Mutex::new(()), handles, pipe: Mutex::new(None) }
     }
 
     /// Maximum shard count `run` accepts (workers + the caller thread).
@@ -273,6 +362,142 @@ impl WorkerPool {
             }
         });
     }
+
+    /// Submit `f` to the pool's pipeline lane and return immediately with
+    /// a guard whose [`PipelineGuard::join`] (or drop) blocks until the
+    /// job completes. This is the non-blocking counterpart of [`run`]:
+    /// the job runs on one persistent pipeline thread — typically calling
+    /// `run`/`run_strided` on this same pool with itself as shard 0, the
+    /// `dispatch` mutex serializing it against any other caller — while
+    /// the submitting thread overlaps independent work (accounting, stats
+    /// assembly, greedy eval) before joining.
+    ///
+    /// One job in flight at a time: a second submission blocks until the
+    /// first completes. A panicking job is caught on the lane and
+    /// re-raised from `join`/drop, and the lane survives for future jobs.
+    ///
+    /// # Safety
+    /// `f` may borrow from the caller's stack (`'env`). The caller must
+    /// let the returned guard run to completion — by `join()` or by
+    /// letting it go out of scope — before any borrow in `f` ends, and
+    /// must never leak the guard (`std::mem::forget` and friends), since
+    /// the guard's drop is what proves the erased closure outlives its
+    /// borrows (the same containment argument as `run`'s transmute,
+    /// enforced there by blocking inside the call).
+    pub unsafe fn run_pipelined<'env, F>(&self, f: F) -> PipelineGuard
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        let shared = {
+            let mut lane = self.pipe.lock().unwrap();
+            let lane = lane.get_or_insert_with(|| {
+                let shared = Arc::new(PipeShared {
+                    state: Mutex::new(PipeState {
+                        job: None,
+                        submitted: 0,
+                        completed: 0,
+                        panicked: None,
+                        shutdown: false,
+                    }),
+                    work: Condvar::new(),
+                    done: Condvar::new(),
+                });
+                let thread_shared = Arc::clone(&shared);
+                let handle = std::thread::Builder::new()
+                    .name("chargax-pipeline".into())
+                    .spawn(move || pipeline_loop(&thread_shared))
+                    .expect("spawning pipeline lane");
+                PipeLane { shared, handle: Some(handle) }
+            });
+            Arc::clone(&lane.shared)
+        };
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(f);
+        // SAFETY (of the transmute): the erased box is only reachable
+        // through `PipeState.job`, the lane executes it before bumping
+        // `completed`, and the caller (per this function's contract)
+        // keeps the guard alive until `completed` reaches its ticket —
+        // so every borrow in the closure outlives its use.
+        let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
+        let ticket = {
+            let mut st = shared.state.lock().unwrap();
+            while st.completed < st.submitted {
+                st = shared.done.wait(st).unwrap();
+            }
+            st.submitted += 1;
+            st.job = Some(job);
+            shared.work.notify_one();
+            st.submitted
+        };
+        PipelineGuard { shared, ticket, joined: false }
+    }
+}
+
+/// Completion handle for one [`WorkerPool::run_pipelined`] job. Joining
+/// (explicitly or on drop) blocks until the job's ticket completes and
+/// re-raises its panic, if any.
+pub struct PipelineGuard {
+    shared: Arc<PipeShared>,
+    ticket: u64,
+    joined: bool,
+}
+
+impl PipelineGuard {
+    /// Block until the pipelined job completes; re-raises its panic.
+    pub fn join(mut self) {
+        self.wait();
+    }
+
+    fn wait(&mut self) {
+        if self.joined {
+            return;
+        }
+        self.joined = true;
+        let panicked = {
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            while st.completed < self.ticket {
+                st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.panicked == Some(self.ticket)
+        };
+        if panicked && !std::thread::panicking() {
+            panic!("pipelined job panicked (see stderr)");
+        }
+    }
+}
+
+impl Drop for PipelineGuard {
+    fn drop(&mut self) {
+        self.wait();
+    }
+}
+
+fn pipeline_loop(shared: &PipeShared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                // Drain a pending job even under shutdown so a joiner
+                // waiting on its ticket can never hang.
+                if let Some(job) = st.job.take() {
+                    break job;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        // Catch job panics so `completed` always advances (a lost bump
+        // would hang the joiner forever) and the lane stays alive; the
+        // joiner re-raises. The default panic hook already printed.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.completed += 1;
+        if result.is_err() {
+            st.panicked = Some(st.completed);
+        }
+        shared.done.notify_all();
+    }
 }
 
 /// Pick a pool with at least `width.min(threads)` lanes for auxiliary
@@ -311,6 +536,17 @@ pub fn aux_or_primary_pool(
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
+        // Pipeline lane first: its jobs dispatch onto the workers below.
+        if let Some(mut lane) = self.pipe.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            {
+                let mut st = lane.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+                st.shutdown = true;
+                lane.shared.work.notify_all();
+            }
+            if let Some(h) = lane.handle.take() {
+                let _ = h.join();
+            }
+        }
         {
             let mut st = self.shared.state.lock().unwrap();
             st.shutdown = true;
@@ -523,6 +759,94 @@ mod tests {
         for (s, h) in hits.iter().enumerate() {
             assert_eq!(h.load(Ordering::SeqCst), 50, "shard {s}");
         }
+    }
+
+    /// The lock-free task handle: every item mutated exactly once through
+    /// a strided dispatch, no Mutex anywhere — the dispatch shape all four
+    /// hot-path task runners (fleet/vector shard tasks, ppo/generalist
+    /// gradient chunks) now use.
+    #[test]
+    fn disjoint_tasks_mutate_every_item_once_without_locks() {
+        let pool = WorkerPool::new(4);
+        for n in [1usize, 3, 4, 17] {
+            let mut items: Vec<u64> = vec![0; n];
+            let shared = DisjointTasks::new(&mut items);
+            assert_eq!(shared.len(), n);
+            assert!(!shared.is_empty());
+            pool.run_strided(shared.len(), |_, k| {
+                // SAFETY: run_strided visits each item index exactly once.
+                let item = unsafe { shared.get(k) };
+                *item += k as u64 + 1;
+            });
+            for (k, &x) in items.iter().enumerate() {
+                assert_eq!(x, k as u64 + 1, "item {k} of {n}");
+            }
+        }
+        // Per-lane state (the scratch-buffer pattern): each lane index is
+        // owned by exactly one OS thread per dispatch.
+        let mut lanes: Vec<usize> = vec![0; pool.max_shards()];
+        let scr = DisjointTasks::new(&mut lanes);
+        pool.run_strided(64, |lane, _| {
+            // SAFETY: `lane` is this OS thread's shard index for the
+            // whole dispatch — exclusive by the pool's shard contract.
+            unsafe { *scr.get(lane) += 1 };
+        });
+        assert_eq!(lanes.iter().sum::<usize>(), 64);
+    }
+
+    /// The pipeline lane: a submitted job runs to completion while the
+    /// submitter keeps working, borrows of caller state are released by
+    /// join, the lane is reusable, and a second submission waits for the
+    /// first (one in flight).
+    #[test]
+    fn pipelined_jobs_complete_and_lane_is_reusable() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u64; 256];
+        for round in 1..=3u64 {
+            let guard = unsafe {
+                pool.run_pipelined(|| {
+                    // The pipelined job itself dispatches onto the pool.
+                    let chunks = DisjointTasks::new(&mut data);
+                    pool.run_strided(chunks.len(), |_, k| {
+                        // SAFETY: each item visited exactly once.
+                        unsafe { *chunks.get(k) += round };
+                    });
+                })
+            };
+            guard.join();
+            let want: u64 = (1..=round).sum();
+            assert!(data.iter().all(|&x| x == want), "round {round}");
+        }
+        // Implicit join on drop.
+        let flag = AtomicUsize::new(0);
+        {
+            let _guard = unsafe {
+                pool.run_pipelined(|| {
+                    flag.store(7, Ordering::SeqCst);
+                })
+            };
+        }
+        assert_eq!(flag.load(Ordering::SeqCst), 7);
+    }
+
+    /// A panicking pipelined job re-raises on join and leaves the lane
+    /// (and pool) fully functional.
+    #[test]
+    fn pipelined_panic_propagates_and_lane_survives() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let guard = unsafe { pool.run_pipelined(|| panic!("pipeline boom")) };
+            guard.join();
+        }));
+        assert!(r.is_err(), "pipelined panic must propagate to the joiner");
+        let hit = AtomicUsize::new(0);
+        let guard = unsafe {
+            pool.run_pipelined(|| {
+                hit.store(1, Ordering::SeqCst);
+            })
+        };
+        guard.join();
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
     }
 
     #[test]

@@ -103,12 +103,16 @@ pub enum SpanKind {
     Adam,
     /// Greedy evaluation (per-cell fleet eval or single-env episode).
     Eval,
+    /// The double-buffered trainer's overlap window: caller-side
+    /// accounting/stats/eval-filler time spent while the next iteration's
+    /// rollout streams on the pool's pipeline lane (`--overlap on`).
+    PipelineOverlap,
 }
 
 impl SpanKind {
     /// The per-iteration report's stage set, in display order (everything
     /// except the `PoolShard` envelope, which feeds the shard columns).
-    pub const STAGES: [SpanKind; 8] = [
+    pub const STAGES: [SpanKind; 9] = [
         SpanKind::Rollout,
         SpanKind::PolicyForward,
         SpanKind::EnvStep,
@@ -117,6 +121,7 @@ impl SpanKind {
         SpanKind::Reduce,
         SpanKind::Adam,
         SpanKind::Eval,
+        SpanKind::PipelineOverlap,
     ];
 
     pub fn label(self) -> &'static str {
@@ -130,6 +135,7 @@ impl SpanKind {
             SpanKind::Reduce => "reduce",
             SpanKind::Adam => "adam",
             SpanKind::Eval => "eval",
+            SpanKind::PipelineOverlap => "pipeline-overlap",
         }
     }
 }

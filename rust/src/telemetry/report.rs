@@ -38,6 +38,11 @@ pub struct IterationReport {
     /// Total shard busy time / (dispatch envelope × lanes seen), in
     /// [0, 1]; how much of the pool's capacity the dispatches used.
     pub utilization: f64,
+    /// Fraction of the iteration's wallclock spent inside the
+    /// [`SpanKind::PipelineOverlap`] window — caller-side work done while
+    /// the next rollout streamed on the pipeline lane (`--overlap on`);
+    /// 0 on the barrier path, which opens no window.
+    pub overlap_frac: f64,
     pub counters: Counters,
     pub dropped_spans: u64,
 }
@@ -133,6 +138,15 @@ impl IterationReport {
             }
         };
 
+        let overlap_ms: f64 = d
+            .spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::PipelineOverlap)
+            .map(|s| ms(s.dur_ns))
+            .sum();
+        let overlap_frac =
+            if wall_ms > 0.0 { (overlap_ms / wall_ms).clamp(0.0, 1.0) } else { 0.0 };
+
         IterationReport {
             iter,
             wall_ms,
@@ -141,6 +155,7 @@ impl IterationReport {
             imbalance_mean,
             imbalance_max,
             utilization,
+            overlap_frac,
             counters: d.counters,
             dropped_spans: d.dropped,
         }
@@ -168,6 +183,7 @@ impl IterationReport {
             ("type", Json::Str("telemetry".to_string())),
             ("iter", Json::Num(self.iter as f64)),
             ("wall_ms", Json::Num(self.wall_ms)),
+            ("overlap_frac", Json::Num(self.overlap_frac)),
             ("stages", stages),
             (
                 "shards",
@@ -209,10 +225,11 @@ impl IterationReport {
     pub fn text_summary(&self) -> String {
         let mut out = format!(
             "telemetry iter {}: wall {:.1} ms, pool util {:.1}%, \
-             imbalance mean {:.2}x max {:.2}x, dropped {}",
+             overlap {:.1}%, imbalance mean {:.2}x max {:.2}x, dropped {}",
             self.iter,
             self.wall_ms,
             self.utilization * 100.0,
+            self.overlap_frac * 100.0,
             self.imbalance_mean,
             self.imbalance_max,
             self.dropped_spans,
@@ -265,6 +282,8 @@ mod tests {
         d.spans.push(span(SpanKind::EnvStep, 0, 1, 100, 1_000_000));
         d.spans.push(span(SpanKind::EnvStep, 1, 1, 100, 3_000_000));
         d.spans.push(span(SpanKind::Rollout, 0, 0, 0, 8_000_000));
+        // 4.5 ms of overlapped tail work while a prefetch streamed.
+        d.spans.push(span(SpanKind::PipelineOverlap, 0, 0, 8_000_000, 4_500_000));
         d.counters.env_steps = 128;
         d.counters.grid_kwh = 2.25;
         d
@@ -289,6 +308,8 @@ mod tests {
         assert!((r.imbalance_max - 2.0).abs() < 1e-9);
         // busy 12 ms over an 8 ms envelope × 2 lanes.
         assert!((r.utilization - 0.75).abs() < 1e-9);
+        // 4.5 ms of PipelineOverlap over a 9 ms wall.
+        assert!((r.overlap_frac - 0.5).abs() < 1e-9);
         assert_eq!(r.counters.env_steps, 128);
     }
 
@@ -307,11 +328,16 @@ mod tests {
             "reduce",
             "adam",
             "eval",
+            "pipeline-overlap",
         ] {
             let st = stages.get(key).unwrap_or_else(|| panic!("missing stage {key}"));
             assert!(st.get("p50_ms").unwrap().as_f64().is_some());
             assert!(st.get("p99_ms").unwrap().as_f64().is_some());
         }
+        assert!(
+            j.get("overlap_frac").unwrap().as_f64().is_some(),
+            "the overlap-fraction column must land in the JSONL record"
+        );
         let shards = j.get("shards").unwrap();
         assert!(shards.get("imbalance_mean").unwrap().as_f64().is_some());
         assert!(shards.get("utilization").unwrap().as_f64().is_some());
@@ -335,6 +361,7 @@ mod tests {
         let d = Drained::default();
         let r = IterationReport::from_drained(0, 0.0, &d);
         assert_eq!(r.utilization, 0.0);
+        assert_eq!(r.overlap_frac, 0.0);
         assert_eq!(r.imbalance_mean, 1.0);
         assert!(r.shard_busy_ms.is_empty());
         assert!(r.stages.iter().all(|s| s.count == 0));

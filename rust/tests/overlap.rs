@@ -1,0 +1,266 @@
+//! Overlapped (double-buffered) training == the barrier oracle, bitwise.
+//!
+//! `--overlap on` streams iteration k+1's fused rollout on the pool's
+//! pipeline lane while the caller finishes iteration k's accounting,
+//! stats, and interleaved eval. The determinism contract says the mode
+//! flag may only move WHEN work executes, never WHAT is computed: the
+//! per-iteration rng draw order (policy seed, update permutations, eval
+//! seed) forms the same global sequence either way. These tests prove
+//! weights, per-iteration stats, and per-cell greedy evals bit-identical
+//! between the two modes at `--threads` 1, 4, and max, for all three
+//! training paths (per-family, generalist, grid-coupled) and the
+//! single-family `PpoTrainer`, plus the eval-interleaving
+//! order-independence and the `set_grids` named-error regression.
+
+use std::sync::Arc;
+
+use chargax::baselines::ppo::{PpoParams, PpoTrainer};
+use chargax::env::scalar::ScenarioTables;
+use chargax::env::tree::StationConfig;
+use chargax::env::vector::VectorEnv;
+use chargax::fleet::{CurtailPolicy, Fleet, FleetPpoTrainer, FleetSpec, GridSpec};
+
+fn hp(threads: usize, overlap: bool) -> PpoParams {
+    PpoParams {
+        rollout_steps: 24,
+        n_minibatches: 2,
+        update_epochs: 2,
+        hidden: 16,
+        threads,
+        overlap,
+        ..Default::default()
+    }
+}
+
+fn max_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// One short fleet training run — three iterations, the last through
+/// `final_iteration` so both modes perform exactly three rollouts —
+/// returning flattened weights, per-iteration stat bits, and the closing
+/// per-cell eval bits.
+#[allow(clippy::type_complexity)]
+fn run_fleet(
+    spec: &FleetSpec,
+    generalist: bool,
+    threads: usize,
+    overlap: bool,
+) -> (Vec<u32>, Vec<(u32, u32)>, Vec<(String, u32, u32)>) {
+    let mut fleet = Fleet::from_spec(spec, None).unwrap();
+    fleet.set_threads(threads);
+    let params = hp(threads, overlap);
+    let mut tr = if generalist {
+        FleetPpoTrainer::new_generalist(params, fleet, 5)
+    } else {
+        FleetPpoTrainer::new(params, fleet, 5)
+    };
+    let mut stats = Vec::new();
+    for i in 0..3 {
+        let s = if i == 2 { tr.final_iteration() } else { tr.iteration() };
+        for f in s {
+            stats.push((f.total_loss.to_bits(), f.entropy.to_bits()));
+        }
+    }
+    let evals = tr
+        .eval_all_cells_current()
+        .into_iter()
+        .map(|c| {
+            (format!("{}/{}", c.family, c.cell), c.reward.to_bits(), c.profit.to_bits())
+        })
+        .collect();
+    let weights = tr.policy.params_flat().iter().map(|w| w.to_bits()).collect();
+    (weights, stats, evals)
+}
+
+fn assert_overlap_matches_barrier(spec: &FleetSpec, generalist: bool) {
+    for threads in [1usize, 4, max_threads()] {
+        let (w_off, s_off, e_off) = run_fleet(spec, generalist, threads, false);
+        let (w_on, s_on, e_on) = run_fleet(spec, generalist, threads, true);
+        assert_eq!(
+            s_off, s_on,
+            "threads={threads}: per-iteration stats drifted between overlap modes"
+        );
+        assert_eq!(w_off.len(), w_on.len(), "threads={threads}: weight count");
+        for (k, (a, b)) in w_off.iter().zip(&w_on).enumerate() {
+            assert_eq!(a, b, "threads={threads}: weight {k} not bit-identical");
+        }
+        assert_eq!(
+            e_off, e_on,
+            "threads={threads}: per-cell evals drifted between overlap modes"
+        );
+    }
+}
+
+/// Tentpole gate, per-family path: overlap on == off bitwise at threads
+/// {1, 4, max}.
+#[test]
+fn overlap_is_bit_identical_per_family() {
+    assert_overlap_matches_barrier(&FleetSpec::demo(9, 1), false);
+}
+
+/// Tentpole gate, generalist path: one shared trunk, same proof.
+#[test]
+fn overlap_is_bit_identical_generalist() {
+    assert_overlap_matches_barrier(&FleetSpec::demo(9, 1), true);
+}
+
+/// Tentpole gate, grid-coupled path: the two-phase propose -> allocate ->
+/// commit step streams on the pipeline lane too.
+#[test]
+fn overlap_is_bit_identical_grid_coupled() {
+    assert_overlap_matches_barrier(&FleetSpec::demo_coupled(9, 1), false);
+}
+
+/// Tentpole gate, single-family comparator: `PpoTrainer` double-buffers
+/// through the same pipeline lane; weights, stats, and the greedy eval
+/// episode are bit-identical between modes at every thread count.
+#[test]
+fn overlap_is_bit_identical_single_env_ppo() {
+    #[allow(clippy::type_complexity)]
+    let run = |threads: usize, overlap: bool| -> (Vec<u32>, Vec<(u32, u32, u32)>, (u32, u32)) {
+        let tables = Arc::new(ScenarioTables::synthetic(1.2));
+        // 128 lanes: wide enough to shard at threads >= 2, so the
+        // prefetch actually engages off the rollout pool.
+        let params = PpoParams { num_envs: 128, rollout_steps: 16, ..hp(threads, overlap) };
+        let mut tr = PpoTrainer::new(params, StationConfig::default(), tables, 11);
+        let mut stats = Vec::new();
+        for i in 0..3 {
+            let s = if i == 2 { tr.final_iteration() } else { tr.iteration() };
+            stats.push((
+                s.total_loss.to_bits(),
+                s.entropy.to_bits(),
+                s.mean_reward.to_bits(),
+            ));
+        }
+        let weights: Vec<u32> = tr
+            .learner
+            .mlp
+            .params()
+            .into_iter()
+            .flat_map(|p| p.iter().map(|w| w.to_bits()).collect::<Vec<_>>())
+            .collect();
+        let (r, p) = tr.eval_episode(77);
+        (weights, stats, (r.to_bits(), p.to_bits()))
+    };
+    for threads in [1usize, 4, max_threads()] {
+        let off = run(threads, false);
+        let on = run(threads, true);
+        assert_eq!(off.1, on.1, "threads={threads}: stats drifted between overlap modes");
+        assert_eq!(off.0, on.0, "threads={threads}: weights not bit-identical");
+        assert_eq!(off.2, on.2, "threads={threads}: eval episode drifted");
+    }
+}
+
+/// Satellite regression: eval episodes interleaved INSIDE the overlap
+/// window (`iteration_with_eval`) are bit-identical to running the same
+/// iteration and evaluating afterwards — the per-iteration eval seed
+/// makes the ordering irrelevant — and interleaved evals never perturb
+/// the training trajectory.
+#[test]
+fn interleaved_eval_is_order_independent_and_pure() {
+    let mk = || {
+        let mut fleet = Fleet::from_spec(&FleetSpec::demo(9, 1), None).unwrap();
+        fleet.set_threads(4);
+        FleetPpoTrainer::new(hp(4, true), fleet, 7)
+    };
+    // A: evals interleaved with the streaming next-iteration rollout.
+    let mut a = mk();
+    let (_, ev_a1) = a.iteration_with_eval();
+    let (_, ev_a2) = a.iteration_with_eval();
+    a.final_iteration();
+    // B: same trajectory, evals after each iteration returns.
+    let mut b = mk();
+    b.iteration();
+    let ev_b1 = b.eval_all_cells_current();
+    b.iteration();
+    let ev_b2 = b.eval_all_cells_current();
+    b.final_iteration();
+    // C: never evaluates at all.
+    let mut c = mk();
+    c.iteration();
+    c.iteration();
+    c.final_iteration();
+
+    for (it, (ia, ib)) in [(&ev_a1, &ev_b1), (&ev_a2, &ev_b2)].iter().enumerate() {
+        assert_eq!(ia.len(), ib.len(), "iteration {it}: eval row count");
+        for (x, y) in ia.iter().zip(ib.iter()) {
+            assert_eq!(x.cell, y.cell, "iteration {it}: cell order");
+            assert_eq!(
+                x.reward.to_bits(),
+                y.reward.to_bits(),
+                "iteration {it} {}/{}: interleaved eval reward drifted",
+                x.family,
+                x.cell
+            );
+            assert_eq!(
+                x.profit.to_bits(),
+                y.profit.to_bits(),
+                "iteration {it} {}/{}: interleaved eval profit drifted",
+                x.family,
+                x.cell
+            );
+        }
+    }
+    let wa: Vec<u32> = a.policy.params_flat().iter().map(|w| w.to_bits()).collect();
+    let wb: Vec<u32> = b.policy.params_flat().iter().map(|w| w.to_bits()).collect();
+    let wc: Vec<u32> = c.policy.params_flat().iter().map(|w| w.to_bits()).collect();
+    assert_eq!(wa, wc, "interleaved evals perturbed training");
+    assert_eq!(wb, wc, "trailing evals perturbed training");
+}
+
+/// Satellite regression (fleet/rollout.rs feeder-capacity panic): invalid
+/// feeder capacities are rejected at `set_grids` construction time with a
+/// named error — feeder + family — instead of panicking at rollout time
+/// deep inside the allocate phase.
+#[test]
+fn set_grids_rejects_invalid_feeder_capacities_by_name() {
+    let mk_fleet = || {
+        let tables = Arc::new(ScenarioTables::synthetic(1.0));
+        let envs = vec![
+            VectorEnv::new(StationConfig::default(), Arc::clone(&tables), 2, 1),
+            VectorEnv::new(StationConfig::default(), Arc::clone(&tables), 2, 2),
+        ];
+        Fleet::from_envs(envs, vec!["alpha".into(), "beta".into()]).unwrap()
+    };
+    let gs = |cap: Option<f32>| GridSpec {
+        feeder: "sub-7".into(),
+        capacity_kw: cap,
+        policy: CurtailPolicy::Proportional,
+    };
+
+    // Null capacity (a doc-only entry that must not couple).
+    let err =
+        mk_fleet().set_grids(vec![Some(gs(None)), None]).unwrap_err().to_string();
+    assert!(err.contains("sub-7"), "error must name the feeder: {err}");
+    assert!(err.contains("alpha"), "error must name the family: {err}");
+    assert!(err.contains("capacity_kw"), "error must name the field: {err}");
+
+    // Non-finite and non-positive capacities.
+    for bad in [f32::NAN, f32::INFINITY, 0.0, -5.0] {
+        let err = mk_fleet()
+            .set_grids(vec![None, Some(gs(Some(bad)))])
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("sub-7") && err.contains("beta"),
+            "capacity {bad}: error must name feeder and family: {err}"
+        );
+    }
+
+    // Entry-count mismatch.
+    assert!(mk_fleet().set_grids(vec![None]).is_err());
+
+    // Two families naming one feeder with different definitions.
+    let err = mk_fleet()
+        .set_grids(vec![Some(gs(Some(100.0))), Some(gs(Some(200.0)))])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("sub-7"), "conflict error must name the feeder: {err}");
+
+    // Valid round trip: one agreed concrete capacity couples both.
+    let mut fleet = mk_fleet();
+    fleet.set_grids(vec![Some(gs(Some(150.0))), Some(gs(Some(150.0)))]).unwrap();
+    assert!(fleet.has_coupling());
+    assert!(fleet.grid(0).is_some_and(GridSpec::coupled));
+}

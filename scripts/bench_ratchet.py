@@ -2,7 +2,7 @@
 """Perf ratchet: compare a fresh BENCH_table2.json against the committed
 BENCH_baseline.json and warn on steps/sec regressions.
 
-Seven rows are gated, all at B=256 (present in the full sweep and the CI
+Eight rows are gated, all at B=256 (present in the full sweep and the CI
 ``--smoke`` sweep): the ``native-vector`` pool path (raw env runtime),
 the ``policy-fused`` path (shard-parallel MLP policy + env, the default
 training rollout), the ``update-sharded`` path (the shard-parallel PPO
@@ -16,7 +16,10 @@ measured without env overhead), and two rows from BENCH_fleet.json
 fused rollout at L=256) and ``fleet-coupled`` (the same fused per-family
 nets with all families on one shared feeder, so every step pays the
 propose -> allocate -> commit double dispatch — this row holds the
-grid-coupling overhead to the ratchet threshold). CI
+grid-coupling overhead to the ratchet threshold), plus
+``pipeline-overlapped`` from BENCH_table2.json (full train iterations
+with `--overlap on` double buffering at B=256 — this row keeps the
+streamed-rollout pipeline from silently losing its win). CI
 runner variance is still being characterized, so a
 regression past the threshold emits a GitHub ``::warning`` annotation and
 exits 0 — flip ``--strict`` once the variance envelope is known and the
@@ -62,6 +65,7 @@ GATED_PREFIXES = (
     "update-blocked",
     "fleet-generalist",
     "fleet-coupled",
+    "pipeline-overlapped",
 )
 
 
@@ -203,7 +207,8 @@ def main() -> int:
             "note": (
                 "Perf-ratchet baseline: native-vector, policy-fused, "
                 "update-sharded, forward-blocked, update-blocked, "
-                "fleet-generalist, and fleet-coupled steps/sec rows "
+                "fleet-generalist, fleet-coupled, and "
+                "pipeline-overlapped steps/sec rows "
                 "from a trusted run of "
                 "`cargo bench --bench table2_throughput -- --smoke`. "
                 "Refresh with scripts/bench_ratchet.py --update "
